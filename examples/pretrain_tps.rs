@@ -1,0 +1,69 @@
+//! **End-to-end driver** (the repository's E2E validation run): pre-train
+//! the scaled Llama with SageBwd INT8 attention and with full-precision
+//! attention at low tokens-per-step, on the synthetic corpus, logging both
+//! loss curves — the Figure-1b experiment at example scale.
+//!
+//! Everything on the hot path is Rust + AOT XLA executables; Python was
+//! only used at `make artifacts` time.
+//!
+//! ```text
+//! cargo run --release --example pretrain_tps -- [--steps 120] [--tps 1024]
+//! ```
+
+use anyhow::Result;
+use sagebwd::cli::Args;
+use sagebwd::config::TrainConfig;
+use sagebwd::coordinator::Trainer;
+use sagebwd::runtime::Runtime;
+use sagebwd::telemetry::{run_dir, Log};
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let steps = args.u64_or("steps", 120)?;
+    let tps = args.u64_or("tps", 1024)?;
+    let log = Log::new(true);
+
+    let mut outcomes = Vec::new();
+    for variant in ["sage_qknorm", "fpa_qknorm"] {
+        log.info(&format!("=== pretraining {variant} ==="));
+        let cfg = TrainConfig {
+            variant: variant.into(),
+            steps,
+            tokens_per_step: tps,
+            warmup_steps: (steps / 10).max(1),
+            peak_lr: 3e-3,
+            min_lr_frac: 0.1,
+            seed: 0,
+            clip_norm: 0.0,
+            grad_noise_sigma: 0.0,
+            checkpoint_every: 0,
+            log_every: (steps / 12).max(1),
+        };
+        let mut trainer = Trainer::new(Runtime::new(sagebwd::DEFAULT_ARTIFACTS_DIR)?, cfg)?;
+        let mut batches = trainer.make_batcher(512, 4)?;
+        let report = trainer.run(&mut batches, &log)?;
+        let dir = run_dir(sagebwd::DEFAULT_RESULTS_DIR, &format!("pretrain_tps/{variant}"))?;
+        trainer.metrics.flush_csv(&dir)?;
+        trainer.save_checkpoint(&dir.join("final.ckpt"))?;
+        log.info(&format!(
+            "{variant}: {:?} final_loss={:?} tokens={}  → {}",
+            report.status,
+            report.final_loss,
+            report.tokens_seen,
+            dir.display()
+        ));
+        outcomes.push((variant, report.final_loss));
+    }
+
+    println!("\n=== E2E summary (Figure 1b analogue) ===");
+    for (variant, loss) in &outcomes {
+        println!("  {variant:<14} final loss {:?}", loss);
+    }
+    if let (Some(sage), Some(fpa)) = (outcomes[0].1, outcomes[1].1) {
+        println!(
+            "  gap (sage − fpa) = {:+.4}   (paper at low TPS: −0.002, parity within noise)",
+            sage - fpa
+        );
+    }
+    Ok(())
+}

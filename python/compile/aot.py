@@ -1,0 +1,280 @@
+"""AOT exporter: lower every L2/L1 computation to HLO *text* + a JSON
+manifest, the only interface the Rust runtime consumes.
+
+Interchange is HLO text, not serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Every artifact is a *flat positional* function — inputs and outputs are
+lists of arrays whose order is recorded in ``<name>.manifest.json``.  The
+Rust side addresses leaves positionally; sorted parameter-name order is the
+ABI (model.param_names).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts [--only PREFIX]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import (VARIANTS, TRACE_VARIANTS, ModelConfig, TraceConfig,
+                      bench_variants)
+from .kernels import attention, fa2_ref, ref, sagebwd_bwd, sagebwd_fwd
+
+# Microbatch size baked into training artifacts; the Rust coordinator
+# realizes any tokens-per-step by accumulating microbatches (§4.3).
+MICROBATCH = 2
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _dtype_str(x) -> str:
+    return {"float32": "f32", "int32": "i32", "uint32": "u32"}[str(x.dtype)]
+
+
+def _spec(name, x):
+    return {"name": name, "shape": [int(s) for s in x.shape],
+            "dtype": _dtype_str(x)}
+
+
+def export(out_dir: str, name: str, fn, in_specs, in_names, out_names,
+           meta=None) -> None:
+    """Lower ``fn(*arrays)`` at the given ShapeDtypeStructs and write
+    ``<name>.hlo.txt`` + ``<name>.manifest.json``."""
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*in_specs)
+    text = to_hlo_text(lowered)
+    out_shapes = jax.eval_shape(fn, *in_specs)
+    flat_out, _ = jax.tree_util.tree_flatten(out_shapes)
+    assert len(flat_out) == len(out_names), (name, len(flat_out), len(out_names))
+    manifest = {
+        "artifact": name,
+        "inputs": [_spec(n, s) for n, s in zip(in_names, in_specs)],
+        "outputs": [_spec(n, s) for n, s in zip(out_names, flat_out)],
+        "meta": meta or {},
+    }
+    with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(text)
+    with open(os.path.join(out_dir, f"{name}.manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  {name}: {len(text)/1e6:.2f} MB HLO, "
+          f"{len(in_specs)} in / {len(flat_out)} out, {time.time()-t0:.1f}s",
+          flush=True)
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Training artifacts (init / grad_step / apply_step per variant)
+# ---------------------------------------------------------------------------
+
+
+def export_variant(out_dir: str, vname: str, cfg: ModelConfig, batch: int):
+    names = model.param_names(cfg)
+    shapes = model.param_shapes(cfg)
+    p_specs = [_f32(*shapes[n]) for n in names]
+    meta = dict(cfg._asdict(), batch=batch, param_names=names,
+                param_count=int(sum(
+                    int(jnp.prod(jnp.array(shapes[n]))) for n in names)))
+
+    # init: seed → params
+    def init_fn(seed):
+        p = model.init_params(cfg, seed)
+        return tuple(p[n] for n in names)
+
+    export(out_dir, f"init_{vname}", init_fn, [_i32()], ["seed"], names, meta)
+
+    # grad_step: params + (tokens, targets) → loss + grads
+    def grad_fn(*args):
+        params = dict(zip(names, args[:len(names)]))
+        tokens, targets = args[len(names)], args[len(names) + 1]
+        loss, grads = model.grad_step(cfg, params, tokens, targets)
+        return (loss,) + tuple(grads[n] for n in names)
+
+    export(out_dir, f"grad_step_{vname}", grad_fn,
+           p_specs + [_i32(batch, cfg.seq_len), _i32(batch, cfg.seq_len)],
+           names + ["tokens", "targets"],
+           ["loss"] + [f"d.{n}" for n in names], meta)
+
+
+def export_apply(out_dir: str, aname: str, cfg: ModelConfig):
+    """AdamW step — depends only on the parameter tree, so one artifact is
+    shared by all variants with the same qk_norm setting."""
+    names = model.param_names(cfg)
+    shapes = model.param_shapes(cfg)
+    p_specs = [_f32(*shapes[n]) for n in names]
+
+    def apply_fn(*args):
+        np_ = len(names)
+        params = dict(zip(names, args[:np_]))
+        m = dict(zip(names, args[np_:2 * np_]))
+        v = dict(zip(names, args[2 * np_:3 * np_]))
+        grads = dict(zip(names, args[3 * np_:4 * np_]))
+        lr, step = args[4 * np_], args[4 * np_ + 1]
+        new_p, new_m, new_v = model.apply_step(cfg, params, m, v, grads, lr, step)
+        return (tuple(new_p[n] for n in names)
+                + tuple(new_m[n] for n in names)
+                + tuple(new_v[n] for n in names))
+
+    in_names = (names + [f"m.{n}" for n in names] + [f"v.{n}" for n in names]
+                + [f"d.{n}" for n in names] + ["lr", "step"])
+    out_names = (names + [f"m.{n}" for n in names] + [f"v.{n}" for n in names])
+    export(out_dir, f"apply_step_{aname}", apply_fn,
+           p_specs * 4 + [_f32(), _i32()], in_names, out_names,
+           dict(param_names=names))
+
+
+# ---------------------------------------------------------------------------
+# Attention trace artifacts (Table 1/2, Figures 5/6, §4.2 RMS probe)
+# ---------------------------------------------------------------------------
+
+TRACE_OUTPUTS = ["o", "dq", "dk", "dv", "delta", "rms_p", "rms_dp", "rms_ds",
+                 "p", "dp", "ds"]
+
+
+def export_trace(out_dir: str, tname: str, tc: TraceConfig):
+    """(Q, K, V, dO) → outputs + gradients + intermediates.
+
+    For ``impl='sage'`` runs the actual Pallas kernels for (o, dq, dk, dv)
+    and the block-faithful reference for the materialized intermediates
+    (bit-identical math, see ref.sage_ref_bwd docstring)."""
+
+    def trace_fn(q, k, v, do):
+        if tc.impl == "fpa":
+            it = ref.fpa_bwd(q, k, v, do, causal=tc.causal)
+        elif tc.impl == "pseudo":
+            it = ref.pseudo_quant_trace(q, k, v, do, causal=tc.causal,
+                                        k_smoothing=tc.k_smoothing,
+                                        q_smoothing=tc.q_smoothing,
+                                        quant_ds=tc.quant_ds)
+        elif tc.impl == "sage":
+            o, lse = sagebwd_fwd.sage_fwd(
+                q, k, v, block_q=tc.block, block_kv=tc.block,
+                causal=tc.causal, k_smoothing=tc.k_smoothing,
+                q_smoothing=tc.q_smoothing)
+            dq, dk, dv = sagebwd_bwd.sage_bwd(
+                q, k, v, do, o, lse, block_q=tc.block, block_kv=tc.block,
+                causal=tc.causal, k_smoothing=tc.k_smoothing,
+                q_smoothing=tc.q_smoothing, quant_ds=tc.quant_ds)
+            it_ref = ref.pseudo_quant_trace(q, k, v, do, causal=tc.causal,
+                                            k_smoothing=tc.k_smoothing,
+                                            q_smoothing=tc.q_smoothing,
+                                            quant_ds=tc.quant_ds)
+            it = it_ref._replace(o=o, dq=dq, dk=dk, dv=dv)
+        else:
+            raise ValueError(tc.impl)
+        rms = lambda x: jnp.sqrt(jnp.mean(jnp.square(x)))
+        return (it.o, it.dq, it.dk, it.dv, it.delta,
+                rms(it.p), rms(it.dp), rms(it.ds), it.p, it.dp, it.ds)
+
+    spec = _f32(tc.n, tc.d)
+    export(out_dir, tname, trace_fn, [spec] * 4, ["q", "k", "v", "do"],
+           TRACE_OUTPUTS, dict(tc._asdict()))
+
+
+# ---------------------------------------------------------------------------
+# Kernel speed artifacts (Figures 2 & 3)
+# ---------------------------------------------------------------------------
+
+
+def export_bench(out_dir: str, bname: str, bc) -> None:
+    def fwd_fn(q, k, v):
+        if bc.impl == "sage":
+            o, _ = sagebwd_fwd.sage_fwd(q, k, v, block_q=bc.block,
+                                        block_kv=bc.block, causal=bc.causal)
+        elif bc.impl == "fa2":
+            o, _ = fa2_ref.fa2_fwd(q, k, v, block_q=bc.block,
+                                   block_kv=bc.block, causal=bc.causal)
+        else:
+            o = fa2_ref.naive_sdpa(q, k, v, causal=bc.causal)
+        return (o,)
+
+    def fwdbwd_fn(q, k, v, do):
+        if bc.impl == "sage":
+            o, lse = sagebwd_fwd.sage_fwd(q, k, v, block_q=bc.block,
+                                          block_kv=bc.block, causal=bc.causal)
+            dq, dk, dv = sagebwd_bwd.sage_bwd(q, k, v, do, o, lse,
+                                              block_q=bc.block,
+                                              block_kv=bc.block,
+                                              causal=bc.causal)
+            return o, dq, dk, dv
+        if bc.impl == "fa2":
+            o, lse = fa2_ref.fa2_fwd(q, k, v, block_q=bc.block,
+                                     block_kv=bc.block, causal=bc.causal)
+            dq, dk, dv = fa2_ref.fa2_bwd(q, k, v, do, o, lse,
+                                         block_q=bc.block, block_kv=bc.block,
+                                         causal=bc.causal)
+            return o, dq, dk, dv
+        # naive: plain jnp, differentiated by XLA autodiff.
+        f = lambda q, k, v: jnp.sum(
+            fa2_ref.naive_sdpa(q, k, v, causal=bc.causal) * do)
+        o = fa2_ref.naive_sdpa(q, k, v, causal=bc.causal)
+        dq, dk, dv = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+        return o, dq, dk, dv
+
+    spec = _f32(bc.n, bc.d)
+    meta = dict(bc._asdict())
+    if bc.mode == "fwd":
+        export(out_dir, bname, fwd_fn, [spec] * 3, ["q", "k", "v"], ["o"], meta)
+    else:
+        export(out_dir, bname, fwdbwd_fn, [spec] * 4, ["q", "k", "v", "do"],
+               ["o", "dq", "dk", "dv"], meta)
+
+
+# ---------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="export only artifacts whose name starts with this")
+    ap.add_argument("--batch", type=int, default=MICROBATCH)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    jobs = []
+    for vname, cfg in VARIANTS.items():
+        jobs.append((f"init_{vname}",
+                     lambda v=vname, c=cfg: export_variant(args.out, v, c, args.batch)))
+    # one apply_step per distinct parameter tree (qk_norm on/off)
+    jobs.append(("apply_step_qknorm",
+                 lambda: export_apply(args.out, "qknorm", VARIANTS["sage_qknorm"])))
+    jobs.append(("apply_step_noqknorm",
+                 lambda: export_apply(args.out, "noqknorm", VARIANTS["sage_noqknorm"])))
+    for tname, tc in TRACE_VARIANTS.items():
+        jobs.append((tname, lambda t=tname, c=tc: export_trace(args.out, t, c)))
+    for bname, bc in bench_variants().items():
+        jobs.append((bname, lambda b=bname, c=bc: export_bench(args.out, b, c)))
+
+    t0 = time.time()
+    for name, job in jobs:
+        if args.only and not name.startswith(args.only):
+            continue
+        job()
+    print(f"AOT export complete in {time.time()-t0:.0f}s → {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Model/run variant registry shared by aot.py, tests, and the manifest.
+
+The paper pre-trains a 325M Llama (d=3072, N=4096) on 78B tokens; our CPU
+interpret-mode substrate scales that to a few-M-parameter Llama on a
+synthetic corpus (DESIGN.md §6 — substitution table).  The *variant grid*
+mirrors the paper's experiment axes exactly:
+
+  attention ∈ {sage, fpa}  ×  qk_norm ∈ {on, off}  ×  smoothing ∈ {none, k, qk}
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+
+class ModelConfig(NamedTuple):
+    vocab_size: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    d_head: int = 32
+    d_ff: int = 768          # SwiGLU hidden (Llama's 8/3·d rounded to 3·d here)
+    seq_len: int = 128
+    norm_eps: float = 1e-6   # paper §5.1
+    rope_theta: float = 10000.0
+    qk_norm: bool = True
+    attention: str = "sage"  # "sage" | "fpa"
+    k_smoothing: bool = True  # paper default: K-smoothing on, Q-smoothing off
+    q_smoothing: bool = False
+    block_q: int = 32
+    block_kv: int = 32
+
+    @property
+    def param_count_estimate(self) -> int:
+        d, ff, L, V = self.d_model, self.d_ff, self.n_layers, self.vocab_size
+        per_layer = 4 * d * d + 3 * d * ff + 2 * d + 2 * self.d_head
+        return V * d + L * per_layer + d
+
+
+# The pre-training variant grid (Figures 1 & 4).  Names are artifact keys.
+def _v(attention, qk_norm, k_sm, q_sm) -> ModelConfig:
+    return ModelConfig(attention=attention, qk_norm=qk_norm,
+                       k_smoothing=k_sm, q_smoothing=q_sm)
+
+
+VARIANTS: dict[str, ModelConfig] = {
+    # Figure 1: SageBwd vs FPA, ±QK-norm (K-smoothing on — the §5 default).
+    "sage_qknorm": _v("sage", True, True, False),
+    "sage_noqknorm": _v("sage", False, True, False),
+    "fpa_qknorm": _v("fpa", True, True, False),
+    "fpa_noqknorm": _v("fpa", False, True, False),
+    # Figure 4 ablation (all QK-normed): no smoothing / K / QK.
+    "sage_qknorm_nosm": _v("sage", True, False, False),
+    "sage_qknorm_qksm": _v("sage", True, True, True),
+}
+
+# Attention-trace variants (Table 1/2, Figures 5/6): single-head (N, D).
+class TraceConfig(NamedTuple):
+    n: int = 128
+    d: int = 64
+    causal: bool = False
+    impl: str = "sage"        # "sage" (kernel) | "pseudo" (§5.4) | "fpa"
+    k_smoothing: bool = True
+    q_smoothing: bool = False
+    block: int = 32
+    quant_ds: bool = True     # False = §7 future-work FP-dS variant
+
+
+TRACE_VARIANTS: dict[str, TraceConfig] = {
+    "trace_fpa": TraceConfig(impl="fpa"),
+    "trace_sage": TraceConfig(impl="sage"),
+    "trace_pseudo": TraceConfig(impl="pseudo"),
+    "trace_pseudo_nosm": TraceConfig(impl="pseudo", k_smoothing=False),
+    "trace_pseudo_qksm": TraceConfig(impl="pseudo", q_smoothing=True),
+    "trace_sage_nosm": TraceConfig(impl="sage", k_smoothing=False),
+    "trace_sage_qksm": TraceConfig(impl="sage", q_smoothing=True),
+    # Longer sequence for the §4.2 dS-magnitude probe.
+    "trace_fpa_n512": TraceConfig(impl="fpa", n=512),
+    "trace_sage_n512": TraceConfig(impl="sage", n=512),
+    # §7 future-work extension: FP dS path (4-of-7 INT8 MMs).
+    "trace_sage_dsfp": TraceConfig(impl="sage", quant_ds=False),
+    "trace_pseudo_dsfp": TraceConfig(impl="pseudo", quant_ds=False),
+}
+
+# Kernel speed benchmark grid (Figures 2 & 3).
+class BenchConfig(NamedTuple):
+    impl: str          # "sage" | "fa2" | "naive"
+    n: int
+    d: int
+    mode: str          # "fwd" | "fwdbwd"
+    causal: bool = False
+    block: int = 32
+
+
+BENCH_SEQ_LENS = (128, 256, 512)
+BENCH_HEAD_DIMS = (64, 128)
+BENCH_IMPLS = ("sage", "fa2", "naive")
+
+
+def bench_variants() -> dict[str, BenchConfig]:
+    out = {}
+    for d in BENCH_HEAD_DIMS:
+        for n in BENCH_SEQ_LENS:
+            for impl in BENCH_IMPLS:
+                for mode in ("fwd", "fwdbwd"):
+                    if impl != "sage" and mode == "fwdbwd":
+                        # Baselines differentiate via jnp autodiff.
+                        pass
+                    name = f"bench_{impl}_{mode}_d{d}_n{n}"
+                    out[name] = BenchConfig(impl=impl, n=n, d=d, mode=mode)
+    return out

@@ -1,0 +1,86 @@
+"""Differentiable attention front-ends used by the L2 model.
+
+``sage_attention``  — SageBwd (Algorithms 1+2) wired through ``custom_vjp``
+so that ``jax.grad`` of the model loss routes through the INT8 Pallas
+backward kernel instead of autodiff'ing the forward.
+
+``fpa_attention``   — full-precision attention; plain jnp, differentiated by
+JAX itself.  The paper's FPA baseline.
+
+Both take ``(B, H, N, D)`` tensors (the single-head kernels are vmapped
+over batch and head) and a static config.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import sagebwd_fwd
+from . import sagebwd_bwd
+
+
+class SageConfig(NamedTuple):
+    """Static kernel configuration (hashable so it can be a vjp nondiff arg)."""
+
+    block_q: int = 64
+    block_kv: int = 64
+    causal: bool = True
+    k_smoothing: bool = True
+    q_smoothing: bool = False
+
+
+def _vmap2(fn):
+    """vmap a single-head (N,D) function over (B, H, N, D)."""
+    return jax.vmap(jax.vmap(fn))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def sage_attention(q, k, v, cfg: SageConfig = SageConfig()):
+    o, _ = _sage_fwd_res(q, k, v, cfg)
+    return o
+
+
+def _sage_fwd_res(q, k, v, cfg: SageConfig):
+    fwd = lambda qq, kk, vv: sagebwd_fwd.sage_fwd(
+        qq, kk, vv, block_q=cfg.block_q, block_kv=cfg.block_kv,
+        causal=cfg.causal, k_smoothing=cfg.k_smoothing,
+        q_smoothing=cfg.q_smoothing)
+    o, lse = _vmap2(fwd)(q, k, v)
+    return o, (q, k, v, o, lse)
+
+
+def _sage_fwd_vjp(cfg: SageConfig, q, k, v):
+    o, res = _sage_fwd_res(q, k, v, cfg)
+    return o, res
+
+
+def _sage_bwd_vjp(cfg: SageConfig, res, do):
+    q, k, v, o, lse = res
+    bwd = lambda qq, kk, vv, dd, oo, ll: sagebwd_bwd.sage_bwd(
+        qq, kk, vv, dd, oo, ll, block_q=cfg.block_q, block_kv=cfg.block_kv,
+        causal=cfg.causal, k_smoothing=cfg.k_smoothing,
+        q_smoothing=cfg.q_smoothing)
+    dq, dk, dv = _vmap2(bwd)(q, k, v, do, o, lse)
+    return dq, dk, dv
+
+
+sage_attention.defvjp(
+    lambda q, k, v, cfg: _sage_fwd_vjp(cfg, q, k, v),
+    lambda cfg, res, do: _sage_bwd_vjp(cfg, res, do),
+)
+
+
+def fpa_attention(q, k, v, causal: bool = True):
+    """Exact scaled-dot-product attention on (B, H, N, D); jnp autodiff."""
+    d = q.shape[-1]
+    s = jnp.einsum("bhnd,bhmd->bhnm", q, k) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        n = q.shape[-2]
+        mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhnm,bhmd->bhnd", p, v)

@@ -1,0 +1,214 @@
+"""FlashAttention2-style tiled baseline (paper's Figs 2–3 comparator).
+
+Pure-jnp online-softmax attention, tiled exactly like the SageBwd kernel
+but with every matmul in full precision — i.e. "Triton-FA2" from the paper
+transplanted into this execution regime.  Used (a) as the speed baseline in
+`rust/benches/bench_attention.rs` via an AOT artifact and (b) as another
+correctness witness (FA2 must equal naive SDPA to fp32 round-off).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .sagebwd_fwd import NEG_INF
+
+
+def _fa2_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *,
+                block_q: int, block_kv: int, n: int, causal: bool,
+                sm_scale: float):
+    i = pl.program_id(0)
+    d = q_ref.shape[-1]
+    q_tile = q_ref[...].astype(jnp.float32)
+    num_kv = n // block_kv
+    row_ids = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+
+    def body(j, carry):
+        acc, m_i, l_i = carry
+        k_tile = pl.load(k_ref, (pl.dslice(j * block_kv, block_kv), slice(None))).astype(jnp.float32)
+        v_tile = pl.load(v_ref, (pl.dslice(j * block_kv, block_kv), slice(None))).astype(jnp.float32)
+        s_ij = jnp.dot(q_tile, k_tile.T) * sm_scale
+        if causal:
+            col_ids = j * block_kv + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 1)
+            s_ij = jnp.where(row_ids >= col_ids, s_ij, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s_ij, axis=-1))
+        p_ij = jnp.exp(s_ij - m_new[:, None])
+        corr = jnp.exp(m_i - m_new)
+        l_new = l_i * corr + jnp.sum(p_ij, axis=-1)
+        acc = acc * corr[:, None] + jnp.dot(p_ij, v_tile)
+        return acc, m_new, l_new
+
+    init = (jnp.zeros((block_q, d), jnp.float32),
+            jnp.full((block_q,), -jnp.inf, jnp.float32),
+            jnp.zeros((block_q,), jnp.float32))
+    hi = jnp.minimum(((i + 1) * block_q + block_kv - 1) // block_kv, num_kv) if causal else num_kv
+    acc, m_i, l_i = jax.lax.fori_loop(0, hi, body, init)
+    o_ref[...] = (acc / l_i[:, None]).astype(o_ref.dtype)
+    lse_ref[...] = (m_i + jnp.log(l_i)).astype(lse_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_kv", "causal"))
+def fa2_fwd(q, k, v, block_q: int = 64, block_kv: int = 64,
+            causal: bool = False):
+    """FA2-style forward on (N, D). Returns (o, lse)."""
+    n, d = q.shape
+    sm_scale = 1.0 / math.sqrt(d)
+    kernel = functools.partial(_fa2_kernel, block_q=block_q,
+                               block_kv=block_kv, n=n, causal=causal,
+                               sm_scale=sm_scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v)
+
+
+def naive_sdpa(q, k, v, causal: bool = False):
+    """Unfused reference SDPA on (N, D) — the 'torch' baseline analogue."""
+    d = q.shape[-1]
+    s = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        n = q.shape[0]
+        s = jnp.where(jnp.tril(jnp.ones((n, n), dtype=bool)), s, -jnp.inf)
+    return jax.nn.softmax(s, axis=-1) @ v
+
+
+# ---------------------------------------------------------------------------
+# FA2-style backward (full-precision twin of sagebwd_bwd's two kernels) —
+# pallas_call has no autodiff rule, so the baseline backward is explicit.
+# ---------------------------------------------------------------------------
+
+
+def _fa2_dkdv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                     dk_ref, dv_ref, *, block_q, block_kv, n, causal, sm_scale):
+    j = pl.program_id(0)
+    d = q_ref.shape[-1]
+    k_tile = k_ref[...].astype(jnp.float32)
+    v_tile = v_ref[...].astype(jnp.float32)
+    num_q = n // block_q
+
+    def body(i, carry):
+        dk_acc, dv_acc = carry
+        q_tile = pl.load(q_ref, (pl.dslice(i * block_q, block_q), slice(None))).astype(jnp.float32)
+        do_tile = pl.load(do_ref, (pl.dslice(i * block_q, block_q), slice(None))).astype(jnp.float32)
+        lse_tile = pl.load(lse_ref, (pl.dslice(i * block_q, block_q),))
+        delta_tile = pl.load(delta_ref, (pl.dslice(i * block_q, block_q),))
+        s_ij = jnp.dot(q_tile, k_tile.T) * sm_scale
+        if causal:
+            row_ids = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+            col_ids = j * block_kv + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+            s_ij = jnp.where(row_ids >= col_ids, s_ij, NEG_INF)
+        p_ij = jnp.exp(s_ij - lse_tile[:, None])
+        dv_acc = dv_acc + jnp.dot(p_ij.T, do_tile)
+        dp_ij = jnp.dot(do_tile, v_tile.T)
+        ds_ij = p_ij * (dp_ij - delta_tile[:, None])
+        dk_acc = dk_acc + jnp.dot(ds_ij.T, q_tile) * sm_scale
+        return dk_acc, dv_acc
+
+    lo = (j * block_kv) // block_q if causal else 0
+    init = (jnp.zeros((block_kv, d), jnp.float32),
+            jnp.zeros((block_kv, d), jnp.float32))
+    dk_acc, dv_acc = jax.lax.fori_loop(lo, num_q, body, init)
+    dk_ref[...] = dk_acc
+    dv_ref[...] = dv_acc
+
+
+def _fa2_dq_kernel(q_ref, k_ref, do_ref, v_ref, lse_ref, delta_ref, dq_ref, *,
+                   block_q, block_kv, n, causal, sm_scale):
+    i = pl.program_id(0)
+    d = q_ref.shape[-1]
+    q_tile = q_ref[...].astype(jnp.float32)
+    do_tile = do_ref[...].astype(jnp.float32)
+    lse_tile = lse_ref[...]
+    delta_tile = delta_ref[...]
+    num_kv = n // block_kv
+
+    def body(j, dq_acc):
+        k_tile = pl.load(k_ref, (pl.dslice(j * block_kv, block_kv), slice(None))).astype(jnp.float32)
+        v_tile = pl.load(v_ref, (pl.dslice(j * block_kv, block_kv), slice(None))).astype(jnp.float32)
+        s_ij = jnp.dot(q_tile, k_tile.T) * sm_scale
+        if causal:
+            row_ids = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+            col_ids = j * block_kv + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+            s_ij = jnp.where(row_ids >= col_ids, s_ij, NEG_INF)
+        p_ij = jnp.exp(s_ij - lse_tile[:, None])
+        dp_ij = jnp.dot(do_tile, v_tile.T)
+        ds_ij = p_ij * (dp_ij - delta_tile[:, None])
+        return dq_acc + jnp.dot(ds_ij, k_tile) * sm_scale
+
+    hi = jnp.minimum(((i + 1) * block_q + block_kv - 1) // block_kv, num_kv) if causal else num_kv
+    dq = jax.lax.fori_loop(0, hi, body, jnp.zeros((block_q, d), jnp.float32))
+    dq_ref[...] = dq
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_kv", "causal"))
+def fa2_bwd(q, k, v, do, o, lse, block_q: int = 64, block_kv: int = 64,
+            causal: bool = False):
+    """FA2-style backward on (N, D) → (dQ, dK, dV); all MMs full precision."""
+    n, d = q.shape
+    sm_scale = 1.0 / math.sqrt(d)
+    delta = jnp.sum(do * o, axis=-1)
+
+    dkdv = functools.partial(_fa2_dkdv_kernel, block_q=block_q,
+                             block_kv=block_kv, n=n, causal=causal,
+                             sm_scale=sm_scale)
+    dk, dv = pl.pallas_call(
+        dkdv,
+        grid=(n // block_kv,),
+        in_specs=[
+            pl.BlockSpec((n, d), lambda j: (0, 0)),
+            pl.BlockSpec((block_kv, d), lambda j: (j, 0)),
+            pl.BlockSpec((block_kv, d), lambda j: (j, 0)),
+            pl.BlockSpec((n, d), lambda j: (0, 0)),
+            pl.BlockSpec((n,), lambda j: (0,)),
+            pl.BlockSpec((n,), lambda j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_kv, d), lambda j: (j, 0)),
+            pl.BlockSpec((block_kv, d), lambda j: (j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v, do, lse, delta)
+
+    dqk = functools.partial(_fa2_dq_kernel, block_q=block_q,
+                            block_kv=block_kv, n=n, causal=causal,
+                            sm_scale=sm_scale)
+    dq = pl.pallas_call(
+        dqk,
+        grid=(n // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=True,
+    )(q, k, do, v, lse, delta)
+    return dq, dk, dv

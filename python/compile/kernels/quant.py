@@ -1,0 +1,92 @@
+"""INT8 quantization primitives for SageBwd (paper §3 "Quantization").
+
+Implements the quantizer ψ used throughout Algorithms 1 and 2:
+
+    x̂ = round(x / δ),   δ = max(|x|) / 127
+
+with three granularities (paper §3 "granularity"):
+
+  * per-tensor  — one δ for the whole matrix,
+  * per-block   — one δ per FlashAttention tile (the SageBwd default),
+  * per-token   — one δ per row (used for P̃ in Alg 1 line 9).
+
+All quantized values live in int8 in [-127, 127]; scales are fp32.  The
+integer matmul is done with ``preferred_element_type=int32`` so it is exact
+— identical numerics to the GPU's IMMA / TPU's 8-bit MXU path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Smallest scale we allow.  A true all-zeros block would otherwise produce
+# δ = 0 and NaNs on the dequant path; the paper's kernels share the same
+# guard implicitly through Triton's fp32 max being clamped.
+EPS_SCALE = 1e-12
+
+INT8_MAX = 127.0
+
+
+def quantize_per_tensor(x: jnp.ndarray):
+    """ψ with one scale for the whole tensor.
+
+    Returns ``(x_int8, scale)`` with ``scale`` of shape ``()``.
+    """
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), EPS_SCALE) / INT8_MAX
+    q = jnp.clip(jnp.round(x / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def quantize_per_block(x: jnp.ndarray):
+    """ψ for one FlashAttention tile: the tile *is* the block.
+
+    SageBwd's per-block quantization assigns a single scale per tile
+    (paper Alg 1 line 3, Alg 2 lines 6 & 9).  Inside a kernel the operand
+    already is the tile, so this is per-tensor over the tile.
+    """
+    return quantize_per_tensor(x)
+
+
+def quantize_per_token(x: jnp.ndarray):
+    """ψ with one scale per row (last-axis groups).
+
+    Used for P̃ in Alg 1 line 9 — each query token's probability row gets
+    its own scale, which is essential because rowmax(P̃) varies by orders
+    of magnitude across rows after the online-softmax subtraction.
+
+    Returns ``(x_int8, scale)`` with ``scale`` of shape ``x.shape[:-1] + (1,)``.
+    """
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), EPS_SCALE) / INT8_MAX
+    q = jnp.clip(jnp.round(x / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of ψ: x ≈ x̂ · δ (broadcasting scale)."""
+    return q.astype(jnp.float32) * scale
+
+
+def int8_matmul(a_q: jnp.ndarray, a_s: jnp.ndarray, b_q: jnp.ndarray, b_s: jnp.ndarray) -> jnp.ndarray:
+    """A·B ≈ δ_A δ_B · (Â B̂) with the integer product exact in int32.
+
+    ``a_s`` may be per-tensor () or per-token (m,1); ``b_s`` per-tensor ()
+    or per-token-of-B-columns (1,n) after the caller transposes.
+    """
+    acc = jnp.dot(a_q.astype(jnp.int32), b_q.astype(jnp.int32), preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * a_s * b_s
+
+
+def fake_quant(x: jnp.ndarray, granularity: str = "block") -> jnp.ndarray:
+    """Quantize-dequantize round trip (the §5.4 pseudo-quantization)."""
+    if granularity == "tensor" or granularity == "block":
+        q, s = quantize_per_tensor(x)
+    elif granularity == "token":
+        q, s = quantize_per_token(x)
+    else:
+        raise ValueError(f"unknown granularity {granularity!r}")
+    return dequantize(q, s)
+
+
+def quant_error_bound(x: jnp.ndarray) -> jnp.ndarray:
+    """Worst-case absolute quantization error: δ/2 (paper §4.4's "step size")."""
+    return jnp.maximum(jnp.max(jnp.abs(x)), EPS_SCALE) / INT8_MAX / 2.0

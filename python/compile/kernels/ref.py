@@ -1,0 +1,330 @@
+"""Pure-jnp correctness oracles.
+
+Three references, each serving a different experiment:
+
+1. ``fpa_fwd`` / ``fpa_bwd`` — exact full-precision attention (FPA) with all
+   intermediates materialized.  This is the ground truth every error metric
+   in the paper is computed against.
+
+2. ``sage_ref_fwd`` / ``sage_ref_bwd`` — a *block-faithful* reimplementation
+   of Algorithms 1 and 2 in plain jnp: identical per-block/per-token INT8
+   quantization, identical online-softmax recurrence, but without the Pallas
+   plumbing.  The Pallas kernels must match this to ~fp32 round-off; it is
+   the tight oracle for `pytest python/tests/test_kernel_*.py`.
+
+3. ``pseudo_quant_trace`` — the §5.4 methodology: take a plain attention
+   implementation, insert INT8 quantize-dequantize before each matmul that
+   SageBwd quantizes, and return every intermediate (δ, P, dP, dS, O, dQ,
+   dK, dV) for comparison against FPA.  Regenerates Table 2 and Figures 5/6.
+
+All functions operate on single-head ``(N, D)`` tensors; the model layer
+vmaps over batch and heads.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import quant
+from . import smoothing
+
+
+class AttnIntermediates(NamedTuple):
+    """Everything the paper's error analysis inspects (§5.4, Table 2)."""
+
+    o: jnp.ndarray      # (N, D) attention output
+    s: jnp.ndarray      # (N, N) logits  Q K^T / sqrt(d)
+    p: jnp.ndarray      # (N, N) softmax(S)
+    lse: jnp.ndarray    # (N,)   row logsumexp of S (FlashAttention "L")
+    delta: jnp.ndarray  # (N,)   rowsum(dO ∘ O)      (zeros in fwd-only)
+    dp: jnp.ndarray     # (N, N) dO V^T              (zeros in fwd-only)
+    ds: jnp.ndarray     # (N, N) P ∘ (dP − δ 1^T)    (zeros in fwd-only)
+    dq: jnp.ndarray     # (N, D)
+    dk: jnp.ndarray     # (N, D)
+    dv: jnp.ndarray     # (N, D)
+
+
+def _causal_mask(n: int) -> jnp.ndarray:
+    return jnp.tril(jnp.ones((n, n), dtype=bool))
+
+
+def fpa_fwd(q, k, v, causal: bool = False):
+    """Exact attention forward.  Returns (O, (S, P, lse))."""
+    d = q.shape[-1]
+    s = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        s = jnp.where(_causal_mask(q.shape[0]), s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / z
+    lse = (m + jnp.log(z)).squeeze(-1)
+    o = p @ v
+    return o, (s, p, lse)
+
+
+def fpa_bwd(q, k, v, do, causal: bool = False) -> AttnIntermediates:
+    """Exact attention forward+backward with every intermediate (paper §3).
+
+        dV = P^T dO,  dP = dO V^T,  δ = rowsum(dO ∘ O),
+        dS = P ∘ (dP − δ 1^T),  dQ = dS K / √d,  dK = dS^T Q / √d.
+    """
+    d = q.shape[-1]
+    o, (s, p, lse) = fpa_fwd(q, k, v, causal)
+    dv = p.T @ do
+    dp = do @ v.T
+    delta = jnp.sum(do * o, axis=-1)
+    ds = p * (dp - delta[:, None])
+    inv_sqrt_d = 1.0 / jnp.sqrt(jnp.float32(d))
+    dq = (ds @ k) * inv_sqrt_d
+    dk = (ds.T @ q) * inv_sqrt_d
+    return AttnIntermediates(o, s, p, lse, delta, dp, ds, dq, dk, dv)
+
+
+# ---------------------------------------------------------------------------
+# Block-faithful SageBwd reference (Algorithms 1 & 2 in plain jnp)
+# ---------------------------------------------------------------------------
+
+
+def _split_blocks(x, block):
+    n = x.shape[0]
+    assert n % block == 0, f"N={n} not divisible by block={block}"
+    return x.reshape(n // block, block, *x.shape[1:])
+
+
+def sage_ref_fwd(
+    q,
+    k,
+    v,
+    block_q: int = 64,
+    block_kv: int = 64,
+    causal: bool = False,
+    k_smoothing: bool = True,
+    q_smoothing: bool = False,
+):
+    """Algorithm 1 in plain jnp, bit-matching the Pallas kernel's math.
+
+    Returns (O, lse, residuals) where residuals carry the quantized tiles
+    and scales the backward pass reuses (Alg 2 line 1).
+    """
+    n, d = q.shape
+    inv_sqrt_d = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    if k_smoothing:
+        k_in, _ = smoothing.k_smooth(k)
+    else:
+        k_in = k
+    mu_q = None
+    if q_smoothing:
+        q_in, mu_q = smoothing.q_smooth(q)
+        # Rank-1 bias added back to every logit row (softmax-invariant per
+        # row only for K-smoothing; for Q-smoothing the bias varies across
+        # *columns* so it must be restored before the softmax).
+        bias_row = (mu_q @ k_in.T).reshape(1, -1)  # (1, N)
+    else:
+        q_in = q
+        bias_row = jnp.zeros((1, n), dtype=q.dtype)
+
+    qb = _split_blocks(q_in, block_q)
+    kb = _split_blocks(k_in, block_kv)
+    vb = _split_blocks(v, block_kv)
+    tm, tn = qb.shape[0], kb.shape[0]
+
+    # Per-block quantization of Q, K, V (Alg 1 line 3).
+    q_q, q_s = jax.vmap(quant.quantize_per_block)(qb)
+    k_q, k_s = jax.vmap(quant.quantize_per_block)(kb)
+    v_q, v_s = jax.vmap(quant.quantize_per_block)(vb)
+
+    o = jnp.zeros((tm, block_q, d), jnp.float32)
+    lse = jnp.zeros((tm, block_q), jnp.float32)
+
+    rows = []
+    lses = []
+    for i in range(tm):
+        acc = jnp.zeros((block_q, d), jnp.float32)
+        m_i = jnp.full((block_q,), -jnp.inf, jnp.float32)
+        l_i = jnp.zeros((block_q,), jnp.float32)
+        for j in range(tn):
+            if causal and (j * block_kv > (i + 1) * block_q - 1):
+                continue
+            s_ij = quant.int8_matmul(q_q[i], q_s[i], k_q[j].T, k_s[j]) * inv_sqrt_d
+            s_ij = s_ij + bias_row[:, j * block_kv : (j + 1) * block_kv] * inv_sqrt_d
+            if causal:
+                qi = jnp.arange(i * block_q, (i + 1) * block_q)[:, None]
+                kj = jnp.arange(j * block_kv, (j + 1) * block_kv)[None, :]
+                s_ij = jnp.where(qi >= kj, s_ij, -jnp.inf)
+            m_new = jnp.maximum(m_i, jnp.max(s_ij, axis=-1))
+            p_ij = jnp.exp(s_ij - m_new[:, None])
+            corr = jnp.exp(m_i - m_new)
+            l_i = l_i * corr + jnp.sum(p_ij, axis=-1)
+            # Per-token quantization of P̃ (Alg 1 line 9): rowmax(P̃) = 1 by
+            # construction for the row that attains m_new, otherwise < 1.
+            p_q, p_s = quant.quantize_per_token(p_ij)
+            pv = jnp.dot(p_q.astype(jnp.int32), v_q[j].astype(jnp.int32),
+                         preferred_element_type=jnp.int32).astype(jnp.float32)
+            pv = pv * p_s * v_s[j]
+            acc = acc * corr[:, None] + pv
+            m_i = m_new
+        acc = acc / l_i[:, None]
+        rows.append(acc)
+        lses.append(m_i + jnp.log(l_i))
+    o = jnp.concatenate(rows, axis=0)
+    lse = jnp.concatenate(lses, axis=0)
+    residuals = dict(q_q=q_q, q_s=q_s, k_q=k_q, k_s=k_s, v_q=v_q, v_s=v_s,
+                     mu_q=mu_q, bias_row=bias_row)
+    return o, lse, residuals
+
+
+def sage_ref_bwd(
+    q,
+    k,
+    v,
+    do,
+    block_q: int = 64,
+    block_kv: int = 64,
+    causal: bool = False,
+    k_smoothing: bool = True,
+    q_smoothing: bool = False,
+    quant_ds: bool = True,
+):
+    """Algorithms 1+2 in plain jnp.  Returns AttnIntermediates.
+
+    Matches the kernel exactly: INT8 per-block for S, dV, dQ, dK MMs; dP in
+    full precision (Alg 2 line 8 "Keep in FP16"); per-block re-quantization
+    of P and dO (line 6) and of dS (line 9).
+    """
+    n, d = q.shape
+    inv_sqrt_d = 1.0 / jnp.sqrt(jnp.float32(d))
+    o, lse, res = sage_ref_fwd(q, k, v, block_q, block_kv, causal,
+                               k_smoothing, q_smoothing)
+    q_q, q_s, k_q, k_s = res["q_q"], res["q_s"], res["k_q"], res["k_s"]
+    bias_row = res["bias_row"]
+    mu_q = res["mu_q"]
+
+    delta = jnp.sum(do * o, axis=-1)
+    dob = _split_blocks(do, block_q)
+    vb = _split_blocks(v, block_kv)
+    tm, tn = n // block_q, n // block_kv
+
+    dq = jnp.zeros((tm, block_q, d), jnp.float32)
+    dk = jnp.zeros((tn, block_kv, d), jnp.float32)
+    dv = jnp.zeros((tn, block_kv, d), jnp.float32)
+
+    # Also materialize the big intermediates for the error analysis.
+    p_full = jnp.zeros((n, n), jnp.float32)
+    dp_full = jnp.zeros((n, n), jnp.float32)
+    ds_full = jnp.zeros((n, n), jnp.float32)
+    s_full = jnp.zeros((n, n), jnp.float32)
+
+    for j in range(tn):
+        for i in range(tm):
+            if causal and (j * block_kv > (i + 1) * block_q - 1):
+                continue
+            s_ij = quant.int8_matmul(q_q[i], q_s[i], k_q[j].T, k_s[j]) * inv_sqrt_d
+            s_ij = s_ij + bias_row[:, j * block_kv : (j + 1) * block_kv] * inv_sqrt_d
+            if causal:
+                qi = jnp.arange(i * block_q, (i + 1) * block_q)[:, None]
+                kj = jnp.arange(j * block_kv, (j + 1) * block_kv)[None, :]
+                s_ij = jnp.where(qi >= kj, s_ij, -jnp.inf)
+            p_ij = jnp.exp(s_ij - lse[i * block_q : (i + 1) * block_q, None])
+            # Alg 2 line 6: per-block INT8 re-quantization of P and dO.
+            p_q, p_s = quant.quantize_per_block(p_ij)
+            do_q, do_s = quant.quantize_per_block(dob[i])
+            dv_ij = quant.int8_matmul(p_q.T, p_s, do_q, do_s)
+            dv = dv.at[j].add(dv_ij)
+            # Alg 2 line 8: dP = dO V^T in full precision.
+            dp_ij = dob[i] @ vb[j].T
+            ds_ij = p_ij * (dp_ij - delta[i * block_q : (i + 1) * block_q, None])
+            # Alg 2 line 9: per-block INT8 quantization of dS (or the
+            # §7 future-work FP dS path when quant_ds=False).
+            if quant_ds:
+                ds_q, ds_s = quant.quantize_per_block(ds_ij)
+                dq_ij = quant.int8_matmul(ds_q, ds_s, k_q[j].astype(jnp.int8), k_s[j]) * inv_sqrt_d
+                dk_ij = quant.int8_matmul(ds_q.T, ds_s, q_q[i], q_s[i]) * inv_sqrt_d
+            else:
+                dq_ij = (ds_ij @ quant.dequantize(k_q[j], k_s[j])) * inv_sqrt_d
+                dk_ij = (ds_ij.T @ quant.dequantize(q_q[i], q_s[i])) * inv_sqrt_d
+            dq = dq.at[i].add(dq_ij)
+            dk = dk.at[j].add(dk_ij)
+
+            sl_i = slice(i * block_q, (i + 1) * block_q)
+            sl_j = slice(j * block_kv, (j + 1) * block_kv)
+            s_full = s_full.at[sl_i, sl_j].set(s_ij)
+            p_full = p_full.at[sl_i, sl_j].set(p_ij)
+            dp_full = dp_full.at[sl_i, sl_j].set(dp_ij)
+            ds_full = ds_full.at[sl_i, sl_j].set(ds_ij)
+
+    dq = dq.reshape(n, d)
+    dk = dk.reshape(n, d)
+    dv = dv.reshape(n, d)
+    if q_smoothing and mu_q is not None:
+        # §6: dK = dS^T Q = dS^T Q_sm + (dS^T 1) μ_Q^T — the centered branch
+        # was computed against quantized Q_sm, add the bias branch back.
+        dk = dk + smoothing.dk_bias_branch(ds_full, mu_q) * inv_sqrt_d
+    return AttnIntermediates(o, s_full, p_full, lse, delta, dp_full, ds_full,
+                             dq, dk, dv)
+
+
+# ---------------------------------------------------------------------------
+# §5.4 pseudo-quantized FPA trace (Table 2, Figures 5/6)
+# ---------------------------------------------------------------------------
+
+
+def pseudo_quant_trace(q, k, v, do, causal: bool = False,
+                       k_smoothing: bool = True,
+                       q_smoothing: bool = False,
+                       quant_ds: bool = True) -> AttnIntermediates:
+    """Apply SageBwd's INT8 quantize-dequantize before each quantized MM in
+    a plain attention implementation (paper §5.4).
+
+    dP is exact because the upstream dO is treated as error-free and the
+    dO·V^T product stays in high precision — reproducing Table 2's
+    ``Rel-L2(dP) = 0.0000`` row.
+    """
+    d = q.shape[-1]
+    inv_sqrt_d = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    if k_smoothing:
+        k_in, _ = smoothing.k_smooth(k)
+    else:
+        k_in = k
+    if q_smoothing:
+        q_in, mu_q = smoothing.q_smooth(q)
+        bias = smoothing.qk_logits_bias(mu_q, k_in)
+    else:
+        q_in, mu_q, bias = q, None, 0.0
+
+    q_fq = quant.fake_quant(q_in, "block")
+    k_fq = quant.fake_quant(k_in, "block")
+    v_fq = quant.fake_quant(v, "block")
+
+    s = (q_fq @ k_fq.T + bias) * inv_sqrt_d
+    if causal:
+        s = jnp.where(_causal_mask(q.shape[0]), s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / z
+    lse = (m + jnp.log(z)).squeeze(-1)
+
+    p_fq = quant.fake_quant(p, "token")
+    o = p_fq @ v_fq
+
+    # Backward (§5.4: quant-dequant before each SageBwd-quantized MM).
+    p_fq_blk = quant.fake_quant(p, "block")
+    do_fq = quant.fake_quant(do, "block")
+    dv = p_fq_blk.T @ do_fq
+    dp = do @ v.T                       # FP16 path — exact here
+    delta = jnp.sum(do * o, axis=-1)
+    ds = p * (dp - delta[:, None])
+    ds_fq = quant.fake_quant(ds, "block") if quant_ds else ds
+    dq = (ds_fq @ k_fq) * inv_sqrt_d
+    dk_center = (ds_fq.T @ q_fq) * inv_sqrt_d
+    if q_smoothing and mu_q is not None:
+        dk = dk_center + smoothing.dk_bias_branch(ds, mu_q) * inv_sqrt_d
+    else:
+        dk = dk_center
+    return AttnIntermediates(o, s, p, lse, delta, dp, ds, dq, dk, dv)

@@ -1,0 +1,241 @@
+"""SageBwd backward pass (paper Algorithm 2) as Pallas kernels.
+
+Two kernels instead of Triton's single atomics-based sweep (TPU Pallas has
+no cheap global atomics — DESIGN.md §7):
+
+  * ``_dkdv_kernel`` — grid over KV blocks j, inner loop over Q blocks i
+    (exactly Alg 2's loop nest).  Computes dK_j, dV_j, and the per-column
+    sums of dS needed for the Q-smoothing dK bias branch (§6).
+  * ``_dq_kernel`` — grid over Q blocks i, inner loop over KV blocks j.
+    Computes dQ_i.
+
+Both recompute S_ij from the *quantized* Q/K tiles (Alg 2 line 5 — the
+same deterministic per-block ψ as the forward, so P matches the forward
+bit-for-bit) and P_ij = exp(S_ij − L_i).
+
+Quantization layout per Alg 2:
+  line 7   dV += MM(P̂^T, d̂O) · s_P · s_dO       INT8 per-block
+  line 8   dP  = MM(dO, V^T)                     kept in full precision
+  line 9   dS  = P ∘ (dP − D_i);  ψ(dS)          INT8 per-block
+  line 10  dQ += MM(d̂S, K̂) · s_dS · s_K         INT8
+  line 11  dK += MM(d̂S^T, Q̂) · s_dS · s_Q       INT8
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import smoothing
+from .sagebwd_fwd import _quant_tile, NEG_INF
+
+
+def _recompute_p(q_q, q_s, k_q, k_s, bias, lse_tile, row0, col0,
+                 block_q, block_kv, causal, sm_scale):
+    """Alg 2 line 5: S from quantized tiles, P = exp(S − L)."""
+    s_ij = jnp.dot(q_q.astype(jnp.int32), k_q.astype(jnp.int32).T,
+                   preferred_element_type=jnp.int32).astype(jnp.float32)
+    s_ij = s_ij * (q_s * k_s) * sm_scale + bias * sm_scale
+    if causal:
+        row_ids = row0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+        col_ids = col0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+        s_ij = jnp.where(row_ids >= col_ids, s_ij, NEG_INF)
+    return jnp.exp(s_ij - lse_tile[:, None])
+
+
+def _dkdv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, bias_ref,
+                 dk_ref, dv_ref, dscol_ref, *,
+                 block_q: int, block_kv: int, n: int, causal: bool,
+                 sm_scale: float, quant_ds: bool = True):
+    j = pl.program_id(0)
+    d = q_ref.shape[-1]
+    k_tile = k_ref[...].astype(jnp.float32)          # (block_kv, d)
+    v_tile = v_ref[...].astype(jnp.float32)
+    k_q, k_s = _quant_tile(k_tile)
+    num_q = n // block_q
+
+    _refs = dict(q=q_ref, do=do_ref, lse=lse_ref, delta=delta_ref, bias=bias_ref)
+
+    def body(i, carry):
+        dk_acc, dv_acc, dscol_acc = carry
+        q_tile = pl.load(_refs["q"], (pl.dslice(i * block_q, block_q), slice(None))).astype(jnp.float32)
+        do_tile = pl.load(_refs["do"], (pl.dslice(i * block_q, block_q), slice(None))).astype(jnp.float32)
+        lse_tile = pl.load(_refs["lse"], (pl.dslice(i * block_q, block_q),))
+        delta_tile = pl.load(_refs["delta"], (pl.dslice(i * block_q, block_q),))
+        bias = pl.load(_refs["bias"], (slice(0, 1), pl.dslice(j * block_kv, block_kv)))
+
+        q_q, q_s = _quant_tile(q_tile)
+        p_ij = _recompute_p(q_q, q_s, k_q, k_s, bias, lse_tile,
+                            i * block_q, j * block_kv,
+                            block_q, block_kv, causal, sm_scale)
+
+        # line 6+7: per-block INT8 of P and dO, dV accumulation.
+        p_q, p_s = _quant_tile(p_ij)
+        do_q, do_s = _quant_tile(do_tile)
+        dv_ij = jnp.dot(p_q.astype(jnp.int32).T, do_q.astype(jnp.int32),
+                        preferred_element_type=jnp.int32).astype(jnp.float32)
+        dv_acc = dv_acc + dv_ij * (p_s * do_s)
+
+        # line 8: dP in full precision.
+        dp_ij = jnp.dot(do_tile, v_tile.T)
+        ds_ij = p_ij * (dp_ij - delta_tile[:, None])
+
+        # line 9+11: ψ(dS), dK accumulation.  When quant_ds=False (the
+        # paper's §7 "mitigate dS-path quantization error" future-work
+        # direction) dS stays FP and only Q̂ is dequantized — trading one
+        # INT8 MM for accuracy exactly where Table 2 shows the bottleneck.
+        if quant_ds:
+            ds_q, ds_s = _quant_tile(ds_ij)
+            dk_ij = jnp.dot(ds_q.astype(jnp.int32).T, q_q.astype(jnp.int32),
+                            preferred_element_type=jnp.int32).astype(jnp.float32)
+            dk_acc = dk_acc + dk_ij * (ds_s * q_s) * sm_scale
+        else:
+            dk_ij = jnp.dot(ds_ij.T, q_q.astype(jnp.float32) * q_s)
+            dk_acc = dk_acc + dk_ij * sm_scale
+        # §6 Q-smoothing bias branch needs colsum(dS) — cheap to carry.
+        dscol_acc = dscol_acc + jnp.sum(ds_ij, axis=0)
+        return dk_acc, dv_acc, dscol_acc
+
+    init = (jnp.zeros((block_kv, d), jnp.float32),
+            jnp.zeros((block_kv, d), jnp.float32),
+            jnp.zeros((block_kv,), jnp.float32))
+    if causal:
+        lo = (j * block_kv) // block_q  # Q blocks strictly above the tile are masked out
+    else:
+        lo = 0
+    dk_acc, dv_acc, dscol_acc = jax.lax.fori_loop(lo, num_q, body, init)
+    dk_ref[...] = dk_acc
+    dv_ref[...] = dv_acc
+    dscol_ref[...] = dscol_acc
+
+
+def _dq_kernel(q_ref, k_ref, do_ref, v_ref, lse_ref, delta_ref, bias_ref,
+               dq_ref, *,
+               block_q: int, block_kv: int, n: int, causal: bool,
+               sm_scale: float, quant_ds: bool = True):
+    i = pl.program_id(0)
+    d = q_ref.shape[-1]
+    q_tile = q_ref[...].astype(jnp.float32)
+    do_tile = do_ref[...].astype(jnp.float32)
+    lse_tile = lse_ref[...]
+    delta_tile = delta_ref[...]
+    q_q, q_s = _quant_tile(q_tile)
+    num_kv = n // block_kv
+
+    def body(j, dq_acc):
+        k_tile = pl.load(k_ref, (pl.dslice(j * block_kv, block_kv), slice(None))).astype(jnp.float32)
+        v_tile = pl.load(v_ref, (pl.dslice(j * block_kv, block_kv), slice(None))).astype(jnp.float32)
+        bias = pl.load(bias_ref, (slice(0, 1), pl.dslice(j * block_kv, block_kv)))
+        k_q, k_s = _quant_tile(k_tile)
+        p_ij = _recompute_p(q_q, q_s, k_q, k_s, bias, lse_tile,
+                            i * block_q, j * block_kv,
+                            block_q, block_kv, causal, sm_scale)
+        dp_ij = jnp.dot(do_tile, v_tile.T)
+        ds_ij = p_ij * (dp_ij - delta_tile[:, None])
+        if quant_ds:
+            ds_q, ds_s = _quant_tile(ds_ij)
+            dq_ij = jnp.dot(ds_q.astype(jnp.int32), k_q.astype(jnp.int32),
+                            preferred_element_type=jnp.int32).astype(jnp.float32)
+            return dq_acc + dq_ij * (ds_s * k_s) * sm_scale
+        dq_ij = jnp.dot(ds_ij, k_q.astype(jnp.float32) * k_s)
+        return dq_acc + dq_ij * sm_scale
+
+    if causal:
+        hi = jnp.minimum(((i + 1) * block_q + block_kv - 1) // block_kv, num_kv)
+    else:
+        hi = num_kv
+    dq = jax.lax.fori_loop(0, hi, body, jnp.zeros((block_q, d), jnp.float32))
+    dq_ref[...] = dq
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_q", "block_kv", "causal", "k_smoothing", "q_smoothing",
+    "quant_ds"))
+def sage_bwd(q, k, v, do, o, lse, block_q: int = 64, block_kv: int = 64,
+             causal: bool = False, k_smoothing: bool = True,
+             q_smoothing: bool = False, quant_ds: bool = True):
+    """SageBwd backward on (N, D) single-head tensors → (dQ, dK, dV).
+
+    ``o``/``lse`` are the forward outputs (Alg 2 takes them as inputs; the
+    quantized tiles are recomputed deterministically rather than stored).
+
+    ``quant_ds=False`` implements the paper's §7 future-work direction:
+    keep the dS-path matmuls (dQ = dS·K̂, dK = dSᵀ·Q̂) in floating point,
+    quantizing only 4 of 7 MMs — removing the Table-2 bottleneck at the
+    cost of 2 of the 6 INT8 accelerated products.
+    """
+    n, d = q.shape
+    sm_scale = 1.0 / math.sqrt(d)
+
+    if k_smoothing:
+        k_in, _ = smoothing.k_smooth(k)
+    else:
+        k_in = k
+    if q_smoothing:
+        q_in, mu_q = smoothing.q_smooth(q)
+        bias_row = (mu_q @ k_in.T).reshape(1, n).astype(jnp.float32)
+    else:
+        q_in, mu_q = q, None
+        bias_row = jnp.zeros((1, n), jnp.float32)
+
+    delta = jnp.sum(do * o, axis=-1)  # Alg 2 line 2
+
+    grid_kv = (n // block_kv,)
+    dkdv = functools.partial(_dkdv_kernel, block_q=block_q,
+                             block_kv=block_kv, n=n, causal=causal,
+                             sm_scale=sm_scale, quant_ds=quant_ds)
+    dk, dv, dscol = pl.pallas_call(
+        dkdv,
+        grid=grid_kv,
+        in_specs=[
+            pl.BlockSpec((n, d), lambda j: (0, 0)),        # q (full)
+            pl.BlockSpec((block_kv, d), lambda j: (j, 0)),  # k tile
+            pl.BlockSpec((block_kv, d), lambda j: (j, 0)),  # v tile
+            pl.BlockSpec((n, d), lambda j: (0, 0)),        # do (full)
+            pl.BlockSpec((n,), lambda j: (0,)),            # lse
+            pl.BlockSpec((n,), lambda j: (0,)),            # delta
+            pl.BlockSpec((1, n), lambda j: (0, 0)),        # bias row
+        ],
+        out_specs=[
+            pl.BlockSpec((block_kv, d), lambda j: (j, 0)),
+            pl.BlockSpec((block_kv, d), lambda j: (j, 0)),
+            pl.BlockSpec((block_kv,), lambda j: (j,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(q_in, k_in, v, do, lse, delta, bias_row)
+
+    grid_q = (n // block_q,)
+    dqk = functools.partial(_dq_kernel, block_q=block_q, block_kv=block_kv,
+                            n=n, causal=causal, sm_scale=sm_scale,
+                            quant_ds=quant_ds)
+    dq = pl.pallas_call(
+        dqk,
+        grid=grid_q,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),   # q tile
+            pl.BlockSpec((n, d), lambda i: (0, 0)),         # k (full)
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),   # do tile
+            pl.BlockSpec((n, d), lambda i: (0, 0)),         # v (full)
+            pl.BlockSpec((block_q,), lambda i: (i,)),       # lse tile
+            pl.BlockSpec((block_q,), lambda i: (i,)),       # delta tile
+            pl.BlockSpec((1, n), lambda i: (0, 0)),         # bias row
+        ],
+        out_specs=pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=True,
+    )(q_in, k_in, do, v, lse, delta, bias_row)
+
+    if q_smoothing and mu_q is not None:
+        # §6: dK = dK_center + (dS^T 1) μ_Q^T — centered branch came from
+        # quantized Q_sm inside the kernel, bias branch restored here.
+        dk = dk + dscol[:, None] * mu_q.reshape(1, d) * sm_scale
+    return dq, dk, dv

@@ -1,0 +1,155 @@
+"""SageBwd forward pass (paper Algorithm 1) as a Pallas kernel.
+
+Grid: one program per query block Q_i; the KV loop (Alg 1 line 6) is a
+``fori_loop`` inside the kernel.  Per iteration:
+
+  line 7   S_ij = MM(Q̂_i, K̂_j) · s_Q · s_K          (INT8×INT8→INT32 dot)
+  line 8   online softmax update (m, l)
+  line 9   per-token quantization of P̃_ij
+  line 10  O accumulation via MM(P̂_ij, V̂_j) · s_P · s_V (INT8 dot)
+
+K-smoothing happens at kernel *entry* (the §6 observation that no backward
+correction is needed); Q-smoothing adds the rank-1 logit bias row.
+
+TPU mapping (DESIGN.md §7): the Triton threadblock tile becomes the Pallas
+grid + BlockSpec; INT8 IMMA becomes an int8×int8→int32 ``jnp.dot`` (MXU
+8-bit path on real TPUs, exact integer math under interpret=True).  VMEM
+footprint per program: (B_q·D)·4 + 2·(N·D)·4 + (B_q·B_kv)·~8 bytes — K/V are
+staged whole because N here is ≤ a few K tokens; a production TPU kernel
+would stream K_j/V_j tiles with a 2-D grid.  interpret=True is mandatory on
+CPU (Mosaic custom-calls cannot run on the CPU PJRT plugin).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import smoothing
+
+INT8_MAX = 127.0
+EPS_SCALE = 1e-12
+NEG_INF = -1e30  # finite -inf stand-in: keeps exp() exact zero without nan paths
+
+
+def _quant_tile(x):
+    """Per-block ψ on a tile already resident in VMEM (Alg 1 line 3)."""
+    s = jnp.maximum(jnp.max(jnp.abs(x)), EPS_SCALE) / INT8_MAX
+    q = jnp.clip(jnp.round(x / s), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q, s
+
+
+def _quant_rows(x):
+    """Per-token ψ for P̃ (Alg 1 line 9)."""
+    s = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), EPS_SCALE) / INT8_MAX
+    q = jnp.clip(jnp.round(x / s), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q, s
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, lse_ref, *,
+                block_q: int, block_kv: int, n: int, causal: bool,
+                sm_scale: float):
+    i = pl.program_id(0)
+    d = q_ref.shape[-1]
+    q_tile = q_ref[...].astype(jnp.float32)          # (block_q, d)
+    q_q, q_s = _quant_tile(q_tile)
+
+    num_kv = n // block_kv
+    row_ids = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+
+    def body(j, carry):
+        acc, m_i, l_i = carry
+        k_tile = pl.load(k_ref, (pl.dslice(j * block_kv, block_kv), slice(None)))
+        v_tile = pl.load(v_ref, (pl.dslice(j * block_kv, block_kv), slice(None)))
+        k_q, k_s = _quant_tile(k_tile.astype(jnp.float32))
+        v_q, v_s = _quant_tile(v_tile.astype(jnp.float32))
+
+        s_ij = jnp.dot(q_q.astype(jnp.int32), k_q.astype(jnp.int32).T,
+                       preferred_element_type=jnp.int32).astype(jnp.float32)
+        s_ij = s_ij * (q_s * k_s) * sm_scale
+        bias = pl.load(bias_ref, (slice(0, 1), pl.dslice(j * block_kv, block_kv)))
+        s_ij = s_ij + bias * sm_scale
+        if causal:
+            col_ids = j * block_kv + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 1)
+            s_ij = jnp.where(row_ids >= col_ids, s_ij, NEG_INF)
+
+        m_new = jnp.maximum(m_i, jnp.max(s_ij, axis=-1))
+        p_ij = jnp.exp(s_ij - m_new[:, None])
+        corr = jnp.exp(m_i - m_new)
+        l_new = l_i * corr + jnp.sum(p_ij, axis=-1)
+
+        p_q, p_s = _quant_rows(p_ij)
+        pv = jnp.dot(p_q.astype(jnp.int32), v_q.astype(jnp.int32),
+                     preferred_element_type=jnp.int32).astype(jnp.float32)
+        pv = pv * p_s * v_s
+        acc = acc * corr[:, None] + pv
+        return acc, m_new, l_new
+
+    init = (jnp.zeros((block_q, d), jnp.float32),
+            jnp.full((block_q,), -jnp.inf, jnp.float32),
+            jnp.zeros((block_q,), jnp.float32))
+    if causal:
+        # Only KV blocks that intersect the causal triangle contribute.
+        hi = jnp.minimum(((i + 1) * block_q + block_kv - 1) // block_kv, num_kv)
+    else:
+        hi = num_kv
+    acc, m_i, l_i = jax.lax.fori_loop(0, hi, body, init)
+
+    o_ref[...] = (acc / l_i[:, None]).astype(o_ref.dtype)
+    lse_ref[...] = (m_i + jnp.log(l_i)).astype(lse_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_q", "block_kv", "causal", "k_smoothing", "q_smoothing"))
+def sage_fwd(q, k, v, block_q: int = 64, block_kv: int = 64,
+             causal: bool = False, k_smoothing: bool = True,
+             q_smoothing: bool = False):
+    """SageBwd forward on (N, D) single-head tensors.
+
+    Returns ``(o, lse)``; lse is the FlashAttention log-sum-exp residual the
+    backward pass uses to recompute P (Alg 2 line 5).
+    """
+    n, d = q.shape
+    assert n % block_q == 0 and n % block_kv == 0
+    sm_scale = 1.0 / math.sqrt(d)
+
+    if k_smoothing:
+        k_in, _ = smoothing.k_smooth(k)
+    else:
+        k_in = k
+    if q_smoothing:
+        q_in, mu_q = smoothing.q_smooth(q)
+        bias_row = (mu_q @ k_in.T).reshape(1, n).astype(jnp.float32)
+    else:
+        q_in = q
+        bias_row = jnp.zeros((1, n), jnp.float32)
+
+    grid = (n // block_q,)
+    kernel = functools.partial(_fwd_kernel, block_q=block_q,
+                               block_kv=block_kv, n=n, causal=causal,
+                               sm_scale=sm_scale)
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(q_in, k_in, v, bias_row)
+    return o, lse

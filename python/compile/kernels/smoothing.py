@@ -1,0 +1,56 @@
+"""Q/K-smoothing (paper §3 "Q and K Smoothing", §6 ablation).
+
+K-smoothing subtracts the token-wise (row) mean of K before quantization:
+
+    K_sm = K − 1·mean_row(K)
+
+Softmax row-invariance makes the forward exactly equivalent (every logit in
+a row shifts by the same Q_i·μ_K^T), and §6 shows the backward needs *no*
+correction because every row of dS sums to zero:
+
+    dQ = dS·K = dS·(K − 1 μ_K^T) = dS·K_sm.
+
+Q-smoothing subtracts a mean from Q; forward equivalence needs the rank-1
+bias term μ_Q·K^T added back to the logits, and the dK gradient needs the
+bias branch  dK_bias = (dS^T 1)·μ_Q^T  (paper §6).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def k_smooth(k: jnp.ndarray):
+    """Return ``(K_sm, μ_K)`` with μ_K the mean over the token axis (−2)."""
+    mu = jnp.mean(k, axis=-2, keepdims=True)
+    return k - mu, mu
+
+
+def q_smooth(q: jnp.ndarray):
+    """Return ``(Q_sm, μ_Q)`` with μ_Q the mean over the token axis (−2).
+
+    The paper's per-block Q-smoothing uses a block-wise mean; SageBwd's
+    pre-training ablation (§6) operates at kernel entry on the full tensor,
+    which is what we implement (block means are recovered inside the kernel
+    tiles because the quantizer is per-block anyway).
+    """
+    mu = jnp.mean(q, axis=-2, keepdims=True)
+    return q - mu, mu
+
+
+def qk_logits_bias(mu_q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Rank-1 logits correction  1·(μ_Q K^T)  restoring S after Q-smoothing.
+
+    Shapes: mu_q (…,1,d), k (…,n,d) → (…,1,n), broadcast over the query
+    axis by the caller.
+    """
+    return jnp.einsum("...od,...nd->...on", mu_q, k)
+
+
+def dk_bias_branch(ds: jnp.ndarray, mu_q: jnp.ndarray) -> jnp.ndarray:
+    """dK_bias = (dS^T 1)·μ_Q^T  — the §6 gradient correction for Q-smoothing.
+
+    Shapes: ds (…,m,n), mu_q (…,1,d) → (…,n,d).
+    """
+    colsum = jnp.sum(ds, axis=-2, keepdims=True)  # (…,1,n)
+    return jnp.einsum("...on,...od->...nd", colsum, mu_q)

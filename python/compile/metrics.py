@@ -1,0 +1,27 @@
+"""Error metrics used throughout the paper (Tables 1–2, Figures 5–6).
+
+CosSim  = <x, y> / (‖x‖‖y‖)            over flattened tensors
+Rel-ℓ2  = ‖x − y‖₂ / ‖y‖₂              (y = full-precision reference)
+RMS     = sqrt(mean(x²))               (§4.2's magnitude probe)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_EPS = 1e-20
+
+
+def cossim(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    xf, yf = x.reshape(-1), y.reshape(-1)
+    return jnp.dot(xf, yf) / jnp.maximum(
+        jnp.linalg.norm(xf) * jnp.linalg.norm(yf), _EPS)
+
+
+def rel_l2(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return jnp.linalg.norm((x - y).reshape(-1)) / jnp.maximum(
+        jnp.linalg.norm(y.reshape(-1)), _EPS)
+
+
+def rms(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sqrt(jnp.mean(jnp.square(x)))

@@ -1,0 +1,202 @@
+"""L2 — Llama-style decoder-only transformer with pluggable attention.
+
+Architecture follows the paper's §5.1 setup (Llama 3 family, GPT2-style BPE
+vocabulary, RMSNorm ε=1e-6, cosine LR) scaled to this substrate:
+
+  embed → [RMSNorm → MHA(RoPE, optional QK-norm, sage|fpa) → residual
+           → RMSNorm → SwiGLU → residual] × L → RMSNorm → tied LM head
+
+Attention routes through either
+
+  * ``kernels.attention.sage_attention`` — the SageBwd custom_vjp whose
+    backward is the INT8 Pallas kernel (Algorithm 2), or
+  * ``kernels.attention.fpa_attention``  — exact attention, jnp autodiff
+    (the paper's FPA baseline).
+
+Parameters live in a *flat dict* keyed by dotted names; the AOT manifest
+serializes ``param_names(cfg)`` order so the Rust coordinator can address
+leaves positionally.  Everything here is build-time only — the functions
+are lowered to HLO text by ``aot.py`` and never imported at run time.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import attention as attn_mod
+
+Params = Dict[str, jnp.ndarray]
+
+# AdamW hyperparameters (paper §5.1 uses lr=3e-5 with cosine schedule; the
+# schedule itself lives in the Rust coordinator and arrives as an input).
+ADAM_B1 = 0.9
+ADAM_B2 = 0.95
+ADAM_EPS = 1e-8
+WEIGHT_DECAY = 0.1
+
+
+# ---------------------------------------------------------------------------
+# Parameter schema
+# ---------------------------------------------------------------------------
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, tuple]:
+    """Flat name → shape map.  Iteration order (sorted) IS the ABI the Rust
+    side addresses leaves by; never reorder without regenerating artifacts."""
+    d, h, dh, ff, v = cfg.d_model, cfg.n_heads, cfg.d_head, cfg.d_ff, cfg.vocab_size
+    shapes: Dict[str, tuple] = {"embed": (v, d), "final_norm": (d,)}
+    for i in range(cfg.n_layers):
+        p = f"layers.{i:02d}."
+        shapes[p + "attn_norm"] = (d,)
+        shapes[p + "wq"] = (d, h * dh)
+        shapes[p + "wk"] = (d, h * dh)
+        shapes[p + "wv"] = (d, h * dh)
+        shapes[p + "wo"] = (h * dh, d)
+        if cfg.qk_norm:
+            shapes[p + "q_norm"] = (dh,)
+            shapes[p + "k_norm"] = (dh,)
+        shapes[p + "mlp_norm"] = (d,)
+        shapes[p + "w_gate"] = (d, ff)
+        shapes[p + "w_up"] = (d, ff)
+        shapes[p + "w_down"] = (ff, d)
+    return shapes
+
+
+def param_names(cfg: ModelConfig) -> list:
+    return sorted(param_shapes(cfg).keys())
+
+
+def init_params(cfg: ModelConfig, seed) -> Params:
+    """Scaled-normal init (std 0.02, Llama-style residual scaling on wo/w_down)."""
+    shapes = param_shapes(cfg)
+    names = param_names(cfg)
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, len(names))
+    params: Params = {}
+    resid_scale = 1.0 / math.sqrt(2 * cfg.n_layers)
+    for name, k in zip(names, keys):
+        shape = shapes[name]
+        if name.endswith(("attn_norm", "mlp_norm", "final_norm", "q_norm", "k_norm")):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith(("wo", "w_down")):
+            params[name] = 0.02 * resid_scale * jax.random.normal(k, shape, jnp.float32)
+        else:
+            params[name] = 0.02 * jax.random.normal(k, shape, jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, gamma, eps):
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gamma
+
+
+def rope_tables(cfg: ModelConfig):
+    """Rotary position-embedding cos/sin tables (seq_len, d_head/2)."""
+    half = cfg.d_head // 2
+    freqs = cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    pos = jnp.arange(cfg.seq_len, dtype=jnp.float32)
+    angles = pos[:, None] * freqs[None, :]
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, H, N, Dh) with Dh even; rotate pairs (x1, x2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attention(cfg: ModelConfig, q, k, v):
+    if cfg.attention == "sage":
+        sage_cfg = attn_mod.SageConfig(
+            block_q=cfg.block_q, block_kv=cfg.block_kv, causal=True,
+            k_smoothing=cfg.k_smoothing, q_smoothing=cfg.q_smoothing)
+        return attn_mod.sage_attention(q, k, v, sage_cfg)
+    if cfg.attention == "fpa":
+        return attn_mod.fpa_attention(q, k, v, causal=True)
+    raise ValueError(f"unknown attention {cfg.attention!r}")
+
+
+def _block(cfg: ModelConfig, params: Params, prefix: str, x, cos, sin):
+    b, n, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+
+    y = rms_norm(x, params[prefix + "attn_norm"], cfg.norm_eps)
+    q = (y @ params[prefix + "wq"]).reshape(b, n, h, dh).transpose(0, 2, 1, 3)
+    k = (y @ params[prefix + "wk"]).reshape(b, n, h, dh).transpose(0, 2, 1, 3)
+    v = (y @ params[prefix + "wv"]).reshape(b, n, h, dh).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        # §4.1: per-token RMS normalization of Q and K with learned γ —
+        # bounds σ_Q, σ_K and hence the INT8 quantization step (§4.4).
+        q = rms_norm(q, params[prefix + "q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params[prefix + "k_norm"], cfg.norm_eps)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    o = _attention(cfg, q, k, v)
+    o = o.transpose(0, 2, 1, 3).reshape(b, n, h * dh)
+    x = x + o @ params[prefix + "wo"]
+
+    y = rms_norm(x, params[prefix + "mlp_norm"], cfg.norm_eps)
+    gated = jax.nn.silu(y @ params[prefix + "w_gate"]) * (y @ params[prefix + "w_up"])
+    return x + gated @ params[prefix + "w_down"]
+
+
+def forward(cfg: ModelConfig, params: Params, tokens):
+    """tokens: (B, N) int32 → logits (B, N, V)."""
+    cos, sin = rope_tables(cfg)
+    x = params["embed"][tokens]
+    for i in range(cfg.n_layers):
+        x = _block(cfg, params, f"layers.{i:02d}.", x, cos, sin)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["embed"].T  # tied head
+
+
+def loss_fn(cfg: ModelConfig, params: Params, tokens, targets):
+    """Mean next-token cross-entropy."""
+    logits = forward(cfg, params, tokens)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1).squeeze(-1)
+    return jnp.mean(logz - gold)
+
+
+def grad_step(cfg: ModelConfig, params: Params, tokens, targets):
+    """One microbatch: (loss, grads).  The Rust coordinator accumulates
+    grads across microbatches to realize a given tokens-per-step (§4.3)."""
+    return jax.value_and_grad(lambda p: loss_fn(cfg, p, tokens, targets))(params)
+
+
+# ---------------------------------------------------------------------------
+# AdamW optimizer step (applied once per *optimizer* step, after the Rust
+# coordinator has averaged microbatch gradients)
+# ---------------------------------------------------------------------------
+
+
+def apply_step(cfg: ModelConfig, params: Params, m: Params, v: Params,
+               grads: Params, lr, step):
+    """AdamW with bias correction and decoupled weight decay.
+
+    ``lr`` is a scalar input computed by the Rust LR scheduler; ``step`` is
+    the 1-based optimizer step for bias correction."""
+    step_f = step.astype(jnp.float32)
+    c1 = 1.0 - ADAM_B1 ** step_f
+    c2 = 1.0 - ADAM_B2 ** step_f
+    new_p, new_m, new_v = {}, {}, {}
+    for name in params:
+        g = grads[name]
+        m_n = ADAM_B1 * m[name] + (1 - ADAM_B1) * g
+        v_n = ADAM_B2 * v[name] + (1 - ADAM_B2) * jnp.square(g)
+        update = (m_n / c1) / (jnp.sqrt(v_n / c2) + ADAM_EPS)
+        decay = 0.0 if name.endswith(("_norm", "q_norm", "k_norm")) else WEIGHT_DECAY
+        new_p[name] = params[name] - lr * (update + decay * params[name])
+        new_m[name] = m_n
+        new_v[name] = v_n
+    return new_p, new_m, new_v

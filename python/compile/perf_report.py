@@ -1,0 +1,148 @@
+"""Structural performance report for L1/L2 (the profile step of the §Perf
+pass — DESIGN.md §8).
+
+L1 (Pallas): interpret=True wallclock is NOT a TPU proxy, so the kernel is
+profiled structurally:
+  * VMEM footprint per program for a given BlockSpec (must fit ~16 MiB/core,
+    budgeted at ≤8 MiB to leave room for double-buffering),
+  * MAC counts per precision class → INT8 fraction (the paper's "6 of 7
+    matmuls" claim, and the input to the Figs 2–3 tensor-core model),
+  * MXU-tile utilization estimate: fraction of each (128×128) systolic pass
+    that carries real data for the chosen block sizes.
+
+L2 (lowered HLO): op histogram per artifact — fusion count, convolution/dot
+count, while-loop count — to catch redundant recomputation or missed
+fusions across exports.
+
+Usage: cd python && python -m compile.perf_report [--out ../results/perf]
+"""
+
+from __future__ import annotations
+
+import argparse
+import collections
+import json
+import os
+import re
+
+
+def l1_report(n: int, d: int, block_q: int, block_kv: int) -> dict:
+    """Static analysis of Algorithm 1+2 under a (block_q, block_kv) tiling."""
+    tm, tn = n // block_q, n // block_kv
+    f32 = 4
+
+    # Forward kernel VMEM per program (Q-block resident; K/V streamed as
+    # tiles in the TPU schedule; acc + softmax stats).
+    fwd_vmem = (
+        block_q * d * f32          # Q tile (fp32 staging)
+        + block_q * d * 1          # Q̂ int8
+        + 2 * (block_kv * d * (f32 + 1))  # K,V tile staging + int8
+        + block_q * block_kv * f32  # S/P tile
+        + block_q * block_kv * 1    # P̂ int8
+        + block_q * d * f32         # O accumulator
+        + 3 * block_q * f32         # m, l, s_P vectors
+    )
+    # Backward dKdV program: K/V tiles resident, Q/dO streamed.
+    bwd_vmem = (
+        2 * block_kv * d * (f32 + 1)
+        + block_q * d * (f32 + 1) * 2   # Q, dO staged + int8
+        + 2 * block_q * block_kv * f32  # P, dS tiles
+        + 2 * block_q * block_kv * 1    # P̂, d̂S
+        + 2 * block_kv * d * f32        # dK, dV accumulators
+        + 2 * block_q * f32             # lse, delta
+    )
+
+    # MAC counts per full attention (fwd+bwd), by precision.
+    nn_d = n * n * d
+    int8_macs = 2 * nn_d        # fwd: QK^T, P̂V̂
+    int8_macs += 4 * nn_d       # bwd: S-recompute, dV, dQ, dK
+    fp_macs = 1 * nn_d          # bwd: dP = dO V^T stays FP16 (§3)
+
+    # MXU utilization estimate: systolic array is 128×128; a dot of
+    # (block_q × d) @ (d × block_kv) uses min(dim,128)/128 per axis.
+    def mxu_util(m, k, nn):
+        import math
+        eff = lambda x: x / (128 * math.ceil(x / 128))
+        return eff(m) * eff(k) * eff(nn)
+
+    return {
+        "config": {"n": n, "d": d, "block_q": block_q, "block_kv": block_kv},
+        "fwd_vmem_bytes": fwd_vmem,
+        "bwd_vmem_bytes": bwd_vmem,
+        "vmem_budget_ok": max(fwd_vmem, bwd_vmem) <= 8 * 1024 * 1024,
+        "int8_mac_fraction": int8_macs / (int8_macs + fp_macs),
+        "mxu_util_qk": mxu_util(block_q, d, block_kv),
+        "mxu_util_pv": mxu_util(block_q, block_kv, d),
+        "grid_programs_fwd": tm,
+        "grid_programs_bwd": tm + tn,
+    }
+
+
+HLO_OP = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*\S+\s+(\w+)\(")
+
+
+def l2_report(artifacts_dir: str, names: list[str]) -> dict:
+    out = {}
+    for name in names:
+        path = os.path.join(artifacts_dir, f"{name}.hlo.txt")
+        if not os.path.exists(path):
+            continue
+        counts: collections.Counter = collections.Counter()
+        with open(path) as f:
+            for line in f:
+                m = HLO_OP.match(line)
+                if m:
+                    counts[m.group(1)] += 1
+        total = sum(counts.values())
+        out[name] = {
+            "total_ops": total,
+            "dot": counts.get("dot", 0),
+            "while": counts.get("while", 0),
+            "fusion": counts.get("fusion", 0),
+            "convert": counts.get("convert", 0),
+            "top5": counts.most_common(5),
+            "bytes": os.path.getsize(path),
+        }
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../results/perf")
+    ap.add_argument("--artifacts", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    # L1: block-shape sweep at the paper's head dims.
+    l1 = {}
+    for d in (64, 128):
+        for blk in (16, 32, 64, 128):
+            key = f"d{d}_b{blk}"
+            l1[key] = l1_report(4096, d, blk, blk)
+    with open(os.path.join(args.out, "l1_structural.json"), "w") as f:
+        json.dump(l1, f, indent=1)
+
+    print("L1 structural report (N=4096):")
+    print(f"{'config':>12} {'fwdVMEM':>10} {'bwdVMEM':>10} {'fits8MiB':>9} "
+          f"{'int8frac':>9} {'MXUqk':>7} {'MXUpv':>7}")
+    for key, r in l1.items():
+        print(f"{key:>12} {r['fwd_vmem_bytes']/2**20:>9.2f}M {r['bwd_vmem_bytes']/2**20:>9.2f}M "
+              f"{str(r['vmem_budget_ok']):>9} {r['int8_mac_fraction']:>9.3f} "
+              f"{r['mxu_util_qk']:>7.3f} {r['mxu_util_pv']:>7.3f}")
+
+    # L2: HLO op histograms of the training + bench artifacts.
+    names = ["grad_step_sage_qknorm", "grad_step_fpa_qknorm",
+             "apply_step_qknorm", "bench_sage_fwdbwd_d64_n512",
+             "bench_fa2_fwdbwd_d64_n512"]
+    l2 = l2_report(args.artifacts, names)
+    with open(os.path.join(args.out, "l2_hlo_stats.json"), "w") as f:
+        json.dump(l2, f, indent=1)
+    print("\nL2 HLO op histogram:")
+    for name, r in l2.items():
+        print(f"  {name}: {r['total_ops']} ops, dot={r['dot']}, while={r['while']}, "
+              f"fusion={r['fusion']}, {r['bytes']/1e6:.2f} MB")
+    print(f"\nwrote {args.out}/l1_structural.json and l2_hlo_stats.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""AOT exporter tests: manifest schema, ABI ordering, HLO-text validity.
+
+These exercise `compile.aot.export` on tiny functions (fast) and validate
+the real variant registry's parameter-ABI invariants that the Rust side
+relies on (sorted names == positional order)."""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+from compile.configs import VARIANTS, TRACE_VARIANTS, bench_variants
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestExport:
+    def _export_tiny(self, tmp):
+        def fn(x, y):
+            return (x @ y, jnp.sum(x))
+
+        spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+        aot.export(tmp, "tiny", fn, [spec, spec], ["x", "y"], ["prod", "sum"])
+        return tmp
+
+    def test_writes_hlo_and_manifest(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            self._export_tiny(tmp)
+            hlo = open(os.path.join(tmp, "tiny.hlo.txt")).read()
+            assert "HloModule" in hlo
+            m = json.load(open(os.path.join(tmp, "tiny.manifest.json")))
+            assert m["artifact"] == "tiny"
+            assert [i["name"] for i in m["inputs"]] == ["x", "y"]
+            assert [o["name"] for o in m["outputs"]] == ["prod", "sum"]
+            assert m["inputs"][0]["shape"] == [4, 4]
+            assert m["inputs"][0]["dtype"] == "f32"
+            assert m["outputs"][1]["shape"] == []
+
+    def test_output_count_mismatch_caught(self):
+        def fn(x):
+            return (x, x)
+
+        spec = jax.ShapeDtypeStruct((2,), jnp.float32)
+        with tempfile.TemporaryDirectory() as tmp:
+            with pytest.raises(AssertionError):
+                aot.export(tmp, "bad", fn, [spec], ["x"], ["only_one"])
+
+    def test_i32_dtype_mapping(self):
+        def fn(t):
+            return (t + 1,)
+
+        spec = jax.ShapeDtypeStruct((3,), jnp.int32)
+        with tempfile.TemporaryDirectory() as tmp:
+            aot.export(tmp, "ints", fn, [spec], ["t"], ["t1"])
+            m = json.load(open(os.path.join(tmp, "ints.manifest.json")))
+            assert m["inputs"][0]["dtype"] == "i32"
+
+
+class TestParamAbi:
+    """The Rust coordinator addresses parameters positionally by sorted
+    name — these invariants are the de-facto ABI."""
+
+    @pytest.mark.parametrize("vname", sorted(VARIANTS))
+    def test_param_names_sorted_and_unique(self, vname):
+        names = model.param_names(VARIANTS[vname])
+        assert names == sorted(names)
+        assert len(names) == len(set(names))
+
+    def test_qknorm_trees_differ_only_in_norm_gammas(self):
+        with_n = set(model.param_names(VARIANTS["sage_qknorm"]))
+        without = set(model.param_names(VARIANTS["sage_noqknorm"]))
+        extra = {n.rsplit(".", 1)[-1] for n in with_n - without}
+        assert extra == {"q_norm", "k_norm"}
+
+    def test_sage_and_fpa_share_tree(self):
+        assert model.param_names(VARIANTS["sage_qknorm"]) == model.param_names(
+            VARIANTS["fpa_qknorm"]
+        )
+
+
+class TestRegistry:
+    def test_trace_variants_cover_experiments(self):
+        assert {"trace_fpa", "trace_sage", "trace_pseudo", "trace_pseudo_nosm",
+                "trace_pseudo_qksm", "trace_fpa_n512"} <= set(TRACE_VARIANTS)
+
+    def test_bench_grid_is_complete(self):
+        names = set(bench_variants())
+        for d in (64, 128):
+            for n in (128, 256, 512):
+                for impl in ("sage", "fa2", "naive"):
+                    for mode in ("fwd", "fwdbwd"):
+                        assert f"bench_{impl}_{mode}_d{d}_n{n}" in names
+
+    def test_trace_output_order_is_stable(self):
+        # The Rust Trace struct unpacks positionally — order is ABI.
+        assert aot.TRACE_OUTPUTS == ["o", "dq", "dk", "dv", "delta", "rms_p",
+                                     "rms_dp", "rms_ds", "p", "dp", "ds"]

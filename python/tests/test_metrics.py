@@ -1,0 +1,47 @@
+"""Metric definitions must agree between Python (build-time checks) and
+Rust (run-time harnesses); these pin the Python side with known values."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import metrics
+
+
+def test_cossim_bounds_and_identity():
+    x = jnp.array([1.0, -2.0, 3.0])
+    assert abs(float(metrics.cossim(x, x)) - 1.0) < 1e-6
+    assert abs(float(metrics.cossim(x, -x)) + 1.0) < 1e-6
+
+
+def test_rel_l2_known_value():
+    y = jnp.array([1.0, 1.0])
+    x = jnp.array([1.1, 0.9])
+    assert abs(float(metrics.rel_l2(x, y)) - 0.1) < 1e-6
+
+
+def test_rms_known_value():
+    assert abs(float(metrics.rms(jnp.array([3.0, 4.0]))) - np.sqrt(12.5)) < 1e-6
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_cossim_scale_invariant(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=32).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=32).astype(np.float32))
+    c1 = float(metrics.cossim(x, y))
+    c2 = float(metrics.cossim(3.7 * x, 0.2 * y))
+    assert abs(c1 - c2) < 1e-4
+    assert -1.0 - 1e-6 <= c1 <= 1.0 + 1e-6
+
+
+@given(st.integers(0, 10_000), st.floats(0.0, 2.0))
+@settings(max_examples=30, deadline=None)
+def test_rel_l2_triangle_like(seed, eps):
+    rng = np.random.default_rng(seed)
+    y = jnp.asarray(rng.normal(size=16).astype(np.float32))
+    x = y + eps * jnp.asarray(rng.normal(size=16).astype(np.float32))
+    # error grows (weakly) with perturbation size relative to zero-perturbation
+    assert float(metrics.rel_l2(y, y)) == 0.0
+    assert float(metrics.rel_l2(x, y)) >= 0.0

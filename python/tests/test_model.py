@@ -1,0 +1,165 @@
+"""L2 model tests: shapes, loss sanity, gradient flow, variant grid."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.configs import VARIANTS, ModelConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Tiny config so interpret-mode attention stays fast in CI.
+TINY = ModelConfig(vocab_size=64, d_model=32, n_layers=2, n_heads=2,
+                   d_head=16, d_ff=64, seq_len=32, block_q=16, block_kv=16)
+TINY_FPA = TINY._replace(attention="fpa")
+
+
+def _batch(cfg, b=2, seed=0):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    tok = jax.random.randint(k1, (b, cfg.seq_len), 0, cfg.vocab_size)
+    tgt = jax.random.randint(k2, (b, cfg.seq_len), 0, cfg.vocab_size)
+    return tok, tgt
+
+
+class TestParams:
+    def test_schema_sorted_is_stable(self):
+        names = model.param_names(TINY)
+        assert names == sorted(names)
+        assert "embed" in names and "final_norm" in names
+
+    def test_qk_norm_adds_params(self):
+        with_norm = set(model.param_names(TINY))
+        without = set(model.param_names(TINY._replace(qk_norm=False)))
+        diff = with_norm - without
+        assert diff == {f"layers.{i:02d}.{n}" for i in range(TINY.n_layers)
+                        for n in ("q_norm", "k_norm")}
+
+    def test_init_shapes_match_schema(self):
+        params = model.init_params(TINY, 0)
+        shapes = model.param_shapes(TINY)
+        assert set(params) == set(shapes)
+        for n, p in params.items():
+            assert p.shape == shapes[n], n
+
+    def test_init_deterministic_in_seed(self):
+        a = model.init_params(TINY, 7)
+        b = model.init_params(TINY, 7)
+        c = model.init_params(TINY, 8)
+        np.testing.assert_array_equal(np.asarray(a["embed"]), np.asarray(b["embed"]))
+        assert float(jnp.max(jnp.abs(a["embed"] - c["embed"]))) > 0
+
+    def test_param_count_estimate(self):
+        params = model.init_params(TINY, 0)
+        actual = sum(int(np.prod(p.shape)) for p in params.values())
+        est = TINY.param_count_estimate
+        assert abs(actual - est) / actual < 0.02
+
+
+class TestForward:
+    def test_logits_shape(self):
+        params = model.init_params(TINY_FPA, 0)
+        tok, _ = _batch(TINY_FPA)
+        logits = model.forward(TINY_FPA, params, tok)
+        assert logits.shape == (2, TINY.seq_len, TINY.vocab_size)
+
+    def test_initial_loss_near_uniform(self):
+        # Fresh init ⇒ loss ≈ log(V).
+        params = model.init_params(TINY_FPA, 0)
+        tok, tgt = _batch(TINY_FPA)
+        loss = model.loss_fn(TINY_FPA, params, tok, tgt)
+        assert abs(float(loss) - np.log(TINY.vocab_size)) < 0.5
+
+    def test_causality(self):
+        # Changing a future token must not change earlier logits.
+        params = model.init_params(TINY_FPA, 0)
+        tok, _ = _batch(TINY_FPA)
+        l1 = model.forward(TINY_FPA, params, tok)
+        tok2 = tok.at[:, -1].set((tok[:, -1] + 1) % TINY.vocab_size)
+        l2 = model.forward(TINY_FPA, params, tok2)
+        np.testing.assert_allclose(np.asarray(l1[:, :-1]),
+                                   np.asarray(l2[:, :-1]), atol=1e-5)
+
+    def test_sage_close_to_fpa_at_init(self):
+        params = model.init_params(TINY, 0)
+        tok, _ = _batch(TINY)
+        l_sage = model.forward(TINY, params, tok)
+        l_fpa = model.forward(TINY_FPA, params, tok)
+        rel = float(jnp.linalg.norm(l_sage - l_fpa) / jnp.linalg.norm(l_fpa))
+        assert rel < 0.02
+
+
+class TestGradStep:
+    @pytest.mark.parametrize("cfg", [TINY, TINY_FPA], ids=["sage", "fpa"])
+    def test_grads_cover_all_params(self, cfg):
+        params = model.init_params(cfg, 0)
+        tok, tgt = _batch(cfg)
+        loss, grads = model.grad_step(cfg, params, tok, tgt)
+        assert set(grads) == set(params)
+        assert np.isfinite(float(loss))
+        nonzero = sum(int(jnp.any(grads[n] != 0)) for n in grads)
+        assert nonzero >= len(grads) - 1  # final_norm γ can be tiny but not all-zero
+
+    def test_sage_grads_close_to_fpa(self):
+        params = model.init_params(TINY, 1)
+        tok, tgt = _batch(TINY, seed=1)
+        _, g_sage = model.grad_step(TINY, params, tok, tgt)
+        _, g_fpa = model.grad_step(TINY_FPA, params, tok, tgt)
+        for n in ("embed", "layers.00.wq", "layers.01.w_down"):
+            a, b = g_sage[n].reshape(-1), g_fpa[n].reshape(-1)
+            cos = float(jnp.dot(a, b) /
+                        (jnp.linalg.norm(a) * jnp.linalg.norm(b) + 1e-20))
+            assert cos > 0.98, n
+
+
+class TestApplyStep:
+    def test_adamw_moves_params_against_gradient(self):
+        params = model.init_params(TINY_FPA, 0)
+        zeros = {n: jnp.zeros_like(p) for n, p in params.items()}
+        grads = {n: jnp.ones_like(p) for n, p in params.items()}
+        new_p, new_m, new_v = model.apply_step(
+            TINY_FPA, params, zeros, zeros, grads,
+            jnp.float32(1e-2), jnp.int32(1))
+        # positive gradient ⇒ params decrease
+        assert float(jnp.mean(new_p["embed"] - params["embed"])) < 0
+        assert float(jnp.mean(new_m["embed"])) > 0
+
+    def test_no_decay_on_norm_params(self):
+        params = model.init_params(TINY_FPA, 0)
+        zeros = {n: jnp.zeros_like(p) for n, p in params.items()}
+        new_p, _, _ = model.apply_step(TINY_FPA, params, zeros, zeros, zeros,
+                                       jnp.float32(1e-2), jnp.int32(1))
+        # zero grad + zero moments: decayed params shrink, norms don't move
+        np.testing.assert_allclose(np.asarray(new_p["final_norm"]),
+                                   np.asarray(params["final_norm"]), atol=1e-7)
+        assert float(jnp.max(jnp.abs(new_p["embed"] - params["embed"]))) > 0
+
+    def test_two_steps_reduce_loss(self):
+        cfg = TINY_FPA
+        params = model.init_params(cfg, 0)
+        m = {n: jnp.zeros_like(p) for n, p in params.items()}
+        v = {n: jnp.zeros_like(p) for n, p in params.items()}
+        tok, tgt = _batch(cfg, seed=3)
+        loss0, grads = model.grad_step(cfg, params, tok, tgt)
+        for step in (1, 2, 3):
+            params, m, v = model.apply_step(cfg, params, m, v, grads,
+                                            jnp.float32(3e-3), jnp.int32(step))
+            _, grads = model.grad_step(cfg, params, tok, tgt)
+        loss1 = model.loss_fn(cfg, params, tok, tgt)
+        assert float(loss1) < float(loss0)
+
+
+class TestVariants:
+    def test_registry_covers_paper_grid(self):
+        assert {"sage_qknorm", "sage_noqknorm", "fpa_qknorm", "fpa_noqknorm",
+                "sage_qknorm_nosm", "sage_qknorm_qksm"} <= set(VARIANTS)
+
+    def test_all_variants_construct_params(self):
+        for name, cfg in VARIANTS.items():
+            tiny = cfg._replace(vocab_size=64, d_model=32, n_layers=1,
+                                n_heads=2, d_head=16, d_ff=64, seq_len=32,
+                                block_q=16, block_kv=16)
+            p = model.init_params(tiny, 0)
+            assert len(p) == len(model.param_names(tiny)), name

@@ -1,0 +1,128 @@
+"""Unit + property tests for the INT8 quantizer ψ (paper §3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, seed=0, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+class TestPerTensor:
+    def test_int8_range(self):
+        q, s = quant.quantize_per_tensor(_rand((32, 16), scale=10.0))
+        assert q.dtype == jnp.int8
+        assert int(jnp.max(jnp.abs(q.astype(jnp.int32)))) <= 127
+
+    def test_scale_positive(self):
+        _, s = quant.quantize_per_tensor(jnp.zeros((4, 4)))
+        assert float(s) > 0.0
+
+    def test_roundtrip_error_bounded_by_half_step(self):
+        x = _rand((64, 32), seed=3, scale=5.0)
+        q, s = quant.quantize_per_tensor(x)
+        err = jnp.max(jnp.abs(quant.dequantize(q, s) - x))
+        assert float(err) <= float(s) / 2 + 1e-6
+
+    def test_max_element_maps_to_127(self):
+        x = jnp.array([[0.5, -2.0], [1.0, 2.0]])
+        q, s = quant.quantize_per_tensor(x)
+        assert int(jnp.max(jnp.abs(q.astype(jnp.int32)))) == 127
+
+    @given(st.integers(0, 2**31 - 1), st.floats(0.01, 100.0))
+    @settings(max_examples=25, deadline=None)
+    def test_roundtrip_property(self, seed, scale):
+        x = _rand((16, 8), seed=seed % 1000, scale=scale)
+        q, s = quant.quantize_per_tensor(x)
+        err = jnp.max(jnp.abs(quant.dequantize(q, s) - x))
+        assert float(err) <= float(s) / 2 + 1e-5 * scale
+
+
+class TestPerToken:
+    def test_scale_shape(self):
+        _, s = quant.quantize_per_token(_rand((32, 16)))
+        assert s.shape == (32, 1)
+
+    def test_rowwise_roundtrip(self):
+        # Rows with wildly different magnitudes must each stay accurate —
+        # the reason Alg 1 line 9 uses per-token quantization for P̃.
+        x = jnp.concatenate([
+            _rand((1, 64), seed=1, scale=1e-3),
+            _rand((1, 64), seed=2, scale=1.0),
+            _rand((1, 64), seed=3, scale=1e3),
+        ])
+        q, s = quant.quantize_per_token(x)
+        deq = quant.dequantize(q, s)
+        rel = jnp.linalg.norm(deq - x, axis=-1) / jnp.linalg.norm(x, axis=-1)
+        assert float(jnp.max(rel)) < 0.02
+
+    def test_per_tensor_fails_where_per_token_succeeds(self):
+        # Demonstrates the granularity argument from §3.
+        x = jnp.concatenate([_rand((1, 64), 1, 1e-4), _rand((1, 64), 2, 1.0)])
+        deq_tok = quant.dequantize(*quant.quantize_per_token(x))
+        deq_ten = quant.dequantize(*quant.quantize_per_tensor(x))
+        err_tok = jnp.linalg.norm(deq_tok[0] - x[0]) / jnp.linalg.norm(x[0])
+        err_ten = jnp.linalg.norm(deq_ten[0] - x[0]) / jnp.linalg.norm(x[0])
+        assert float(err_tok) < 0.02 < float(err_ten)
+
+
+class TestInt8Matmul:
+    def test_exact_on_small_integers(self):
+        # Integer-valued inputs within ±127 quantize losslessly (δ chosen so
+        # x/δ is integral) → the INT8 matmul must be *exact*.
+        a = jnp.round(_rand((8, 8), 5) * 10).astype(jnp.float32)
+        b = jnp.round(_rand((8, 8), 6) * 10).astype(jnp.float32)
+        a = a * (127.0 / jnp.maximum(jnp.max(jnp.abs(a)), 1))
+        a = jnp.round(a)
+        b = b * (127.0 / jnp.maximum(jnp.max(jnp.abs(b)), 1))
+        b = jnp.round(b)
+        aq, asc = quant.quantize_per_tensor(a)
+        bq, bsc = quant.quantize_per_tensor(b)
+        out = quant.int8_matmul(aq, asc, bq, bsc)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(a @ b), rtol=1e-5)
+
+    @given(st.integers(0, 1000))
+    @settings(max_examples=20, deadline=None)
+    def test_approximation_quality(self, seed):
+        a, b = _rand((16, 24), seed), _rand((24, 12), seed + 1)
+        aq, asc = quant.quantize_per_tensor(a)
+        bq, bsc = quant.quantize_per_tensor(b)
+        approx = quant.int8_matmul(aq, asc, bq, bsc)
+        exact = a @ b
+        rel = jnp.linalg.norm(approx - exact) / jnp.linalg.norm(exact)
+        assert float(rel) < 0.05
+
+    def test_error_grows_with_sigma(self):
+        # §4.4: quantization step (and thus absolute error) scales with the
+        # input dynamic range.
+        errs = []
+        for sigma in [1.0, 10.0]:
+            a, b = _rand((32, 32), 7, sigma), _rand((32, 32), 8, sigma)
+            aq, asc = quant.quantize_per_tensor(a)
+            bq, bsc = quant.quantize_per_tensor(b)
+            errs.append(float(jnp.max(jnp.abs(quant.int8_matmul(aq, asc, bq, bsc) - a @ b))))
+        assert errs[1] > errs[0] * 10  # error ∝ δ_A·δ_B ∝ σ²
+
+
+class TestFakeQuant:
+    def test_idempotent(self):
+        x = _rand((16, 16), 9)
+        once = quant.fake_quant(x, "block")
+        twice = quant.fake_quant(once, "block")
+        np.testing.assert_allclose(np.asarray(once), np.asarray(twice), atol=1e-6)
+
+    def test_unknown_granularity_raises(self):
+        with pytest.raises(ValueError):
+            quant.fake_quant(jnp.zeros((2, 2)), "nope")
+
+    def test_error_within_bound(self):
+        x = _rand((32, 32), 10, 3.0)
+        err = jnp.max(jnp.abs(quant.fake_quant(x, "block") - x))
+        assert float(err) <= float(quant.quant_error_bound(x)) + 1e-6

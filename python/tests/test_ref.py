@@ -1,0 +1,104 @@
+"""The oracle must itself be right: fpa_bwd's explicit gradient formulas are
+checked against jax.grad of a naive attention, and the pseudo-quantized
+trace's structural properties (Table 2's dP ≡ exact) are verified."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fa2_ref, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, seed=0, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+class TestFpaBwdAgainstAutodiff:
+    @given(st.integers(0, 300), st.booleans())
+    @settings(max_examples=12, deadline=None)
+    def test_grads_match_jax_grad(self, seed, causal):
+        n, d = 32, 16
+        q, k, v, do = (_rand((n, d), seed + i) for i in range(4))
+
+        def attn_dot(q, k, v):
+            o = fa2_ref.naive_sdpa(q, k, v, causal=causal)
+            return jnp.sum(o * do)
+
+        dq_a, dk_a, dv_a = jax.grad(attn_dot, argnums=(0, 1, 2))(q, k, v)
+        it = ref.fpa_bwd(q, k, v, do, causal=causal)
+        np.testing.assert_allclose(np.asarray(it.dq), np.asarray(dq_a), atol=2e-5)
+        np.testing.assert_allclose(np.asarray(it.dk), np.asarray(dk_a), atol=2e-5)
+        np.testing.assert_allclose(np.asarray(it.dv), np.asarray(dv_a), atol=2e-5)
+
+    def test_forward_matches_naive(self):
+        q, k, v = (_rand((64, 32), i) for i in range(3))
+        o, _ = ref.fpa_fwd(q, k, v, causal=True)
+        np.testing.assert_allclose(
+            np.asarray(o), np.asarray(fa2_ref.naive_sdpa(q, k, v, causal=True)),
+            atol=1e-5)
+
+    def test_lse_is_logsumexp(self):
+        q, k, v = (_rand((32, 16), 5 + i) for i in range(3))
+        _, (s, _, lse) = ref.fpa_fwd(q, k, v)
+        np.testing.assert_allclose(
+            np.asarray(lse), np.asarray(jax.scipy.special.logsumexp(s, axis=-1)),
+            atol=1e-5)
+
+
+class TestPseudoQuantTrace:
+    def test_dp_exact(self):
+        """Table 2: Rel-L2(dP)=0 because upstream dO is treated error-free."""
+        q, k, v, do = (_rand((64, 32), 10 + i) for i in range(4))
+        tr = ref.pseudo_quant_trace(q, k, v, do)
+        fi = ref.fpa_bwd(q, k, v, do)
+        np.testing.assert_allclose(np.asarray(tr.dp), np.asarray(fi.dp), atol=1e-6)
+
+    def test_error_ordering_matches_table2(self):
+        """dS/dQ/dK errors dominate O/dV errors (the paper's core claim)."""
+        q, k, v, do = (_rand((128, 64), 20 + i, 2.0) for i in range(4))
+        tr = ref.pseudo_quant_trace(q, k, v, do)
+        fi = ref.fpa_bwd(q, k, v, do)
+
+        def rel(a, b):
+            return float(jnp.linalg.norm(a - b) / jnp.linalg.norm(b))
+
+        err_o, err_dv = rel(tr.o, fi.o), rel(tr.dv, fi.dv)
+        err_ds = rel(tr.ds, fi.ds)
+        err_dq, err_dk = rel(tr.dq, fi.dq), rel(tr.dk, fi.dk)
+        assert err_ds > err_o and err_ds > err_dv
+        assert err_dq > err_o and err_dk > err_o
+
+    def test_smoothing_flags_change_trace(self):
+        q = _rand((64, 32), 30)
+        k = _rand((64, 32), 31) + 3.0  # strong K mean → smoothing matters
+        v, do = _rand((64, 32), 32), _rand((64, 32), 33)
+        fi = ref.fpa_bwd(q, k, v, do)
+        err_nosm = float(jnp.linalg.norm(
+            ref.pseudo_quant_trace(q, k, v, do, k_smoothing=False).o - fi.o))
+        err_ksm = float(jnp.linalg.norm(
+            ref.pseudo_quant_trace(q, k, v, do, k_smoothing=True).o - fi.o))
+        assert err_ksm < err_nosm
+
+
+class TestSageRefInternalConsistency:
+    @given(st.sampled_from([16, 32]), st.booleans())
+    @settings(max_examples=8, deadline=None)
+    def test_fwd_close_to_fpa_at_sigma1(self, block, causal):
+        q, k, v = (_rand((64, 32), 40 + i) for i in range(3))
+        o, lse, _ = ref.sage_ref_fwd(q, k, v, block, block, causal=causal)
+        o_f, (_, _, lse_f) = ref.fpa_fwd(q, k, v, causal=causal)
+        assert float(jnp.max(jnp.abs(o - o_f))) < 0.05
+        # LSE absorbs the raw INT8 logit error (|dS| ≈ δ_Q·δ_K·d), which is
+        # larger than the output error because softmax renormalizes.
+        assert float(jnp.max(jnp.abs(lse - lse_f))) < 0.5
+
+    def test_bwd_blocks_independent_of_block_size(self):
+        # Different tilings quantize differently, but must agree loosely.
+        q, k, v, do = (_rand((64, 16), 50 + i) for i in range(4))
+        a = ref.sage_ref_bwd(q, k, v, do, 16, 16)
+        b = ref.sage_ref_bwd(q, k, v, do, 32, 32)
+        rel = float(jnp.linalg.norm(a.dq - b.dq) / jnp.linalg.norm(b.dq))
+        assert rel < 0.1

@@ -1,0 +1,93 @@
+"""Tests for Q/K-smoothing identities (paper §3 and §6)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, smoothing
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, seed=0, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+class TestKSmooth:
+    def test_mean_zero(self):
+        k_sm, mu = smoothing.k_smooth(_rand((64, 16), 1))
+        np.testing.assert_allclose(np.asarray(jnp.mean(k_sm, axis=0)),
+                                   np.zeros(16), atol=1e-6)
+
+    def test_softmax_invariance(self):
+        # softmax(Q K^T) == softmax(Q K_sm^T): the dropped rank-1 term is
+        # constant along each row (paper §3 "the additive bias term vanishes").
+        q, k = _rand((32, 16), 2), _rand((48, 16), 3) + 2.0
+        k_sm, _ = smoothing.k_smooth(k)
+        p1 = jax.nn.softmax(q @ k.T, axis=-1)
+        p2 = jax.nn.softmax(q @ k_sm.T, axis=-1)
+        np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), atol=1e-5)
+
+    @given(st.integers(0, 500))
+    @settings(max_examples=20, deadline=None)
+    def test_attention_output_invariant(self, seed):
+        q, k, v = _rand((16, 8), seed), _rand((16, 8), seed + 1) + 1.5, _rand((16, 8), seed + 2)
+        k_sm, _ = smoothing.k_smooth(k)
+        o1, _ = ref.fpa_fwd(q, k, v)
+        o2, _ = ref.fpa_fwd(q, k_sm, v)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+class TestDsRowSumZero:
+    """§6: every row of dS sums to 0 — the reason dQ = dS·K_sm is exact."""
+
+    @given(st.integers(0, 500))
+    @settings(max_examples=15, deadline=None)
+    def test_rows_sum_zero(self, seed):
+        q, k, v, do = (_rand((24, 8), seed + i) for i in range(4))
+        it = ref.fpa_bwd(q, k, v, do)
+        rowsums = jnp.sum(it.ds, axis=-1)
+        np.testing.assert_allclose(np.asarray(rowsums), np.zeros(24), atol=1e-5)
+
+    def test_dq_invariant_to_k_mean(self):
+        # dQ = dS K == dS K_sm exactly (up to fp) because rowsum(dS)=0.
+        q, k, v, do = (_rand((32, 16), 10 + i) for i in range(4))
+        it = ref.fpa_bwd(q, k, v, do)
+        k_sm, _ = smoothing.k_smooth(k)
+        dq_sm = (it.ds @ k_sm) / jnp.sqrt(16.0)
+        np.testing.assert_allclose(np.asarray(it.dq), np.asarray(dq_sm),
+                                   atol=1e-5)
+
+
+class TestQSmoothing:
+    def test_logits_decomposition(self):
+        # S = Q_sm K^T + 1·(μ_Q K^T) exactly (paper §6 rewrite).
+        q, k = _rand((32, 16), 20), _rand((40, 16), 21)
+        q_sm, mu_q = smoothing.q_smooth(q)
+        s_direct = q @ k.T
+        s_recon = q_sm @ k.T + smoothing.qk_logits_bias(mu_q, k)
+        np.testing.assert_allclose(np.asarray(s_direct), np.asarray(s_recon),
+                                   atol=1e-4)
+
+    @given(st.integers(0, 500))
+    @settings(max_examples=15, deadline=None)
+    def test_dk_bias_branch_recovers_full_gradient(self, seed):
+        # dK = dS^T Q_sm + (dS^T 1) μ_Q^T   must equal   dS^T Q  (§6).
+        q, k, v, do = (_rand((24, 8), seed + 7 * i) for i in range(4))
+        it = ref.fpa_bwd(q, k, v, do)
+        q_sm, mu_q = smoothing.q_smooth(q)
+        dk_center = it.ds.T @ q_sm
+        dk_full = dk_center + smoothing.dk_bias_branch(it.ds, mu_q)
+        np.testing.assert_allclose(np.asarray(it.ds.T @ q),
+                                   np.asarray(dk_full), atol=1e-4)
+
+    def test_center_branch_alone_is_wrong(self):
+        # The paper's point: dK ≠ dS^T Q_sm when μ_Q ≠ 0.
+        q = _rand((32, 16), 30) + 1.0  # nonzero mean
+        k, v, do = (_rand((32, 16), 31 + i) for i in range(3))
+        it = ref.fpa_bwd(q, k, v, do)
+        q_sm, _ = smoothing.q_smooth(q)
+        dk_center = (it.ds.T @ q_sm) / jnp.sqrt(16.0)
+        err = float(jnp.linalg.norm(dk_center - it.dk) / jnp.linalg.norm(it.dk))
+        assert err > 0.01

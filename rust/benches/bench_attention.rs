@@ -1,0 +1,22 @@
+//! **Figures 2–3 bench**: SageBwd vs FA2-style vs naive SDPA kernel
+//! throughput across head dims {64, 128} and sequence lengths, forward and
+//! forward+backward — plus the analytic tensor-core model (see
+//! `experiments::fig23_speed` for why both readings are reported).
+//!
+//! Run with `cargo bench --bench bench_attention` (or `make bench`).
+
+use sagebwd::experiments::fig23_speed;
+use sagebwd::runtime::Runtime;
+
+fn main() {
+    let mut rt = match Runtime::new(sagebwd::DEFAULT_ARTIFACTS_DIR) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("SKIP bench_attention: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    fig23_speed::run(&mut rt, sagebwd::DEFAULT_RESULTS_DIR, quick)
+        .expect("fig23 bench failed");
+}

@@ -1,0 +1,96 @@
+//! Coordinator-overhead bench: how much wallclock Layer 3 adds on top of
+//! raw executable time (accumulation, literal conversion, batching,
+//! metrics).  Target (DESIGN.md §8): < 5% overhead — the coordinator must
+//! never be the bottleneck since the paper's contribution is the kernel.
+
+use std::time::Instant;
+
+use sagebwd::bench::Table;
+use sagebwd::config::TrainConfig;
+use sagebwd::coordinator::Trainer;
+use sagebwd::runtime::{Runtime, Value};
+use sagebwd::tensor::IntTensor;
+use sagebwd::util::rng::Pcg64;
+
+fn main() {
+    let dir = sagebwd::DEFAULT_ARTIFACTS_DIR;
+    let Ok(mut rt) = Runtime::new(dir) else {
+        eprintln!("SKIP bench_coordinator (run `make artifacts`)");
+        return;
+    };
+
+    // Raw executable time: grad_step alone, inputs pre-built.
+    let variant = "sage_qknorm";
+    let params = rt
+        .execute(&format!("init_{variant}"), &[Value::scalar_i32(0)])
+        .expect("init");
+    let exe = rt.load(&format!("grad_step_{variant}")).expect("grad");
+    let spec = exe.manifest.input("tokens").expect("tokens");
+    let (b, n) = (spec.shape[0], spec.shape[1]);
+    let mut rng = Pcg64::new(0, 2);
+    let tok: Vec<i32> = (0..b * n).map(|_| rng.below(256) as i32).collect();
+    let mut inputs = params.clone();
+    inputs.push(Value::I32(IntTensor::from_vec(&[b, n], tok.clone()).unwrap()));
+    inputs.push(Value::I32(IntTensor::from_vec(&[b, n], tok).unwrap()));
+
+    let micro_per_step = 4u64;
+    let steps = 3u64;
+    // Raw floor: cached device buffers (same hot path the trainer uses),
+    // reading back only the outputs — grad_step execution and readback,
+    // nothing else.
+    let in_bufs: Vec<xla::PjRtBuffer> = inputs
+        .iter()
+        .map(|v| exe.buffer_from_literal(&v.to_literal().unwrap()).unwrap())
+        .collect();
+    let in_refs: Vec<&xla::PjRtBuffer> = in_bufs.iter().collect();
+    exe.execute_buffers(&in_refs).expect("warmup");
+    let t0 = Instant::now();
+    for _ in 0..steps * micro_per_step {
+        exe.execute_buffers(&in_refs).expect("grad");
+    }
+    let raw_secs = t0.elapsed().as_secs_f64();
+
+    // Full coordinator path: same number of grad_steps + apply + data.
+    let cfg = TrainConfig {
+        variant: variant.into(),
+        steps,
+        tokens_per_step: micro_per_step * (b * n) as u64,
+        warmup_steps: 1,
+        peak_lr: 1e-3,
+        min_lr_frac: 0.1,
+        seed: 0,
+        checkpoint_every: 0,
+        log_every: 0,
+        clip_norm: 0.0,
+        grad_noise_sigma: 0.0,
+    };
+    let mut trainer =
+        Trainer::new(Runtime::new(dir).expect("runtime"), cfg).expect("trainer");
+    let mut batches = trainer.make_byte_batcher(4);
+    trainer.train_step(&mut batches).expect("warm step");
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        trainer.train_step(&mut batches).expect("step");
+    }
+    let full_secs = t0.elapsed().as_secs_f64();
+
+    // The coordinated path runs `steps` extra apply_steps; measure one.
+    let overhead = (full_secs - raw_secs) / raw_secs * 100.0;
+    let mut table = Table::new(&["metric", "value"]);
+    table.row(vec![
+        format!("raw grad_step × {}", steps * micro_per_step),
+        format!("{raw_secs:.3}s"),
+    ]);
+    table.row(vec![
+        format!("coordinator {steps} steps (incl. apply+data+metrics)"),
+        format!("{full_secs:.3}s"),
+    ]);
+    table.row(vec!["L3 overhead vs raw".into(), format!("{overhead:.1}%")]);
+    println!("{}", table.render());
+    std::fs::create_dir_all(sagebwd::DEFAULT_RESULTS_DIR).ok();
+    std::fs::write(
+        format!("{}/bench_coordinator.csv", sagebwd::DEFAULT_RESULTS_DIR),
+        table.to_csv(),
+    )
+    .ok();
+}

@@ -1,0 +1,89 @@
+//! Data-pipeline bench: corpus synthesis, BPE training, encode throughput,
+//! and batcher (sync vs prefetch) — verifies the pipeline sustains far
+//! more tokens/sec than the trainer consumes.
+
+use sagebwd::bench::{run as bench_run, BenchConfig, Table};
+use sagebwd::data::{Batcher, Corpus, PrefetchBatcher, Tokenizer};
+
+fn main() {
+    let cfg = BenchConfig {
+        warmup_iters: 1,
+        iters: 10,
+        max_secs: 20.0,
+    };
+    let mut table = Table::new(&["stage", "mean_ms", "throughput"]);
+
+    // Corpus synthesis.
+    let m = bench_run(cfg, "corpus_64kb", || {
+        let mut c = Corpus::new(0, 0);
+        let mut s = String::new();
+        c.fill_text(&mut s, 65_536);
+    });
+    table.row(vec![
+        "corpus synth (64 KiB)".into(),
+        format!("{:.2}", m.mean() * 1e3),
+        format!("{:.1} MiB/s", 65_536.0 / m.mean() / 1e6),
+    ]);
+
+    // Tokenizer training (one-off cost at trainer startup).
+    let mut sample = String::new();
+    Corpus::new(0, u64::MAX).fill_text(&mut sample, 200_000);
+    let m = bench_run(
+        BenchConfig { warmup_iters: 0, iters: 3, max_secs: 60.0 },
+        "bpe_train",
+        || {
+            Tokenizer::train(&sample, 512).expect("train");
+        },
+    );
+    table.row(vec![
+        "BPE train (200 KB, 256 merges)".into(),
+        format!("{:.0}", m.mean() * 1e3),
+        "-".into(),
+    ]);
+
+    // Encode throughput.
+    let tok = Tokenizer::train(&sample, 512).expect("train");
+    let probe = &sample[..65_536];
+    let m = bench_run(cfg, "bpe_encode", || {
+        tok.encode(probe);
+    });
+    table.row(vec![
+        "BPE encode (64 KiB)".into(),
+        format!("{:.2}", m.mean() * 1e3),
+        format!("{:.1} MiB/s", 65_536.0 / m.mean() / 1e6),
+    ]);
+
+    // Batcher: sync vs prefetch.
+    let mut sync = Batcher::new(tok.clone(), 0, 0, 2, 128);
+    let m = bench_run(cfg, "batcher_sync", || {
+        for _ in 0..16 {
+            sync.next_batch().expect("batch");
+        }
+    });
+    let tokens = (16 * 2 * 128) as f64;
+    table.row(vec![
+        "batcher sync (16 microbatches)".into(),
+        format!("{:.2}", m.mean() * 1e3),
+        format!("{:.0} tok/s", tokens / m.mean()),
+    ]);
+
+    let mut pre = PrefetchBatcher::spawn(Batcher::new(tok.clone(), 0, 1, 2, 128), 8);
+    let m = bench_run(cfg, "batcher_prefetch", || {
+        for _ in 0..16 {
+            pre.next_batch().expect("batch");
+        }
+    });
+    table.row(vec![
+        "batcher prefetch (16 microbatches)".into(),
+        format!("{:.2}", m.mean() * 1e3),
+        format!("{:.0} tok/s", tokens / m.mean()),
+    ]);
+
+    println!("{}", table.render());
+    std::fs::create_dir_all(sagebwd::DEFAULT_RESULTS_DIR).ok();
+    std::fs::write(
+        format!("{}/bench_data_pipeline.csv", sagebwd::DEFAULT_RESULTS_DIR),
+        table.to_csv(),
+    )
+    .ok();
+}

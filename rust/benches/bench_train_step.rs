@@ -1,0 +1,104 @@
+//! Train-step bench: wallclock of one `grad_step` microbatch and one
+//! `apply_step` for the sage and fpa variants — the end-to-end numbers
+//! behind the Figure-1 experiment budget, and the baseline for the
+//! EXPERIMENTS.md §Perf iteration log.
+
+use sagebwd::bench::{run as bench_run, BenchConfig, Table};
+use sagebwd::runtime::{Runtime, Value};
+use sagebwd::tensor::{IntTensor, Tensor};
+use sagebwd::util::rng::Pcg64;
+
+fn main() {
+    let mut rt = match Runtime::new(sagebwd::DEFAULT_ARTIFACTS_DIR) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("SKIP bench_train_step: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+    let cfg = BenchConfig {
+        warmup_iters: 1,
+        iters: 8,
+        max_secs: 30.0,
+    };
+    let mut table = Table::new(&["artifact", "mean_ms", "p50_ms", "p95_ms", "tokens_per_sec"]);
+
+    for variant in ["sage_qknorm", "fpa_qknorm"] {
+        let params = rt
+            .execute(&format!("init_{variant}"), &[Value::scalar_i32(0)])
+            .expect("init failed");
+        let grad_name = format!("grad_step_{variant}");
+        let exe = rt.load(&grad_name).expect("loading grad_step");
+        let tok_spec = exe.manifest.input("tokens").expect("tokens input");
+        let (b, n) = (tok_spec.shape[0], tok_spec.shape[1]);
+        let mut rng = Pcg64::new(0, 1);
+        let tokens: Vec<i32> = (0..b * n).map(|_| rng.below(256) as i32).collect();
+        let mut inputs = params.clone();
+        inputs.push(Value::I32(IntTensor::from_vec(&[b, n], tokens.clone()).unwrap()));
+        inputs.push(Value::I32(IntTensor::from_vec(&[b, n], tokens).unwrap()));
+        let m = bench_run(cfg, &grad_name, || {
+            exe.execute(&inputs).expect("grad_step failed");
+        });
+        table.row(vec![
+            format!("{grad_name} (upload-per-call)"),
+            format!("{:.2}", m.mean() * 1e3),
+            format!("{:.2}", m.p50() * 1e3),
+            format!("{:.2}", m.p95() * 1e3),
+            format!("{:.0}", (b * n) as f64 / m.mean()),
+        ]);
+
+        // Trainer hot path: params cached as device buffers (§Perf opt 2).
+        let bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|v| exe.buffer_from_literal(&v.to_literal().unwrap()).unwrap())
+            .collect();
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let mc = bench_run(cfg, &grad_name, || {
+            exe.execute_buffers(&refs).expect("grad_step failed");
+        });
+        table.row(vec![
+            format!("{grad_name} (cached buffers)"),
+            format!("{:.2}", mc.mean() * 1e3),
+            format!("{:.2}", mc.p50() * 1e3),
+            format!("{:.2}", mc.p95() * 1e3),
+            format!("{:.0}", (b * n) as f64 / mc.mean()),
+        ]);
+
+        // apply_step for this tree.
+        let apply_name = if variant.contains("noqknorm") {
+            "apply_step_noqknorm"
+        } else {
+            "apply_step_qknorm"
+        };
+        let np = params.len();
+        let zeros: Vec<Value> = params
+            .iter()
+            .map(|p| Value::F32(Tensor::zeros(p.shape())))
+            .collect();
+        let mut ainputs = Vec::with_capacity(4 * np + 2);
+        ainputs.extend(params.iter().cloned());
+        ainputs.extend(zeros.iter().cloned());
+        ainputs.extend(zeros.iter().cloned());
+        ainputs.extend(zeros.iter().cloned());
+        ainputs.push(Value::scalar_f32(1e-3));
+        ainputs.push(Value::scalar_i32(1));
+        let aexe = rt.load(apply_name).expect("loading apply_step");
+        let ma = bench_run(cfg, apply_name, || {
+            aexe.execute(&ainputs).expect("apply_step failed");
+        });
+        table.row(vec![
+            format!("{apply_name} ({variant})"),
+            format!("{:.2}", ma.mean() * 1e3),
+            format!("{:.2}", ma.p50() * 1e3),
+            format!("{:.2}", ma.p95() * 1e3),
+            "-".into(),
+        ]);
+    }
+    println!("{}", table.render());
+    std::fs::create_dir_all(sagebwd::DEFAULT_RESULTS_DIR).ok();
+    std::fs::write(
+        format!("{}/bench_train_step.csv", sagebwd::DEFAULT_RESULTS_DIR),
+        table.to_csv(),
+    )
+    .ok();
+}

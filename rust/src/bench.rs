@@ -1,0 +1,176 @@
+//! Micro-benchmark harness substrate (no criterion in the vendored set).
+//!
+//! Warmup + timed iterations with mean/stddev/p50/p95 reporting, a
+//! text table formatter for paper-figure output, and CSV export.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// One benchmark measurement series.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub samples_secs: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples_secs)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        stats::stddev(&self.samples_secs)
+    }
+
+    pub fn p50(&self) -> f64 {
+        stats::percentile(&self.samples_secs, 50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        stats::percentile(&self.samples_secs, 95.0)
+    }
+
+    /// Throughput in ops/sec given work-per-iteration.
+    pub fn throughput(&self, work_per_iter: f64) -> f64 {
+        work_per_iter / self.mean()
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub iters: usize,
+    /// Stop early once this much wall time has been spent measuring.
+    pub max_secs: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> BenchConfig {
+        BenchConfig {
+            warmup_iters: 3,
+            iters: 20,
+            max_secs: 10.0,
+        }
+    }
+}
+
+/// Time `f` under the config; `f` should perform one full operation.
+pub fn run(cfg: BenchConfig, name: &str, mut f: impl FnMut()) -> Measurement {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(cfg.iters);
+    let budget = Instant::now();
+    for _ in 0..cfg.iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if budget.elapsed().as_secs_f64() > cfg.max_secs && samples.len() >= 5 {
+            break;
+        }
+    }
+    Measurement {
+        name: name.to_string(),
+        samples_secs: samples,
+    }
+}
+
+/// Fixed-width text table (the `cargo bench` human output).
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.headers.join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measurement_statistics() {
+        let m = Measurement {
+            name: "x".into(),
+            samples_secs: vec![0.01, 0.02, 0.03],
+        };
+        assert!((m.mean() - 0.02).abs() < 1e-12);
+        assert!((m.p50() - 0.02).abs() < 1e-12);
+        assert!((m.throughput(1.0) - 50.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn run_counts_iters() {
+        let mut calls = 0;
+        let cfg = BenchConfig {
+            warmup_iters: 2,
+            iters: 5,
+            max_secs: 60.0,
+        };
+        let m = run(cfg, "noop", || calls += 1);
+        assert_eq!(calls, 7); // 2 warmup + 5 timed
+        assert_eq!(m.samples_secs.len(), 5);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "val"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["longer".into(), "2.5".into()]);
+        let s = t.render();
+        assert!(s.contains("longer"));
+        assert_eq!(s.lines().count(), 4);
+        assert!(t.to_csv().starts_with("name,val\n"));
+    }
+}

@@ -1,0 +1,171 @@
+//! CLI argument parser substrate (no clap in the vendored set).
+//!
+//! Grammar: `sagebwd <subcommand> [--flag] [--key value]...` with
+//! typed accessors, defaults, and generated usage text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed arguments for one subcommand invocation.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut it = raw.into_iter().peekable();
+        let subcommand = it.next().unwrap_or_default();
+        let mut args = Args {
+            subcommand,
+            ..Default::default()
+        };
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    args.options.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self.options.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.opt(name)
+            .ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    /// Error out on unknown options (catches typos early).
+    pub fn ensure_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.options.keys().chain(self.flags.iter()) {
+            if !known.contains(&k.as_str()) {
+                bail!(
+                    "unknown option --{k}; known: {}",
+                    known
+                        .iter()
+                        .map(|s| format!("--{s}"))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = parse("train foo bar");
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.positional, vec!["foo", "bar"]);
+    }
+
+    #[test]
+    fn options_space_and_equals() {
+        let a = parse("train --steps 100 --lr=3e-5");
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert!((a.f64_or("lr", 0.0).unwrap() - 3e-5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flags() {
+        let a = parse("train --verbose --steps 5");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("x --a --b --c 3");
+        assert!(a.flag("a") && a.flag("b"));
+        assert_eq!(a.usize_or("c", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn type_errors() {
+        let a = parse("x --n abc");
+        assert!(a.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn require_and_unknown() {
+        let a = parse("x --known 1 --oops 2");
+        assert!(a.require("known").is_ok());
+        assert!(a.require("missing").is_err());
+        assert!(a.ensure_known(&["known"]).is_err());
+        assert!(a.ensure_known(&["known", "oops"]).is_ok());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.str_or("mode", "fast"), "fast");
+        assert_eq!(a.usize_or("n", 7).unwrap(), 7);
+    }
+}

@@ -1,0 +1,214 @@
+//! Typed run configuration, JSON-(de)serializable.
+//!
+//! Mirrors the paper's §5.1 hyperparameters at our scaled substrate
+//! (DESIGN.md §6 substitution table): the high/low tokens-per-step pair
+//! preserves the paper's 2.1M/260K = 8× ratio.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Attention variant names — must match `python/compile/configs.VARIANTS`.
+pub const VARIANTS: &[&str] = &[
+    "sage_qknorm",
+    "sage_noqknorm",
+    "fpa_qknorm",
+    "fpa_noqknorm",
+    "sage_qknorm_nosm",
+    "sage_qknorm_qksm",
+];
+
+/// One pre-training run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    /// Artifact variant (see [`VARIANTS`]).
+    pub variant: String,
+    /// Optimizer steps to run.
+    pub steps: u64,
+    /// Tokens per optimizer step (§4.3) — realized as
+    /// `tokens_per_step / (microbatch × seq_len)` accumulated microbatches.
+    pub tokens_per_step: u64,
+    /// Warmup steps for the LR schedule (paper: 1k of 37.5k / 7.5k of 300k).
+    pub warmup_steps: u64,
+    /// Peak learning rate (paper §5.1: 3e-5; scaled runs may use larger).
+    pub peak_lr: f64,
+    /// Final LR as a fraction of peak (cosine floor).
+    pub min_lr_frac: f64,
+    /// RNG seed for init + data order.
+    pub seed: u64,
+    /// Checkpoint every N steps (0 = only at end).
+    pub checkpoint_every: u64,
+    /// Log every N steps.
+    pub log_every: u64,
+    /// Global-norm gradient clipping (0 = off).
+    pub clip_norm: f64,
+    /// Relative synthetic gradient-noise std (0 = off) — the §4.3
+    /// hypothesis probe (see coordinator::noise).
+    pub grad_noise_sigma: f64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> TrainConfig {
+        TrainConfig {
+            variant: "sage_qknorm".to_string(),
+            steps: 200,
+            tokens_per_step: 4096,
+            warmup_steps: 20,
+            peak_lr: 1e-3,
+            min_lr_frac: 0.1,
+            seed: 0,
+            checkpoint_every: 0,
+            log_every: 10,
+            clip_norm: 0.0,
+            grad_noise_sigma: 0.0,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("variant", self.variant.as_str().into()),
+            ("steps", (self.steps as i64).into()),
+            ("tokens_per_step", (self.tokens_per_step as i64).into()),
+            ("warmup_steps", (self.warmup_steps as i64).into()),
+            ("peak_lr", self.peak_lr.into()),
+            ("min_lr_frac", self.min_lr_frac.into()),
+            ("seed", (self.seed as i64).into()),
+            ("checkpoint_every", (self.checkpoint_every as i64).into()),
+            ("log_every", (self.log_every as i64).into()),
+            ("clip_norm", self.clip_norm.into()),
+            ("grad_noise_sigma", self.grad_noise_sigma.into()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TrainConfig> {
+        let d = TrainConfig::default();
+        let get_u = |k: &str, dflt: u64| -> Result<u64> {
+            match j.get_opt(k) {
+                Some(v) => Ok(v.as_i64()? as u64),
+                None => Ok(dflt),
+            }
+        };
+        let get_f = |k: &str, dflt: f64| -> Result<f64> {
+            match j.get_opt(k) {
+                Some(v) => v.as_f64(),
+                None => Ok(dflt),
+            }
+        };
+        let cfg = TrainConfig {
+            variant: match j.get_opt("variant") {
+                Some(v) => v.as_str()?.to_string(),
+                None => d.variant,
+            },
+            steps: get_u("steps", d.steps)?,
+            tokens_per_step: get_u("tokens_per_step", d.tokens_per_step)?,
+            warmup_steps: get_u("warmup_steps", d.warmup_steps)?,
+            peak_lr: get_f("peak_lr", d.peak_lr)?,
+            min_lr_frac: get_f("min_lr_frac", d.min_lr_frac)?,
+            seed: get_u("seed", d.seed)?,
+            checkpoint_every: get_u("checkpoint_every", d.checkpoint_every)?,
+            log_every: get_u("log_every", d.log_every)?,
+            clip_norm: get_f("clip_norm", d.clip_norm)?,
+            grad_noise_sigma: get_f("grad_noise_sigma", d.grad_noise_sigma)?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<TrainConfig> {
+        let text = fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        TrainConfig::from_json(&json::parse(&text)?)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing config {}", path.display()))
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !VARIANTS.contains(&self.variant.as_str()) {
+            bail!("unknown variant {:?}; known: {VARIANTS:?}", self.variant);
+        }
+        if self.steps == 0 {
+            bail!("steps must be > 0");
+        }
+        if self.tokens_per_step == 0 {
+            bail!("tokens_per_step must be > 0");
+        }
+        if self.warmup_steps >= self.steps {
+            bail!(
+                "warmup_steps ({}) must be < steps ({})",
+                self.warmup_steps,
+                self.steps
+            );
+        }
+        if !(self.peak_lr > 0.0) {
+            bail!("peak_lr must be positive");
+        }
+        if !(0.0..=1.0).contains(&self.min_lr_frac) {
+            bail!("min_lr_frac must be in [0, 1]");
+        }
+        if self.clip_norm < 0.0 || self.grad_noise_sigma < 0.0 {
+            bail!("clip_norm and grad_noise_sigma must be non-negative");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = TrainConfig {
+            variant: "fpa_qknorm".into(),
+            steps: 1000,
+            tokens_per_step: 32_768,
+            ..Default::default()
+        };
+        let j = cfg.to_json();
+        let back = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let j = json::parse(r#"{"steps": 50, "warmup_steps": 5}"#).unwrap();
+        let cfg = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.steps, 50);
+        assert_eq!(cfg.variant, "sage_qknorm");
+    }
+
+    #[test]
+    fn validation_catches_errors() {
+        let mut cfg = TrainConfig::default();
+        cfg.variant = "bogus".into();
+        assert!(cfg.validate().is_err());
+        cfg = TrainConfig::default();
+        cfg.warmup_steps = cfg.steps;
+        assert!(cfg.validate().is_err());
+        cfg = TrainConfig::default();
+        cfg.min_lr_frac = 2.0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let cfg = TrainConfig::default();
+        let path = std::env::temp_dir().join(format!("sagebwd_cfg_{}.json", std::process::id()));
+        cfg.save(&path).unwrap();
+        assert_eq!(TrainConfig::load(&path).unwrap(), cfg);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,205 @@
+//! Gradient accumulation — the mechanism realizing the paper's
+//! *tokens-per-step* axis (§4.3).
+//!
+//! One optimizer step = `microbatches_per_step` executions of the AOT
+//! `grad_step` artifact, whose gradients are averaged here before a single
+//! `apply_step`.  TPS = microbatches_per_step × microbatch × seq_len; the
+//! paper's 2.1M-vs-260K comparison is this knob (batch-size route), holding
+//! sequence length fixed.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+/// Averages gradients (and losses) over the microbatches of one step.
+#[derive(Debug)]
+pub struct GradAccumulator {
+    grads: Vec<Tensor>,
+    loss_sum: f64,
+    count: u32,
+}
+
+impl GradAccumulator {
+    /// `shapes`: gradient leaf shapes in parameter (ABI) order.
+    pub fn new(shapes: &[Vec<usize>]) -> GradAccumulator {
+        GradAccumulator {
+            grads: shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+            loss_sum: 0.0,
+            count: 0,
+        }
+    }
+
+    pub fn num_leaves(&self) -> usize {
+        self.grads.len()
+    }
+
+    pub fn count(&self) -> u32 {
+        self.count
+    }
+
+    /// Add one microbatch's (loss, grads).
+    pub fn add(&mut self, loss: f32, grads: &[Tensor]) -> Result<()> {
+        if grads.len() != self.grads.len() {
+            bail!(
+                "accumulator has {} leaves, got {}",
+                self.grads.len(),
+                grads.len()
+            );
+        }
+        for (acc, g) in self.grads.iter_mut().zip(grads) {
+            if acc.shape != g.shape {
+                bail!("gradient shape mismatch: {:?} vs {:?}", acc.shape, g.shape);
+            }
+            acc.add_assign(g);
+        }
+        self.loss_sum += loss as f64;
+        self.count += 1;
+        Ok(())
+    }
+
+    /// Finish the step: return (mean loss, mean grads) and reset.
+    pub fn take_mean(&mut self) -> Result<(f64, Vec<Tensor>)> {
+        if self.count == 0 {
+            bail!("take_mean on empty accumulator");
+        }
+        let inv = 1.0 / self.count as f32;
+        let mut grads = Vec::with_capacity(self.grads.len());
+        for acc in self.grads.iter_mut() {
+            let mut g = acc.clone();
+            g.scale(inv);
+            acc.fill(0.0);
+            grads.push(g);
+        }
+        let loss = self.loss_sum / self.count as f64;
+        self.loss_sum = 0.0;
+        self.count = 0;
+        Ok((loss, grads))
+    }
+
+    /// Global gradient norm of the current (unaveraged) accumulation.
+    pub fn grad_norm(&self) -> f64 {
+        self.grads
+            .iter()
+            .map(|g| g.data.iter().map(|&x| x as f64 * x as f64).sum::<f64>())
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// True if any accumulated gradient is non-finite (divergence guard).
+    pub fn any_nonfinite(&self) -> bool {
+        self.grads.iter().any(|g| !g.is_finite())
+    }
+}
+
+/// Derive microbatches-per-step from a tokens-per-step target.
+/// Errors when TPS is not an exact multiple (silent truncation would make
+/// reported TPS a lie).
+pub fn microbatches_for_tps(tokens_per_step: u64, microbatch: u64, seq_len: u64) -> Result<u64> {
+    let per_micro = microbatch * seq_len;
+    if per_micro == 0 || tokens_per_step == 0 || tokens_per_step % per_micro != 0 {
+        bail!(
+            "tokens_per_step {tokens_per_step} must be a multiple of microbatch×seq_len = {per_micro}"
+        );
+    }
+    Ok(tokens_per_step / per_micro)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{check, Gen};
+
+    fn t(data: Vec<f32>) -> Tensor {
+        Tensor::from_vec(&[data.len()], data).unwrap()
+    }
+
+    #[test]
+    fn mean_of_two_microbatches() {
+        let mut acc = GradAccumulator::new(&[vec![2]]);
+        acc.add(1.0, &[t(vec![2.0, 4.0])]).unwrap();
+        acc.add(3.0, &[t(vec![4.0, 8.0])]).unwrap();
+        let (loss, grads) = acc.take_mean().unwrap();
+        assert_eq!(loss, 2.0);
+        assert_eq!(grads[0].data, vec![3.0, 6.0]);
+        assert_eq!(acc.count(), 0); // reset
+    }
+
+    #[test]
+    fn empty_take_fails() {
+        let mut acc = GradAccumulator::new(&[vec![1]]);
+        assert!(acc.take_mean().is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let mut acc = GradAccumulator::new(&[vec![2]]);
+        assert!(acc.add(0.0, &[t(vec![1.0])]).is_err());
+        assert!(acc.add(0.0, &[]).is_err());
+    }
+
+    #[test]
+    fn nonfinite_detection() {
+        let mut acc = GradAccumulator::new(&[vec![2]]);
+        acc.add(0.0, &[t(vec![1.0, f32::INFINITY])]).unwrap();
+        assert!(acc.any_nonfinite());
+    }
+
+    #[test]
+    fn tps_division() {
+        assert_eq!(microbatches_for_tps(4096, 2, 128).unwrap(), 16);
+        assert_eq!(microbatches_for_tps(32_768, 2, 128).unwrap(), 128);
+        assert!(microbatches_for_tps(1000, 2, 128).is_err());
+        assert!(microbatches_for_tps(0, 2, 128).is_err());
+    }
+
+    #[test]
+    fn accumulation_is_linear() {
+        // Property: mean of k identical microbatches equals the microbatch.
+        check("accumulate k identical", |g: &mut Gen| {
+            let k = g.usize_in(1, 8);
+            let len = g.usize_in(1, 32);
+            let grad = Tensor::from_vec(&[len], g.vec_f32(len, 1.0)).unwrap();
+            let mut acc = GradAccumulator::new(&[vec![len]]);
+            for _ in 0..k {
+                acc.add(2.5, &[grad.clone()]).unwrap();
+            }
+            let (loss, grads) = acc.take_mean().unwrap();
+            if (loss - 2.5).abs() > 1e-6 {
+                return Err(format!("loss {loss}"));
+            }
+            for (a, b) in grads[0].data.iter().zip(&grad.data) {
+                if (a - b).abs() > 1e-4 * b.abs().max(1.0) {
+                    return Err(format!("grad mismatch {a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mean_invariant_to_order() {
+        // Property: accumulation commutes (floating error aside).
+        check("order invariance", |g: &mut Gen| {
+            let len = g.usize_in(1, 16);
+            let a = Tensor::from_vec(&[len], g.vec_f32(len, 1.0)).unwrap();
+            let b = Tensor::from_vec(&[len], g.vec_f32(len, 1.0)).unwrap();
+            let run = |x: &Tensor, y: &Tensor| {
+                let mut acc = GradAccumulator::new(&[vec![len]]);
+                acc.add(1.0, std::slice::from_ref(&x.clone())).unwrap();
+                acc.add(2.0, std::slice::from_ref(&y.clone())).unwrap();
+                acc.take_mean().unwrap()
+            };
+            let (l1, g1) = run(&a, &b);
+            let (l2, g2) = run(&b, &a);
+            if (l1 - l2).abs() > 1e-9 {
+                return Err("loss not symmetric".into());
+            }
+            for (x, y) in g1[0].data.iter().zip(&g2[0].data) {
+                if (x - y).abs() > 1e-5 {
+                    return Err("grads not symmetric".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,166 @@
+//! Checkpoint substrate: a simple self-describing binary format for
+//! (params, optimizer moments, step) — the safetensors stand-in.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic  b"SBWD0001"
+//! u64    step
+//! u32    num_tensors
+//! per tensor:
+//!   u32 name_len, name bytes (UTF-8)
+//!   u32 ndim, u64×ndim dims
+//!   u64 data_len_bytes, f32×(data_len/4) data
+//! ```
+
+use std::fs;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 8] = b"SBWD0001";
+
+/// A named tensor collection + step counter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub tensors: Vec<(String, Tensor)>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&self.step.to_le_bytes());
+        buf.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for (name, t) in &self.tensors {
+            buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            buf.extend_from_slice(name.as_bytes());
+            buf.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+            for &d in &t.shape {
+                buf.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            buf.extend_from_slice(&((t.data.len() * 4) as u64).to_le_bytes());
+            for &x in &t.data {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        // Atomic-ish write: temp file then rename.
+        let tmp = path.with_extension("tmp");
+        fs::File::create(&tmp)
+            .and_then(|mut f| f.write_all(&buf))
+            .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
+        fs::rename(&tmp, path)
+            .with_context(|| format!("renaming checkpoint into {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut buf = Vec::new();
+        fs::File::open(path)
+            .and_then(|mut f| f.read_to_end(&mut buf))
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > buf.len() {
+                bail!("truncated checkpoint at byte {}", *pos);
+            }
+            let s = &buf[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        if take(&mut pos, 8)? != MAGIC {
+            bail!("bad checkpoint magic in {}", path.display());
+        }
+        let step = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+        let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        let mut tensors = Vec::with_capacity(count as usize);
+        for _ in 0..count {
+            let name_len = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+            let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())
+                .context("non-UTF-8 tensor name")?;
+            let ndim = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize);
+            }
+            let data_bytes = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize;
+            if data_bytes % 4 != 0 {
+                bail!("tensor {name}: data length {data_bytes} not a multiple of 4");
+            }
+            let raw = take(&mut pos, data_bytes)?;
+            let data: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            tensors.push((name, Tensor::from_vec(&shape, data)?));
+        }
+        if pos != buf.len() {
+            bail!("trailing bytes in checkpoint {}", path.display());
+        }
+        Ok(Checkpoint { step, tensors })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn temp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("sagebwd_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Pcg64::new(0, 0);
+        let ckpt = Checkpoint {
+            step: 1234,
+            tensors: vec![
+                ("embed".into(), Tensor::randn(&[8, 4], 1.0, &mut rng)),
+                ("scalar".into(), Tensor::scalar(2.5)),
+            ],
+        };
+        let path = temp("rt.ckpt");
+        ckpt.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ckpt, back);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let path = temp("bad.ckpt");
+        std::fs::write(&path, b"NOTMAGIC rest").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let ckpt = Checkpoint {
+            step: 1,
+            tensors: vec![("x".into(), Tensor::zeros(&[16]))],
+        };
+        let path = temp("trunc.ckpt");
+        ckpt.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 7]).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn empty_checkpoint() {
+        let ckpt = Checkpoint {
+            step: 0,
+            tensors: vec![],
+        };
+        let path = temp("empty.ckpt");
+        ckpt.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), ckpt);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

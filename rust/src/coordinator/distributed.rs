@@ -1,0 +1,385 @@
+//! Data-parallel distributed runtime: leader/worker pre-training.
+//!
+//! The paper's TPS experiments realize a 2.1M-token step with a global
+//! batch of 512 across devices; this module is that topology on our
+//! substrate: N worker threads, each owning a *private* PJRT client (the
+//! `xla` client is not `Send`) with its own compiled `grad_step`
+//! executable and its own deterministic data shard.  One optimizer step:
+//!
+//! ```text
+//! leader: broadcast params (Arc<Vec<Tensor>>) ──▶ workers
+//! worker i: upload params once, run k microbatches on shard i,
+//!           locally pre-reduce (sum) gradients            ──▶ leader
+//! leader: tree-reduce worker sums, average, apply AdamW (own client)
+//! ```
+//!
+//! Determinism: shard i's batch stream is a pure function of (seed, i),
+//! so results are independent of worker scheduling; the reduction is a
+//! fixed-order tree (floating-point associativity pinned).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::TrainConfig;
+use crate::coordinator::schedule::CosineSchedule;
+use crate::data::{Batcher, Tokenizer};
+use crate::runtime::literal::f32_from_literal;
+use crate::runtime::{Runtime, TensorSpec};
+use crate::telemetry::{Log, Metrics};
+use crate::tensor::Tensor;
+
+enum Task {
+    /// Run `microbatches` on the worker's shard with these parameters.
+    Run {
+        params: Arc<Vec<Tensor>>,
+        microbatches: u32,
+    },
+    Shutdown,
+}
+
+struct TaskResult {
+    worker: usize,
+    loss_sum: f64,
+    count: u32,
+    /// Locally summed (not averaged) gradients.
+    grads: Vec<Tensor>,
+}
+
+struct WorkerHandle {
+    tx: Sender<Task>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Pool of grad-step workers, one PJRT client each.
+pub struct WorkerPool {
+    workers: Vec<WorkerHandle>,
+    results_rx: Receiver<anyhow::Result<TaskResult>>,
+}
+
+impl WorkerPool {
+    /// Spawn `n` workers.  Each compiles `grad_step_<variant>` in its own
+    /// client (slow, once) and streams shard `i` of the corpus.
+    pub fn spawn(
+        artifacts_dir: std::path::PathBuf,
+        variant: &str,
+        n: usize,
+        seed: u64,
+        microbatch: usize,
+        seq_len: usize,
+    ) -> Result<WorkerPool> {
+        assert!(n >= 1);
+        let (results_tx, results_rx) = channel();
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let (tx, rx) = channel::<Task>();
+            let results_tx = results_tx.clone();
+            let dir = artifacts_dir.clone();
+            let grad_name = format!("grad_step_{variant}");
+            let handle = std::thread::Builder::new()
+                .name(format!("dp-worker-{i}"))
+                .spawn(move || {
+                    if let Err(e) = worker_main(i, dir, grad_name, seed, microbatch,
+                                                seq_len, rx, &results_tx) {
+                        let _ = results_tx.send(Err(e));
+                    }
+                })
+                .context("spawning worker")?;
+            workers.push(WorkerHandle {
+                tx,
+                handle: Some(handle),
+            });
+        }
+        Ok(WorkerPool {
+            workers,
+            results_rx,
+        })
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run one globally-accumulated gradient step: `total_microbatches`
+    /// split as evenly as possible across workers.
+    /// Returns (mean loss, averaged gradients).
+    pub fn grad_step(
+        &self,
+        params: &Arc<Vec<Tensor>>,
+        total_microbatches: u32,
+    ) -> Result<(f64, Vec<Tensor>)> {
+        let n = self.workers.len() as u32;
+        if total_microbatches < 1 {
+            bail!("need at least one microbatch");
+        }
+        let mut assigned = 0u32;
+        let mut active = 0usize;
+        for (i, w) in self.workers.iter().enumerate() {
+            let share = total_microbatches / n
+                + if (i as u32) < total_microbatches % n { 1 } else { 0 };
+            if share == 0 {
+                continue;
+            }
+            w.tx
+                .send(Task::Run {
+                    params: Arc::clone(params),
+                    microbatches: share,
+                })
+                .context("sending task to worker")?;
+            assigned += share;
+            active += 1;
+        }
+        debug_assert_eq!(assigned, total_microbatches);
+
+        // Collect and tree-reduce in worker-id order (deterministic sums).
+        let mut results: Vec<TaskResult> = Vec::with_capacity(active);
+        for _ in 0..active {
+            results.push(self.results_rx.recv().context("worker died")??);
+        }
+        results.sort_by_key(|r| r.worker);
+        let mut it = results.into_iter();
+        let first = it.next().unwrap();
+        let (mut loss_sum, mut count, mut grads) = (first.loss_sum, first.count, first.grads);
+        for r in it {
+            loss_sum += r.loss_sum;
+            count += r.count;
+            for (a, b) in grads.iter_mut().zip(&r.grads) {
+                a.add_assign(b);
+            }
+        }
+        let inv = 1.0 / count as f32;
+        for g in grads.iter_mut() {
+            g.scale(inv);
+        }
+        Ok((loss_sum / count as f64, grads))
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(Task::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn worker_main(
+    index: usize,
+    artifacts_dir: std::path::PathBuf,
+    grad_name: String,
+    seed: u64,
+    microbatch: usize,
+    seq_len: usize,
+    rx: Receiver<Task>,
+    results_tx: &Sender<anyhow::Result<TaskResult>>,
+) -> Result<()> {
+    let mut runtime = Runtime::new(artifacts_dir)?;
+    let grad_exe = runtime.load_owned(&grad_name)?;
+    let out_specs = grad_exe.manifest.outputs.clone();
+    let n_params = grad_exe.manifest.param_names()?.len();
+    // Shard `index`: disjoint deterministic stream per worker.
+    let mut batcher = Batcher::new(Tokenizer::bytes_only(), seed, index as u64,
+                                   microbatch, seq_len);
+
+    while let Ok(task) = rx.recv() {
+        let Task::Run {
+            params,
+            microbatches,
+        } = task
+        else {
+            break;
+        };
+        // Upload parameters once for all microbatches of this step.
+        let param_bufs: Vec<xla::PjRtBuffer> = params
+            .iter()
+            .map(|t| grad_exe.upload_f32(t))
+            .collect::<Result<_>>()?;
+        let mut loss_sum = 0f64;
+        let mut grads: Option<Vec<Tensor>> = None;
+        for _ in 0..microbatches {
+            let batch = batcher.next_batch()?;
+            let tok = grad_exe.upload_i32(&batch.tokens)?;
+            let tgt = grad_exe.upload_i32(&batch.targets)?;
+            let mut inputs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(n_params + 2);
+            inputs.extend(param_bufs.iter());
+            inputs.push(&tok);
+            inputs.push(&tgt);
+            let outputs = grad_exe.execute_buffers(&inputs)?;
+            loss_sum += f32_from_literal(&outputs[0], &out_specs[0])?.item() as f64;
+            let micro_grads: Vec<Tensor> = outputs[1..]
+                .iter()
+                .zip(&out_specs[1..])
+                .map(|(l, s)| f32_from_literal(l, s))
+                .collect::<Result<_>>()?;
+            match grads {
+                None => grads = Some(micro_grads),
+                Some(ref mut acc) => {
+                    for (a, b) in acc.iter_mut().zip(&micro_grads) {
+                        a.add_assign(b);
+                    }
+                }
+            }
+        }
+        results_tx
+            .send(Ok(TaskResult {
+                worker: index,
+                loss_sum,
+                count: microbatches,
+                grads: grads.unwrap(),
+            }))
+            .ok();
+    }
+    Ok(())
+}
+
+/// Data-parallel trainer: leader applies AdamW, workers compute gradients.
+pub struct DistTrainer {
+    pub cfg: TrainConfig,
+    pub metrics: Metrics,
+    leader: Runtime,
+    apply_exe: crate::runtime::Executable,
+    pool: WorkerPool,
+    param_specs: Vec<TensorSpec>,
+    params: Arc<Vec<Tensor>>,
+    m: Vec<Tensor>,
+    v: Vec<Tensor>,
+    micro_per_step: u64,
+    schedule: CosineSchedule,
+    step: u64,
+}
+
+impl DistTrainer {
+    pub fn new(artifacts_dir: std::path::PathBuf, cfg: TrainConfig, workers: usize) -> Result<DistTrainer> {
+        cfg.validate()?;
+        let mut leader = Runtime::new(artifacts_dir.clone())?;
+        let init_exe = leader.load_owned(&format!("init_{}", cfg.variant))?;
+        let seed_buf = init_exe.upload_i32(&crate::tensor::IntTensor::scalar(cfg.seed as i32))?;
+        let param_lits = init_exe.execute_buffers(&[&seed_buf])?;
+
+        let grad_exe = leader.load_owned(&format!("grad_step_{}", cfg.variant))?;
+        let gm = &grad_exe.manifest;
+        let n_params = gm.param_names()?.len();
+        let param_specs: Vec<TensorSpec> = gm.inputs[..n_params].to_vec();
+        let tokens_spec = gm.input("tokens")?;
+        let (microbatch, seq_len) = (tokens_spec.shape[0], tokens_spec.shape[1]);
+        let micro_per_step = crate::coordinator::microbatches_for_tps(
+            cfg.tokens_per_step, microbatch as u64, seq_len as u64)?;
+
+        let params: Vec<Tensor> = param_lits
+            .iter()
+            .zip(&param_specs)
+            .map(|(l, s)| f32_from_literal(l, s))
+            .collect::<Result<_>>()?;
+        let m = params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+        let v = params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+
+        let apply_name = if cfg.variant.contains("noqknorm") {
+            "apply_step_noqknorm"
+        } else {
+            "apply_step_qknorm"
+        };
+        let apply_exe = leader.load_owned(apply_name)?;
+        let schedule =
+            CosineSchedule::new(cfg.peak_lr, cfg.warmup_steps, cfg.steps, cfg.min_lr_frac);
+        let pool = WorkerPool::spawn(artifacts_dir, &cfg.variant, workers,
+                                     cfg.seed, microbatch, seq_len)?;
+        Ok(DistTrainer {
+            cfg,
+            metrics: Metrics::new(),
+            leader,
+            apply_exe,
+            pool,
+            param_specs,
+            params: Arc::new(params),
+            m,
+            v,
+            micro_per_step,
+            schedule,
+            step: 0,
+        })
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.pool.num_workers()
+    }
+
+    /// One data-parallel optimizer step.
+    pub fn train_step(&mut self) -> Result<f64> {
+        let (loss, grads) = self
+            .pool
+            .grad_step(&self.params, self.micro_per_step as u32)?;
+        let lr = self.schedule.lr(self.step);
+
+        // AdamW on the leader's client.
+        let n = self.params.len();
+        let up = |t: &Tensor| self.apply_exe.upload_f32(t);
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(4 * n + 2);
+        for t in self.params.iter() {
+            bufs.push(up(t)?);
+        }
+        for t in &self.m {
+            bufs.push(up(t)?);
+        }
+        for t in &self.v {
+            bufs.push(up(t)?);
+        }
+        for t in &grads {
+            bufs.push(up(t)?);
+        }
+        bufs.push(self.apply_exe.upload_f32(&Tensor::scalar(lr as f32))?);
+        bufs.push(
+            self.apply_exe
+                .upload_i32(&crate::tensor::IntTensor::scalar(self.step as i32 + 1))?,
+        );
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let outputs = self.apply_exe.execute_buffers(&refs)?;
+        if outputs.len() != 3 * n {
+            bail!("apply_step returned {} outputs", outputs.len());
+        }
+        let decode = |lits: &[xla::Literal], specs: &[TensorSpec]| -> Result<Vec<Tensor>> {
+            lits.iter()
+                .zip(specs)
+                .map(|(l, s)| f32_from_literal(l, s))
+                .collect()
+        };
+        self.params = Arc::new(decode(&outputs[..n], &self.param_specs)?);
+        self.m = decode(&outputs[n..2 * n], &self.param_specs)?;
+        self.v = decode(&outputs[2 * n..], &self.param_specs)?;
+
+        self.metrics.record("train_loss", self.step, loss);
+        self.metrics.record("lr", self.step, lr);
+        self.step += 1;
+        Ok(loss)
+    }
+
+    pub fn run(&mut self, log: &Log) -> Result<f64> {
+        let total = self.cfg.steps;
+        log.info(&format!(
+            "distributed run {}: {} workers, {} steps × {} microbatches/step",
+            self.cfg.variant,
+            self.pool.num_workers(),
+            total,
+            self.micro_per_step
+        ));
+        let mut last = f64::NAN;
+        while self.step < total {
+            last = self.train_step()?;
+            if self.cfg.log_every > 0 && self.step % self.cfg.log_every == 0 {
+                log.info(&format!("step {:>4}/{total}  loss {last:.4}", self.step));
+            }
+        }
+        Ok(last)
+    }
+
+    /// Leader runtime access (e.g. for eval probes).
+    pub fn leader(&mut self) -> &mut Runtime {
+        &mut self.leader
+    }
+}

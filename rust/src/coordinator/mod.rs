@@ -1,0 +1,16 @@
+//! Layer-3 coordinator: the pre-training orchestration the paper's
+//! experiments run on — tokens-per-step control via gradient accumulation
+//! (§4.3), warmup+cosine LR (§5.1), divergence detection (§5.3),
+//! checkpointing.
+
+pub mod accumulator;
+pub mod checkpoint;
+pub mod distributed;
+pub mod noise;
+pub mod schedule;
+pub mod trainer;
+
+pub use accumulator::{microbatches_for_tps, GradAccumulator};
+pub use checkpoint::Checkpoint;
+pub use schedule::CosineSchedule;
+pub use trainer::{RunReport, RunStatus, Trainer};

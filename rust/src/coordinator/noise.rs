@@ -1,0 +1,135 @@
+//! Gradient post-processing: clipping and synthetic noise injection.
+//!
+//! Noise injection is an *extension experiment* probing the paper's §4.3
+//! hypothesis head-on: if small-TPS runs tolerate INT8 error because
+//! stochastic gradient noise masks the (biased) quantization error, then
+//! *adding* synthetic Gaussian noise to the averaged gradient at high TPS
+//! should close part of the Sage–FPA gap.  `sagebwd noise-probe` runs the
+//! comparison (EXPERIMENTS.md §Extensions).
+//!
+//! Clipping is standard global-norm clipping — the stability guard large
+//! TPS runs in the paper's setting would use.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+/// Clip the global ℓ2 norm of a gradient set to `max_norm`.
+/// Returns the pre-clip norm.
+pub fn clip_global_norm(grads: &mut [Tensor], max_norm: f64) -> f64 {
+    let norm = global_norm(grads);
+    if max_norm > 0.0 && norm > max_norm {
+        let scale = (max_norm / norm) as f32;
+        for g in grads.iter_mut() {
+            g.scale(scale);
+        }
+    }
+    norm
+}
+
+/// Global ℓ2 norm over all leaves.
+pub fn global_norm(grads: &[Tensor]) -> f64 {
+    grads
+        .iter()
+        .map(|g| g.data.iter().map(|&x| x as f64 * x as f64).sum::<f64>())
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Add zero-mean Gaussian noise with per-leaf std = `rel_sigma × RMS(leaf)`.
+///
+/// Scaling noise to each leaf's RMS keeps the perturbation *relative* —
+/// mimicking how minibatch sampling noise scales with the gradient itself
+/// (the mechanism §4.3 credits for masking quantization bias at low TPS).
+pub fn add_relative_noise(grads: &mut [Tensor], rel_sigma: f64, rng: &mut Pcg64) {
+    if rel_sigma <= 0.0 {
+        return;
+    }
+    for g in grads.iter_mut() {
+        let rms = g.rms();
+        if rms == 0.0 {
+            continue;
+        }
+        let std = (rel_sigma * rms) as f32;
+        for x in g.data.iter_mut() {
+            *x += (rng.gaussian() as f32) * std;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{check, Gen};
+
+    fn t(data: Vec<f32>) -> Tensor {
+        Tensor::from_vec(&[data.len()], data).unwrap()
+    }
+
+    #[test]
+    fn clip_reduces_norm_to_bound() {
+        let mut grads = vec![t(vec![3.0, 4.0])]; // norm 5
+        let pre = clip_global_norm(&mut grads, 1.0);
+        assert!((pre - 5.0).abs() < 1e-9);
+        assert!((global_norm(&grads) - 1.0).abs() < 1e-6);
+        // direction preserved
+        assert!((grads[0].data[0] / grads[0].data[1] - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn clip_noop_below_bound() {
+        let mut grads = vec![t(vec![0.3, 0.4])];
+        clip_global_norm(&mut grads, 1.0);
+        assert_eq!(grads[0].data, vec![0.3, 0.4]);
+    }
+
+    #[test]
+    fn clip_disabled_with_zero_max() {
+        let mut grads = vec![t(vec![30.0, 40.0])];
+        clip_global_norm(&mut grads, 0.0);
+        assert_eq!(grads[0].data, vec![30.0, 40.0]);
+    }
+
+    #[test]
+    fn noise_zero_sigma_is_identity() {
+        let mut grads = vec![t(vec![1.0, 2.0])];
+        let mut rng = Pcg64::new(0, 0);
+        add_relative_noise(&mut grads, 0.0, &mut rng);
+        assert_eq!(grads[0].data, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn noise_scales_with_rms() {
+        check("noise magnitude", |g: &mut Gen| {
+            let len = 256;
+            let scale = g.f64_in(0.1, 10.0) as f32;
+            let base: Vec<f32> = (0..len).map(|i| scale * ((i % 7) as f32 - 3.0)).collect();
+            let mut grads = vec![t(base.clone())];
+            let mut rng = Pcg64::new(g.usize_in(0, 1000) as u64, 1);
+            add_relative_noise(&mut grads, 0.5, &mut rng);
+            let rms_base = t(base.clone()).rms();
+            let diff: Vec<f32> = grads[0]
+                .data
+                .iter()
+                .zip(&base)
+                .map(|(a, b)| a - b)
+                .collect();
+            let rms_noise = t(diff).rms();
+            // std should be ≈ 0.5 × rms_base (loose statistical bound)
+            if !(rms_noise > 0.3 * rms_base && rms_noise < 0.7 * rms_base) {
+                return Err(format!("noise rms {rms_noise} vs base {rms_base}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn noise_is_deterministic_per_stream() {
+        let mk = || {
+            let mut grads = vec![t(vec![1.0; 32])];
+            let mut rng = Pcg64::new(9, 9);
+            add_relative_noise(&mut grads, 0.1, &mut rng);
+            grads
+        };
+        assert_eq!(mk(), mk());
+    }
+}

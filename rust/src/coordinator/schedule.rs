@@ -1,0 +1,106 @@
+//! Learning-rate schedule: linear warmup → cosine decay (paper §5.1).
+//!
+//! The schedule runs in the coordinator and is fed to the AOT `apply_step`
+//! artifact as a scalar input each optimizer step, so one compiled
+//! executable serves every schedule.
+
+/// Warmup + cosine decay to `peak_lr * min_frac`.
+#[derive(Debug, Clone, Copy)]
+pub struct CosineSchedule {
+    pub peak_lr: f64,
+    pub warmup_steps: u64,
+    pub total_steps: u64,
+    pub min_frac: f64,
+}
+
+impl CosineSchedule {
+    pub fn new(peak_lr: f64, warmup_steps: u64, total_steps: u64, min_frac: f64) -> CosineSchedule {
+        assert!(total_steps > warmup_steps, "warmup must be < total");
+        assert!((0.0..=1.0).contains(&min_frac));
+        CosineSchedule {
+            peak_lr,
+            warmup_steps,
+            total_steps,
+            min_frac,
+        }
+    }
+
+    /// LR for a 0-based optimizer step.
+    pub fn lr(&self, step: u64) -> f64 {
+        if self.warmup_steps > 0 && step < self.warmup_steps {
+            // Linear warmup reaching peak at `warmup_steps`.
+            return self.peak_lr * (step + 1) as f64 / self.warmup_steps as f64;
+        }
+        let progress = (step - self.warmup_steps) as f64
+            / (self.total_steps - self.warmup_steps).max(1) as f64;
+        let progress = progress.clamp(0.0, 1.0);
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * progress).cos());
+        self.peak_lr * (self.min_frac + (1.0 - self.min_frac) * cos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{check, Gen};
+
+    fn sched() -> CosineSchedule {
+        CosineSchedule::new(1e-3, 10, 100, 0.1)
+    }
+
+    #[test]
+    fn warmup_is_linear_and_reaches_peak() {
+        let s = sched();
+        assert!((s.lr(0) - 1e-4).abs() < 1e-12);
+        assert!((s.lr(4) - 5e-4).abs() < 1e-12);
+        assert!((s.lr(9) - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decay_ends_at_min_frac() {
+        let s = sched();
+        assert!((s.lr(100) - 1e-4).abs() < 1e-9);
+        assert!((s.lr(10_000) - 1e-4).abs() < 1e-9); // clamped past end
+    }
+
+    #[test]
+    fn monotone_decreasing_after_warmup() {
+        check("cosine monotone", |g: &mut Gen| {
+            let warmup = g.usize_in(0, 20) as u64;
+            let total = warmup + 2 + g.usize_in(0, 500) as u64;
+            let s = CosineSchedule::new(g.f64_in(1e-6, 1e-2), warmup, total, g.f64_in(0.0, 0.9));
+            let mut prev = f64::INFINITY;
+            for step in warmup..total {
+                let lr = s.lr(step);
+                if lr > prev + 1e-15 {
+                    return Err(format!("lr increased at step {step}: {lr} > {prev}"));
+                }
+                prev = lr;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn lr_always_positive_and_bounded() {
+        check("lr in (0, peak]", |g: &mut Gen| {
+            let warmup = g.usize_in(0, 20) as u64;
+            let total = warmup + 1 + g.usize_in(1, 300) as u64;
+            let peak = g.f64_in(1e-6, 1e-2);
+            let s = CosineSchedule::new(peak, warmup, total, g.f64_in(0.01, 1.0));
+            for step in 0..total + 10 {
+                let lr = s.lr(step);
+                if !(lr > 0.0 && lr <= peak * (1.0 + 1e-12)) {
+                    return Err(format!("lr {lr} out of (0, {peak}] at step {step}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn no_warmup_starts_at_peak() {
+        let s = CosineSchedule::new(1e-3, 0, 50, 0.0);
+        assert!((s.lr(0) - 1e-3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,34 @@
+//! Data substrate: synthetic corpus → BPE tokenizer → batched token
+//! streams (the OpenWebText + GPT2-tokenizer stand-in, DESIGN.md §6).
+
+pub mod batcher;
+pub mod corpus;
+pub mod tokenizer;
+
+pub use batcher::{Batch, Batcher, PrefetchBatcher};
+pub use corpus::Corpus;
+pub use tokenizer::Tokenizer;
+
+use anyhow::Result;
+
+/// Train a tokenizer for the given vocab on a fresh corpus sample.
+/// Deterministic in `seed` (uses a dedicated shard so training text never
+/// overlaps the training stream).
+pub fn trained_tokenizer(seed: u64, vocab_size: usize) -> Result<Tokenizer> {
+    let mut corpus = Corpus::new(seed, u64::MAX); // reserved tokenizer shard
+    let mut sample = String::new();
+    corpus.fill_text(&mut sample, 200_000);
+    Tokenizer::train(&sample, vocab_size)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trained_tokenizer_fits_vocab() {
+        let t = trained_tokenizer(0, 512).unwrap();
+        assert_eq!(t.vocab_size(), 512);
+        assert!(t.num_merges() > 0);
+    }
+}

@@ -1,0 +1,206 @@
+//! Byte-level BPE tokenizer substrate (the GPT2-tokenizer stand-in).
+//!
+//! Vocabulary layout: ids 0–255 are raw bytes; ids 256.. are merge
+//! products learned from a training sample by the classic BPE procedure
+//! (merge the most frequent adjacent pair, repeat).  The model's
+//! `vocab_size` is the hard cap, so `Tokenizer::train(sample, vocab_size)`
+//! learns `vocab_size − 256` merges.
+//!
+//! Encoding is deterministic greedy merge application in learned order —
+//! exactly GPT-2's algorithm (minus the regex pre-splitting, which our
+//! synthetic corpus does not need).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+/// A trained byte-level BPE tokenizer.
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    /// Learned merges in order: (left, right) → new id (256 + index).
+    merges: Vec<(u32, u32)>,
+    /// Fast lookup: pair → merged id.
+    merge_map: HashMap<(u32, u32), u32>,
+    vocab_size: usize,
+}
+
+impl Tokenizer {
+    /// Byte-only tokenizer (no merges) with vocab 256.
+    pub fn bytes_only() -> Tokenizer {
+        Tokenizer {
+            merges: Vec::new(),
+            merge_map: HashMap::new(),
+            vocab_size: 256,
+        }
+    }
+
+    /// Learn `vocab_size - 256` merges from a text sample.
+    pub fn train(sample: &str, vocab_size: usize) -> Result<Tokenizer> {
+        if vocab_size < 256 {
+            bail!("vocab_size must be ≥ 256, got {vocab_size}");
+        }
+        let mut ids: Vec<u32> = sample.bytes().map(|b| b as u32).collect();
+        let mut merges = Vec::new();
+        let mut merge_map = HashMap::new();
+        for next_id in 256..vocab_size as u32 {
+            // Count adjacent pairs.
+            let mut counts: HashMap<(u32, u32), u32> = HashMap::new();
+            for w in ids.windows(2) {
+                *counts.entry((w[0], w[1])).or_default() += 1;
+            }
+            // Deterministic argmax: highest count, then smallest pair.
+            let Some((&pair, &count)) = counts
+                .iter()
+                .max_by_key(|(&pair, &count)| (count, std::cmp::Reverse(pair)))
+            else {
+                break;
+            };
+            if count < 2 {
+                break; // nothing left worth merging
+            }
+            merges.push(pair);
+            merge_map.insert(pair, next_id);
+            ids = merge_pair(&ids, pair, next_id);
+        }
+        Ok(Tokenizer {
+            merges,
+            merge_map,
+            vocab_size,
+        })
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab_size
+    }
+
+    pub fn num_merges(&self) -> usize {
+        self.merges.len()
+    }
+
+    /// Encode text to token ids: repeatedly merge the lowest-rank adjacent
+    /// pair (the standard BPE encode; identical output to applying merges
+    /// in learned order, but O(pairs·merges-applied) instead of O(V·len)).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut ids: Vec<u32> = text.bytes().map(|b| b as u32).collect();
+        while ids.len() >= 2 {
+            // Lowest merged id == earliest-learned merge == highest priority.
+            let best = ids
+                .windows(2)
+                .filter_map(|w| self.merge_map.get(&(w[0], w[1])).copied())
+                .min();
+            let Some(new_id) = best else { break };
+            let (l, r) = self.merges[(new_id - 256) as usize];
+            ids = merge_pair(&ids, (l, r), new_id);
+        }
+        ids.into_iter().map(|i| i as i32).collect()
+    }
+
+    /// Decode token ids back to text (lossless for valid UTF-8 input).
+    pub fn decode(&self, ids: &[i32]) -> Result<String> {
+        let mut bytes = Vec::with_capacity(ids.len() * 2);
+        for &id in ids {
+            self.push_bytes(id as u32, &mut bytes)?;
+        }
+        Ok(String::from_utf8_lossy(&bytes).into_owned())
+    }
+
+    fn push_bytes(&self, id: u32, out: &mut Vec<u8>) -> Result<()> {
+        if id < 256 {
+            out.push(id as u8);
+            return Ok(());
+        }
+        let idx = (id - 256) as usize;
+        if idx >= self.merges.len() {
+            bail!("token id {id} out of vocabulary");
+        }
+        let (l, r) = self.merges[idx];
+        self.push_bytes(l, out)?;
+        self.push_bytes(r, out)?;
+        Ok(())
+    }
+}
+
+fn merge_pair(ids: &[u32], pair: (u32, u32), new_id: u32) -> Vec<u32> {
+    let mut out = Vec::with_capacity(ids.len());
+    let mut i = 0;
+    while i < ids.len() {
+        if i + 1 < ids.len() && (ids[i], ids[i + 1]) == pair {
+            out.push(new_id);
+            i += 2;
+        } else {
+            out.push(ids[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::Corpus;
+
+    fn sample(bytes: usize) -> String {
+        let mut c = Corpus::new(42, 0);
+        let mut s = String::new();
+        c.fill_text(&mut s, bytes);
+        s
+    }
+
+    #[test]
+    fn bytes_only_roundtrip() {
+        let t = Tokenizer::bytes_only();
+        let text = "Hello, world! ∀x";
+        let ids = t.encode(text);
+        assert_eq!(t.decode(&ids).unwrap(), text);
+        assert_eq!(ids.len(), text.len()); // raw bytes
+    }
+
+    #[test]
+    fn train_learns_merges_and_compresses() {
+        let text = sample(50_000);
+        let t = Tokenizer::train(&text, 512).unwrap();
+        assert!(t.num_merges() > 100, "learned {} merges", t.num_merges());
+        let ids = t.encode(&text[..1000]);
+        assert!(
+            ids.len() < 700,
+            "BPE should compress: {} ids for 1000 bytes",
+            ids.len()
+        );
+    }
+
+    #[test]
+    fn trained_roundtrip_lossless() {
+        let text = sample(20_000);
+        let t = Tokenizer::train(&text, 512).unwrap();
+        let probe = &text[..2000];
+        assert_eq!(t.decode(&t.encode(probe)).unwrap(), probe);
+    }
+
+    #[test]
+    fn all_ids_within_vocab() {
+        let text = sample(20_000);
+        let t = Tokenizer::train(&text, 384).unwrap();
+        let ids = t.encode(&text[..5000]);
+        assert!(ids.iter().all(|&i| (0..384).contains(&i)));
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let text = sample(10_000);
+        let a = Tokenizer::train(&text, 320).unwrap();
+        let b = Tokenizer::train(&text, 320).unwrap();
+        assert_eq!(a.merges, b.merges);
+    }
+
+    #[test]
+    fn rejects_tiny_vocab() {
+        assert!(Tokenizer::train("abc", 100).is_err());
+    }
+
+    #[test]
+    fn unknown_id_rejected() {
+        let t = Tokenizer::bytes_only();
+        assert!(t.decode(&[300]).is_err());
+    }
+}

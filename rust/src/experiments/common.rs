@@ -1,0 +1,90 @@
+//! Shared helpers for experiment harnesses: trace-artifact execution,
+//! Gaussian input synthesis, and CSV emission.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::bench::Table;
+use crate::runtime::{Runtime, Value};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+/// Attention trace outputs, index-aligned with aot.TRACE_OUTPUTS.
+#[derive(Debug)]
+pub struct Trace {
+    pub o: Tensor,
+    pub dq: Tensor,
+    pub dk: Tensor,
+    pub dv: Tensor,
+    pub delta: Tensor,
+    pub rms_p: f64,
+    pub rms_dp: f64,
+    pub rms_ds: f64,
+    pub p: Tensor,
+    pub dp: Tensor,
+    pub ds: Tensor,
+}
+
+/// Random (Q, K, V, dO) with per-tensor sigmas — the §4.4 controlled
+/// setting (σ_V = σ_dO = 1, σ_Q = σ_K swept).
+pub fn gaussian_qkvdo(
+    n: usize,
+    d: usize,
+    sigma_q: f32,
+    sigma_k: f32,
+    sigma_v: f32,
+    sigma_do: f32,
+    seed: u64,
+) -> [Tensor; 4] {
+    let mut rng = Pcg64::new(seed, 0x51);
+    [
+        Tensor::randn(&[n, d], sigma_q, &mut rng.split(0)),
+        Tensor::randn(&[n, d], sigma_k, &mut rng.split(1)),
+        Tensor::randn(&[n, d], sigma_v, &mut rng.split(2)),
+        Tensor::randn(&[n, d], sigma_do, &mut rng.split(3)),
+    ]
+}
+
+/// Execute a `trace_*` artifact on (Q, K, V, dO).
+pub fn run_trace(rt: &mut Runtime, artifact: &str, qkvdo: &[Tensor; 4]) -> Result<Trace> {
+    let inputs: Vec<Value> = qkvdo.iter().map(|t| Value::F32(t.clone())).collect();
+    let out = rt
+        .execute(artifact, &inputs)
+        .with_context(|| format!("running trace artifact {artifact}"))?;
+    let mut it = out.into_iter();
+    let mut next = || -> Result<Tensor> { it.next().context("missing trace output")?.into_f32() };
+    Ok(Trace {
+        o: next()?,
+        dq: next()?,
+        dk: next()?,
+        dv: next()?,
+        delta: next()?,
+        rms_p: next()?.item() as f64,
+        rms_dp: next()?.item() as f64,
+        rms_ds: next()?.item() as f64,
+        p: next()?,
+        dp: next()?,
+        ds: next()?,
+    })
+}
+
+/// Print a table and also write it as CSV under results/.
+pub fn emit(table: &Table, results_dir: &str, name: &str) -> Result<()> {
+    println!("{}", table.render());
+    let dir = Path::new(results_dir);
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.csv"));
+    std::fs::write(&path, table.to_csv())
+        .with_context(|| format!("writing {}", path.display()))?;
+    println!("→ wrote {}", path.display());
+    Ok(())
+}
+
+pub fn fmt4(x: f64) -> String {
+    format!("{x:.4}")
+}
+
+pub fn fmt_sci(x: f64) -> String {
+    format!("{x:.3e}")
+}

@@ -1,0 +1,116 @@
+//! **Figure 1** — pretraining loss of SageBwd vs FPA at high and low
+//! tokens-per-step (paper §5.2), with and without QK-norm (§5.3).
+//!
+//! Paper setup → ours (DESIGN.md §6): 2.1M/260K TPS (ratio 8×) becomes
+//! `tps_hi`/`tps_lo` with the same 8× ratio at our microbatch×seq_len
+//! granularity; curves are emitted per variant for plotting, and the
+//! summary prints final losses + the Sage−FPA gap.
+//!
+//! Expected shape: at high TPS Sage trails FPA by a visible gap and the
+//! non-QK-norm run destabilizes; at low TPS Sage ≈ FPA within noise.
+
+use anyhow::Result;
+
+use crate::bench::Table;
+use crate::config::TrainConfig;
+use crate::coordinator::{RunStatus, Trainer};
+use crate::experiments::common::emit;
+use crate::runtime::Runtime;
+use crate::telemetry::{run_dir, Log};
+
+pub struct Outcome {
+    pub variant: String,
+    pub tps: u64,
+    pub final_loss: Option<f64>,
+    pub diverged: bool,
+}
+
+/// One (variant, TPS) training run; loss curve lands in
+/// `results/fig1/<variant>_tps<k>.csv`.
+///
+/// `token_budget` is fixed across cells (the paper's comparison: 78B
+/// tokens at both TPS settings), so high-TPS cells take fewer steps.
+pub fn run_cell(
+    rt_factory: &dyn Fn() -> Result<Runtime>,
+    results_dir: &str,
+    variant: &str,
+    tps: u64,
+    token_budget: u64,
+    seed: u64,
+    log: &Log,
+) -> Result<Outcome> {
+    let steps = (token_budget / tps).max(2);
+    let cfg = TrainConfig {
+        variant: variant.to_string(),
+        steps,
+        tokens_per_step: tps,
+        warmup_steps: (steps / 20).max(1),
+        peak_lr: 3e-3,
+        min_lr_frac: 0.1,
+        seed,
+        checkpoint_every: 0,
+        log_every: (steps / 10).max(1),
+        clip_norm: 0.0,
+        grad_noise_sigma: 0.0,
+    };
+    let mut trainer = Trainer::new(rt_factory()?, cfg)?;
+    let mut batches = trainer.make_batcher(512, 4)?;
+    let report = trainer.run(&mut batches, log)?;
+    let dir = run_dir(results_dir, "fig1")?;
+    // One CSV per curve: fig1/<variant>_tps<tps>.{train_loss,lr,...}.csv
+    let curve_dir = dir.join(format!("{variant}_tps{tps}"));
+    trainer.metrics.flush_csv(&curve_dir)?;
+    Ok(Outcome {
+        variant: variant.to_string(),
+        tps,
+        final_loss: report.final_loss,
+        diverged: matches!(report.status, RunStatus::Diverged { .. }),
+    })
+}
+
+/// The full Figure-1 grid.
+pub fn run(
+    rt_factory: &dyn Fn() -> Result<Runtime>,
+    results_dir: &str,
+    token_budget: u64,
+    tps_lo: u64,
+    tps_hi: u64,
+    seed: u64,
+) -> Result<Vec<Outcome>> {
+    let log = Log::new(true);
+    println!(
+        "Figure 1: pretraining loss, SageBwd vs FPA at TPS_hi={tps_hi} / TPS_lo={tps_lo} \
+         (fixed budget {token_budget} tokens per cell)"
+    );
+    println!("(paper: hi-TPS gap 2.640 vs 2.586; lo-TPS parity 2.561 vs 2.563; no-QK-norm diverges at hi TPS)\n");
+    let mut outcomes = Vec::new();
+    let grid: &[(&str, u64)] = &[
+        // Figure 1a (high TPS): the gap + the divergence case.
+        ("fpa_qknorm", tps_hi),
+        ("sage_qknorm", tps_hi),
+        ("sage_noqknorm", tps_hi),
+        // Figure 1b (low TPS): parity, ±QK-norm.
+        ("fpa_qknorm", tps_lo),
+        ("sage_qknorm", tps_lo),
+        ("sage_noqknorm", tps_lo),
+        ("fpa_noqknorm", tps_lo),
+    ];
+    for &(variant, tps) in grid {
+        log.info(&format!("--- fig1 cell: {variant} @ {tps} tok/step ---"));
+        outcomes.push(run_cell(
+            rt_factory, results_dir, variant, tps, token_budget, seed, &log,
+        )?);
+    }
+
+    let mut table = Table::new(&["variant", "tokens_per_step", "final_loss", "status"]);
+    for o in &outcomes {
+        table.row(vec![
+            o.variant.clone(),
+            o.tps.to_string(),
+            o.final_loss.map(|l| format!("{l:.4}")).unwrap_or("-".into()),
+            if o.diverged { "DIVERGED".into() } else { "ok".into() },
+        ]);
+    }
+    emit(&table, results_dir, "fig1_summary")?;
+    Ok(outcomes)
+}

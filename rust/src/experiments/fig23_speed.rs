@@ -1,0 +1,140 @@
+//! **Figures 2–3** — kernel speed: SageBwd vs FA2-style vs naive SDPA,
+//! forward and forward+backward, head dims 128 (Fig 2) and 64 (Fig 3).
+//!
+//! Two complementary readings (DESIGN.md §6–7):
+//!
+//! 1. **Measured**: wallclock of the AOT-compiled artifacts on the CPU
+//!    PJRT backend.  Interpret-mode lowering is structurally faithful but
+//!    CPU timing does *not* predict tensor-core behaviour, so this reading
+//!    validates relative structure only (tiled vs naive, fwd vs fwdbwd).
+//! 2. **Modeled**: an analytic INT8-vs-FP16 tensor-core cost model of each
+//!    kernel's matmul volume, reproducing the paper's *claimed* speedup
+//!    shape (Sage > FA2 > naive; paper reports up to 1.67× over FA2).
+
+use anyhow::Result;
+
+use crate::bench::{run as bench_run, BenchConfig, Table};
+use crate::experiments::common::{emit, gaussian_qkvdo};
+use crate::runtime::{Runtime, Value};
+
+pub const SEQ_LENS: &[usize] = &[128, 256, 512];
+pub const HEAD_DIMS: &[usize] = &[64, 128];
+pub const IMPLS: &[&str] = &["sage", "fa2", "naive"];
+
+/// Analytic cost model: relative time per (impl, mode) at (n, d).
+///
+/// MatMul volume per forward tile pass: QK^T and P̃V → 2·N²·d MACs; the
+/// backward adds S-recompute, dV, dP, dQ, dK → 5·N²·d.  INT8 tensor-core
+/// throughput is 2× FP16 on the paper's hardware (4090/B200); SageBwd runs
+/// 6 of 7 MMs in INT8 (dP stays FP16, §3), the baselines run all in FP16.
+/// Naive additionally materializes S/P in HBM — modeled as a 1.8×
+/// memory-bound penalty (paper Figs 2–3 show ~2× vs FA2).
+pub fn modeled_time(impl_name: &str, mode: &str, n: usize, d: usize) -> f64 {
+    let fwd_mm = 2.0;
+    let bwd_mm = 5.0;
+    let vol = (n * n * d) as f64;
+    let (mm, int8_mm): (f64, f64) = match (impl_name, mode) {
+        ("sage", "fwd") => (fwd_mm, 2.0),          // both fwd MMs INT8
+        ("sage", "fwdbwd") => (fwd_mm + bwd_mm, 6.0), // all but dP
+        (_, "fwd") => (fwd_mm, 0.0),
+        (_, "fwdbwd") => (fwd_mm + bwd_mm, 0.0),
+        _ => unreachable!(),
+    };
+    let fp16_mm = mm - int8_mm;
+    let tensor_core_time = fp16_mm * vol + int8_mm * vol / 2.0; // INT8 = 2× rate
+    let io_penalty = if impl_name == "naive" { 1.8 } else { 1.0 };
+    tensor_core_time * io_penalty
+}
+
+pub struct Row {
+    pub d: usize,
+    pub n: usize,
+    pub impl_name: String,
+    pub mode: String,
+    pub measured_ms: f64,
+    pub modeled_rel: f64,
+}
+
+/// Measure every (impl, mode, d, n) artifact and emit both readings.
+pub fn run(rt: &mut Runtime, results_dir: &str, quick: bool) -> Result<Vec<Row>> {
+    let cfg = if quick {
+        BenchConfig { warmup_iters: 1, iters: 5, max_secs: 5.0 }
+    } else {
+        BenchConfig::default()
+    };
+    println!("Figures 2-3: kernel speed, SageBwd vs baselines");
+    println!("(measured = CPU PJRT wallclock; modeled = INT8 tensor-core cost model — see module docs)\n");
+    let mut rows = Vec::new();
+    let mut table = Table::new(&[
+        "headdim", "seqlen", "impl", "mode", "measured_ms", "modeled_speedup_vs_fa2",
+    ]);
+    for &d in HEAD_DIMS {
+        for &n in SEQ_LENS {
+            let fa2_model_fwd = modeled_time("fa2", "fwd", n, d);
+            let fa2_model_bwd = modeled_time("fa2", "fwdbwd", n, d);
+            for &impl_name in IMPLS {
+                for mode in ["fwd", "fwdbwd"] {
+                    let artifact = format!("bench_{impl_name}_{mode}_d{d}_n{n}");
+                    let qkvdo = gaussian_qkvdo(n, d, 1.0, 1.0, 1.0, 1.0, 7);
+                    let inputs: Vec<Value> = qkvdo[..if mode == "fwd" { 3 } else { 4 }]
+                        .iter()
+                        .map(|t| Value::F32(t.clone()))
+                        .collect();
+                    let exe = rt.load(&artifact)?;
+                    let meas = bench_run(cfg, &artifact, || {
+                        exe.execute(&inputs).expect("bench execution failed");
+                    });
+                    let fa2_base = if mode == "fwd" { fa2_model_fwd } else { fa2_model_bwd };
+                    let modeled_rel = fa2_base / modeled_time(impl_name, mode, n, d);
+                    let ms = meas.mean() * 1e3;
+                    table.row(vec![
+                        d.to_string(),
+                        n.to_string(),
+                        impl_name.into(),
+                        mode.into(),
+                        format!("{ms:.3}"),
+                        format!("{modeled_rel:.2}x"),
+                    ]);
+                    rows.push(Row {
+                        d,
+                        n,
+                        impl_name: impl_name.into(),
+                        mode: mode.into(),
+                        measured_ms: ms,
+                        modeled_rel,
+                    });
+                }
+            }
+        }
+    }
+    emit(&table, results_dir, "fig23_kernel_speed")?;
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_orders_impls_correctly() {
+        // Sage faster than FA2 (INT8), FA2 faster than naive (IO).
+        for &d in HEAD_DIMS {
+            for &n in SEQ_LENS {
+                for mode in ["fwd", "fwdbwd"] {
+                    let sage = modeled_time("sage", mode, n, d);
+                    let fa2 = modeled_time("fa2", mode, n, d);
+                    let naive = modeled_time("naive", mode, n, d);
+                    assert!(sage < fa2 && fa2 < naive, "{mode} d={d} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn model_speedup_in_paper_range() {
+        // Paper: up to 1.67× over FA2.  6-of-7 INT8 MMs at 2× rate gives
+        // ≈1.75× fwdbwd upper bound; fwd-only gives 2×... within [1.3, 2.1].
+        let s = modeled_time("fa2", "fwdbwd", 512, 128) / modeled_time("sage", "fwdbwd", 512, 128);
+        assert!((1.3..2.1).contains(&s), "speedup {s}");
+    }
+}

@@ -1,0 +1,62 @@
+//! **Figure 4** — Q/K-smoothing ablation (paper §6): FPA vs SageBwd with
+//! {no smoothing, K-smoothing, QK-smoothing}, at high and low TPS.
+//! All runs QK-normed, hyperparameters identical to Figure 1.
+//!
+//! Expected shape: no-smoothing unstable or clearly worse; K-smoothing
+//! reaches FPA-level; QK-smoothing no consistent gain over K alone.
+
+use anyhow::Result;
+
+use crate::bench::Table;
+use crate::experiments::common::emit;
+use crate::experiments::fig1_tps::{run_cell, Outcome};
+use crate::runtime::Runtime;
+use crate::telemetry::Log;
+
+pub fn run(
+    rt_factory: &dyn Fn() -> Result<Runtime>,
+    results_dir: &str,
+    token_budget: u64,
+    tps_lo: u64,
+    tps_hi: u64,
+    seed: u64,
+) -> Result<Vec<Outcome>> {
+    let log = Log::new(true);
+    println!("Figure 4: smoothing ablation (none / K / QK), QK-norm on");
+    println!("(paper: K-smoothing required even at 260K TPS; Q-smoothing no consistent benefit)\n");
+    let variants = [
+        "fpa_qknorm",        // FPA reference
+        "sage_qknorm_nosm",  // no smoothing
+        "sage_qknorm",       // K-smoothing (paper default)
+        "sage_qknorm_qksm",  // Q+K smoothing
+    ];
+    let mut outcomes = Vec::new();
+    for &tps in &[tps_hi, tps_lo] {
+        for variant in variants {
+            log.info(&format!("--- fig4 cell: {variant} @ {tps} tok/step ---"));
+            let mut o = run_cell(rt_factory, results_dir, variant, tps, token_budget, seed, &log)?;
+            // Re-home the curves under fig4/ naming via the summary only;
+            // curve CSVs live in results/fig1/<variant>_tps<tps>/ already.
+            o.variant = variant.to_string();
+            outcomes.push(o);
+        }
+    }
+    let mut table = Table::new(&["smoothing", "variant", "tokens_per_step", "final_loss", "status"]);
+    for o in &outcomes {
+        let smoothing = match o.variant.as_str() {
+            "sage_qknorm_nosm" => "none",
+            "sage_qknorm" => "K",
+            "sage_qknorm_qksm" => "QK",
+            _ => "(fpa)",
+        };
+        table.row(vec![
+            smoothing.into(),
+            o.variant.clone(),
+            o.tps.to_string(),
+            o.final_loss.map(|l| format!("{l:.4}")).unwrap_or("-".into()),
+            if o.diverged { "DIVERGED".into() } else { "ok".into() },
+        ]);
+    }
+    emit(&table, results_dir, "fig4_summary")?;
+    Ok(outcomes)
+}

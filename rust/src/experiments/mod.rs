@@ -1,0 +1,21 @@
+//! Experiment harnesses — one module per paper table/figure.
+//!
+//! | module          | regenerates                                        |
+//! |-----------------|----------------------------------------------------|
+//! | `table1_sigma`  | Table 1 (error vs σ_Q, σ_K)                        |
+//! | `table2_trace`  | Table 2 (per-tensor pseudo-quantized error)         |
+//! | `fig1_tps`      | Figure 1a/1b (pretraining loss at high/low TPS)     |
+//! | `fig4_ablation` | Figure 4 (Q/K-smoothing ablation)                  |
+//! | `fig23_speed`   | Figures 2–3 (kernel throughput)                     |
+//! | `fig56_layers`  | Figures 5–6 (per-layer CosSim / Rel-ℓ2)             |
+//! | `ds_rms`        | §4.2 magnitude probe (RMS(P), RMS(dP), RMS(dS))     |
+
+pub mod common;
+pub mod ds_rms;
+pub mod fig1_tps;
+pub mod fig23_speed;
+pub mod fig4_ablation;
+pub mod noise_probe;
+pub mod fig56_layers;
+pub mod table1_sigma;
+pub mod table2_trace;

@@ -1,0 +1,35 @@
+//! # SageBwd — trainable low-bit attention (Rust coordinator)
+//!
+//! Three-layer reproduction of *"SageBwd: A Trainable Low-bit Attention"*
+//! (Zhang et al., 2026).  This crate is **Layer 3**: the pre-training
+//! coordinator that loads AOT-compiled XLA artifacts (produced once by the
+//! Python/JAX/Pallas build path under `python/compile/`) and runs the
+//! paper's experiments with Python nowhere on the hot path.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`runtime`]     — PJRT CPU client; loads `artifacts/*.hlo.txt` +
+//!   manifests, compiles once, executes on the hot path.
+//! * [`coordinator`] — trainer, tokens-per-step gradient accumulator
+//!   (the paper's §4.3 axis), warmup+cosine LR schedule, checkpoints.
+//! * [`data`]        — synthetic-corpus substrate: generator, byte
+//!   tokenizer, deterministic shardable batcher with prefetch.
+//! * [`experiments`] — one harness per paper table/figure.
+//! * [`tensor`], [`util`], [`telemetry`], [`cli`], [`bench`] — substrates
+//!   built in-repo (offline environment: no serde/clap/criterion/rand).
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod runtime;
+pub mod telemetry;
+pub mod tensor;
+pub mod util;
+
+/// Repo-relative default artifact directory (override with `--artifacts`).
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+/// Repo-relative default results directory (harness CSV output).
+pub const DEFAULT_RESULTS_DIR: &str = "results";

@@ -1,0 +1,203 @@
+//! `sagebwd` — leader entrypoint.
+//!
+//! ```text
+//! sagebwd train   [--variant V --steps N --tps T ...]   one pretraining run
+//! sagebwd table1  [--reps R]                            Table 1 σ sweep
+//! sagebwd table2                                        Table 2 pseudo-quant trace
+//! sagebwd ds-rms                                        §4.2 RMS magnitude probe
+//! sagebwd fig1    [--steps N --tps-lo L --tps-hi H]     Figure 1 TPS grid
+//! sagebwd fig4    [--steps N --tps-lo L --tps-hi H]     Figure 4 smoothing ablation
+//! sagebwd fig23   [--quick]                             Figures 2–3 kernel speed
+//! sagebwd fig56                                         Figures 5–6 per-layer error
+//! sagebwd inspect --artifact NAME [--stats]             manifest / HLO op stats
+//! sagebwd dist-train [--workers N --steps S --tps T]     data-parallel training
+//! sagebwd noise-probe [--budget B --tps T]               §4.3 noise-injection probe
+//! sagebwd plot --csv a.csv[,b.csv...]                    ASCII loss curves
+//! ```
+
+use anyhow::{bail, Result};
+
+use sagebwd::cli::Args;
+use sagebwd::config::TrainConfig;
+use sagebwd::coordinator::Trainer;
+use sagebwd::experiments::{ds_rms, fig1_tps, fig23_speed, fig4_ablation, fig56_layers,
+                           noise_probe, table1_sigma, table2_trace};
+use sagebwd::runtime::Runtime;
+use sagebwd::telemetry::{run_dir, Log};
+use sagebwd::{DEFAULT_ARTIFACTS_DIR, DEFAULT_RESULTS_DIR};
+
+const USAGE: &str = "usage: sagebwd <train|dist-train|table1|table2|ds-rms|fig1|fig4|fig23|fig56|noise-probe|plot|inspect> [options]
+common options: --artifacts DIR (default artifacts/), --results DIR (default results/)
+run `make results` to regenerate every paper table and figure";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    let artifacts = args.str_or("artifacts", DEFAULT_ARTIFACTS_DIR).to_string();
+    let results = args.str_or("results", DEFAULT_RESULTS_DIR).to_string();
+    let rt = || Runtime::new(artifacts.clone());
+
+    match args.subcommand.as_str() {
+        "train" => cmd_train(&args, rt()?, &results),
+        "table1" => {
+            let reps = args.u64_or("reps", 3)?;
+            table1_sigma::run(&mut rt()?, &results, reps)?;
+            Ok(())
+        }
+        "table2" => {
+            table2_trace::run(&mut rt()?, &results)?;
+            Ok(())
+        }
+        "ds-rms" => {
+            ds_rms::run(&mut rt()?, &results)?;
+            Ok(())
+        }
+        "fig1" => {
+            // Fixed token budget per cell (paper: 78B tokens at each TPS);
+            // 8× TPS ratio preserved from the paper's 2.1M / 260K.
+            let budget = args.u64_or("budget", 131_072)?;
+            let tps_lo = args.u64_or("tps-lo", 1024)?;
+            let tps_hi = args.u64_or("tps-hi", 8192)?;
+            let seed = args.u64_or("seed", 0)?;
+            fig1_tps::run(&rt, &results, budget, tps_lo, tps_hi, seed)?;
+            Ok(())
+        }
+        "fig4" => {
+            let budget = args.u64_or("budget", 131_072)?;
+            let tps_lo = args.u64_or("tps-lo", 1024)?;
+            let tps_hi = args.u64_or("tps-hi", 8192)?;
+            let seed = args.u64_or("seed", 0)?;
+            fig4_ablation::run(&rt, &results, budget, tps_lo, tps_hi, seed)?;
+            Ok(())
+        }
+        "fig23" => {
+            fig23_speed::run(&mut rt()?, &results, args.flag("quick"))?;
+            Ok(())
+        }
+        "fig56" => {
+            fig56_layers::run(&mut rt()?, &results)?;
+            Ok(())
+        }
+        "dist-train" => {
+            // Data-parallel training demo: leader + N grad workers.
+            let workers = args.usize_or("workers", 2)?;
+            let cfg = TrainConfig {
+                variant: args.str_or("variant", "sage_qknorm").to_string(),
+                steps: args.u64_or("steps", 20)?,
+                tokens_per_step: args.u64_or("tps", 2048)?,
+                warmup_steps: args.u64_or("warmup", 2)?,
+                peak_lr: args.f64_or("lr", 3e-3)?,
+                min_lr_frac: 0.1,
+                seed: args.u64_or("seed", 0)?,
+                checkpoint_every: 0,
+                log_every: args.u64_or("log-every", 5)?,
+                clip_norm: 0.0,
+                grad_noise_sigma: 0.0,
+            };
+            let log = Log::new(true);
+            let mut t = sagebwd::coordinator::distributed::DistTrainer::new(
+                std::path::PathBuf::from(&artifacts), cfg, workers)?;
+            let final_loss = t.run(&log)?;
+            let dir = run_dir(&results, "dist_train")?;
+            t.metrics.flush_csv(&dir)?;
+            log.info(&format!("distributed final loss {final_loss:.4} → {}", dir.display()));
+            Ok(())
+        }
+        "noise-probe" => {
+            let budget = args.u64_or("budget", 65_536)?;
+            let tps = args.u64_or("tps", 8192)?;
+            let seed = args.u64_or("seed", 0)?;
+            noise_probe::run(&rt, &results, budget, tps, seed)?;
+            Ok(())
+        }
+        "plot" => {
+            let csvs = args.require("csv")?;
+            let mut curves = Vec::new();
+            for path in csvs.split(',') {
+                let p = std::path::Path::new(path);
+                let name = p
+                    .parent()
+                    .and_then(|d| d.file_name())
+                    .map(|s| s.to_string_lossy().into_owned())
+                    .unwrap_or_else(|| path.to_string());
+                curves.push(sagebwd::telemetry::plot::load_csv(p, &name)?);
+            }
+            println!("{}", sagebwd::telemetry::plot::render(&curves, 100, 24));
+            Ok(())
+        }
+        "inspect" => {
+            let name = args.require("artifact")?;
+            let mut runtime = rt()?;
+            let exe = runtime.load(name)?;
+            let m = &exe.manifest;
+            println!("artifact: {}", m.artifact);
+            println!("inputs ({}):", m.inputs.len());
+            for s in &m.inputs {
+                println!("  {:<24} {:?} {:?}", s.name, s.dtype, s.shape);
+            }
+            println!("outputs ({}):", m.outputs.len());
+            for s in &m.outputs {
+                println!("  {:<24} {:?} {:?}", s.name, s.dtype, s.shape);
+            }
+            println!("input bytes: {}", m.input_bytes());
+            if args.flag("stats") {
+                let stats = sagebwd::runtime::hlo_inspect::analyze_file(
+                    std::path::Path::new(&artifacts), name)?;
+                println!("
+HLO stats: {} ops, {} bytes, ~{} dot-output-FLOPs",
+                         stats.total_ops, stats.bytes, stats.dot_flops);
+                for (op, count) in stats.top(12) {
+                    println!("  {op:<24} {count}");
+                }
+            }
+            Ok(())
+        }
+        "" | "help" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}\n{USAGE}"),
+    }
+}
+
+fn cmd_train(args: &Args, runtime: Runtime, results: &str) -> Result<()> {
+    let cfg = if let Some(path) = args.opt("config") {
+        TrainConfig::load(std::path::Path::new(path))?
+    } else {
+        TrainConfig {
+            variant: args.str_or("variant", "sage_qknorm").to_string(),
+            steps: args.u64_or("steps", 100)?,
+            tokens_per_step: args.u64_or("tps", 4096)?,
+            warmup_steps: args.u64_or("warmup", 10)?,
+            peak_lr: args.f64_or("lr", 3e-3)?,
+            min_lr_frac: args.f64_or("min-lr-frac", 0.1)?,
+            seed: args.u64_or("seed", 0)?,
+            checkpoint_every: args.u64_or("checkpoint-every", 0)?,
+            log_every: args.u64_or("log-every", 10)?,
+            clip_norm: args.f64_or("clip-norm", 0.0)?,
+            grad_noise_sigma: args.f64_or("grad-noise", 0.0)?,
+        }
+    };
+    let run_name = args.str_or("run-name", &format!("train_{}_tps{}", cfg.variant, cfg.tokens_per_step)).to_string();
+    let log = Log::new(args.flag("verbose"));
+    let mut trainer = Trainer::new(runtime, cfg.clone())?;
+    let mut batches = trainer.make_batcher(512, 4)?;
+    let report = trainer.run(&mut batches, &log)?;
+    let dir = run_dir(results, &run_name)?;
+    trainer.metrics.flush_csv(&dir)?;
+    cfg.save(&dir.join("config.json"))?;
+    trainer.save_checkpoint(&dir.join("final.ckpt"))?;
+    log.info(&format!(
+        "done: {:?}, final loss {:?}, curves in {}",
+        report.status,
+        report.final_loss,
+        dir.display()
+    ));
+    Ok(())
+}

@@ -1,0 +1,168 @@
+//! HLO-text static analyzer — the Rust half of the §Perf L2 profiling
+//! (python/compile/perf_report.py is the build-time half).
+//!
+//! Parses the artifact's HLO text into an op histogram and derived
+//! quality signals (dot count, while count, estimated FLOPs from dot
+//! shapes) without needing a compiler in the loop.  Powers
+//! `sagebwd inspect --artifact X --stats`.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Parsed statistics for one HLO module.
+#[derive(Debug, Default, Clone)]
+pub struct HloStats {
+    pub total_ops: usize,
+    pub by_op: BTreeMap<String, usize>,
+    /// (m, k, n) per dot derived from shapes — rough FLOP accounting.
+    pub dot_flops: u64,
+    pub bytes: usize,
+}
+
+impl HloStats {
+    pub fn count(&self, op: &str) -> usize {
+        self.by_op.get(op).copied().unwrap_or(0)
+    }
+
+    pub fn top(&self, n: usize) -> Vec<(&str, usize)> {
+        let mut v: Vec<(&str, usize)> = self
+            .by_op
+            .iter()
+            .map(|(k, &c)| (k.as_str(), c))
+            .collect();
+        v.sort_by_key(|&(_, c)| std::cmp::Reverse(c));
+        v.truncate(n);
+        v
+    }
+}
+
+/// `f32[128,64]{1,0}` → product of dims (element count); None for scalars
+/// and tuples.
+fn numel(shape: &str) -> Option<u64> {
+    let open = shape.find('[')?;
+    let close = shape[open..].find(']')? + open;
+    let dims = &shape[open + 1..close];
+    if dims.is_empty() {
+        return Some(1);
+    }
+    dims.split(',')
+        .map(|d| d.trim().parse::<u64>().ok())
+        .product::<Option<u64>>()
+}
+
+/// Parse HLO text into stats.  This is a line-shape parser, not a full
+/// grammar: each instruction line is `%name = <shape> opcode(...)`.
+pub fn analyze_text(text: &str) -> HloStats {
+    let mut stats = HloStats {
+        bytes: text.len(),
+        ..Default::default()
+    };
+    for line in text.lines() {
+        let trimmed = line.trim_start();
+        if trimmed.starts_with("//") || trimmed.starts_with('#') {
+            continue;
+        }
+        let rest = trimmed.strip_prefix("ROOT ").unwrap_or(trimmed);
+        // instruction lines: "%x = shape opcode(" or "x = shape opcode(";
+        // the lhs must be a plain identifier (rejects prose containing "=").
+        let Some(eq) = rest.find(" = ") else { continue };
+        let lhs = &rest[..eq];
+        if lhs.is_empty()
+            || !lhs
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || matches!(c, '%' | '.' | '_' | '-'))
+        {
+            continue;
+        }
+        let after = &rest[eq + 3..];
+        // after = "f32[2,3]{1,0} dot(...)" — split shape then opcode.
+        let mut parts = after.splitn(2, ' ');
+        let shape = parts.next().unwrap_or("");
+        let Some(tail) = parts.next() else { continue };
+        let opcode: String = tail
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '-' || *c == '_')
+            .collect();
+        if opcode.is_empty() || !tail[opcode.len()..].starts_with('(') {
+            continue;
+        }
+        stats.total_ops += 1;
+        *stats.by_op.entry(opcode.clone()).or_insert(0) += 1;
+        if opcode == "dot" {
+            // Rough FLOPs: 2 × output elements × contraction size.  The
+            // contraction size is not on this line; approximate with
+            // output elements (lower bound) × 2 — good enough for
+            // relative artifact comparisons.
+            if let Some(n) = numel(shape) {
+                stats.dot_flops += 2 * n;
+            }
+        }
+    }
+    stats
+}
+
+/// Analyze an artifact's `.hlo.txt` file.
+pub fn analyze_file(dir: &Path, artifact: &str) -> Result<HloStats> {
+    let path = dir.join(format!("{artifact}.hlo.txt"));
+    let text = fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    Ok(analyze_text(&text))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+HloModule jit_fn
+
+ENTRY main.5 {
+  %p0 = f32[4,8]{1,0} parameter(0)
+  %p1 = f32[8,2]{1,0} parameter(1)
+  %dot.1 = f32[4,2]{1,0} dot(%p0, %p1), lhs_contracting_dims={1}
+  %c = f32[] constant(2)
+  %b = f32[4,2]{1,0} broadcast(%c), dimensions={}
+  ROOT %add.2 = f32[4,2]{1,0} add(%dot.1, %b)
+}
+"#;
+
+    #[test]
+    fn counts_ops() {
+        let s = analyze_text(SAMPLE);
+        assert_eq!(s.count("dot"), 1);
+        assert_eq!(s.count("add"), 1);
+        assert_eq!(s.count("parameter"), 2);
+        assert_eq!(s.count("broadcast"), 1);
+        assert!(s.total_ops >= 5);
+    }
+
+    #[test]
+    fn dot_flops_counted() {
+        let s = analyze_text(SAMPLE);
+        assert_eq!(s.dot_flops, 2 * 8); // 2 × numel(f32[4,2])
+    }
+
+    #[test]
+    fn numel_parsing() {
+        assert_eq!(numel("f32[128,64]{1,0}"), Some(128 * 64));
+        assert_eq!(numel("f32[]"), Some(1));
+        assert_eq!(numel("pred[3]{0}"), Some(3));
+        assert_eq!(numel("no-brackets"), None);
+    }
+
+    #[test]
+    fn top_sorts_descending() {
+        let s = analyze_text(SAMPLE);
+        let top = s.top(2);
+        assert_eq!(top[0].0, "parameter");
+    }
+
+    #[test]
+    fn ignores_non_instruction_lines() {
+        let s = analyze_text("HloModule foo\n\n// comment = like dot(\n");
+        assert_eq!(s.total_ops, 0);
+    }
+}

@@ -1,0 +1,182 @@
+//! Host tensor ⇄ XLA [`xla::Literal`] conversion.
+//!
+//! The interchange is raw little-endian bytes via
+//! `Literal::create_from_shape_and_untyped_data`, avoiding per-element
+//! copies on the hot path.
+
+use anyhow::{anyhow, bail, Result};
+use xla::{ElementType, Literal};
+
+use crate::runtime::manifest::{DType, TensorSpec};
+use crate::tensor::{IntTensor, Tensor};
+
+/// f32 tensor → literal.
+pub fn literal_from_f32(t: &Tensor) -> Result<Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+    };
+    Literal::create_from_shape_and_untyped_data(ElementType::F32, &t.shape, bytes)
+        .map_err(|e| anyhow!("creating f32 literal: {e:?}"))
+}
+
+/// i32 tensor → literal.
+pub fn literal_from_i32(t: &IntTensor) -> Result<Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+    };
+    Literal::create_from_shape_and_untyped_data(ElementType::S32, &t.shape, bytes)
+        .map_err(|e| anyhow!("creating i32 literal: {e:?}"))
+}
+
+/// literal → f32 tensor with the spec's shape.
+pub fn f32_from_literal(lit: &Literal, spec: &TensorSpec) -> Result<Tensor> {
+    if spec.dtype != DType::F32 {
+        bail!("output {} is {:?}, not f32", spec.name, spec.dtype);
+    }
+    let data = lit
+        .to_vec::<f32>()
+        .map_err(|e| anyhow!("reading f32 literal {}: {e:?}", spec.name))?;
+    Tensor::from_vec(&spec.shape, data)
+}
+
+/// literal → i32 tensor with the spec's shape.
+pub fn i32_from_literal(lit: &Literal, spec: &TensorSpec) -> Result<IntTensor> {
+    if spec.dtype != DType::I32 {
+        bail!("output {} is {:?}, not i32", spec.name, spec.dtype);
+    }
+    let data = lit
+        .to_vec::<i32>()
+        .map_err(|e| anyhow!("reading i32 literal {}: {e:?}", spec.name))?;
+    IntTensor::from_vec(&spec.shape, data)
+}
+
+/// Either-typed host value (what the executor passes/returns).
+#[derive(Debug, Clone)]
+pub enum Value {
+    F32(Tensor),
+    I32(IntTensor),
+}
+
+impl Value {
+    pub fn scalar_f32(x: f32) -> Value {
+        Value::F32(Tensor::scalar(x))
+    }
+
+    pub fn scalar_i32(x: i32) -> Value {
+        Value::I32(IntTensor::scalar(x))
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            Value::I32(_) => bail!("expected f32 value, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&IntTensor> {
+        match self {
+            Value::I32(t) => Ok(t),
+            Value::F32(_) => bail!("expected i32 value, got f32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            Value::I32(_) => bail!("expected f32 value, got i32"),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => &t.shape,
+            Value::I32(t) => &t.shape,
+        }
+    }
+
+    pub fn to_literal(&self) -> Result<Literal> {
+        match self {
+            Value::F32(t) => literal_from_f32(t),
+            Value::I32(t) => literal_from_i32(t),
+        }
+    }
+
+    pub fn from_literal(lit: &Literal, spec: &TensorSpec) -> Result<Value> {
+        match spec.dtype {
+            DType::F32 => Ok(Value::F32(f32_from_literal(lit, spec)?)),
+            DType::I32 => Ok(Value::I32(i32_from_literal(lit, spec)?)),
+        }
+    }
+
+    /// Validate against a manifest spec (shape + dtype) before execution.
+    pub fn check_spec(&self, spec: &TensorSpec) -> Result<()> {
+        let (shape, is_f32) = match self {
+            Value::F32(t) => (&t.shape, true),
+            Value::I32(t) => (&t.shape, false),
+        };
+        let want_f32 = spec.dtype == DType::F32;
+        if is_f32 != want_f32 || shape != &spec.shape {
+            bail!(
+                "input {}: expected {:?} {:?}, got {} {:?}",
+                spec.name,
+                spec.dtype,
+                spec.shape,
+                if is_f32 { "f32" } else { "i32" },
+                shape
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, shape: &[usize], dtype: DType) -> TensorSpec {
+        TensorSpec {
+            name: name.into(),
+            shape: shape.to_vec(),
+            dtype,
+        }
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let lit = literal_from_f32(&t).unwrap();
+        let back = f32_from_literal(&lit, &spec("x", &[2, 3], DType::F32)).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let t = IntTensor::from_vec(&[4], vec![-1, 0, 7, 42]).unwrap();
+        let lit = literal_from_i32(&t).unwrap();
+        let back = i32_from_literal(&lit, &spec("x", &[4], DType::I32)).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn scalar_literals() {
+        let v = Value::scalar_f32(2.5);
+        let lit = v.to_literal().unwrap();
+        let back = f32_from_literal(&lit, &spec("s", &[], DType::F32)).unwrap();
+        assert_eq!(back.item(), 2.5);
+    }
+
+    #[test]
+    fn spec_checking() {
+        let v = Value::F32(Tensor::zeros(&[2, 2]));
+        assert!(v.check_spec(&spec("a", &[2, 2], DType::F32)).is_ok());
+        assert!(v.check_spec(&spec("a", &[2, 3], DType::F32)).is_err());
+        assert!(v.check_spec(&spec("a", &[2, 2], DType::I32)).is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_on_read() {
+        let t = Tensor::zeros(&[2]);
+        let lit = literal_from_f32(&t).unwrap();
+        assert!(i32_from_literal(&lit, &spec("x", &[2], DType::I32)).is_err());
+    }
+}

@@ -1,0 +1,173 @@
+//! Artifact manifests — the typed description of each AOT-lowered HLO
+//! module (`<name>.manifest.json`, written by `python/compile/aot.py`).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Element type of one artifact input/output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// One named tensor in an artifact signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec {
+            name: j.get("name")?.as_str()?.to_string(),
+            shape,
+            dtype: DType::parse(j.get("dtype")?.as_str()?)?,
+        })
+    }
+}
+
+/// Parsed `<name>.manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifact: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: Json,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = json::parse(text)?;
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            j.get(key)?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        Ok(Manifest {
+            artifact: j.get("artifact")?.as_str()?.to_string(),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+            meta: j.get_opt("meta").cloned().unwrap_or(Json::obj()),
+        })
+    }
+
+    pub fn load(dir: &Path, name: &str) -> Result<Manifest> {
+        let path = dir.join(format!("{name}.manifest.json"));
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        let m = Manifest::parse(&text)?;
+        if m.artifact != name {
+            bail!("manifest {} names artifact {:?}", path.display(), m.artifact);
+        }
+        Ok(m)
+    }
+
+    pub fn hlo_path(&self, dir: &Path) -> PathBuf {
+        dir.join(format!("{}.hlo.txt", self.artifact))
+    }
+
+    pub fn input(&self, name: &str) -> Result<&TensorSpec> {
+        self.inputs
+            .iter()
+            .find(|s| s.name == name)
+            .with_context(|| format!("artifact {} has no input {name:?}", self.artifact))
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|s| s.name == name)
+            .with_context(|| format!("artifact {} has no output {name:?}", self.artifact))
+    }
+
+    /// Names of the model parameters from meta.param_names (training
+    /// artifacts only).
+    pub fn param_names(&self) -> Result<Vec<String>> {
+        self.meta
+            .get("param_names")?
+            .as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_str()?.to_string()))
+            .collect()
+    }
+
+    /// Sum of input sizes in bytes (sanity/perf reporting).
+    pub fn input_bytes(&self) -> usize {
+        self.inputs
+            .iter()
+            .map(|s| s.numel() * s.dtype.size_bytes())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifact": "toy",
+      "inputs": [{"name": "q", "shape": [128, 64], "dtype": "f32"},
+                 {"name": "tok", "shape": [2, 16], "dtype": "i32"}],
+      "outputs": [{"name": "o", "shape": [128, 64], "dtype": "f32"}],
+      "meta": {"param_names": ["a", "b"], "batch": 2}
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifact, "toy");
+        assert_eq!(m.inputs.len(), 2);
+        assert_eq!(m.inputs[0].numel(), 128 * 64);
+        assert_eq!(m.inputs[1].dtype, DType::I32);
+        assert_eq!(m.output_index("o").unwrap(), 0);
+        assert!(m.output_index("nope").is_err());
+        assert_eq!(m.param_names().unwrap(), vec!["a", "b"]);
+        assert_eq!(m.input_bytes(), (128 * 64 + 32) * 4);
+    }
+
+    #[test]
+    fn bad_dtype_rejected() {
+        let bad = SAMPLE.replace("\"i32\"", "\"f64\"");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn input_lookup() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.input("q").unwrap().shape, vec![128, 64]);
+        assert!(m.input("missing").is_err());
+    }
+}

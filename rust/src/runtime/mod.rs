@@ -1,0 +1,258 @@
+//! Layer-3 runtime: the PJRT CPU client that loads AOT artifacts and
+//! executes them on the request path.
+//!
+//! Pipeline per artifact (compile once, execute many):
+//!
+//! ```text
+//! <name>.hlo.txt  ──HloModuleProto::from_text_file──▶ XlaComputation
+//!                 ──client.compile──▶ PjRtLoadedExecutable
+//! Value (host)    ──literal::to_literal──▶ Literal ──execute──▶ outputs
+//! ```
+//!
+//! HLO *text* is the interchange (64-bit-id protos from jax ≥ 0.5 are
+//! rejected by xla_extension 0.5.1 — see DESIGN.md / aot.py).
+
+pub mod hlo_inspect;
+pub mod literal;
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+pub use literal::Value;
+pub use manifest::{DType, Manifest, TensorSpec};
+
+/// Shared PJRT CPU client + artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    /// Compile cache: artifact name → loaded executable.
+    cache: HashMap<String, Executable>,
+}
+
+/// One compiled artifact ready to execute.
+#[derive(Clone)]
+pub struct Executable {
+    pub manifest: Manifest,
+    exe: std::rc::Rc<xla::PjRtLoadedExecutable>,
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU runtime rooted at an artifact directory.
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Runtime> {
+        let dir = artifacts_dir.into();
+        if !dir.is_dir() {
+            bail!(
+                "artifact directory {} does not exist — run `make artifacts` first",
+                dir.display()
+            );
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            artifacts_dir: dir,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let exe = self.compile(name)?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Like [`Self::load`] but returns an owned handle (cheap: the
+    /// compiled executable is reference-counted) so callers can hold it
+    /// without borrowing the runtime.
+    pub fn load_owned(&mut self, name: &str) -> Result<Executable> {
+        Ok(self.load(name)?.clone())
+    }
+
+    fn compile(&self, name: &str) -> Result<Executable> {
+        let manifest = Manifest::load(&self.artifacts_dir, name)?;
+        let hlo_path = manifest.hlo_path(&self.artifacts_dir);
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .ok_or_else(|| anyhow!("non-UTF-8 path {}", hlo_path.display()))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        Ok(Executable {
+            manifest,
+            exe: std::rc::Rc::new(exe),
+            client: self.client.clone(),
+        })
+    }
+
+    /// Convenience: load and execute in one call.
+    pub fn execute(&mut self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        self.load(name)?;
+        self.cache[name].execute(inputs)
+    }
+}
+
+impl Executable {
+    /// Execute with manifest-validated inputs; returns outputs in manifest
+    /// order.  The AOT path lowers with `return_tuple=True`, so the single
+    /// result literal is a tuple we decompose.
+    pub fn execute(&self, inputs: &[Value]) -> Result<Vec<Value>> {
+        let m = &self.manifest;
+        if inputs.len() != m.inputs.len() {
+            bail!(
+                "artifact {} expects {} inputs, got {}",
+                m.artifact,
+                m.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (v, spec) in inputs.iter().zip(&m.inputs) {
+            v.check_spec(spec)
+                .with_context(|| format!("executing {}", m.artifact))?;
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|v| v.to_literal())
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        let parts = self.execute_literals(&refs)?;
+        parts
+            .iter()
+            .zip(&m.outputs)
+            .map(|(lit, spec)| Value::from_literal(lit, spec))
+            .collect()
+    }
+
+    /// Execute and pick a single named output.
+    pub fn execute_pick(&self, inputs: &[Value], output: &str) -> Result<Value> {
+        let idx = self.manifest.output_index(output)?;
+        let mut outs = self.execute(inputs)?;
+        Ok(outs.swap_remove(idx))
+    }
+
+    /// Upload a host literal to a device buffer owned by Rust.
+    ///
+    /// Two vendored-crate footguns are deliberately avoided here:
+    ///
+    /// 1. `PjRtLoadedExecutable::execute` (literal inputs) — its C shim
+    ///    leaks every input device buffer it creates (`buffer.release()`
+    ///    with no matching free).  All execution in this repo goes through
+    ///    [`Self::execute_buffers`], whose inputs are `PjRtBuffer`s with
+    ///    proper `Drop` impls.
+    /// 2. `PjRtClient::buffer_from_host_literal` — `BufferFromHostLiteral`
+    ///    is *asynchronous* and the shim never awaits the transfer, so a
+    ///    literal dropped right after the call is a use-after-free.  We
+    ///    instead stage through `buffer_from_host_buffer`, whose
+    ///    `kImmutableOnlyDuringCall` semantics force a synchronous copy.
+    pub fn buffer_from_literal(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| anyhow!("literal shape for {}: {e:?}", self.manifest.artifact))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let ty = lit
+            .ty()
+            .map_err(|e| anyhow!("literal type for {}: {e:?}", self.manifest.artifact))?;
+        let buf = match ty {
+            xla::ElementType::F32 => {
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("reading f32 literal: {e:?}"))?;
+                self.client.buffer_from_host_buffer(&data, &dims, None)
+            }
+            xla::ElementType::S32 => {
+                let data = lit
+                    .to_vec::<i32>()
+                    .map_err(|e| anyhow!("reading i32 literal: {e:?}"))?;
+                self.client.buffer_from_host_buffer(&data, &dims, None)
+            }
+            other => bail!("unsupported upload element type {other:?}"),
+        };
+        buf.map_err(|e| anyhow!("uploading buffer for {}: {e:?}", self.manifest.artifact))
+    }
+
+    /// Upload an f32 host tensor directly (no literal staging).
+    pub fn upload_f32(&self, t: &crate::tensor::Tensor) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(&t.data, &t.shape, None)
+            .map_err(|e| anyhow!("uploading f32 buffer for {}: {e:?}", self.manifest.artifact))
+    }
+
+    /// Upload an i32 host tensor directly (no literal staging).
+    pub fn upload_i32(&self, t: &crate::tensor::IntTensor) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(&t.data, &t.shape, None)
+            .map_err(|e| anyhow!("uploading i32 buffer for {}: {e:?}", self.manifest.artifact))
+    }
+
+    /// Hot-path variant: execute with device-resident input buffers (no
+    /// per-call host→device transfer for cached state) and return raw
+    /// output literals in manifest order.
+    ///
+    /// This is what the trainer uses: parameter/moment buffers are built
+    /// once per optimizer step and reused across all microbatches (§Perf).
+    pub fn execute_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let m = &self.manifest;
+        if inputs.len() != m.inputs.len() {
+            bail!(
+                "artifact {} expects {} inputs, got {}",
+                m.artifact,
+                m.inputs.len(),
+                inputs.len()
+            );
+        }
+        let result = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(inputs)
+            .map_err(|e| anyhow!("executing {}: {e:?}", m.artifact))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {}: {e:?}", m.artifact))?;
+        let parts = tuple
+            .decompose_tuple()
+            .map_err(|e| anyhow!("decomposing result tuple of {}: {e:?}", m.artifact))?;
+        if parts.len() != m.outputs.len() {
+            bail!(
+                "artifact {} returned {} outputs, manifest says {}",
+                m.artifact,
+                parts.len(),
+                m.outputs.len()
+            );
+        }
+        Ok(parts)
+    }
+
+    /// Execute with host literals: uploads each input to a Rust-owned
+    /// buffer (freed on drop) and runs [`Self::execute_buffers`].
+    pub fn execute_literals(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|l| self.buffer_from_literal(l))
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        self.execute_buffers(&refs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime tests that need real artifacts live in rust/tests/ — they
+    // skip gracefully when artifacts/ has not been built.
+}

@@ -1,0 +1,147 @@
+//! Telemetry substrate: metric registry, CSV series writer, and run logs.
+//!
+//! The trainer emits `(step, name, value)` points; series are buffered in
+//! memory and flushed to `results/<run>/<series>.csv` so every paper
+//! figure can be regenerated from the raw curves.
+
+pub mod plot;
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::stats::Summary;
+
+/// A single named time series (e.g. "train_loss").
+#[derive(Debug, Default, Clone)]
+pub struct Series {
+    pub points: Vec<(u64, f64)>,
+    pub summary: Summary,
+}
+
+impl Series {
+    pub fn push(&mut self, step: u64, value: f64) {
+        self.points.push((step, value));
+        self.summary.observe(value);
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|&(_, v)| v)
+    }
+
+    /// Mean of the final `k` points — the "final loss" a paper reports.
+    pub fn tail_mean(&self, k: usize) -> Option<f64> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let tail = &self.points[self.points.len().saturating_sub(k)..];
+        Some(tail.iter().map(|&(_, v)| v).sum::<f64>() / tail.len() as f64)
+    }
+}
+
+/// Metric registry for one run.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub series: BTreeMap<String, Series>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record(&mut self, name: &str, step: u64, value: f64) {
+        self.series.entry(name.to_string()).or_default().push(step, value);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Series> {
+        self.series.get(name)
+    }
+
+    /// Write every series as `<dir>/<name>.csv` with a `step,value` header.
+    pub fn flush_csv(&self, dir: &Path) -> Result<()> {
+        fs::create_dir_all(dir)
+            .with_context(|| format!("creating metrics dir {}", dir.display()))?;
+        for (name, series) in &self.series {
+            let path = dir.join(format!("{name}.csv"));
+            let mut f = fs::File::create(&path)
+                .with_context(|| format!("creating {}", path.display()))?;
+            writeln!(f, "step,value")?;
+            for &(step, value) in &series.points {
+                writeln!(f, "{step},{value}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Resolve (and create) the results directory for a named run.
+pub fn run_dir(base: &str, run_name: &str) -> Result<PathBuf> {
+    let dir = PathBuf::from(base).join(run_name);
+    fs::create_dir_all(&dir).with_context(|| format!("creating {}", dir.display()))?;
+    Ok(dir)
+}
+
+/// Leveled stderr logger with a wall-clock prefix.
+pub struct Log {
+    pub verbose: bool,
+    t0: std::time::Instant,
+}
+
+impl Log {
+    pub fn new(verbose: bool) -> Log {
+        Log {
+            verbose,
+            t0: std::time::Instant::now(),
+        }
+    }
+
+    pub fn info(&self, msg: &str) {
+        eprintln!("[{:8.1}s] {msg}", self.t0.elapsed().as_secs_f64());
+    }
+
+    pub fn debug(&self, msg: &str) {
+        if self.verbose {
+            self.info(msg);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_tail_mean() {
+        let mut s = Series::default();
+        for (i, v) in [1.0, 2.0, 3.0, 4.0].iter().enumerate() {
+            s.push(i as u64, *v);
+        }
+        assert_eq!(s.tail_mean(2), Some(3.5));
+        assert_eq!(s.tail_mean(100), Some(2.5));
+        assert_eq!(s.last(), Some(4.0));
+    }
+
+    #[test]
+    fn metrics_record_and_flush() {
+        let mut m = Metrics::new();
+        m.record("loss", 0, 2.5);
+        m.record("loss", 1, 2.0);
+        m.record("lr", 0, 3e-5);
+        let dir = std::env::temp_dir().join(format!("sagebwd_tm_{}", std::process::id()));
+        m.flush_csv(&dir).unwrap();
+        let loss = std::fs::read_to_string(dir.join("loss.csv")).unwrap();
+        assert!(loss.starts_with("step,value\n0,2.5\n1,2\n"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn empty_series() {
+        let s = Series::default();
+        assert_eq!(s.last(), None);
+        assert_eq!(s.tail_mean(3), None);
+    }
+}

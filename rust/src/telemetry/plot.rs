@@ -1,0 +1,151 @@
+//! Terminal plotting: render loss curves from `results/**/train_loss.csv`
+//! as ASCII charts (`sagebwd plot --runs a,b,...`), so the paper's figures
+//! can be eyeballed without leaving the terminal.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A named (x, y) series.
+#[derive(Debug, Clone)]
+pub struct Curve {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Load a `step,value` CSV written by `telemetry::Metrics::flush_csv`.
+pub fn load_csv(path: &Path, name: &str) -> Result<Curve> {
+    let text = fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut points = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if i == 0 {
+            continue; // header
+        }
+        let mut cols = line.split(',');
+        let (Some(x), Some(y)) = (cols.next(), cols.next()) else {
+            bail!("malformed CSV line {i} in {}", path.display());
+        };
+        points.push((
+            x.trim().parse().with_context(|| format!("bad x at line {i}"))?,
+            y.trim().parse().with_context(|| format!("bad y at line {i}"))?,
+        ));
+    }
+    if points.is_empty() {
+        bail!("{} has no data rows", path.display());
+    }
+    Ok(Curve {
+        name: name.to_string(),
+        points,
+    })
+}
+
+const MARKS: &[char] = &['*', 'o', '+', 'x', '#', '@'];
+
+/// Render curves into a `width × height` ASCII grid with axes and legend.
+pub fn render(curves: &[Curve], width: usize, height: usize) -> String {
+    assert!(!curves.is_empty());
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for c in curves {
+        for &(x, y) in &c.points {
+            xmin = xmin.min(x);
+            xmax = xmax.max(x);
+            ymin = ymin.min(y);
+            ymax = ymax.max(y);
+        }
+    }
+    if (xmax - xmin).abs() < 1e-12 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (ci, c) in curves.iter().enumerate() {
+        let mark = MARKS[ci % MARKS.len()];
+        for &(x, y) in &c.points {
+            let col = (((x - xmin) / (xmax - xmin)) * (width - 1) as f64).round() as usize;
+            let row = (((ymax - y) / (ymax - ymin)) * (height - 1) as f64).round() as usize;
+            grid[row.min(height - 1)][col.min(width - 1)] = mark;
+        }
+    }
+    let mut out = String::new();
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == 0 {
+            format!("{ymax:9.4} ┤")
+        } else if i == height - 1 {
+            format!("{ymin:9.4} ┤")
+        } else {
+            format!("{:9} │", "")
+        };
+        out.push_str(&label);
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "{:9} └{}\n{:11}{xmin:<12.0}{:>w$.0}\n",
+        "",
+        "─".repeat(width),
+        "",
+        xmax,
+        w = width - 12
+    ));
+    for (ci, c) in curves.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", MARKS[ci % MARKS.len()], c.name));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let path = std::env::temp_dir().join(format!("sagebwd_plot_{}.csv", std::process::id()));
+        std::fs::write(&path, "step,value\n0,2.5\n1,2.0\n2,1.5\n").unwrap();
+        let c = load_csv(&path, "loss").unwrap();
+        assert_eq!(c.points, vec![(0.0, 2.5), (1.0, 2.0), (2.0, 1.5)]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn csv_errors() {
+        let path = std::env::temp_dir().join(format!("sagebwd_plot_bad_{}.csv", std::process::id()));
+        std::fs::write(&path, "step,value\n").unwrap();
+        assert!(load_csv(&path, "x").is_err());
+        std::fs::write(&path, "step,value\n0,abc\n").unwrap();
+        assert!(load_csv(&path, "x").is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn render_marks_endpoints() {
+        let c = Curve {
+            name: "test".into(),
+            points: vec![(0.0, 0.0), (10.0, 10.0)],
+        };
+        let s = render(&[c], 40, 10);
+        assert!(s.contains('*'));
+        assert!(s.contains("test"));
+        // min and max labels present
+        assert!(s.contains("10.0000"));
+        assert!(s.contains("0.0000"));
+    }
+
+    #[test]
+    fn render_multiple_markers() {
+        let a = Curve { name: "a".into(), points: vec![(0.0, 1.0), (1.0, 2.0)] };
+        let b = Curve { name: "b".into(), points: vec![(0.0, 2.0), (1.0, 1.0)] };
+        let s = render(&[a, b], 30, 8);
+        assert!(s.contains('*') && s.contains('o'));
+    }
+
+    #[test]
+    fn constant_series_does_not_panic() {
+        let c = Curve { name: "flat".into(), points: vec![(0.0, 5.0), (1.0, 5.0)] };
+        render(&[c], 20, 5);
+    }
+}

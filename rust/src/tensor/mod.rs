@@ -1,0 +1,205 @@
+//! Host-side tensor substrate: a flat `Vec<f32>`/`Vec<i32>` plus a shape.
+//!
+//! This is deliberately *not* a math library — the heavy math runs inside
+//! the XLA executables.  The coordinator only needs: construction, random
+//! init, elementwise accumulation (gradient accumulation across
+//! microbatches, §4.3), scaling, and the error metrics.
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Pcg64;
+use crate::util::stats;
+
+/// Dense f32 tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let want: usize = shape.iter().product();
+        if data.len() != want {
+            bail!("shape {shape:?} wants {want} elements, got {}", data.len());
+        }
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    pub fn scalar(x: f32) -> Tensor {
+        Tensor {
+            shape: vec![],
+            data: vec![x],
+        }
+    }
+
+    /// N(0, sigma²) random tensor from a seeded stream.
+    pub fn randn(shape: &[usize], sigma: f32, rng: &mut Pcg64) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_gaussian(&mut t.data, sigma);
+        t
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn item(&self) -> f32 {
+        assert_eq!(self.len(), 1, "item() on non-scalar {:?}", self.shape);
+        self.data[0]
+    }
+
+    /// self += other (gradient accumulation hot path).
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// self *= c (microbatch averaging).
+    pub fn scale(&mut self, c: f32) {
+        for a in self.data.iter_mut() {
+            *a *= c;
+        }
+    }
+
+    pub fn fill(&mut self, c: f32) {
+        self.data.fill(c);
+    }
+
+    pub fn rms(&self) -> f64 {
+        stats::rms(&self.data)
+    }
+
+    pub fn cossim(&self, other: &Tensor) -> f64 {
+        stats::cossim(&self.data, &other.data)
+    }
+
+    pub fn rel_l2(&self, other: &Tensor) -> f64 {
+        stats::rel_l2(&self.data, &other.data)
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+/// Dense i32 tensor (token ids).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl IntTensor {
+    pub fn zeros(shape: &[usize]) -> IntTensor {
+        IntTensor {
+            shape: shape.to_vec(),
+            data: vec![0; shape.iter().product()],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<i32>) -> Result<IntTensor> {
+        let want: usize = shape.iter().product();
+        if data.len() != want {
+            bail!("shape {shape:?} wants {want} elements, got {}", data.len());
+        }
+        Ok(IntTensor {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    pub fn scalar(x: i32) -> IntTensor {
+        IntTensor {
+            shape: vec![],
+            data: vec![x],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_shape_product() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.len(), 24);
+        assert!(t.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(Tensor::from_vec(&[2, 2], vec![0.0; 3]).is_err());
+        assert!(Tensor::from_vec(&[2, 2], vec![0.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn add_assign_and_scale() {
+        let mut a = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::from_vec(&[3], vec![10.0, 20.0, 30.0]).unwrap();
+        a.add_assign(&b);
+        a.scale(0.5);
+        assert_eq!(a.data, vec![5.5, 11.0, 16.5]);
+    }
+
+    #[test]
+    fn randn_is_deterministic_per_stream() {
+        let mut r1 = Pcg64::new(5, 0);
+        let mut r2 = Pcg64::new(5, 0);
+        let a = Tensor::randn(&[16], 1.0, &mut r1);
+        let b = Tensor::randn(&[16], 1.0, &mut r2);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn metrics_delegate() {
+        let a = Tensor::from_vec(&[2], vec![3.0, 4.0]).unwrap();
+        assert!((a.rms() - (12.5f64).sqrt()).abs() < 1e-9);
+        assert!((a.cossim(&a) - 1.0).abs() < 1e-12);
+        assert_eq!(a.rel_l2(&a), 0.0);
+        assert_eq!(a.max_abs(), 4.0);
+    }
+
+    #[test]
+    fn finite_detection() {
+        let mut a = Tensor::zeros(&[2]);
+        assert!(a.is_finite());
+        a.data[1] = f32::NAN;
+        assert!(!a.is_finite());
+    }
+
+    #[test]
+    fn scalar_item() {
+        assert_eq!(Tensor::scalar(2.5).item(), 2.5);
+        assert_eq!(IntTensor::scalar(7).data, vec![7]);
+    }
+}

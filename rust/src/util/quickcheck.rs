@@ -1,0 +1,156 @@
+//! Mini property-testing framework (substrate — no proptest in the
+//! vendored set).
+//!
+//! A property is a closure from a seeded [`Gen`] to `Result<(), String>`;
+//! [`check`] runs it across many seeds and, on failure, reports the seed so
+//! the case can be replayed deterministically.  No structural shrinking —
+//! generators are seeded, so re-running a failing seed reproduces the case
+//! exactly, which is what matters for debugging.
+
+use crate::util::rng::Pcg64;
+
+/// Test-case generator handed to properties.
+pub struct Gen {
+    pub rng: Pcg64,
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo + self.rng.below((hi - lo + 1) as u64) as i64
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.uniform() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.below(items.len() as u64) as usize]
+    }
+
+    pub fn vec_f32(&mut self, len: usize, sigma: f32) -> Vec<f32> {
+        let mut v = vec![0f32; len];
+        self.rng.fill_gaussian(&mut v, sigma);
+        v
+    }
+
+    pub fn string(&mut self, max_len: usize) -> String {
+        let len = self.usize_in(0, max_len);
+        (0..len)
+            .map(|_| char::from_u32(self.usize_in(32, 126) as u32).unwrap())
+            .collect()
+    }
+}
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        Config {
+            cases: 100,
+            // CLAUDE_QC_SEED lets a failing case be replayed exactly.
+            seed: std::env::var("QC_SEED")
+                .ok()
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0xC0FFEE),
+        }
+    }
+}
+
+/// Run `prop` across `cfg.cases` seeds; panic with the failing seed.
+pub fn check_with(cfg: Config, name: &str, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    for case in 0..cfg.cases {
+        let mut g = Gen {
+            rng: Pcg64::new(cfg.seed, case as u64),
+            size: 1 + case / 4,
+        };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property {name:?} failed on case {case} (QC_SEED={} to replay): {msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Run a property with the default config (100 cases).
+pub fn check(name: &str, prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    check_with(Config::default(), name, prop);
+}
+
+/// Assert helper producing `Result` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("addition commutes", |g| {
+            count += 1;
+            let (a, b) = (g.i64_in(-100, 100), g.i64_in(-100, 100));
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+        assert_eq!(count, 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_case() {
+        let mut first: Vec<usize> = Vec::new();
+        check_with(Config { cases: 10, seed: 1 }, "collect", |g| {
+            first.push(g.usize_in(0, 1000));
+            Ok(())
+        });
+        let mut second: Vec<usize> = Vec::new();
+        check_with(Config { cases: 10, seed: 1 }, "collect", |g| {
+            second.push(g.usize_in(0, 1000));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn ranges_respected() {
+        check("usize_in bounds", |g| {
+            let x = g.usize_in(5, 10);
+            if (5..=10).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+}

@@ -1,0 +1,234 @@
+//! Deterministic PRNG substrate (no `rand` in the vendored set).
+//!
+//! [`Pcg64`] — PCG-XSH-RR 64/32 with a SplitMix64-seeded state; fast,
+//! reproducible, and stream-splittable (every consumer of randomness in
+//! the coordinator derives its own stream so run results are independent
+//! of scheduling order).
+
+/// PCG-XSH-RR 64/32: 64-bit state, 32-bit output.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u64,
+    inc: u64,
+    /// Cached second normal from Box–Muller.
+    gauss_spare: Option<f64>,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+/// SplitMix64 — used for seeding and stream derivation.
+fn splitmix64(x: &mut u64) -> u64 {
+    *x = x.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Pcg64 {
+    /// Create a generator from a seed and a stream id.  Different streams
+    /// from the same seed are statistically independent.
+    pub fn new(seed: u64, stream: u64) -> Pcg64 {
+        let mut sm = seed;
+        let state = splitmix64(&mut sm);
+        let mut sm2 = stream.wrapping_mul(0xDA3E39CB94B95BDB) ^ seed;
+        let inc = splitmix64(&mut sm2) | 1; // must be odd
+        let mut rng = Pcg64 {
+            state,
+            inc,
+            gauss_spare: None,
+        };
+        rng.next_u32(); // burn-in so state decorrelates from the seed
+        rng
+    }
+
+    /// Derive a child stream (for per-worker / per-layer reproducibility).
+    pub fn split(&mut self, label: u64) -> Pcg64 {
+        Pcg64::new(self.next_u64(), label)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, bound) without modulo bias (Lemire).
+    pub fn below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0);
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = mul128(x, bound);
+            if lo >= bound || lo >= x.wrapping_neg() % bound {
+                return hi;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn gaussian(&mut self) -> f64 {
+        if let Some(spare) = self.gauss_spare.take() {
+            return spare;
+        }
+        loop {
+            let u = self.uniform();
+            if u <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let v = self.uniform();
+            let r = (-2.0 * u.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * v;
+            self.gauss_spare = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    /// Fill a slice with N(0, sigma²) f32 samples.
+    pub fn fill_gaussian(&mut self, out: &mut [f32], sigma: f32) {
+        for x in out.iter_mut() {
+            *x = (self.gaussian() as f32) * sigma;
+        }
+    }
+
+    /// Zipf(s) sample over [0, n): rank-frequency token distribution used
+    /// by the synthetic corpus (rejection-inversion, Hörmann & Derflinger).
+    pub fn zipf(&mut self, n: u64, s: f64) -> u64 {
+        debug_assert!(n >= 1);
+        // Simple inversion on the harmonic CDF; fine for n ≤ ~1e5.
+        let h = |x: f64| -> f64 {
+            if (s - 1.0).abs() < 1e-9 {
+                (x + 1.0).ln()
+            } else {
+                ((x + 1.0).powf(1.0 - s) - 1.0) / (1.0 - s)
+            }
+        };
+        let h_n = h(n as f64);
+        let u = self.uniform() * h_n;
+        let x = if (s - 1.0).abs() < 1e-9 {
+            u.exp() - 1.0
+        } else {
+            ((1.0 - s) * u + 1.0).powf(1.0 / (1.0 - s)) - 1.0
+        };
+        (x.floor() as u64).min(n - 1)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            items.swap(i, j);
+        }
+    }
+}
+
+#[inline]
+fn mul128(a: u64, b: u64) -> (u64, u64) {
+    let wide = (a as u128) * (b as u128);
+    ((wide >> 64) as u64, wide as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg64::new(42, 0);
+        let mut b = Pcg64::new(42, 0);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg64::new(42, 0);
+        let mut b = Pcg64::new(42, 1);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut rng = Pcg64::new(7, 0);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn below_is_unbiased_ish() {
+        let mut rng = Pcg64::new(9, 3);
+        let mut counts = [0u32; 5];
+        for _ in 0..50_000 {
+            counts[rng.below(5) as usize] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Pcg64::new(11, 0);
+        let n = 50_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let g = rng.gaussian();
+            sum += g;
+            sq += g * g;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn zipf_is_monotone_decreasing() {
+        let mut rng = Pcg64::new(13, 0);
+        let mut counts = vec![0u32; 16];
+        for _ in 0..100_000 {
+            counts[rng.zipf(16, 1.2) as usize] += 1;
+        }
+        assert!(counts[0] > counts[3]);
+        assert!(counts[3] > counts[10]);
+        assert!(counts.iter().all(|&c| c > 0));
+    }
+
+    #[test]
+    fn shuffle_permutes() {
+        let mut rng = Pcg64::new(17, 0);
+        let mut v: Vec<u32> = (0..64).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..64).collect::<Vec<_>>());
+        assert_ne!(v, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_decorrelates() {
+        let mut parent = Pcg64::new(1, 0);
+        let mut c1 = parent.split(0);
+        let mut c2 = parent.split(1);
+        let same = (0..64).filter(|_| c1.next_u32() == c2.next_u32()).count();
+        assert!(same < 4);
+    }
+}

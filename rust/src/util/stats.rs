@@ -1,0 +1,188 @@
+//! Error metrics and summary statistics (paper Tables 1–2, Figures 5–6,
+//! and the §4.2 RMS probes) plus the timing summaries used by `bench`.
+
+/// Cosine similarity of two flattened tensors.
+pub fn cossim(x: &[f32], y: &[f32]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let (mut dot, mut nx, mut ny) = (0f64, 0f64, 0f64);
+    for (&a, &b) in x.iter().zip(y) {
+        dot += a as f64 * b as f64;
+        nx += a as f64 * a as f64;
+        ny += b as f64 * b as f64;
+    }
+    dot / (nx.sqrt() * ny.sqrt()).max(1e-300)
+}
+
+/// Relative ℓ2 error ‖x − y‖ / ‖y‖ (y is the full-precision reference).
+pub fn rel_l2(x: &[f32], y: &[f32]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let (mut num, mut den) = (0f64, 0f64);
+    for (&a, &b) in x.iter().zip(y) {
+        let d = a as f64 - b as f64;
+        num += d * d;
+        den += b as f64 * b as f64;
+    }
+    (num / den.max(1e-300)).sqrt()
+}
+
+/// Root mean square.
+pub fn rms(x: &[f32]) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    (x.iter().map(|&a| a as f64 * a as f64).sum::<f64>() / x.len() as f64).sqrt()
+}
+
+pub fn mean(x: &[f64]) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    x.iter().sum::<f64>() / x.len() as f64
+}
+
+pub fn stddev(x: &[f64]) -> f64 {
+    if x.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(x);
+    (x.iter().map(|&v| (v - m) * (v - m)).sum::<f64>() / (x.len() - 1) as f64).sqrt()
+}
+
+/// p-th percentile (0–100) by linear interpolation on a sorted copy.
+pub fn percentile(x: &[f64], p: f64) -> f64 {
+    assert!(!x.is_empty());
+    let mut sorted = x.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Exponential moving average — the trainer's smoothed-loss display.
+#[derive(Debug, Clone)]
+pub struct Ema {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Ema {
+        assert!((0.0..=1.0).contains(&alpha));
+        Ema { alpha, value: None }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => prev + self.alpha * (x - prev),
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Online mean/min/max/count accumulator (telemetry gauges).
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn observe(&mut self, x: f64) {
+        if self.count == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.count += 1;
+        self.sum += x;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cossim_identical_is_one() {
+        let x = vec![1.0, -2.0, 3.0];
+        assert!((cossim(&x, &x) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cossim_orthogonal_is_zero() {
+        assert!(cossim(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cossim_opposite_is_minus_one() {
+        let x = vec![1.0, 2.0];
+        let y = vec![-1.0, -2.0];
+        assert!((cossim(&x, &y) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rel_l2_basics() {
+        assert_eq!(rel_l2(&[1.0, 1.0], &[1.0, 1.0]), 0.0);
+        let e = rel_l2(&[1.1, 0.9], &[1.0, 1.0]);
+        assert!((e - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rms_known_value() {
+        assert!((rms(&[3.0, 4.0]) - (12.5f64).sqrt()).abs() < 1e-9);
+        assert_eq!(rms(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.5);
+        for _ in 0..32 {
+            e.update(10.0);
+        }
+        assert!((e.get().unwrap() - 10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn summary_tracks_extremes() {
+        let mut s = Summary::default();
+        for x in [3.0, -1.0, 7.0] {
+            s.observe(x);
+        }
+        assert_eq!(s.min, -1.0);
+        assert_eq!(s.max, 7.0);
+        assert_eq!(s.count, 3);
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,178 @@
+//! Integration tests: the Rust runtime against real AOT artifacts.
+//!
+//! These need `make artifacts` to have run; they skip (with a note) when
+//! the artifact directory is missing so `cargo test` stays green on a
+//! fresh checkout.
+
+use sagebwd::runtime::{Runtime, Value};
+use sagebwd::tensor::Tensor;
+use sagebwd::util::rng::Pcg64;
+use sagebwd::util::stats::{cossim, rel_l2};
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("trace_fpa.manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new(dir).expect("creating runtime"))
+}
+
+fn qkvdo(n: usize, d: usize, seed: u64) -> Vec<Value> {
+    let mut rng = Pcg64::new(seed, 0);
+    (0..4)
+        .map(|i| Value::F32(Tensor::randn(&[n, d], 1.0, &mut rng.split(i))))
+        .collect()
+}
+
+#[test]
+fn trace_fpa_is_internally_consistent() {
+    let Some(mut rt) = runtime() else { return };
+    let inputs = qkvdo(128, 64, 1);
+    let out = rt.execute("trace_fpa", &inputs).unwrap();
+    // Output 0 is O (128, 64); P rows (output 8) sum to 1.
+    let o = out[0].as_f32().unwrap();
+    assert_eq!(o.shape, vec![128, 64]);
+    assert!(o.is_finite());
+    let p = out[8].as_f32().unwrap();
+    for row in p.data.chunks(128) {
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-4, "softmax row sum {s}");
+    }
+    // dS rows sum to zero (§6) — the K-smoothing gradient identity.
+    let ds = out[10].as_f32().unwrap();
+    for row in ds.data.chunks(128) {
+        let s: f32 = row.iter().sum();
+        assert!(s.abs() < 1e-3, "dS row sum {s}");
+    }
+}
+
+#[test]
+fn sage_trace_close_to_fpa_at_unit_sigma() {
+    let Some(mut rt) = runtime() else { return };
+    let inputs = qkvdo(128, 64, 2);
+    let sage = rt.execute("trace_sage", &inputs).unwrap();
+    let fpa = rt.execute("trace_fpa", &inputs).unwrap();
+    for (idx, name, min_cos) in [(0, "o", 0.999), (1, "dq", 0.99), (2, "dk", 0.99), (3, "dv", 0.999)] {
+        let s = sage[idx].as_f32().unwrap();
+        let f = fpa[idx].as_f32().unwrap();
+        let c = cossim(&s.data, &f.data);
+        assert!(c > min_cos, "{name}: cossim {c}");
+    }
+}
+
+#[test]
+fn pseudo_trace_dp_is_exact() {
+    // Table 2's structural property, via the runtime path end to end.
+    let Some(mut rt) = runtime() else { return };
+    let inputs = qkvdo(128, 64, 3);
+    let pseudo = rt.execute("trace_pseudo", &inputs).unwrap();
+    let fpa = rt.execute("trace_fpa", &inputs).unwrap();
+    let rel = rel_l2(
+        &pseudo[9].as_f32().unwrap().data,
+        &fpa[9].as_f32().unwrap().data,
+    );
+    assert!(rel < 1e-6, "dP rel_l2 {rel}");
+}
+
+#[test]
+fn input_validation_rejects_bad_shapes() {
+    let Some(mut rt) = runtime() else { return };
+    let mut inputs = qkvdo(128, 64, 4);
+    inputs[0] = Value::F32(Tensor::zeros(&[64, 64])); // wrong N
+    assert!(rt.execute("trace_fpa", &inputs).is_err());
+    let inputs3 = &qkvdo(128, 64, 4)[..3]; // wrong arity
+    assert!(rt.execute("trace_fpa", inputs3).is_err());
+}
+
+#[test]
+fn missing_artifact_is_a_clean_error() {
+    let Some(mut rt) = runtime() else { return };
+    let err = rt.execute("no_such_artifact", &[]).unwrap_err();
+    assert!(format!("{err:#}").contains("no_such_artifact"));
+}
+
+#[test]
+fn init_is_deterministic_in_seed() {
+    let Some(mut rt) = runtime() else { return };
+    let a = rt.execute("init_sage_qknorm", &[Value::scalar_i32(7)]).unwrap();
+    let b = rt.execute("init_sage_qknorm", &[Value::scalar_i32(7)]).unwrap();
+    let c = rt.execute("init_sage_qknorm", &[Value::scalar_i32(8)]).unwrap();
+    let (a0, b0, c0) = (
+        a[0].as_f32().unwrap(),
+        b[0].as_f32().unwrap(),
+        c[0].as_f32().unwrap(),
+    );
+    assert_eq!(a0.data, b0.data);
+    assert_ne!(a0.data, c0.data);
+}
+
+#[test]
+fn grad_step_loss_is_sane_and_grads_flow() {
+    let Some(mut rt) = runtime() else { return };
+    let params = rt
+        .execute("init_sage_qknorm", &[Value::scalar_i32(0)])
+        .unwrap();
+    let exe = rt.load("grad_step_sage_qknorm").unwrap();
+    let m = &exe.manifest;
+    let tok_spec = m.input("tokens").unwrap();
+    let (b, n) = (tok_spec.shape[0], tok_spec.shape[1]);
+    let vocab = m.meta.get("vocab_size").unwrap().as_i64().unwrap() as i32;
+
+    let mut rng = Pcg64::new(0, 9);
+    let tokens: Vec<i32> = (0..b * n).map(|_| rng.below(vocab as u64) as i32).collect();
+    let targets: Vec<i32> = (0..b * n).map(|_| rng.below(vocab as u64) as i32).collect();
+    let mut inputs = params.clone();
+    inputs.push(Value::I32(
+        sagebwd::tensor::IntTensor::from_vec(&[b, n], tokens).unwrap(),
+    ));
+    inputs.push(Value::I32(
+        sagebwd::tensor::IntTensor::from_vec(&[b, n], targets).unwrap(),
+    ));
+    let out = exe.execute(&inputs).unwrap();
+    let loss = out[0].as_f32().unwrap().item();
+    // Fresh init on random targets ⇒ loss ≈ ln(vocab)=6.24.
+    assert!((loss - (vocab as f32).ln()).abs() < 1.0, "loss {loss}");
+    // Most gradient leaves are nonzero.
+    let nonzero = out[1..]
+        .iter()
+        .filter(|v| v.as_f32().map(|t| t.max_abs() > 0.0).unwrap_or(false))
+        .count();
+    assert!(nonzero >= out.len() - 3, "only {nonzero} nonzero grads");
+}
+
+#[test]
+fn apply_step_moves_params() {
+    let Some(mut rt) = runtime() else { return };
+    let params = rt
+        .execute("init_sage_qknorm", &[Value::scalar_i32(0)])
+        .unwrap();
+    let n = params.len();
+    let zeros: Vec<Value> = params
+        .iter()
+        .map(|p| Value::F32(Tensor::zeros(p.shape())))
+        .collect();
+    let ones: Vec<Value> = params
+        .iter()
+        .map(|p| {
+            let mut t = Tensor::zeros(p.shape());
+            t.fill(1e-3);
+            Value::F32(t)
+        })
+        .collect();
+    let mut inputs = Vec::with_capacity(4 * n + 2);
+    inputs.extend(params.iter().cloned());
+    inputs.extend(zeros.iter().cloned());
+    inputs.extend(zeros.iter().cloned());
+    inputs.extend(ones.iter().cloned());
+    inputs.push(Value::scalar_f32(1e-2));
+    inputs.push(Value::scalar_i32(1));
+    let out = rt.execute("apply_step_qknorm", &inputs).unwrap();
+    assert_eq!(out.len(), 3 * n);
+    // Params moved opposite the (positive) gradient.
+    let p0 = params[0].as_f32().unwrap();
+    let p1 = out[0].as_f32().unwrap();
+    let mean_delta: f32 =
+        p1.data.iter().zip(&p0.data).map(|(a, b)| a - b).sum::<f32>() / p0.len() as f32;
+    assert!(mean_delta < 0.0, "mean param delta {mean_delta}");
+}

@@ -1,0 +1,186 @@
+//! Cross-module property tests over the Rust substrates (no artifacts
+//! needed): data pipeline determinism/sharding, JSON fuzz-ish roundtrip,
+//! checkpoint fuzz, schedule × accumulator interplay.
+
+use sagebwd::coordinator::{microbatches_for_tps, Checkpoint, CosineSchedule, GradAccumulator};
+use sagebwd::data::{Batcher, Tokenizer};
+use sagebwd::tensor::Tensor;
+use sagebwd::util::json::{self, Json};
+use sagebwd::util::quickcheck::{check, check_with, Config, Gen};
+
+#[test]
+fn json_roundtrip_random_documents() {
+    fn random_json(g: &mut Gen, depth: usize) -> Json {
+        match if depth == 0 { g.usize_in(0, 3) } else { g.usize_in(0, 5) } {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num((g.i64_in(-1_000_000, 1_000_000) as f64) / 64.0),
+            3 => Json::Str(g.string(12)),
+            4 => Json::Arr((0..g.usize_in(0, 4)).map(|_| random_json(g, depth - 1)).collect()),
+            _ => {
+                let mut o = Json::obj();
+                for _ in 0..g.usize_in(0, 4) {
+                    o.set(&g.string(8), random_json(g, depth - 1));
+                }
+                o
+            }
+        }
+    }
+    check("json roundtrip", |g| {
+        let doc = random_json(g, 3);
+        let text = doc.to_string();
+        let back = json::parse(&text).map_err(|e| format!("parse failed on {text}: {e}"))?;
+        if back != doc {
+            return Err(format!("roundtrip mismatch: {text}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batcher_deterministic_and_shards_disjoint() {
+    check_with(Config { cases: 12, seed: 7 }, "batcher", |g| {
+        let seed = g.usize_in(0, 1000) as u64;
+        let batch = g.usize_in(1, 4);
+        let seq = *g.choose(&[8usize, 16, 32]);
+        let collect = |shard: u64| {
+            let mut b = Batcher::new(Tokenizer::bytes_only(), seed, shard, batch, seq);
+            (0..3).map(|_| b.next_batch().unwrap()).collect::<Vec<_>>()
+        };
+        if collect(0) != collect(0) {
+            return Err("nondeterministic".into());
+        }
+        if collect(0) == collect(1) {
+            return Err("shards overlap".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batcher_targets_shifted_by_one() {
+    check_with(Config { cases: 10, seed: 3 }, "shift", |g| {
+        let seq = *g.choose(&[8usize, 16]);
+        let mut b = Batcher::new(Tokenizer::bytes_only(), g.usize_in(0, 99) as u64, 0, 1, seq);
+        let batch = b.next_batch().unwrap();
+        if batch.tokens.data[1..] != batch.targets.data[..seq - 1] {
+            return Err("targets are not next-token".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn checkpoint_roundtrip_random_tensors() {
+    check_with(Config { cases: 20, seed: 11 }, "checkpoint", |g| {
+        let n = g.usize_in(0, 5);
+        let tensors: Vec<(String, Tensor)> = (0..n)
+            .map(|i| {
+                let dims = (0..g.usize_in(0, 3))
+                    .map(|_| g.usize_in(1, 6))
+                    .collect::<Vec<_>>();
+                let numel = dims.iter().product();
+                (
+                    format!("t{i}.{}", g.string(6).replace('"', "q")),
+                    Tensor::from_vec(&dims, g.vec_f32(numel, 2.0)).unwrap(),
+                )
+            })
+            .collect();
+        let ckpt = Checkpoint {
+            step: g.usize_in(0, 1 << 20) as u64,
+            tensors,
+        };
+        let path = std::env::temp_dir().join(format!(
+            "sagebwd_qc_{}_{}.ckpt",
+            std::process::id(),
+            g.usize_in(0, usize::MAX / 2)
+        ));
+        ckpt.save(&path).map_err(|e| e.to_string())?;
+        let back = Checkpoint::load(&path).map_err(|e| e.to_string())?;
+        std::fs::remove_file(&path).ok();
+        if back != ckpt {
+            return Err("roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tps_accounting_is_exact() {
+    // microbatches × microbatch_tokens == tokens_per_step, never rounded.
+    check("tps exact", |g: &mut Gen| {
+        let micro = g.usize_in(1, 8) as u64;
+        let seq = *g.choose(&[32u64, 64, 128]);
+        let k = g.usize_in(1, 64) as u64;
+        let tps = k * micro * seq;
+        let n = microbatches_for_tps(tps, micro, seq).map_err(|e| e.to_string())?;
+        if n * micro * seq != tps {
+            return Err(format!("{n} × {micro} × {seq} ≠ {tps}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn warmup_then_decay_crosses_peak_once() {
+    check_with(Config { cases: 50, seed: 23 }, "single peak", |g| {
+        let warmup = g.usize_in(1, 30) as u64;
+        let total = warmup + g.usize_in(2, 200) as u64;
+        let s = CosineSchedule::new(1e-3, warmup, total, 0.05);
+        // Strictly increasing before warmup end, non-increasing after.
+        for step in 1..warmup {
+            if s.lr(step) <= s.lr(step - 1) {
+                return Err(format!("warmup not increasing at {step}"));
+            }
+        }
+        for step in warmup + 1..total {
+            if s.lr(step) > s.lr(step - 1) + 1e-15 {
+                return Err(format!("decay increased at {step}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn accumulator_average_bounded_by_inputs() {
+    // Mean gradient is within [min, max] of the accumulated microbatches
+    // elementwise — no overflow/accumulation bug amplifies values.
+    check("mean bounded", |g: &mut Gen| {
+        let len = g.usize_in(1, 24);
+        let k = g.usize_in(1, 6);
+        let micro: Vec<Vec<f32>> = (0..k).map(|_| g.vec_f32(len, 3.0)).collect();
+        let mut acc = GradAccumulator::new(&[vec![len]]);
+        for m in &micro {
+            acc.add(1.0, &[Tensor::from_vec(&[len], m.clone()).unwrap()])
+                .map_err(|e| e.to_string())?;
+        }
+        let (_, grads) = acc.take_mean().map_err(|e| e.to_string())?;
+        for i in 0..len {
+            let lo = micro.iter().map(|m| m[i]).fold(f32::INFINITY, f32::min);
+            let hi = micro.iter().map(|m| m[i]).fold(f32::NEG_INFINITY, f32::max);
+            let v = grads[0].data[i];
+            if v < lo - 1e-4 || v > hi + 1e-4 {
+                return Err(format!("mean {v} outside [{lo}, {hi}]"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn bpe_tokenizer_roundtrip_random_ascii() {
+    let mut sample = String::new();
+    let mut c = sagebwd::data::Corpus::new(99, 0);
+    c.fill_text(&mut sample, 30_000);
+    let tok = Tokenizer::train(&sample, 384).unwrap();
+    check_with(Config { cases: 40, seed: 31 }, "bpe roundtrip", |g| {
+        let text = g.string(200);
+        let ids = tok.encode(&text);
+        let back = tok.decode(&ids).map_err(|e| e.to_string())?;
+        if back != text {
+            return Err(format!("roundtrip mismatch on {text:?}"));
+        }
+        Ok(())
+    });
+}
