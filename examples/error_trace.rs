@@ -2,22 +2,30 @@
 //! §4.2 dS-magnitude analysis): runs the pseudo-quantized FPA trace and
 //! prints per-tensor CosSim / Rel-ℓ2, highlighting the dS bottleneck.
 //!
+//! Runs anywhere on the native CPU kernels (`--backend xla` switches to
+//! the AOT artifacts).
+//!
 //! ```text
-//! cargo run --release --example error_trace
+//! cargo run --release --example error_trace [-- --backend native|xla]
 //! ```
 
 use anyhow::Result;
+use sagebwd::cli::Args;
 use sagebwd::experiments::common::{gaussian_qkvdo, run_trace};
-use sagebwd::runtime::Runtime;
+use sagebwd::runtime::make_backend;
 use sagebwd::util::stats::{cossim, rel_l2};
 
 fn main() -> Result<()> {
-    let mut rt = Runtime::new(sagebwd::DEFAULT_ARTIFACTS_DIR)?;
+    let args = Args::from_env()?;
+    let mut be = make_backend(
+        args.str_or("backend", "native"),
+        args.str_or("artifacts", sagebwd::DEFAULT_ARTIFACTS_DIR),
+    )?;
 
     // Trained-regime surrogate: grown QK norms, small upstream gradient.
     let qkvdo = gaussian_qkvdo(128, 64, 4.0, 4.0, 1.0, 0.02, 42);
-    let pseudo = run_trace(&mut rt, "trace_pseudo", &qkvdo)?;
-    let fpa = run_trace(&mut rt, "trace_fpa", &qkvdo)?;
+    let pseudo = run_trace(be.as_mut(), "trace_pseudo", &qkvdo)?;
+    let fpa = run_trace(be.as_mut(), "trace_fpa", &qkvdo)?;
 
     println!("Per-tensor error, SageBwd INT8 quantize-dequantize vs exact FPA (§5.4):\n");
     println!("{:<8} {:>10} {:>10}", "tensor", "cossim", "rel-l2");

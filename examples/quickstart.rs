@@ -1,20 +1,27 @@
-//! Quickstart: load the SageBwd attention artifact, run one
-//! forward+backward on random tensors, and compare against exact
-//! attention — the 60-second tour of the three-layer stack.
+//! Quickstart: run one SageBwd forward+backward on random tensors and
+//! compare against exact attention — the 60-second tour of the stack.
+//!
+//! Runs anywhere on the native CPU kernels; pass `--backend xla` (after
+//! `make artifacts`) to execute the AOT XLA artifacts instead.
 //!
 //! ```text
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart [-- --backend native|xla]
 //! ```
 
 use anyhow::Result;
-use sagebwd::runtime::{Runtime, Value};
+use sagebwd::cli::Args;
+use sagebwd::runtime::{make_backend, Value};
 use sagebwd::tensor::Tensor;
 use sagebwd::util::rng::Pcg64;
 use sagebwd::util::stats::{cossim, rel_l2};
 
 fn main() -> Result<()> {
-    let mut rt = Runtime::new(sagebwd::DEFAULT_ARTIFACTS_DIR)?;
-    println!("PJRT platform: {}", rt.platform());
+    let args = Args::from_env()?;
+    let mut be = make_backend(
+        args.str_or("backend", "native"),
+        args.str_or("artifacts", sagebwd::DEFAULT_ARTIFACTS_DIR),
+    )?;
+    println!("backend: {}", be.name());
 
     // Random single-head (N=128, D=64) attention problem.
     let mut rng = Pcg64::new(0, 0);
@@ -22,9 +29,9 @@ fn main() -> Result<()> {
         .map(|i| Value::F32(Tensor::randn(&[128, 64], 1.0, &mut rng.split(i))))
         .collect();
 
-    // SageBwd (INT8 Pallas kernels, Algorithms 1+2) vs exact attention.
-    let sage = rt.execute("trace_sage", &inputs)?;
-    let fpa = rt.execute("trace_fpa", &inputs)?;
+    // SageBwd (INT8 kernels, Algorithms 1+2) vs exact attention.
+    let sage = be.execute("trace_sage", &inputs)?;
+    let fpa = be.execute("trace_fpa", &inputs)?;
 
     println!("\nSageBwd vs full-precision attention (σ_Q=σ_K=1):");
     for (idx, name) in [(0usize, "O "), (1, "dQ"), (2, "dK"), (3, "dV")] {

@@ -1,20 +1,26 @@
 //! σ-sweep example (paper §4.4 / Table 1): how SageBwd accuracy degrades
 //! as the Q/K activation scale grows — the experiment motivating QK-norm.
 //!
+//! Runs anywhere on the native CPU kernels (`--backend xla` switches to
+//! the AOT artifacts).
+//!
 //! ```text
-//! cargo run --release --example sigma_sweep -- [--reps 2]
+//! cargo run --release --example sigma_sweep -- [--reps 2] [--backend native|xla]
 //! ```
 
 use anyhow::Result;
 use sagebwd::cli::Args;
 use sagebwd::experiments::table1_sigma;
-use sagebwd::runtime::Runtime;
+use sagebwd::runtime::make_backend;
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
     let reps = args.u64_or("reps", 2)?;
-    let mut rt = Runtime::new(sagebwd::DEFAULT_ARTIFACTS_DIR)?;
-    let rows = table1_sigma::run(&mut rt, sagebwd::DEFAULT_RESULTS_DIR, reps)?;
+    let mut be = make_backend(
+        args.str_or("backend", "native"),
+        args.str_or("artifacts", sagebwd::DEFAULT_ARTIFACTS_DIR),
+    )?;
+    let rows = table1_sigma::run(be.as_mut(), sagebwd::DEFAULT_RESULTS_DIR, reps)?;
 
     // The §4.4 takeaway, checked programmatically:
     let first = &rows[0];

@@ -1,0 +1,102 @@
+"""Generate golden vectors for the native Rust kernels.
+
+Runs the pure-jnp references in ``kernels/ref.py`` (the same oracles the
+Pallas kernels are tested against) on a small fixed input set and writes
+``rust/tests/data/golden_attention.json``, which
+``rust/tests/kernel_golden.rs`` checks the native backend against.
+
+Float round-tripping: every value is first cast to float32, then emitted
+via Python ``repr`` of the exact float64 promotion — Rust parses the f64
+and casts back to f32, recovering the bit pattern exactly.
+
+Usage:  cd python && python -m compile.make_golden
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from .kernels import ref
+
+N, D, BLOCK = 32, 8, 8
+SIGMA_QK, SIGMA_V, SIGMA_DO = 3.0, 1.0, 0.5
+
+
+def _f32_list(x) -> list:
+    return [float(v) for v in np.asarray(x, dtype=np.float32).reshape(-1)]
+
+
+def _outputs(it: ref.AttnIntermediates, with_intermediates: bool) -> dict:
+    out = {
+        "o": _f32_list(it.o),
+        "dq": _f32_list(it.dq),
+        "dk": _f32_list(it.dk),
+        "dv": _f32_list(it.dv),
+        "delta": _f32_list(it.delta),
+    }
+    if with_intermediates:
+        out["p"] = _f32_list(it.p)
+        out["dp"] = _f32_list(it.dp)
+        out["ds"] = _f32_list(it.ds)
+    return out
+
+
+def main() -> None:
+    rng = np.random.RandomState(20260729)
+    q = (rng.standard_normal((N, D)) * SIGMA_QK).astype(np.float32)
+    k = (rng.standard_normal((N, D)) * SIGMA_QK).astype(np.float32)
+    v = (rng.standard_normal((N, D)) * SIGMA_V).astype(np.float32)
+    do = (rng.standard_normal((N, D)) * SIGMA_DO).astype(np.float32)
+
+    cases = []
+
+    it = ref.fpa_bwd(q, k, v, do)
+    cases.append({"name": "fpa", "outputs": _outputs(it, True)})
+
+    for name, kwargs in [
+        ("sage", dict()),
+        ("sage_nosm", dict(k_smoothing=False)),
+        ("sage_qksm", dict(q_smoothing=True)),
+        ("sage_dsfp", dict(quant_ds=False)),
+    ]:
+        it = ref.sage_ref_bwd(q, k, v, do, block_q=BLOCK, block_kv=BLOCK, **kwargs)
+        cases.append({"name": name, "outputs": _outputs(it, False)})
+
+    for name, kwargs in [
+        ("pseudo", dict()),
+        ("pseudo_nosm", dict(k_smoothing=False)),
+        ("pseudo_qksm", dict(q_smoothing=True)),
+        ("pseudo_dsfp", dict(quant_ds=False)),
+    ]:
+        it = ref.pseudo_quant_trace(q, k, v, do, **kwargs)
+        cases.append({"name": name, "outputs": _outputs(it, name == "pseudo")})
+
+    doc = {
+        "n": N,
+        "d": D,
+        "block": BLOCK,
+        "sigma": {"qk": SIGMA_QK, "v": SIGMA_V, "do": SIGMA_DO},
+        "inputs": {
+            "q": _f32_list(q),
+            "k": _f32_list(k),
+            "v": _f32_list(v),
+            "do": _f32_list(do),
+        },
+        "cases": cases,
+    }
+    out_path = os.path.join(
+        os.path.dirname(__file__), "..", "..", "rust", "tests", "data",
+        "golden_attention.json",
+    )
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(doc, f)
+    print(f"wrote {os.path.normpath(out_path)} "
+          f"({os.path.getsize(out_path) / 1024:.0f} KiB, {len(cases)} cases)")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,20 +3,24 @@
 //! forward+backward — plus the analytic tensor-core model (see
 //! `experiments::fig23_speed` for why both readings are reported).
 //!
+//! Runs on the native CPU kernels by default (no artifacts needed); set
+//! `BENCH_BACKEND=xla` to time the AOT executables instead.
+//!
 //! Run with `cargo bench --bench bench_attention` (or `make bench`).
 
 use sagebwd::experiments::fig23_speed;
-use sagebwd::runtime::Runtime;
+use sagebwd::runtime::make_backend;
 
 fn main() {
-    let mut rt = match Runtime::new(sagebwd::DEFAULT_ARTIFACTS_DIR) {
-        Ok(rt) => rt,
+    let backend_name = std::env::var("BENCH_BACKEND").unwrap_or_else(|_| "native".to_string());
+    let mut be = match make_backend(&backend_name, sagebwd::DEFAULT_ARTIFACTS_DIR) {
+        Ok(be) => be,
         Err(e) => {
-            eprintln!("SKIP bench_attention: {e:#} (run `make artifacts`)");
+            eprintln!("SKIP bench_attention: {e:#} (run `make artifacts` for BENCH_BACKEND=xla)");
             return;
         }
     };
     let quick = std::env::var("BENCH_QUICK").is_ok();
-    fig23_speed::run(&mut rt, sagebwd::DEFAULT_RESULTS_DIR, quick)
+    fig23_speed::run(be.as_mut(), sagebwd::DEFAULT_RESULTS_DIR, quick)
         .expect("fig23 bench failed");
 }

@@ -2,6 +2,11 @@
 //!
 //! Grammar: `sagebwd <subcommand> [--flag] [--key value]...` with
 //! typed accessors, defaults, and generated usage text.
+//!
+//! Flags shared across subcommands (resolved in `main.rs`): `--artifacts`,
+//! `--results`, and `--backend native|xla` — the kernel-executor selector
+//! introduced with the native CPU backend (DESIGN.md §4; `native` needs no
+//! artifacts, `xla` is the unchanged AOT path).
 
 use std::collections::BTreeMap;
 

@@ -8,7 +8,7 @@
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::thread::JoinHandle;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::data::corpus::Corpus;
 use crate::data::tokenizer::Tokenizer;
@@ -81,27 +81,49 @@ impl Batcher {
     }
 }
 
-/// Prefetching wrapper: runs a [`Batcher`] on a worker thread with a
+/// Anything that can feed the prefetch thread.  [`Batcher`] is the
+/// production source; tests inject failing sources to pin down error
+/// propagation.
+pub trait BatchSource: Send {
+    fn next_batch(&mut self) -> Result<Batch>;
+}
+
+impl BatchSource for Batcher {
+    fn next_batch(&mut self) -> Result<Batch> {
+        Batcher::next_batch(self)
+    }
+}
+
+/// Prefetching wrapper: runs a [`BatchSource`] on a worker thread with a
 /// bounded queue (backpressure = queue depth).
+///
+/// Error contract: the worker sends `Result<Batch>` through the channel,
+/// so a source failure reaches the consumer *as the original error* on the
+/// next [`Self::next_batch`] call (previously the worker silently closed
+/// the channel and the consumer saw a bare `RecvError`).
 pub struct PrefetchBatcher {
-    rx: Receiver<Batch>,
+    rx: Receiver<Result<Batch>>,
     handle: Option<JoinHandle<()>>,
 }
 
 impl PrefetchBatcher {
-    pub fn spawn(mut inner: Batcher, depth: usize) -> PrefetchBatcher {
+    pub fn spawn(inner: Batcher, depth: usize) -> PrefetchBatcher {
+        PrefetchBatcher::spawn_source(Box::new(inner), depth)
+    }
+
+    /// Spawn over any source (tests use failing sources).
+    pub fn spawn_source(mut inner: Box<dyn BatchSource>, depth: usize) -> PrefetchBatcher {
         let (tx, rx) = sync_channel(depth.max(1));
         let handle = std::thread::Builder::new()
             .name("batch-prefetch".into())
-            .spawn(move || {
-                loop {
-                    let batch = match inner.next_batch() {
-                        Ok(b) => b,
-                        Err(_) => break,
-                    };
-                    if tx.send(batch).is_err() {
-                        break; // consumer dropped
-                    }
+            .spawn(move || loop {
+                let item = inner.next_batch();
+                let stop = item.is_err();
+                if tx.send(item).is_err() {
+                    break; // consumer dropped
+                }
+                if stop {
+                    break; // error delivered; the stream is over
                 }
             })
             .expect("spawning prefetch thread");
@@ -112,14 +134,20 @@ impl PrefetchBatcher {
     }
 
     pub fn next_batch(&mut self) -> Result<Batch> {
-        Ok(self.rx.recv()?)
+        match self.rx.recv() {
+            Ok(item) => item,
+            // The worker only disconnects after delivering its final
+            // Ok/Err item, so reaching here means the caller kept reading
+            // past a reported error (or the worker panicked).
+            Err(_) => bail!("batch stream ended (worker already reported an error or shut down)"),
+        }
     }
 }
 
 impl Drop for PrefetchBatcher {
     fn drop(&mut self) {
         // Close the channel, then join the worker.
-        let (_tx, rx) = sync_channel::<Batch>(1);
+        let (_tx, rx) = sync_channel::<Result<Batch>>(1);
         let old = std::mem::replace(&mut self.rx, rx);
         drop(old);
         if let Some(h) = self.handle.take() {
@@ -186,5 +214,53 @@ mod tests {
     fn prefetch_drop_is_clean() {
         let pre = PrefetchBatcher::spawn(Batcher::new(tok(), 5, 0, 2, 16), 2);
         drop(pre); // must not hang or panic
+    }
+
+    /// A source that yields `good` batches and then fails — the regression
+    /// harness for worker-error propagation.
+    struct FailingSource {
+        inner: Batcher,
+        good: usize,
+    }
+
+    impl BatchSource for FailingSource {
+        fn next_batch(&mut self) -> Result<Batch> {
+            if self.good == 0 {
+                anyhow::bail!("corpus shard went away mid-stream");
+            }
+            self.good -= 1;
+            self.inner.next_batch()
+        }
+    }
+
+    #[test]
+    fn worker_error_reaches_consumer_verbatim() {
+        let source = FailingSource {
+            inner: Batcher::new(tok(), 9, 0, 2, 8),
+            good: 2,
+        };
+        let mut pre = PrefetchBatcher::spawn_source(Box::new(source), 4);
+        assert!(pre.next_batch().is_ok());
+        assert!(pre.next_batch().is_ok());
+        let err = pre.next_batch().unwrap_err();
+        assert!(
+            format!("{err:#}").contains("corpus shard went away"),
+            "original error lost: {err:#}"
+        );
+        // Reading past the failure is a distinct, explicit error — not a
+        // panic and not a bare RecvError.
+        let after = pre.next_batch().unwrap_err();
+        assert!(format!("{after:#}").contains("batch stream ended"));
+    }
+
+    #[test]
+    fn immediate_worker_error_propagates() {
+        let source = FailingSource {
+            inner: Batcher::new(tok(), 9, 0, 1, 8),
+            good: 0,
+        };
+        let mut pre = PrefetchBatcher::spawn_source(Box::new(source), 1);
+        let err = pre.next_batch().unwrap_err();
+        assert!(format!("{err:#}").contains("corpus shard went away"));
     }
 }

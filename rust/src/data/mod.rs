@@ -5,7 +5,7 @@ pub mod batcher;
 pub mod corpus;
 pub mod tokenizer;
 
-pub use batcher::{Batch, Batcher, PrefetchBatcher};
+pub use batcher::{Batch, BatchSource, Batcher, PrefetchBatcher};
 pub use corpus::Corpus;
 pub use tokenizer::Tokenizer;
 

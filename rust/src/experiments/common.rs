@@ -6,7 +6,7 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use crate::bench::Table;
-use crate::runtime::{Runtime, Value};
+use crate::runtime::{AttentionBackend, Value};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
 
@@ -46,10 +46,15 @@ pub fn gaussian_qkvdo(
     ]
 }
 
-/// Execute a `trace_*` artifact on (Q, K, V, dO).
-pub fn run_trace(rt: &mut Runtime, artifact: &str, qkvdo: &[Tensor; 4]) -> Result<Trace> {
+/// Execute a `trace_*` artifact on (Q, K, V, dO) via any backend
+/// (`--backend native` needs no artifacts at all — DESIGN.md §4).
+pub fn run_trace(
+    be: &mut dyn AttentionBackend,
+    artifact: &str,
+    qkvdo: &[Tensor; 4],
+) -> Result<Trace> {
     let inputs: Vec<Value> = qkvdo.iter().map(|t| Value::F32(t.clone())).collect();
-    let out = rt
+    let out = be
         .execute(artifact, &inputs)
         .with_context(|| format!("running trace artifact {artifact}"))?;
     let mut it = out.into_iter();

@@ -5,7 +5,7 @@ use anyhow::Result;
 
 use crate::bench::Table;
 use crate::experiments::common::{emit, fmt_sci, gaussian_qkvdo, run_trace};
-use crate::runtime::Runtime;
+use crate::runtime::AttentionBackend;
 
 pub struct Row {
     pub n: usize,
@@ -14,7 +14,7 @@ pub struct Row {
     pub rms_ds: f64,
 }
 
-pub fn run(rt: &mut Runtime, results_dir: &str) -> Result<Vec<Row>> {
+pub fn run(be: &mut dyn AttentionBackend, results_dir: &str) -> Result<Vec<Row>> {
     println!("§4.2 probe: RMS magnitudes of P, dP, dS (trained-regime surrogate inputs)");
     println!("(paper at N=4096: RMS(P)≈5e-3, RMS(dP)≈5e-5, RMS(dS)≈1e-7)\n");
     let mut table = Table::new(&["N", "rms_P", "rms_dP", "rms_dS", "dP/dS ratio", "1/sqrt(N)"]);
@@ -22,7 +22,7 @@ pub fn run(rt: &mut Runtime, results_dir: &str) -> Result<Vec<Row>> {
     for (artifact, n) in [("trace_fpa", 128usize), ("trace_fpa_n512", 512usize)] {
         // Small upstream gradients emulate the trained regime (§4.2).
         let qkvdo = gaussian_qkvdo(n, 64, 1.0, 1.0, 1.0, 1e-3, 99);
-        let tr = run_trace(rt, artifact, &qkvdo)?;
+        let tr = run_trace(be, artifact, &qkvdo)?;
         table.row(vec![
             n.to_string(),
             fmt_sci(tr.rms_p),

@@ -15,7 +15,7 @@ use anyhow::Result;
 
 use crate::bench::{run as bench_run, BenchConfig, Table};
 use crate::experiments::common::{emit, gaussian_qkvdo};
-use crate::runtime::{Runtime, Value};
+use crate::runtime::{AttentionBackend, Value};
 
 pub const SEQ_LENS: &[usize] = &[128, 256, 512];
 pub const HEAD_DIMS: &[usize] = &[64, 128];
@@ -56,7 +56,7 @@ pub struct Row {
 }
 
 /// Measure every (impl, mode, d, n) artifact and emit both readings.
-pub fn run(rt: &mut Runtime, results_dir: &str, quick: bool) -> Result<Vec<Row>> {
+pub fn run(be: &mut dyn AttentionBackend, results_dir: &str, quick: bool) -> Result<Vec<Row>> {
     let cfg = if quick {
         BenchConfig { warmup_iters: 1, iters: 5, max_secs: 5.0 }
     } else {
@@ -80,9 +80,11 @@ pub fn run(rt: &mut Runtime, results_dir: &str, quick: bool) -> Result<Vec<Row>>
                         .iter()
                         .map(|t| Value::F32(t.clone()))
                         .collect();
-                    let exe = rt.load(&artifact)?;
+                    // Warm once (XLA compiles here; native is a no-op), so
+                    // the timed loop sees the steady state for both backends.
+                    be.execute(&artifact, &inputs)?;
                     let meas = bench_run(cfg, &artifact, || {
-                        exe.execute(&inputs).expect("bench execution failed");
+                        be.execute(&artifact, &inputs).expect("bench execution failed");
                     });
                     let fa2_base = if mode == "fwd" { fa2_model_fwd } else { fa2_model_bwd };
                     let modeled_rel = fa2_base / modeled_time(impl_name, mode, n, d);

@@ -13,7 +13,7 @@ use anyhow::Result;
 
 use crate::bench::Table;
 use crate::experiments::common::{emit, fmt4, gaussian_qkvdo, run_trace};
-use crate::runtime::Runtime;
+use crate::runtime::AttentionBackend;
 use crate::util::stats::{cossim, rel_l2};
 
 pub const NUM_LAYERS: usize = 12;
@@ -38,7 +38,7 @@ fn layer_sigma(layer: usize) -> f32 {
     1.0 + 6.0 * (layer as f32 / (NUM_LAYERS - 1) as f32).powf(1.5)
 }
 
-pub fn run(rt: &mut Runtime, results_dir: &str) -> Result<Vec<Row>> {
+pub fn run(be: &mut dyn AttentionBackend, results_dir: &str) -> Result<Vec<Row>> {
     println!("Figures 5-6: per-layer CosSim / Rel-L2 (dQ, dK) vs exact attention");
     println!("(paper: error grows with depth; non-smoothed/non-normed settings worst)\n");
     let mut rows = Vec::new();
@@ -70,9 +70,9 @@ pub fn run(rt: &mut Runtime, results_dir: &str) -> Result<Vec<Row>> {
                 }
             }
         }
-        let fpa = run_trace(rt, "trace_fpa", &qkvdo)?;
+        let fpa = run_trace(be, "trace_fpa", &qkvdo)?;
         for &(setting, artifact) in SETTINGS {
-            let tr = run_trace(rt, artifact, &qkvdo)?;
+            let tr = run_trace(be, artifact, &qkvdo)?;
             let row = Row {
                 layer,
                 setting: setting.to_string(),

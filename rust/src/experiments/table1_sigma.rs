@@ -8,7 +8,7 @@ use anyhow::Result;
 
 use crate::bench::Table;
 use crate::experiments::common::{emit, fmt4, gaussian_qkvdo, run_trace};
-use crate::runtime::Runtime;
+use crate::runtime::AttentionBackend;
 use crate::util::stats::{cossim, rel_l2};
 
 pub const SIGMAS: &[f32] = &[1.0, 3.0, 5.0, 8.0, 10.0];
@@ -23,12 +23,12 @@ pub struct Row {
 }
 
 /// Compute one sweep row at a given σ (averaged over `reps` seeds).
-pub fn row(rt: &mut Runtime, sigma: f32, n: usize, reps: u64) -> Result<Row> {
+pub fn row(be: &mut dyn AttentionBackend, sigma: f32, n: usize, reps: u64) -> Result<Row> {
     let mut acc = [[0f64; 2]; 4];
     for rep in 0..reps {
         let qkvdo = gaussian_qkvdo(n, 64, sigma, sigma, 1.0, 1.0, 1000 + rep);
-        let sage = run_trace(rt, "trace_sage", &qkvdo)?;
-        let fpa = run_trace(rt, "trace_fpa", &qkvdo)?;
+        let sage = run_trace(be, "trace_sage", &qkvdo)?;
+        let fpa = run_trace(be, "trace_fpa", &qkvdo)?;
         for (slot, (s, f)) in [
             (&sage.o, &fpa.o),
             (&sage.dq, &fpa.dq),
@@ -55,7 +55,7 @@ pub fn row(rt: &mut Runtime, sigma: f32, n: usize, reps: u64) -> Result<Row> {
 }
 
 /// Run the full Table 1 sweep and emit it.
-pub fn run(rt: &mut Runtime, results_dir: &str, reps: u64) -> Result<Vec<Row>> {
+pub fn run(be: &mut dyn AttentionBackend, results_dir: &str, reps: u64) -> Result<Vec<Row>> {
     let mut table = Table::new(&[
         "sigma_qk", "O.cossim", "O.rel_l2", "dQ.cossim", "dQ.rel_l2",
         "dK.cossim", "dK.rel_l2", "dV.cossim", "dV.rel_l2",
@@ -66,7 +66,7 @@ pub fn run(rt: &mut Runtime, results_dir: &str, reps: u64) -> Result<Vec<Row>> {
     for &sigma in SIGMAS {
         // Inputs are scaled *before* the 1/√d attention normalization, as
         // in the paper's synthetic probe.
-        let r = row(rt, sigma, 128, reps)?;
+        let r = row(be, sigma, 128, reps)?;
         table.row(vec![
             format!("{sigma}"),
             fmt4(r.o.0), fmt4(r.o.1),

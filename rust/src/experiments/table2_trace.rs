@@ -15,7 +15,7 @@ use anyhow::Result;
 
 use crate::bench::Table;
 use crate::experiments::common::{emit, fmt4, gaussian_qkvdo, run_trace, Trace};
-use crate::runtime::Runtime;
+use crate::runtime::AttentionBackend;
 use crate::tensor::Tensor;
 use crate::util::stats::{cossim, rel_l2};
 
@@ -42,7 +42,7 @@ fn pairs<'t>(sage: &'t Trace, fpa: &'t Trace) -> Vec<(&'static str, &'t Tensor, 
 
 /// Run Table 2 with a given pseudo-quant trace artifact.
 pub fn run_with(
-    rt: &mut Runtime,
+    be: &mut dyn AttentionBackend,
     results_dir: &str,
     artifact: &str,
     csv_name: &str,
@@ -51,8 +51,8 @@ pub fn run_with(
     // σ=3 and σ=5 rows, where the dS spike is clearly visible) and small
     // upstream gradients, as measured on real checkpoints (§4.2).
     let qkvdo = gaussian_qkvdo(128, 64, 4.0, 4.0, 1.0, 0.02, 77);
-    let pseudo = run_trace(rt, artifact, &qkvdo)?;
-    let fpa = run_trace(rt, "trace_fpa", &qkvdo)?;
+    let pseudo = run_trace(be, artifact, &qkvdo)?;
+    let fpa = run_trace(be, "trace_fpa", &qkvdo)?;
 
     let mut table = Table::new(&["metric", "delta", "P", "dP", "dS", "O", "dQ", "dK", "dV"]);
     let ps = pairs(&pseudo, &fpa);
@@ -78,12 +78,12 @@ pub fn run_with(
     Ok(rows)
 }
 
-pub fn run(rt: &mut Runtime, results_dir: &str) -> Result<Vec<Row>> {
-    let rows = run_with(rt, results_dir, "trace_pseudo", "table2_trace")?;
+pub fn run(be: &mut dyn AttentionBackend, results_dir: &str) -> Result<Vec<Row>> {
+    let rows = run_with(be, results_dir, "trace_pseudo", "table2_trace")?;
     // Extension (§7 future work): FP-dS variant.  Expected finding
     // (EXPERIMENTS.md §Extensions): barely better — dS's error is
     // inherited from the quantized forward, not from ψ(dS) itself.
-    let ext = run_with(rt, results_dir, "trace_pseudo_dsfp", "table2_trace_dsfp")?;
+    let ext = run_with(be, results_dir, "trace_pseudo_dsfp", "table2_trace_dsfp")?;
     let dq_int8 = rows.iter().find(|r| r.name == "dQ").map(|r| r.rel_l2).unwrap_or(0.0);
     let dq_dsfp = ext.iter().find(|r| r.name == "dQ").map(|r| r.rel_l2).unwrap_or(0.0);
     println!(

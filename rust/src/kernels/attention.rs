@@ -1,0 +1,716 @@
+//! Native CPU SageBwd attention: tiled FlashAttention-2-style forward and
+//! backward passes with per-block INT8 quantization (Algorithms 1 & 2),
+//! plus the exact FPA oracle and the §5.4 pseudo-quantized trace.
+//!
+//! This is the Rust twin of `python/compile/kernels/ref.py` — the
+//! block-faithful reference the Pallas kernels are tested against — so the
+//! same golden vectors validate both sides (rust/tests/kernel_golden.rs).
+//!
+//! Paper structure mirrored here:
+//!
+//! * forward (Alg 1): per-block ψ(Q), ψ(K), ψ(V); online softmax over KV
+//!   tiles; per-*token* ψ(P̃) before the P̃·V matmul.
+//! * backward (Alg 2): recompute S from the quantized Q/K tiles, per-block
+//!   ψ(P) and ψ(dO) for dV, **dP = dO·Vᵀ kept in full precision** (the
+//!   paper's insight (ii): dS = P∘(dP − δ) is the dominant error source,
+//!   so its ingredients stay exact), per-block ψ(dS) for dQ/dK (or the §7
+//!   FP-dS variant when `quant_ds` is off).
+//! * K-smoothing (§3): channel-mean subtraction folded into the softmax —
+//!   row-invariant in the forward, gradient-free in the backward because
+//!   every dS row sums to zero.
+
+use anyhow::{bail, Result};
+
+use crate::kernels::quant;
+use crate::kernels::smoothing;
+use crate::tensor::Tensor;
+
+/// Kernel configuration (mirrors `python/compile/configs.TraceConfig`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AttnConfig {
+    pub block_q: usize,
+    pub block_kv: usize,
+    pub causal: bool,
+    pub k_smoothing: bool,
+    pub q_smoothing: bool,
+    /// INT8-quantize dS before the dQ/dK matmuls (paper default).  `false`
+    /// is the §7 future-work FP-dS variant (4-of-7 INT8 MMs).
+    pub quant_ds: bool,
+}
+
+impl Default for AttnConfig {
+    fn default() -> AttnConfig {
+        AttnConfig {
+            block_q: 32,
+            block_kv: 32,
+            causal: false,
+            k_smoothing: true,
+            q_smoothing: false,
+            quant_ds: true,
+        }
+    }
+}
+
+/// Everything the paper's error analysis inspects (§5.4, Table 2) —
+/// index-aligned with `ref.AttnIntermediates`.
+#[derive(Debug, Clone)]
+pub struct AttnTrace {
+    pub o: Tensor,      // (N, D) attention output
+    pub s: Tensor,      // (N, N) logits Q·Kᵀ/√d
+    pub p: Tensor,      // (N, N) softmax(S)
+    pub lse: Vec<f32>,  // (N,)   row logsumexp of S
+    pub delta: Tensor,  // (N,)   rowsum(dO ∘ O)
+    pub dp: Tensor,     // (N, N) dO·Vᵀ
+    pub ds: Tensor,     // (N, N) P ∘ (dP − δ·1ᵀ)
+    pub dq: Tensor,     // (N, D)
+    pub dk: Tensor,     // (N, D)
+    pub dv: Tensor,     // (N, D)
+}
+
+fn check_inputs(q: &Tensor, k: &Tensor, v: &Tensor) -> Result<(usize, usize)> {
+    let (n, d) = q.dims2()?;
+    if k.shape != q.shape || v.shape != q.shape {
+        bail!(
+            "attention wants equal (N, D) shapes, got q={:?} k={:?} v={:?}",
+            q.shape,
+            k.shape,
+            v.shape
+        );
+    }
+    Ok((n, d))
+}
+
+fn rowsum_mul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (n, d) = a.dims2()?;
+    let mut out = vec![0f32; n];
+    for (o, (ra, rb)) in out
+        .iter_mut()
+        .zip(a.data.chunks_exact(d).zip(b.data.chunks_exact(d)))
+    {
+        for (&x, &y) in ra.iter().zip(rb) {
+            *o += x * y;
+        }
+    }
+    Tensor::from_vec(&[n], out)
+}
+
+// ---------------------------------------------------------------------------
+// Exact full-precision attention (FPA) — the ground-truth oracle
+// ---------------------------------------------------------------------------
+
+fn masked_logits(q: &Tensor, k: &Tensor, causal: bool) -> Result<Tensor> {
+    let (n, d) = check_inputs(q, k, k)?;
+    let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+    let mut s = q.matmul_nt(k)?;
+    s.scale(inv_sqrt_d);
+    if causal {
+        for i in 0..n {
+            for j in i + 1..n {
+                s.data[i * n + j] = f32::NEG_INFINITY;
+            }
+        }
+    }
+    Ok(s)
+}
+
+/// Exact attention forward.  Returns `(O, S, P, lse)`.
+pub fn fpa_fwd(q: &Tensor, k: &Tensor, v: &Tensor, causal: bool) -> Result<(Tensor, Tensor, Tensor, Vec<f32>)> {
+    check_inputs(q, k, v)?;
+    let s = masked_logits(q, k, causal)?;
+    let (p, lse) = s.softmax_rows()?;
+    let o = p.matmul(v)?;
+    Ok((o, s, p, lse))
+}
+
+/// Exact attention forward+backward with every intermediate (paper §3):
+///
+///     dV = Pᵀ·dO,  dP = dO·Vᵀ,  δ = rowsum(dO ∘ O),
+///     dS = P ∘ (dP − δ·1ᵀ),  dQ = dS·K/√d,  dK = dSᵀ·Q/√d.
+pub fn fpa_bwd(q: &Tensor, k: &Tensor, v: &Tensor, do_: &Tensor, causal: bool) -> Result<AttnTrace> {
+    let (n, d) = check_inputs(q, k, v)?;
+    if do_.shape != q.shape {
+        bail!("dO shape {:?} != {:?}", do_.shape, q.shape);
+    }
+    let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+    let (o, s, p, lse) = fpa_fwd(q, k, v, causal)?;
+    let dv = p.matmul_tn(do_)?;
+    let dp = do_.matmul_nt(v)?;
+    let delta = rowsum_mul(do_, &o)?;
+    let mut ds = Tensor::zeros(&[n, n]);
+    for i in 0..n {
+        let di = delta.data[i];
+        for j in 0..n {
+            ds.data[i * n + j] = p.data[i * n + j] * (dp.data[i * n + j] - di);
+        }
+    }
+    let mut dq = ds.matmul(k)?;
+    dq.scale(inv_sqrt_d);
+    let mut dk = ds.matmul_tn(q)?;
+    dk.scale(inv_sqrt_d);
+    Ok(AttnTrace { o, s, p, lse, delta, dp, ds, dq, dk, dv })
+}
+
+// ---------------------------------------------------------------------------
+// Tiled FP forward (the FA2 baseline of Figures 2–3)
+// ---------------------------------------------------------------------------
+
+/// FlashAttention-2-style tiled forward in full precision — the `fa2`
+/// baseline.  Bit-equal math to [`fpa_fwd`] up to summation order.
+pub fn fa2_fwd(q: &Tensor, k: &Tensor, v: &Tensor, cfg: &AttnConfig) -> Result<(Tensor, Vec<f32>)> {
+    let (n, d) = check_inputs(q, k, v)?;
+    let (bq, bkv) = (cfg.block_q, cfg.block_kv);
+    check_blocks(n, bq, bkv)?;
+    let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+    let (tm, tn) = (n / bq, n / bkv);
+
+    let mut o = vec![0f32; n * d];
+    let mut lse = vec![0f32; n];
+    for i in 0..tm {
+        let qi = q.rows(i * bq, (i + 1) * bq)?;
+        let mut acc = vec![0f32; bq * d];
+        let mut m_i = vec![f32::NEG_INFINITY; bq];
+        let mut l_i = vec![0f32; bq];
+        for j in 0..tn {
+            if cfg.causal && j * bkv > (i + 1) * bq - 1 {
+                continue;
+            }
+            let kj = k.rows(j * bkv, (j + 1) * bkv)?;
+            let vj = v.rows(j * bkv, (j + 1) * bkv)?;
+            let mut s_ij = qi.matmul_nt(&kj)?;
+            s_ij.scale(inv_sqrt_d);
+            apply_causal_tile(&mut s_ij.data, cfg.causal, i * bq, j * bkv, bq, bkv);
+            online_softmax_tile(&mut acc, &mut m_i, &mut l_i, &s_ij.data, &vj.data, bq, bkv, d, |p_ij, vj| {
+                // Full-precision P̃·V.
+                let mut pv = vec![0f32; bq * d];
+                for r in 0..bq {
+                    for (t, &pval) in p_ij[r * bkv..(r + 1) * bkv].iter().enumerate() {
+                        let vrow = &vj[t * d..(t + 1) * d];
+                        let out = &mut pv[r * d..(r + 1) * d];
+                        for (ov, &vv) in out.iter_mut().zip(vrow) {
+                            *ov += pval * vv;
+                        }
+                    }
+                }
+                pv
+            });
+        }
+        finish_block(&mut o, &mut lse, i * bq, &acc, &m_i, &l_i, d);
+    }
+    Ok((Tensor::from_vec(&[n, d], o)?, lse))
+}
+
+fn check_blocks(n: usize, bq: usize, bkv: usize) -> Result<()> {
+    if bq == 0 || bkv == 0 || n % bq != 0 || n % bkv != 0 {
+        bail!("N={n} not divisible by block_q={bq} / block_kv={bkv}");
+    }
+    Ok(())
+}
+
+/// Add the Q-smoothing rank-1 logit bias (`μ_Q·K_smᵀ / √d`) for the KV
+/// tile starting at `col0`.  No-op when the bias row is empty — i.e.
+/// Q-smoothing is off, which is the default and most registry variants.
+fn add_bias_row(s_ij: &mut [f32], bias_row: &[f32], col0: usize, bkv: usize, inv_sqrt_d: f32) {
+    if bias_row.is_empty() {
+        return;
+    }
+    let brow = &bias_row[col0..col0 + bkv];
+    for srow in s_ij.chunks_exact_mut(bkv) {
+        for (sv, &b) in srow.iter_mut().zip(brow) {
+            *sv += b * inv_sqrt_d;
+        }
+    }
+}
+
+fn apply_causal_tile(s: &mut [f32], causal: bool, row0: usize, col0: usize, bq: usize, bkv: usize) {
+    if !causal {
+        return;
+    }
+    for r in 0..bq {
+        for c in 0..bkv {
+            if row0 + r < col0 + c {
+                s[r * bkv + c] = f32::NEG_INFINITY;
+            }
+        }
+    }
+}
+
+/// One online-softmax update over a `(bq, bkv)` logit tile.  `pv_fn` maps
+/// the un-normalized tile P̃ (and the V tile) to the `(bq, d)` partial
+/// output — full precision for FA2, INT8 for SageBwd.
+#[allow(clippy::too_many_arguments)]
+fn online_softmax_tile(
+    acc: &mut [f32],
+    m_i: &mut [f32],
+    l_i: &mut [f32],
+    s_ij: &[f32],
+    vj: &[f32],
+    bq: usize,
+    bkv: usize,
+    d: usize,
+    pv_fn: impl FnOnce(&[f32], &[f32]) -> Vec<f32>,
+) {
+    let mut p_ij = vec![0f32; bq * bkv];
+    let mut corr = vec![0f32; bq];
+    for r in 0..bq {
+        let row = &s_ij[r * bkv..(r + 1) * bkv];
+        let m_new = row.iter().fold(m_i[r], |a, &b| a.max(b));
+        if m_new == f32::NEG_INFINITY {
+            // Row fully masked so far: nothing to accumulate.
+            corr[r] = 0.0;
+            continue;
+        }
+        let prow = &mut p_ij[r * bkv..(r + 1) * bkv];
+        let mut sum = 0f32;
+        for (pv, &sv) in prow.iter_mut().zip(row) {
+            let e = if sv == f32::NEG_INFINITY { 0.0 } else { (sv - m_new).exp() };
+            *pv = e;
+            sum += e;
+        }
+        corr[r] = if m_i[r] == f32::NEG_INFINITY { 0.0 } else { (m_i[r] - m_new).exp() };
+        l_i[r] = l_i[r] * corr[r] + sum;
+        m_i[r] = m_new;
+    }
+    let pv = pv_fn(p_ij.as_slice(), vj);
+    for r in 0..bq {
+        let arow = &mut acc[r * d..(r + 1) * d];
+        let prow = &pv[r * d..(r + 1) * d];
+        for (a, &x) in arow.iter_mut().zip(prow) {
+            *a = *a * corr[r] + x;
+        }
+    }
+}
+
+fn finish_block(o: &mut [f32], lse: &mut [f32], row0: usize, acc: &[f32], m_i: &[f32], l_i: &[f32], d: usize) {
+    for (r, (&m, &l)) in m_i.iter().zip(l_i).enumerate() {
+        let orow = &mut o[(row0 + r) * d..(row0 + r + 1) * d];
+        if l > 0.0 {
+            let inv = 1.0 / l;
+            for (ov, &a) in orow.iter_mut().zip(&acc[r * d..(r + 1) * d]) {
+                *ov = a * inv;
+            }
+            lse[row0 + r] = m + l.ln();
+        } else {
+            lse[row0 + r] = f32::NEG_INFINITY;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SageBwd: Algorithms 1 & 2 (block-faithful, INT8)
+// ---------------------------------------------------------------------------
+
+/// Quantized residuals the backward pass reuses (Alg 2 line 1).
+pub struct SageResiduals {
+    q_q: Vec<Vec<i8>>,
+    q_s: Vec<f32>,
+    k_q: Vec<Vec<i8>>,
+    k_s: Vec<f32>,
+    v_q: Vec<Vec<i8>>,
+    v_s: Vec<f32>,
+    mu_q: Option<Vec<f32>>,
+    /// Rank-1 logit bias row (μ_Q·K_smᵀ, length N) — empty without
+    /// Q-smoothing (the add is skipped entirely).
+    bias_row: Vec<f32>,
+}
+
+fn quantize_blocks(x: &Tensor, block: usize) -> Result<(Vec<Vec<i8>>, Vec<f32>)> {
+    let (n, _d) = x.dims2()?;
+    let mut qs = Vec::with_capacity(n / block);
+    let mut ss = Vec::with_capacity(n / block);
+    for b in 0..n / block {
+        let tile = x.rows(b * block, (b + 1) * block)?;
+        let (q, s) = quant::quantize_per_block(&tile.data);
+        qs.push(q);
+        ss.push(s);
+    }
+    Ok((qs, ss))
+}
+
+/// Algorithm 1: tiled INT8 forward.  Returns `(O, lse, residuals)`.
+pub fn sage_fwd(q: &Tensor, k: &Tensor, v: &Tensor, cfg: &AttnConfig) -> Result<(Tensor, Vec<f32>, SageResiduals)> {
+    let (n, d) = check_inputs(q, k, v)?;
+    let (bq, bkv) = (cfg.block_q, cfg.block_kv);
+    check_blocks(n, bq, bkv)?;
+    let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+
+    let k_in = if cfg.k_smoothing { smoothing::k_smooth(k)?.0 } else { k.clone() };
+    let (q_in, mu_q, bias_row) = if cfg.q_smoothing {
+        let (q_sm, mu) = smoothing::q_smooth(q)?;
+        let bias = smoothing::qk_logits_bias(&mu, &k_in)?;
+        (q_sm, Some(mu), bias)
+    } else {
+        (q.clone(), None, Vec::new())
+    };
+
+    // Per-block quantization of Q, K, V (Alg 1 line 3).
+    let (q_q, q_s) = quantize_blocks(&q_in, bq)?;
+    let (k_q, k_s) = quantize_blocks(&k_in, bkv)?;
+    let (v_q, v_s) = quantize_blocks(v, bkv)?;
+    let (tm, tn) = (n / bq, n / bkv);
+
+    let mut o = vec![0f32; n * d];
+    let mut lse = vec![0f32; n];
+    for i in 0..tm {
+        let mut acc = vec![0f32; bq * d];
+        let mut m_i = vec![f32::NEG_INFINITY; bq];
+        let mut l_i = vec![0f32; bq];
+        for j in 0..tn {
+            if cfg.causal && j * bkv > (i + 1) * bq - 1 {
+                continue;
+            }
+            // S̃_ij = ψ(Q)_i · ψ(K)_jᵀ · δ_Q δ_K / √d  (+ Q-smoothing bias).
+            let acc_i32 = quant::int8_gemm_nt(&q_q[i], &k_q[j], bq, d, bkv);
+            let mut s_ij = quant::scale_product(&acc_i32, q_s[i] * k_s[j], inv_sqrt_d);
+            add_bias_row(&mut s_ij, &bias_row, j * bkv, bkv, inv_sqrt_d);
+            apply_causal_tile(&mut s_ij, cfg.causal, i * bq, j * bkv, bq, bkv);
+            let (v_qj, v_sj) = (&v_q[j], v_s[j]);
+            online_softmax_tile(
+                &mut acc, &mut m_i, &mut l_i, &s_ij, &[], bq, bkv, d,
+                |p_ij, _| {
+                    // Per-token ψ(P̃) (Alg 1 line 9), then exact INT8 P̃·V.
+                    let (p_q8, p_scales) = quant::quantize_per_token(p_ij, bq, bkv);
+                    let pv_i32 = quant::int8_gemm(&p_q8, v_qj, bq, bkv, d);
+                    quant::scale_product_rows(&pv_i32, &p_scales, v_sj, d)
+                },
+            );
+        }
+        finish_block(&mut o, &mut lse, i * bq, &acc, &m_i, &l_i, d);
+    }
+    Ok((
+        Tensor::from_vec(&[n, d], o)?,
+        lse,
+        SageResiduals { q_q, q_s, k_q, k_s, v_q, v_s, mu_q, bias_row },
+    ))
+}
+
+/// Algorithms 1+2: INT8 forward + backward with every intermediate
+/// materialized for the error analysis.
+pub fn sage_bwd(q: &Tensor, k: &Tensor, v: &Tensor, do_: &Tensor, cfg: &AttnConfig) -> Result<AttnTrace> {
+    let (n, d) = check_inputs(q, k, v)?;
+    if do_.shape != q.shape {
+        bail!("dO shape {:?} != {:?}", do_.shape, q.shape);
+    }
+    let (bq, bkv) = (cfg.block_q, cfg.block_kv);
+    let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+    let (o, lse, res) = sage_fwd(q, k, v, cfg)?;
+    let delta = rowsum_mul(do_, &o)?;
+    let (tm, tn) = (n / bq, n / bkv);
+
+    let mut dq = Tensor::zeros(&[n, d]);
+    let mut dk = Tensor::zeros(&[n, d]);
+    let mut dv = Tensor::zeros(&[n, d]);
+    let mut s_full = Tensor::zeros(&[n, n]);
+    let mut p_full = Tensor::zeros(&[n, n]);
+    let mut dp_full = Tensor::zeros(&[n, n]);
+    let mut ds_full = Tensor::zeros(&[n, n]);
+
+    // ψ(dO) depends only on the query tile — quantize each once, not per
+    // (j, i) pair (Alg 2 line 6; bit-identical, tn× less work).
+    let mut do_tiles = Vec::with_capacity(tm);
+    for i in 0..tm {
+        let doi = do_.rows(i * bq, (i + 1) * bq)?;
+        let (do_q8, do_s) = quant::quantize_per_block(&doi.data);
+        do_tiles.push((doi, do_q8, do_s));
+    }
+
+    for j in 0..tn {
+        let vj = v.rows(j * bkv, (j + 1) * bkv)?;
+        for i in 0..tm {
+            if cfg.causal && j * bkv > (i + 1) * bq - 1 {
+                continue;
+            }
+            let (doi, do_q8, do_s) = &do_tiles[i];
+            // Recompute S̃_ij from the stored quantized tiles (Alg 2 line 3).
+            let acc_i32 = quant::int8_gemm_nt(&res.q_q[i], &res.k_q[j], bq, d, bkv);
+            let mut s_ij = quant::scale_product(&acc_i32, res.q_s[i] * res.k_s[j], inv_sqrt_d);
+            add_bias_row(&mut s_ij, &res.bias_row, j * bkv, bkv, inv_sqrt_d);
+            apply_causal_tile(&mut s_ij, cfg.causal, i * bq, j * bkv, bq, bkv);
+            // P_ij = exp(S̃_ij − lse_i) — normalized this time.
+            let mut p_ij = vec![0f32; bq * bkv];
+            for r in 0..bq {
+                let l = lse[i * bq + r];
+                if l == f32::NEG_INFINITY {
+                    continue;
+                }
+                for c in 0..bkv {
+                    let sv = s_ij[r * bkv + c];
+                    if sv != f32::NEG_INFINITY {
+                        p_ij[r * bkv + c] = (sv - l).exp();
+                    }
+                }
+            }
+
+            // Alg 2 line 6: per-block ψ(P) (ψ(dO) precomputed) → INT8 dV.
+            let (p_q8, p_s) = quant::quantize_per_block(&p_ij);
+            let dv_i32 = quant::int8_gemm_tn(&p_q8, do_q8, bq, bkv, d);
+            let dv_ij = quant::scale_product(&dv_i32, p_s, *do_s);
+            for (dst, &x) in dv.data[j * bkv * d..(j + 1) * bkv * d].iter_mut().zip(&dv_ij) {
+                *dst += x;
+            }
+
+            // Alg 2 line 8: dP = dO·Vᵀ in full precision.
+            let dp_ij = doi.matmul_nt(&vj)?;
+            let mut ds_ij = vec![0f32; bq * bkv];
+            for r in 0..bq {
+                let di = delta.data[i * bq + r];
+                for c in 0..bkv {
+                    ds_ij[r * bkv + c] = p_ij[r * bkv + c] * (dp_ij.data[r * bkv + c] - di);
+                }
+            }
+
+            // Alg 2 line 9: ψ(dS) → INT8 dQ/dK (or the §7 FP-dS path).
+            let (dq_ij, dk_ij) = if cfg.quant_ds {
+                let (ds_q8, ds_s) = quant::quantize_per_block(&ds_ij);
+                let dq_i32 = quant::int8_gemm(&ds_q8, &res.k_q[j], bq, bkv, d);
+                let dk_i32 = quant::int8_gemm_tn(&ds_q8, &res.q_q[i], bq, bkv, d);
+                (
+                    quant::scale_product(&dq_i32, ds_s * res.k_s[j], inv_sqrt_d),
+                    quant::scale_product(&dk_i32, ds_s * res.q_s[i], inv_sqrt_d),
+                )
+            } else {
+                let ds_t = Tensor::from_vec(&[bq, bkv], ds_ij.clone())?;
+                let k_deq = Tensor::from_vec(&[bkv, d], quant::dequantize(&res.k_q[j], res.k_s[j]))?;
+                let q_deq = Tensor::from_vec(&[bq, d], quant::dequantize(&res.q_q[i], res.q_s[i]))?;
+                let mut dq_t = ds_t.matmul(&k_deq)?;
+                dq_t.scale(inv_sqrt_d);
+                let mut dk_t = ds_t.matmul_tn(&q_deq)?;
+                dk_t.scale(inv_sqrt_d);
+                (dq_t.data, dk_t.data)
+            };
+            for (dst, &x) in dq.data[i * bq * d..(i + 1) * bq * d].iter_mut().zip(&dq_ij) {
+                *dst += x;
+            }
+            for (dst, &x) in dk.data[j * bkv * d..(j + 1) * bkv * d].iter_mut().zip(&dk_ij) {
+                *dst += x;
+            }
+
+            // Materialize the big intermediates for the error analysis.
+            for r in 0..bq {
+                let row = i * bq + r;
+                let dst = row * n + j * bkv;
+                s_full.data[dst..dst + bkv].copy_from_slice(&s_ij[r * bkv..(r + 1) * bkv]);
+                p_full.data[dst..dst + bkv].copy_from_slice(&p_ij[r * bkv..(r + 1) * bkv]);
+                dp_full.data[dst..dst + bkv].copy_from_slice(&dp_ij.data[r * bkv..(r + 1) * bkv]);
+                ds_full.data[dst..dst + bkv].copy_from_slice(&ds_ij[r * bkv..(r + 1) * bkv]);
+            }
+        }
+    }
+
+    if cfg.q_smoothing {
+        if let Some(mu_q) = &res.mu_q {
+            // §6: dK = dSᵀ·Q_sm + (dSᵀ·1)·μ_Qᵀ — add the bias branch back.
+            let mut bias = smoothing::dk_bias_branch(&ds_full, mu_q)?;
+            bias.scale(inv_sqrt_d);
+            dk.add_assign(&bias);
+        }
+    }
+
+    Ok(AttnTrace {
+        o,
+        s: s_full,
+        p: p_full,
+        lse,
+        delta,
+        dp: dp_full,
+        ds: ds_full,
+        dq,
+        dk,
+        dv,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// §5.4 pseudo-quantized FPA trace (Table 2, Figures 5/6)
+// ---------------------------------------------------------------------------
+
+/// Apply SageBwd's INT8 quantize-dequantize before each quantized matmul in
+/// a plain attention implementation (paper §5.4).
+///
+/// dP is exact because the upstream dO is treated as error-free and the
+/// dO·Vᵀ product stays in high precision — reproducing Table 2's
+/// `Rel-L2(dP) = 0.0000` row.
+pub fn pseudo_quant_trace(q: &Tensor, k: &Tensor, v: &Tensor, do_: &Tensor, cfg: &AttnConfig) -> Result<AttnTrace> {
+    let (n, d) = check_inputs(q, k, v)?;
+    if do_.shape != q.shape {
+        bail!("dO shape {:?} != {:?}", do_.shape, q.shape);
+    }
+    let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+
+    let k_in = if cfg.k_smoothing { smoothing::k_smooth(k)?.0 } else { k.clone() };
+    let (q_in, mu_q, bias) = if cfg.q_smoothing {
+        let (q_sm, mu) = smoothing::q_smooth(q)?;
+        let b = smoothing::qk_logits_bias(&mu, &k_in)?;
+        (q_sm, Some(mu), b)
+    } else {
+        (q.clone(), None, vec![0f32; n])
+    };
+
+    let q_fq = Tensor::from_vec(&[n, d], quant::fake_quant_block(&q_in.data))?;
+    let k_fq = Tensor::from_vec(&[n, d], quant::fake_quant_block(&k_in.data))?;
+    let v_fq = Tensor::from_vec(&[n, d], quant::fake_quant_block(&v.data))?;
+
+    let mut s = q_fq.matmul_nt(&k_fq)?;
+    for row in s.data.chunks_exact_mut(n) {
+        for (sv, &b) in row.iter_mut().zip(&bias) {
+            *sv += b;
+        }
+    }
+    s.scale(inv_sqrt_d);
+    if cfg.causal {
+        for i in 0..n {
+            for j in i + 1..n {
+                s.data[i * n + j] = f32::NEG_INFINITY;
+            }
+        }
+    }
+    let (p, lse) = s.softmax_rows()?;
+
+    let p_fq_token = Tensor::from_vec(&[n, n], quant::fake_quant_token(&p.data, n, n))?;
+    let o = p_fq_token.matmul(&v_fq)?;
+
+    // Backward: quant-dequant before each SageBwd-quantized MM.
+    let p_fq_blk = Tensor::from_vec(&[n, n], quant::fake_quant_block(&p.data))?;
+    let do_fq = Tensor::from_vec(&[n, d], quant::fake_quant_block(&do_.data))?;
+    let dv = p_fq_blk.matmul_tn(&do_fq)?;
+    let dp = do_.matmul_nt(v)?; // FP16 path — exact here
+    let delta = rowsum_mul(do_, &o)?;
+    let mut ds = Tensor::zeros(&[n, n]);
+    for i in 0..n {
+        let di = delta.data[i];
+        for j in 0..n {
+            ds.data[i * n + j] = p.data[i * n + j] * (dp.data[i * n + j] - di);
+        }
+    }
+    let ds_fq = if cfg.quant_ds {
+        Tensor::from_vec(&[n, n], quant::fake_quant_block(&ds.data))?
+    } else {
+        ds.clone()
+    };
+    let mut dq = ds_fq.matmul(&k_fq)?;
+    dq.scale(inv_sqrt_d);
+    let mut dk = ds_fq.matmul_tn(&q_fq)?;
+    dk.scale(inv_sqrt_d);
+    if let Some(mu_q) = &mu_q {
+        let mut bias_branch = smoothing::dk_bias_branch(&ds, mu_q)?;
+        bias_branch.scale(inv_sqrt_d);
+        dk.add_assign(&bias_branch);
+    }
+    Ok(AttnTrace { o, s, p, lse, delta, dp, ds, dq, dk, dv })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::common::gaussian_qkvdo;
+    use crate::util::stats::{cossim, rel_l2};
+
+    fn inputs(n: usize, d: usize, sigma: f32, seed: u64) -> [Tensor; 4] {
+        gaussian_qkvdo(n, d, sigma, sigma, 1.0, 1.0, seed)
+    }
+
+    #[test]
+    fn fpa_softmax_rows_sum_to_one() {
+        let [q, k, v, _] = inputs(64, 16, 1.0, 1);
+        let (_, _, p, _) = fpa_fwd(&q, &k, &v, false).unwrap();
+        for row in p.data.chunks(64) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "row sum {s}");
+        }
+    }
+
+    #[test]
+    fn fpa_ds_rows_sum_to_zero() {
+        // The K-smoothing gradient identity (§6): every dS row sums to 0.
+        let [q, k, v, do_] = inputs(64, 16, 1.0, 2);
+        let tr = fpa_bwd(&q, &k, &v, &do_, false).unwrap();
+        for row in tr.ds.data.chunks(64) {
+            let s: f32 = row.iter().sum();
+            assert!(s.abs() < 1e-4, "dS row sum {s}");
+        }
+    }
+
+    #[test]
+    fn fa2_tiling_matches_fpa_exactly() {
+        let [q, k, v, _] = inputs(64, 16, 1.0, 3);
+        let cfg = AttnConfig { block_q: 16, block_kv: 16, ..Default::default() };
+        let (o_fa2, lse_fa2) = fa2_fwd(&q, &k, &v, &cfg).unwrap();
+        let (o_fpa, _, _, lse_fpa) = fpa_fwd(&q, &k, &v, false).unwrap();
+        assert!(o_fa2.rel_l2(&o_fpa) < 1e-5, "rel {}", o_fa2.rel_l2(&o_fpa));
+        for (a, b) in lse_fa2.iter().zip(&lse_fpa) {
+            assert!((a - b).abs() < 1e-4, "lse {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn fa2_causal_matches_fpa_causal() {
+        let [q, k, v, _] = inputs(64, 16, 1.0, 4);
+        let cfg = AttnConfig { block_q: 16, block_kv: 16, causal: true, ..Default::default() };
+        let (o_fa2, _) = fa2_fwd(&q, &k, &v, &cfg).unwrap();
+        let (o_fpa, _, _, _) = fpa_fwd(&q, &k, &v, true).unwrap();
+        assert!(o_fa2.rel_l2(&o_fpa) < 1e-5);
+    }
+
+    #[test]
+    fn sage_close_to_fpa_at_unit_sigma() {
+        // Table 1's σ=1 row: cossim ≥ 0.999 on O/dV, ≥ 0.99 on dQ/dK.
+        let [q, k, v, do_] = inputs(64, 32, 1.0, 5);
+        let cfg = AttnConfig { block_q: 16, block_kv: 16, ..Default::default() };
+        let sage = sage_bwd(&q, &k, &v, &do_, &cfg).unwrap();
+        let fpa = fpa_bwd(&q, &k, &v, &do_, false).unwrap();
+        for (name, s, f, min_cos) in [
+            ("o", &sage.o, &fpa.o, 0.999),
+            ("dq", &sage.dq, &fpa.dq, 0.99),
+            ("dk", &sage.dk, &fpa.dk, 0.99),
+            ("dv", &sage.dv, &fpa.dv, 0.999),
+        ] {
+            let c = cossim(&s.data, &f.data);
+            assert!(c > min_cos, "{name}: cossim {c}");
+        }
+    }
+
+    #[test]
+    fn sage_backward_is_finite_and_sized() {
+        let [q, k, v, do_] = inputs(64, 16, 2.0, 6);
+        let cfg = AttnConfig { block_q: 32, block_kv: 32, ..Default::default() };
+        let tr = sage_bwd(&q, &k, &v, &do_, &cfg).unwrap();
+        for (name, t) in [("o", &tr.o), ("dq", &tr.dq), ("dk", &tr.dk), ("dv", &tr.dv)] {
+            assert_eq!(t.shape, vec![64, 16], "{name}");
+            assert!(t.is_finite(), "{name} has non-finite values");
+        }
+        assert_eq!(tr.delta.shape, vec![64]);
+        assert_eq!(tr.p.shape, vec![64, 64]);
+    }
+
+    #[test]
+    fn pseudo_dp_is_exact() {
+        // Table 2's structural property: the dP matmul stays full precision.
+        let [q, k, v, do_] = inputs(64, 16, 4.0, 7);
+        let pseudo = pseudo_quant_trace(&q, &k, &v, &do_, &AttnConfig::default()).unwrap();
+        let fpa = fpa_bwd(&q, &k, &v, &do_, false).unwrap();
+        assert!(rel_l2(&pseudo.dp.data, &fpa.dp.data) < 1e-6);
+    }
+
+    #[test]
+    fn fp_ds_variant_at_least_as_accurate() {
+        let [q, k, v, do_] = inputs(64, 16, 4.0, 8);
+        let int8 = pseudo_quant_trace(&q, &k, &v, &do_, &AttnConfig::default()).unwrap();
+        let fpds = pseudo_quant_trace(
+            &q, &k, &v, &do_,
+            &AttnConfig { quant_ds: false, ..Default::default() },
+        )
+        .unwrap();
+        let fpa = fpa_bwd(&q, &k, &v, &do_, false).unwrap();
+        let r_int8 = rel_l2(&int8.dq.data, &fpa.dq.data);
+        let r_fpds = rel_l2(&fpds.dq.data, &fpa.dq.data);
+        assert!(r_fpds <= r_int8 * 1.05, "fp-dS {r_fpds} vs int8 {r_int8}");
+    }
+
+    #[test]
+    fn bad_shapes_rejected() {
+        let q = Tensor::zeros(&[32, 8]);
+        let bad = Tensor::zeros(&[16, 8]);
+        assert!(fpa_fwd(&q, &bad, &q, false).is_err());
+        assert!(sage_fwd(&q, &q, &q, &AttnConfig { block_q: 5, ..Default::default() }).is_err());
+        assert!(fpa_bwd(&q, &q, &q, &bad, false).is_err());
+    }
+}

@@ -1,0 +1,22 @@
+//! Native CPU reference kernels for SageBwd attention (DESIGN.md §3).
+//!
+//! Pure-Rust twins of `python/compile/kernels/{quant,smoothing,ref}.py`:
+//! the paper's INT8 quantizer ψ, Q/K-smoothing, the exact FPA oracle, the
+//! tiled FA2 baseline, the block-faithful Algorithms 1+2 implementation,
+//! and the §5.4 pseudo-quantized trace.  Together with
+//! [`crate::runtime::backend::NativeBackend`] they make every trace/bench
+//! experiment harness runnable with no artifacts, no Python, and no XLA
+//! runtime — `sagebwd table2 --backend native` works on a fresh checkout.
+//!
+//! | module        | contents                                              |
+//! |---------------|-------------------------------------------------------|
+//! | [`quant`]     | ψ per-block / per-token INT8, exact i32 GEMMs         |
+//! | [`smoothing`] | K/Q mean subtraction + the §6 gradient corrections    |
+//! | [`attention`] | `fpa_*`, `fa2_fwd`, `sage_fwd`/`sage_bwd`, §5.4 trace |
+
+pub mod attention;
+pub mod quant;
+pub mod smoothing;
+
+pub use attention::{fa2_fwd, fpa_bwd, fpa_fwd, pseudo_quant_trace, sage_bwd, sage_fwd};
+pub use attention::{AttnConfig, AttnTrace};

@@ -1,0 +1,273 @@
+//! INT8 quantization primitives (paper §3 "Quantization") — the native
+//! twin of `python/compile/kernels/quant.py`.
+//!
+//! The quantizer ψ used throughout Algorithms 1 and 2:
+//!
+//!     x̂ = round(x / δ),   δ = max(|x|) / 127
+//!
+//! in two granularities: per-block (one δ per FlashAttention tile — the
+//! SageBwd default) and per-token (one δ per row, used for P̃ in Alg 1
+//! line 9).  Rounding is round-half-to-even to match `jnp.round` /
+//! hardware convert instructions bit-for-bit; the integer matmuls
+//! accumulate in i32, which is exact for every shape this repo uses
+//! (|x̂| ≤ 127 ⇒ per-product ≤ 16129; N ≤ 512 rows ⇒ |Σ| < 2³³⁄₂ ≪ i32::MAX
+//! holds for all tile sizes ≤ 512 actually used: 512·16129 ≈ 8.3·10⁶).
+
+/// Largest quantized magnitude.
+pub const INT8_MAX: f32 = 127.0;
+
+/// Smallest allowed pre-division scale numerator: an all-zeros block would
+/// otherwise produce δ = 0 and NaNs on the dequant path.
+pub const EPS_SCALE: f32 = 1e-12;
+
+/// `round` with ties to even (the IEEE default, and what `jnp.round` does;
+/// `f32::round` rounds ties away from zero and would diverge from the
+/// Python reference on exact half-integers).
+#[inline]
+pub fn round_ties_even(x: f32) -> f32 {
+    let rounded = x.round();
+    if (rounded - x).abs() == 0.5 {
+        // x is an exact half-integer: pick the even neighbour.  x/2 ends in
+        // .25 or .75, so its round() is never itself a tie.
+        (x / 2.0).round() * 2.0
+    } else {
+        rounded
+    }
+}
+
+#[inline]
+fn quantize_one(x: f32, scale: f32) -> i8 {
+    round_ties_even(x / scale).clamp(-INT8_MAX, INT8_MAX) as i8
+}
+
+/// ψ with one scale for a whole tile (per-tensor over the tile — SageBwd's
+/// per-block granularity, Alg 1 line 3 / Alg 2 lines 6 & 9).
+pub fn quantize_per_block(x: &[f32]) -> (Vec<i8>, f32) {
+    let amax = x.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    let scale = amax.max(EPS_SCALE) / INT8_MAX;
+    (x.iter().map(|&v| quantize_one(v, scale)).collect(), scale)
+}
+
+/// ψ with one scale per row of a `(rows, cols)` tile (Alg 1 line 9 — each
+/// query token's P̃ row gets its own scale because rowmax(P̃) varies by
+/// orders of magnitude after the online-softmax subtraction).
+pub fn quantize_per_token(x: &[f32], rows: usize, cols: usize) -> (Vec<i8>, Vec<f32>) {
+    assert_eq!(x.len(), rows * cols);
+    let mut q = Vec::with_capacity(x.len());
+    let mut scales = Vec::with_capacity(rows);
+    for row in x.chunks_exact(cols) {
+        let amax = row.iter().fold(0f32, |m, &v| m.max(v.abs()));
+        let scale = amax.max(EPS_SCALE) / INT8_MAX;
+        scales.push(scale);
+        q.extend(row.iter().map(|&v| quantize_one(v, scale)));
+    }
+    (q, scales)
+}
+
+/// Inverse of ψ: x ≈ x̂ · δ.
+pub fn dequantize(q: &[i8], scale: f32) -> Vec<f32> {
+    q.iter().map(|&v| v as f32 * scale).collect()
+}
+
+/// Exact integer GEMM `A·B`: `(m,k) × (k,n) → (m,n)` in i32.
+pub fn int8_gemm(a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut out = vec![0i32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let acc = &mut out[i * n..(i + 1) * n];
+        for (t, &av) in arow.iter().enumerate() {
+            let av = av as i32;
+            let brow = &b[t * n..(t + 1) * n];
+            for (o, &bv) in acc.iter_mut().zip(brow) {
+                *o += av * bv as i32;
+            }
+        }
+    }
+    out
+}
+
+/// Exact integer GEMM `A·Bᵀ`: `(m,k) × (n,k) → (m,n)` — the Q̂·K̂ᵀ layout.
+pub fn int8_gemm_nt(a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    let mut out = vec![0i32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0i32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av as i32 * bv as i32;
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+/// Exact integer GEMM `Aᵀ·B`: `(k,m) × (k,n) → (m,n)` — the P̂ᵀ·d̂O layout.
+pub fn int8_gemm_tn(a: &[i8], b: &[i8], k: usize, m: usize, n: usize) -> Vec<i32> {
+    assert_eq!(a.len(), k * m);
+    assert_eq!(b.len(), k * n);
+    let mut out = vec![0i32; m * n];
+    for t in 0..k {
+        let arow = &a[t * m..(t + 1) * m];
+        let brow = &b[t * n..(t + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            let av = av as i32;
+            let acc = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in acc.iter_mut().zip(brow) {
+                *o += av * bv as i32;
+            }
+        }
+    }
+    out
+}
+
+/// Scale an exact i32 product by a single `a_scale · b_scale` pair.
+pub fn scale_product(acc: &[i32], a_scale: f32, b_scale: f32) -> Vec<f32> {
+    let s = a_scale * b_scale;
+    acc.iter().map(|&v| v as f32 * s).collect()
+}
+
+/// Scale an exact i32 product with per-row A scales and one B scale
+/// (the per-token P̃ path of Alg 1 line 9).
+pub fn scale_product_rows(
+    acc: &[i32],
+    row_scales: &[f32],
+    b_scale: f32,
+    cols: usize,
+) -> Vec<f32> {
+    assert_eq!(acc.len(), row_scales.len() * cols);
+    let mut out = Vec::with_capacity(acc.len());
+    for (row, &rs) in acc.chunks_exact(cols).zip(row_scales) {
+        let s = rs * b_scale;
+        out.extend(row.iter().map(|&v| v as f32 * s));
+    }
+    out
+}
+
+/// Quantize-dequantize round trip with per-block granularity (§5.4
+/// pseudo-quantization).
+pub fn fake_quant_block(x: &[f32]) -> Vec<f32> {
+    let (q, s) = quantize_per_block(x);
+    dequantize(&q, s)
+}
+
+/// Quantize-dequantize round trip with per-token granularity.
+pub fn fake_quant_token(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let (q, scales) = quantize_per_token(x, rows, cols);
+    let mut out = Vec::with_capacity(x.len());
+    for (row, &s) in q.chunks_exact(cols).zip(&scales) {
+        out.extend(row.iter().map(|&v| v as f32 * s));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_ties_even_matches_ieee() {
+        assert_eq!(round_ties_even(0.5), 0.0);
+        assert_eq!(round_ties_even(1.5), 2.0);
+        assert_eq!(round_ties_even(2.5), 2.0);
+        assert_eq!(round_ties_even(-0.5), 0.0);
+        assert_eq!(round_ties_even(-1.5), -2.0);
+        assert_eq!(round_ties_even(1.4), 1.0);
+        assert_eq!(round_ties_even(-1.6), -2.0);
+    }
+
+    #[test]
+    fn per_block_maps_max_to_127() {
+        let (q, s) = quantize_per_block(&[0.0, -2.0, 1.0, 0.5]);
+        assert_eq!(q[1], -127);
+        assert!((s - 2.0 / 127.0).abs() < 1e-9);
+        // round(1.0 / (2/127)) = round(63.5) = 64 (ties-to-even → 64 since
+        // 63.5 rounds to the even 64? 63.5 → 64 is even — yes).
+        assert_eq!(q[2], 64);
+    }
+
+    #[test]
+    fn zero_block_is_safe() {
+        let (q, s) = quantize_per_block(&[0.0; 8]);
+        assert!(q.iter().all(|&v| v == 0));
+        assert!(s > 0.0 && s.is_finite());
+        assert!(dequantize(&q, s).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn per_token_scales_each_row() {
+        let x = [1.0, -1.0, 100.0, 50.0];
+        let (q, s) = quantize_per_token(&x, 2, 2);
+        assert_eq!(q, vec![127, -127, 127, 64]);
+        assert!((s[0] - 1.0 / 127.0).abs() < 1e-9);
+        assert!((s[1] - 100.0 / 127.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn quant_dequant_error_bounded_by_half_step() {
+        let x: Vec<f32> = (0..64).map(|i| ((i * 37 % 129) as f32 - 64.0) / 7.0).collect();
+        let (q, s) = quantize_per_block(&x);
+        let back = dequantize(&q, s);
+        for (a, b) in x.iter().zip(&back) {
+            assert!((a - b).abs() <= s * 0.5 + 1e-6, "{a} vs {b} (δ={s})");
+        }
+    }
+
+    #[test]
+    fn gemm_layouts_agree_with_naive() {
+        let a: Vec<i8> = (0..6).map(|i| i as i8 - 3).collect(); // (2,3)
+        let b: Vec<i8> = (0..12).map(|i| (i * 5 % 11) as i8 - 5).collect(); // (3,4)
+        let nn = int8_gemm(&a, &b, 2, 3, 4);
+        // transpose b to (4,3) and use nt
+        let mut bt = vec![0i8; 12];
+        for i in 0..3 {
+            for j in 0..4 {
+                bt[j * 3 + i] = b[i * 4 + j];
+            }
+        }
+        assert_eq!(int8_gemm_nt(&a, &bt, 2, 3, 4), nn);
+        // transpose a to (3,2) and use tn
+        let mut at = vec![0i8; 6];
+        for i in 0..2 {
+            for j in 0..3 {
+                at[j * 2 + i] = a[i * 3 + j];
+            }
+        }
+        assert_eq!(int8_gemm_tn(&at, &b, 3, 2, 4), nn);
+    }
+
+    #[test]
+    fn int8_matmul_approximates_f32() {
+        // ψ(A)·ψ(B) with dequant scales ≈ A·B.
+        let a: Vec<f32> = (0..32).map(|i| ((i * 13 % 17) as f32 - 8.0) / 3.0).collect();
+        let b: Vec<f32> = (0..32).map(|i| ((i * 7 % 19) as f32 - 9.0) / 4.0).collect();
+        let (aq, asc) = quantize_per_block(&a);
+        let (bq, bsc) = quantize_per_block(&b);
+        let approx = scale_product(&int8_gemm(&aq, &bq, 4, 8, 8), asc, bsc);
+        let mut exact = vec![0f32; 32];
+        for i in 0..4 {
+            for j in 0..8 {
+                for t in 0..8 {
+                    exact[i * 8 + j] += a[i * 8 + t] * b[t * 8 + j];
+                }
+            }
+        }
+        let rel = crate::util::stats::rel_l2(&approx, &exact);
+        assert!(rel < 0.02, "rel_l2 {rel}");
+    }
+
+    #[test]
+    fn fake_quant_token_matches_manual() {
+        let x = [0.5f32, -0.25, 8.0, 2.0];
+        let fq = fake_quant_token(&x, 2, 2);
+        let (q, s) = quantize_per_token(&x, 2, 2);
+        for i in 0..4 {
+            assert_eq!(fq[i], q[i] as f32 * s[i / 2]);
+        }
+    }
+}

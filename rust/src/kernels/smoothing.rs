@@ -1,0 +1,154 @@
+//! Q/K-smoothing (paper §3 "Q and K Smoothing", §6 ablation) — the native
+//! twin of `python/compile/kernels/smoothing.py`.
+//!
+//! K-smoothing subtracts the token-wise (per-channel) mean of K before
+//! quantization:
+//!
+//!     K_sm = K − 1·μ_K,   μ_K[d] = meanₙ K[n,d]
+//!
+//! Softmax row-invariance makes the forward exactly equivalent (every
+//! logit in a row shifts by the same Q_i·μ_Kᵀ), and the backward needs no
+//! correction because every row of dS sums to zero: dQ = dS·K = dS·K_sm.
+//!
+//! Q-smoothing subtracts μ_Q from Q; forward equivalence needs the rank-1
+//! bias μ_Q·Kᵀ added back to the logits, and the dK gradient needs the
+//! bias branch dK_bias = (dSᵀ·1)·μ_Qᵀ (paper §6).
+
+use anyhow::Result;
+
+use crate::tensor::Tensor;
+
+/// Subtract the per-channel mean over the token axis.
+/// Returns `(X_sm, μ)` with `μ` of length `d`.
+pub fn smooth(x: &Tensor) -> Result<(Tensor, Vec<f32>)> {
+    let (n, d) = x.dims2()?;
+    let mut mu = vec![0f32; d];
+    for row in x.data.chunks_exact(d) {
+        for (m, &v) in mu.iter_mut().zip(row) {
+            *m += v;
+        }
+    }
+    let inv_n = 1.0 / n as f32;
+    for m in mu.iter_mut() {
+        *m *= inv_n;
+    }
+    let mut sm = x.clone();
+    for row in sm.data.chunks_exact_mut(d) {
+        for (v, &m) in row.iter_mut().zip(&mu) {
+            *v -= m;
+        }
+    }
+    Ok((sm, mu))
+}
+
+/// `K_sm = K − 1·μ_K` (paper default — always applied to K).
+pub fn k_smooth(k: &Tensor) -> Result<(Tensor, Vec<f32>)> {
+    smooth(k)
+}
+
+/// `Q_sm = Q − 1·μ_Q` (§6 ablation).
+pub fn q_smooth(q: &Tensor) -> Result<(Tensor, Vec<f32>)> {
+    smooth(q)
+}
+
+/// Rank-1 logits correction `μ_Q·Kᵀ` restoring S after Q-smoothing:
+/// `bias[t] = Σ_d μ_Q[d]·K[t,d]`, broadcast over the query axis.
+pub fn qk_logits_bias(mu_q: &[f32], k: &Tensor) -> Result<Vec<f32>> {
+    let (n, d) = k.dims2()?;
+    assert_eq!(mu_q.len(), d);
+    let mut bias = vec![0f32; n];
+    for (b, row) in bias.iter_mut().zip(k.data.chunks_exact(d)) {
+        for (&m, &v) in mu_q.iter().zip(row) {
+            *b += m * v;
+        }
+    }
+    Ok(bias)
+}
+
+/// `dK_bias = (dSᵀ·1)·μ_Qᵀ` — the §6 gradient correction for Q-smoothing.
+/// `ds` is `(m, n)`; the result is `(n, d)`.
+pub fn dk_bias_branch(ds: &Tensor, mu_q: &[f32]) -> Result<Tensor> {
+    let (m, n) = ds.dims2()?;
+    let d = mu_q.len();
+    let mut colsum = vec![0f32; n];
+    for i in 0..m {
+        let row = &ds.data[i * n..(i + 1) * n];
+        for (c, &v) in colsum.iter_mut().zip(row) {
+            *c += v;
+        }
+    }
+    let mut out = vec![0f32; n * d];
+    for (j, &c) in colsum.iter().enumerate() {
+        for (t, &mq) in mu_q.iter().enumerate() {
+            out[j * d + t] = c * mq;
+        }
+    }
+    Tensor::from_vec(&[n, d], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn smooth_zeroes_channel_means() {
+        let mut rng = Pcg64::new(1, 0);
+        let mut k = Tensor::randn(&[16, 4], 1.0, &mut rng);
+        // Plant a large channel offset — the outlier K-smoothing targets.
+        for row in k.data.chunks_exact_mut(4) {
+            row[2] += 10.0;
+        }
+        let (sm, mu) = k_smooth(&k).unwrap();
+        assert!(mu[2] > 5.0);
+        for ch in 0..4 {
+            let mean: f32 = sm.data.iter().skip(ch).step_by(4).sum::<f32>() / 16.0;
+            assert!(mean.abs() < 1e-5, "channel {ch} mean {mean}");
+        }
+    }
+
+    #[test]
+    fn smoothing_is_softmax_invariant() {
+        // softmax(Q·Kᵀ) == softmax(Q·K_smᵀ + Q·μ_Kᵀ): the bias is constant
+        // along each row, so P is unchanged.
+        let mut rng = Pcg64::new(2, 0);
+        let q = Tensor::randn(&[8, 4], 1.0, &mut rng.split(0));
+        let k = Tensor::randn(&[8, 4], 1.0, &mut rng.split(1));
+        let (ksm, _) = k_smooth(&k).unwrap();
+        let (p1, _) = q.matmul_nt(&k).unwrap().softmax_rows().unwrap();
+        // Row-constant shifts cancel in softmax even without adding the
+        // bias back.
+        let (p2, _) = q.matmul_nt(&ksm).unwrap().softmax_rows().unwrap();
+        assert!(p1.rel_l2(&p2) < 1e-4, "rel {}", p1.rel_l2(&p2));
+    }
+
+    #[test]
+    fn qk_bias_restores_logits() {
+        let mut rng = Pcg64::new(3, 0);
+        let q = Tensor::randn(&[6, 4], 1.0, &mut rng.split(0));
+        let k = Tensor::randn(&[6, 4], 1.0, &mut rng.split(1));
+        let (qsm, mu_q) = q_smooth(&q).unwrap();
+        let bias = qk_logits_bias(&mu_q, &k).unwrap();
+        let exact = q.matmul_nt(&k).unwrap();
+        let mut restored = qsm.matmul_nt(&k).unwrap();
+        for row in restored.data.chunks_exact_mut(6) {
+            for (v, &b) in row.iter_mut().zip(&bias) {
+                *v += b;
+            }
+        }
+        assert!(exact.rel_l2(&restored) < 1e-5);
+    }
+
+    #[test]
+    fn dk_bias_branch_completes_gradient() {
+        // dSᵀ·Q == dSᵀ·Q_sm + (dSᵀ·1)·μ_Qᵀ.
+        let mut rng = Pcg64::new(4, 0);
+        let q = Tensor::randn(&[6, 4], 1.0, &mut rng.split(0));
+        let ds = Tensor::randn(&[6, 6], 1.0, &mut rng.split(1));
+        let (qsm, mu_q) = q_smooth(&q).unwrap();
+        let exact = ds.matmul_tn(&q).unwrap();
+        let mut center = ds.matmul_tn(&qsm).unwrap();
+        center.add_assign(&dk_bias_branch(&ds, &mu_q).unwrap());
+        assert!(exact.rel_l2(&center) < 1e-5);
+    }
+}

@@ -8,8 +8,12 @@
 //!
 //! Module map (see DESIGN.md for the full inventory):
 //!
-//! * [`runtime`]     — PJRT CPU client; loads `artifacts/*.hlo.txt` +
-//!   manifests, compiles once, executes on the hot path.
+//! * [`kernels`]     — native CPU SageBwd kernels: tiled INT8
+//!   forward/backward (Algorithms 1+2), K-smoothing, the FPA oracle, and
+//!   the §5.4 pseudo-quantized trace — no artifacts or XLA needed.
+//! * [`runtime`]     — backend selection (`--backend native|xla`); the XLA
+//!   half loads `artifacts/*.hlo.txt` + manifests, compiles once, executes
+//!   on the hot path.
 //! * [`coordinator`] — trainer, tokens-per-step gradient accumulator
 //!   (the paper's §4.3 axis), warmup+cosine LR schedule, checkpoints.
 //! * [`data`]        — synthetic-corpus substrate: generator, byte
@@ -24,6 +28,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod kernels;
 pub mod runtime;
 pub mod telemetry;
 pub mod tensor;

@@ -14,6 +14,11 @@
 //! sagebwd noise-probe [--budget B --tps T]               §4.3 noise-injection probe
 //! sagebwd plot --csv a.csv[,b.csv...]                    ASCII loss curves
 //! ```
+//!
+//! Trace/bench harnesses (table1, table2, ds-rms, fig23, fig56) take
+//! `--backend native|xla` (default `native`: in-process CPU kernels, no
+//! `artifacts/` needed — DESIGN.md §4).  Training subcommands require the
+//! AOT artifacts and therefore the xla backend.
 
 use anyhow::{bail, Result};
 
@@ -22,13 +27,20 @@ use sagebwd::config::TrainConfig;
 use sagebwd::coordinator::Trainer;
 use sagebwd::experiments::{ds_rms, fig1_tps, fig23_speed, fig4_ablation, fig56_layers,
                            noise_probe, table1_sigma, table2_trace};
-use sagebwd::runtime::Runtime;
+use sagebwd::runtime::{make_backend, Runtime};
 use sagebwd::telemetry::{run_dir, Log};
 use sagebwd::{DEFAULT_ARTIFACTS_DIR, DEFAULT_RESULTS_DIR};
 
 const USAGE: &str = "usage: sagebwd <train|dist-train|table1|table2|ds-rms|fig1|fig4|fig23|fig56|noise-probe|plot|inspect> [options]
-common options: --artifacts DIR (default artifacts/), --results DIR (default results/)
-run `make results` to regenerate every paper table and figure";
+common options:
+  --backend native|xla   kernel executor for table1/table2/ds-rms/fig23/fig56
+                         (default native: in-process CPU kernels, no artifacts
+                         needed; xla: AOT artifacts under --artifacts)
+  --artifacts DIR        artifact directory for the xla backend and training
+                         subcommands (default artifacts/, built by `make artifacts`)
+  --results DIR          output directory (default results/)
+training subcommands (train, dist-train, fig1, fig4, noise-probe) always run
+on the xla backend; run `make results` to regenerate every table and figure";
 
 fn main() {
     if let Err(e) = run() {
@@ -42,23 +54,40 @@ fn run() -> Result<()> {
     let artifacts = args.str_or("artifacts", DEFAULT_ARTIFACTS_DIR).to_string();
     let results = args.str_or("results", DEFAULT_RESULTS_DIR).to_string();
     let rt = || Runtime::new(artifacts.clone());
+    // Trace/bench harnesses run on either backend; the native CPU kernels
+    // are the default so a fresh checkout needs no `make artifacts`.
+    let backend = || make_backend(args.str_or("backend", "native"), &artifacts);
+    // Training still requires the AOT grad_step/apply_step executables.
+    let training_backend_check = |cmd: &str| -> Result<()> {
+        match args.str_or("backend", "xla") {
+            "xla" => Ok(()),
+            other => bail!(
+                "`sagebwd {cmd}` runs full-model training, which --backend {other} does not \
+                 implement yet — run `make artifacts` and use --backend xla"
+            ),
+        }
+    };
 
     match args.subcommand.as_str() {
-        "train" => cmd_train(&args, rt()?, &results),
+        "train" => {
+            training_backend_check("train")?;
+            cmd_train(&args, rt()?, &results)
+        }
         "table1" => {
             let reps = args.u64_or("reps", 3)?;
-            table1_sigma::run(&mut rt()?, &results, reps)?;
+            table1_sigma::run(backend()?.as_mut(), &results, reps)?;
             Ok(())
         }
         "table2" => {
-            table2_trace::run(&mut rt()?, &results)?;
+            table2_trace::run(backend()?.as_mut(), &results)?;
             Ok(())
         }
         "ds-rms" => {
-            ds_rms::run(&mut rt()?, &results)?;
+            ds_rms::run(backend()?.as_mut(), &results)?;
             Ok(())
         }
         "fig1" => {
+            training_backend_check("fig1")?;
             // Fixed token budget per cell (paper: 78B tokens at each TPS);
             // 8× TPS ratio preserved from the paper's 2.1M / 260K.
             let budget = args.u64_or("budget", 131_072)?;
@@ -69,6 +98,7 @@ fn run() -> Result<()> {
             Ok(())
         }
         "fig4" => {
+            training_backend_check("fig4")?;
             let budget = args.u64_or("budget", 131_072)?;
             let tps_lo = args.u64_or("tps-lo", 1024)?;
             let tps_hi = args.u64_or("tps-hi", 8192)?;
@@ -77,14 +107,15 @@ fn run() -> Result<()> {
             Ok(())
         }
         "fig23" => {
-            fig23_speed::run(&mut rt()?, &results, args.flag("quick"))?;
+            fig23_speed::run(backend()?.as_mut(), &results, args.flag("quick"))?;
             Ok(())
         }
         "fig56" => {
-            fig56_layers::run(&mut rt()?, &results)?;
+            fig56_layers::run(backend()?.as_mut(), &results)?;
             Ok(())
         }
         "dist-train" => {
+            training_backend_check("dist-train")?;
             // Data-parallel training demo: leader + N grad workers.
             let workers = args.usize_or("workers", 2)?;
             let cfg = TrainConfig {
@@ -110,6 +141,7 @@ fn run() -> Result<()> {
             Ok(())
         }
         "noise-probe" => {
+            training_backend_check("noise-probe")?;
             let budget = args.u64_or("budget", 65_536)?;
             let tps = args.u64_or("tps", 8192)?;
             let seed = args.u64_or("seed", 0)?;

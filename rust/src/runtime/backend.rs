@@ -1,0 +1,373 @@
+//! Backend selection: one executor interface over the native CPU kernels
+//! and the AOT XLA artifact path (DESIGN.md §4).
+//!
+//! Every trace/bench experiment harness talks to [`AttentionBackend`]
+//! instead of the XLA [`Runtime`] directly, so the same harness runs:
+//!
+//! * `--backend native` — [`NativeBackend`]: artifact *names* are resolved
+//!   against the registry mirrored from `python/compile/configs.py`
+//!   (`TRACE_VARIANTS`, `bench_variants`) and executed by the in-process
+//!   kernels in `crate::kernels`. No `artifacts/` directory, Python
+//!   toolchain, or XLA runtime required — this is what CI uses.
+//! * `--backend xla` — [`XlaBackend`]: the unchanged AOT path; loads
+//!   `<name>.hlo.txt` + manifest, compiles once under PJRT, executes many.
+//!
+//! Output ABI is identical: the native backend produces values in
+//! `aot.TRACE_OUTPUTS` order — `o, dq, dk, dv, delta, rms_p, rms_dp,
+//! rms_ds, p, dp, ds` — and `o[, dq, dk, dv]` for bench artifacts.
+
+use anyhow::{bail, Context, Result};
+
+use crate::kernels::{self, AttnConfig};
+use crate::runtime::{Runtime, Value};
+use crate::tensor::Tensor;
+use crate::util::stats;
+
+/// A runtime capable of executing attention trace/bench artifacts by name.
+pub trait AttentionBackend {
+    /// Backend name for logs/telemetry ("native" or "xla").
+    fn name(&self) -> &'static str;
+
+    /// Execute one artifact; outputs in manifest order.
+    fn execute(&mut self, artifact: &str, inputs: &[Value]) -> Result<Vec<Value>>;
+}
+
+/// Build a backend from the `--backend` CLI flag.
+pub fn make_backend(name: &str, artifacts_dir: &str) -> Result<Box<dyn AttentionBackend>> {
+    match name {
+        "native" => Ok(Box::new(NativeBackend::new())),
+        "xla" => Ok(Box::new(XlaBackend::new(Runtime::new(artifacts_dir)?))),
+        other => bail!("unknown backend {other:?}; known: native, xla"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// XLA backend: thin adapter over the unchanged Runtime
+// ---------------------------------------------------------------------------
+
+/// The AOT artifact path, unchanged: compile once, execute many.
+pub struct XlaBackend {
+    runtime: Runtime,
+}
+
+impl XlaBackend {
+    pub fn new(runtime: Runtime) -> XlaBackend {
+        XlaBackend { runtime }
+    }
+
+    pub fn runtime_mut(&mut self) -> &mut Runtime {
+        &mut self.runtime
+    }
+}
+
+impl AttentionBackend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn execute(&mut self, artifact: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        self.runtime.execute(artifact, inputs)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Native backend: artifact registry + in-process kernels
+// ---------------------------------------------------------------------------
+
+/// What a trace artifact computes (mirrors `configs.TraceConfig.impl`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum TraceImpl {
+    Fpa,
+    Sage,
+    Pseudo,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct TraceSpec {
+    name: &'static str,
+    imp: TraceImpl,
+    n: usize,
+    k_smoothing: bool,
+    q_smoothing: bool,
+    quant_ds: bool,
+}
+
+const TRACE_D: usize = 64;
+const TRACE_BLOCK: usize = 32;
+
+/// The registry mirrored from `python/compile/configs.TRACE_VARIANTS`.
+const TRACE_SPECS: &[TraceSpec] = &[
+    TraceSpec { name: "trace_fpa", imp: TraceImpl::Fpa, n: 128, k_smoothing: true, q_smoothing: false, quant_ds: true },
+    TraceSpec { name: "trace_sage", imp: TraceImpl::Sage, n: 128, k_smoothing: true, q_smoothing: false, quant_ds: true },
+    TraceSpec { name: "trace_pseudo", imp: TraceImpl::Pseudo, n: 128, k_smoothing: true, q_smoothing: false, quant_ds: true },
+    TraceSpec { name: "trace_pseudo_nosm", imp: TraceImpl::Pseudo, n: 128, k_smoothing: false, q_smoothing: false, quant_ds: true },
+    TraceSpec { name: "trace_pseudo_qksm", imp: TraceImpl::Pseudo, n: 128, k_smoothing: true, q_smoothing: true, quant_ds: true },
+    TraceSpec { name: "trace_sage_nosm", imp: TraceImpl::Sage, n: 128, k_smoothing: false, q_smoothing: false, quant_ds: true },
+    TraceSpec { name: "trace_sage_qksm", imp: TraceImpl::Sage, n: 128, k_smoothing: true, q_smoothing: true, quant_ds: true },
+    TraceSpec { name: "trace_fpa_n512", imp: TraceImpl::Fpa, n: 512, k_smoothing: true, q_smoothing: false, quant_ds: true },
+    TraceSpec { name: "trace_sage_n512", imp: TraceImpl::Sage, n: 512, k_smoothing: true, q_smoothing: false, quant_ds: true },
+    TraceSpec { name: "trace_sage_dsfp", imp: TraceImpl::Sage, n: 128, k_smoothing: true, q_smoothing: false, quant_ds: false },
+    TraceSpec { name: "trace_pseudo_dsfp", imp: TraceImpl::Pseudo, n: 128, k_smoothing: true, q_smoothing: false, quant_ds: false },
+];
+
+/// In-process CPU executor for trace/bench artifacts.
+#[derive(Debug, Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend
+    }
+}
+
+impl AttentionBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn execute(&mut self, artifact: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        if let Some(spec) = TRACE_SPECS.iter().find(|s| s.name == artifact) {
+            return run_trace_artifact(*spec, inputs)
+                .with_context(|| format!("native backend executing {artifact}"));
+        }
+        if let Some(bench) = parse_bench_name(artifact) {
+            return run_bench_artifact(bench, inputs)
+                .with_context(|| format!("native backend executing {artifact}"));
+        }
+        if artifact.starts_with("init_")
+            || artifact.starts_with("grad_step_")
+            || artifact.starts_with("apply_step_")
+        {
+            bail!(
+                "artifact {artifact} needs the full-model training path, which the native \
+                 backend does not implement yet — run `make artifacts` and use --backend xla"
+            );
+        }
+        bail!("native backend knows no artifact named {artifact:?}");
+    }
+}
+
+fn take_f32_inputs(inputs: &[Value], want: usize, n: usize, d: usize) -> Result<Vec<&Tensor>> {
+    if inputs.len() != want {
+        bail!("expected {want} inputs, got {}", inputs.len());
+    }
+    let mut out = Vec::with_capacity(want);
+    for (idx, v) in inputs.iter().enumerate() {
+        let t = v
+            .as_f32()
+            .with_context(|| format!("input {idx} must be f32"))?;
+        if t.shape != [n, d] {
+            bail!("input {idx}: expected shape [{n}, {d}], got {:?}", t.shape);
+        }
+        out.push(t);
+    }
+    Ok(out)
+}
+
+fn trace_cfg(spec: TraceSpec) -> AttnConfig {
+    AttnConfig {
+        block_q: TRACE_BLOCK,
+        block_kv: TRACE_BLOCK,
+        causal: false,
+        k_smoothing: spec.k_smoothing,
+        q_smoothing: spec.q_smoothing,
+        quant_ds: spec.quant_ds,
+    }
+}
+
+fn run_trace_artifact(spec: TraceSpec, inputs: &[Value]) -> Result<Vec<Value>> {
+    let ins = take_f32_inputs(inputs, 4, spec.n, TRACE_D)?;
+    let (q, k, v, do_) = (ins[0], ins[1], ins[2], ins[3]);
+    let cfg = trace_cfg(spec);
+    let trace = match spec.imp {
+        TraceImpl::Fpa => kernels::fpa_bwd(q, k, v, do_, cfg.causal)?,
+        TraceImpl::Pseudo => kernels::pseudo_quant_trace(q, k, v, do_, &cfg)?,
+        TraceImpl::Sage => {
+            // Mirror aot.export_trace: the blocked kernel produces
+            // (o, dq, dk, dv); the materialized intermediates come from the
+            // §5.4 pseudo trace (same quantization scheme, dense layout).
+            let sage = kernels::sage_bwd(q, k, v, do_, &cfg)?;
+            let mut it = kernels::pseudo_quant_trace(q, k, v, do_, &cfg)?;
+            it.o = sage.o;
+            it.dq = sage.dq;
+            it.dk = sage.dk;
+            it.dv = sage.dv;
+            it
+        }
+    };
+    // aot.TRACE_OUTPUTS order.
+    Ok(vec![
+        Value::F32(trace.o),
+        Value::F32(trace.dq),
+        Value::F32(trace.dk),
+        Value::F32(trace.dv),
+        Value::F32(trace.delta),
+        Value::F32(Tensor::scalar(stats::rms(&trace.p.data) as f32)),
+        Value::F32(Tensor::scalar(stats::rms(&trace.dp.data) as f32)),
+        Value::F32(Tensor::scalar(stats::rms(&trace.ds.data) as f32)),
+        Value::F32(trace.p),
+        Value::F32(trace.dp),
+        Value::F32(trace.ds),
+    ])
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct BenchSpec {
+    imp: BenchImpl,
+    fwdbwd: bool,
+    d: usize,
+    n: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BenchImpl {
+    Sage,
+    Fa2,
+    Naive,
+}
+
+/// Parse `bench_{sage|fa2|naive}_{fwd|fwdbwd}_d{D}_n{N}`.
+fn parse_bench_name(artifact: &str) -> Option<BenchSpec> {
+    let rest = artifact.strip_prefix("bench_")?;
+    let (imp, rest) = if let Some(r) = rest.strip_prefix("sage_") {
+        (BenchImpl::Sage, r)
+    } else if let Some(r) = rest.strip_prefix("fa2_") {
+        (BenchImpl::Fa2, r)
+    } else if let Some(r) = rest.strip_prefix("naive_") {
+        (BenchImpl::Naive, r)
+    } else {
+        return None;
+    };
+    let (fwdbwd, rest) = if let Some(r) = rest.strip_prefix("fwdbwd_") {
+        (true, r)
+    } else if let Some(r) = rest.strip_prefix("fwd_") {
+        (false, r)
+    } else {
+        return None;
+    };
+    let rest = rest.strip_prefix('d')?;
+    let (d_str, n_part) = rest.split_once("_n")?;
+    let d = d_str.parse().ok()?;
+    let n = n_part.parse().ok()?;
+    Some(BenchSpec { imp, fwdbwd, d, n })
+}
+
+fn run_bench_artifact(spec: BenchSpec, inputs: &[Value]) -> Result<Vec<Value>> {
+    let cfg = AttnConfig {
+        block_q: TRACE_BLOCK,
+        block_kv: TRACE_BLOCK,
+        ..Default::default()
+    };
+    if spec.fwdbwd {
+        let ins = take_f32_inputs(inputs, 4, spec.n, spec.d)?;
+        let (q, k, v, do_) = (ins[0], ins[1], ins[2], ins[3]);
+        let tr = match spec.imp {
+            BenchImpl::Sage => kernels::sage_bwd(q, k, v, do_, &cfg)?,
+            // Baselines differentiate exactly (aot uses jnp autodiff).
+            BenchImpl::Fa2 | BenchImpl::Naive => kernels::fpa_bwd(q, k, v, do_, cfg.causal)?,
+        };
+        Ok(vec![
+            Value::F32(tr.o),
+            Value::F32(tr.dq),
+            Value::F32(tr.dk),
+            Value::F32(tr.dv),
+        ])
+    } else {
+        let ins = take_f32_inputs(inputs, 3, spec.n, spec.d)?;
+        let (q, k, v) = (ins[0], ins[1], ins[2]);
+        let o = match spec.imp {
+            BenchImpl::Sage => kernels::sage_fwd(q, k, v, &cfg)?.0,
+            BenchImpl::Fa2 => kernels::fa2_fwd(q, k, v, &cfg)?.0,
+            BenchImpl::Naive => kernels::fpa_fwd(q, k, v, cfg.causal)?.0,
+        };
+        Ok(vec![Value::F32(o)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::common::gaussian_qkvdo;
+
+    fn trace_inputs(n: usize, seed: u64) -> Vec<Value> {
+        gaussian_qkvdo(n, TRACE_D, 1.0, 1.0, 1.0, 1.0, seed)
+            .into_iter()
+            .map(Value::F32)
+            .collect()
+    }
+
+    #[test]
+    fn native_trace_fpa_output_abi() {
+        let mut be = NativeBackend::new();
+        let out = be.execute("trace_fpa", &trace_inputs(128, 1)).unwrap();
+        assert_eq!(out.len(), 11);
+        assert_eq!(out[0].shape(), &[128, 64]); // o
+        assert_eq!(out[4].shape(), &[128]); // delta
+        assert_eq!(out[5].shape(), &[] as &[usize]); // rms_p scalar
+        assert_eq!(out[8].shape(), &[128, 128]); // p
+        // P rows sum to 1.
+        let p = out[8].as_f32().unwrap();
+        for row in p.data.chunks(128) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn native_rejects_bad_inputs() {
+        let mut be = NativeBackend::new();
+        let mut bad = trace_inputs(128, 2);
+        bad.truncate(3);
+        assert!(be.execute("trace_fpa", &bad).is_err());
+        assert!(be.execute("trace_fpa", &trace_inputs(64, 3)).is_err()); // wrong N
+        let err = be.execute("no_such_artifact", &[]).unwrap_err();
+        assert!(format!("{err:#}").contains("no_such_artifact"));
+    }
+
+    #[test]
+    fn native_training_artifacts_guided_to_xla() {
+        let mut be = NativeBackend::new();
+        let err = be.execute("grad_step_sage_qknorm", &[]).unwrap_err();
+        assert!(format!("{err:#}").contains("--backend xla"));
+    }
+
+    #[test]
+    fn bench_name_parsing() {
+        let s = parse_bench_name("bench_sage_fwdbwd_d64_n256").unwrap();
+        assert_eq!(s, BenchSpec { imp: BenchImpl::Sage, fwdbwd: true, d: 64, n: 256 });
+        let s = parse_bench_name("bench_naive_fwd_d128_n128").unwrap();
+        assert_eq!(s, BenchSpec { imp: BenchImpl::Naive, fwdbwd: false, d: 128, n: 128 });
+        assert!(parse_bench_name("bench_bogus_fwd_d64_n128").is_none());
+        assert!(parse_bench_name("trace_fpa").is_none());
+    }
+
+    #[test]
+    fn native_bench_artifacts_run() {
+        let mut be = NativeBackend::new();
+        let qkvdo = gaussian_qkvdo(128, 64, 1.0, 1.0, 1.0, 1.0, 4);
+        let fwd_inputs: Vec<Value> = qkvdo[..3].iter().cloned().map(Value::F32).collect();
+        let out = be.execute("bench_fa2_fwd_d64_n128", &fwd_inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape(), &[128, 64]);
+        let all_inputs: Vec<Value> = qkvdo.iter().cloned().map(Value::F32).collect();
+        let out = be.execute("bench_sage_fwdbwd_d64_n128", &all_inputs).unwrap();
+        assert_eq!(out.len(), 4);
+    }
+
+    #[test]
+    fn sage_trace_close_to_fpa_at_unit_sigma() {
+        // The runtime_integration tolerance, artifact-free.
+        let mut be = NativeBackend::new();
+        let inputs = trace_inputs(128, 5);
+        let sage = be.execute("trace_sage", &inputs).unwrap();
+        let fpa = be.execute("trace_fpa", &inputs).unwrap();
+        for (idx, name, min_cos) in
+            [(0, "o", 0.999), (1, "dq", 0.99), (2, "dk", 0.99), (3, "dv", 0.999)]
+        {
+            let s = sage[idx].as_f32().unwrap();
+            let f = fpa[idx].as_f32().unwrap();
+            let c = crate::util::stats::cossim(&s.data, &f.data);
+            assert!(c > min_cos, "{name}: cossim {c}");
+        }
+    }
+}

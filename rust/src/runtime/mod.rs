@@ -12,6 +12,7 @@
 //! HLO *text* is the interchange (64-bit-id protos from jax ≥ 0.5 are
 //! rejected by xla_extension 0.5.1 — see DESIGN.md / aot.py).
 
+pub mod backend;
 pub mod hlo_inspect;
 pub mod literal;
 pub mod manifest;
@@ -21,6 +22,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+pub use backend::{make_backend, AttentionBackend, NativeBackend, XlaBackend};
 pub use literal::Value;
 pub use manifest::{DType, Manifest, TensorSpec};
 

@@ -1,9 +1,12 @@
 //! Host-side tensor substrate: a flat `Vec<f32>`/`Vec<i32>` plus a shape.
 //!
-//! This is deliberately *not* a math library — the heavy math runs inside
-//! the XLA executables.  The coordinator only needs: construction, random
-//! init, elementwise accumulation (gradient accumulation across
-//! microbatches, §4.3), scaling, and the error metrics.
+//! Originally this was *not* a math library — the heavy math ran inside
+//! the XLA executables and the coordinator only needed construction,
+//! random init, elementwise accumulation (§4.3), scaling, and the error
+//! metrics.  The native CPU kernel backend (`kernels/`, DESIGN.md §3)
+//! added the small dense-linear-algebra core it needs: 2-D matmuls in the
+//! three layouts attention uses (`A·B`, `A·Bᵀ`, `Aᵀ·B`), transpose, and a
+//! numerically-stable row softmax with logsumexp.
 
 use anyhow::{bail, Result};
 
@@ -100,6 +103,128 @@ impl Tensor {
 
     pub fn is_finite(&self) -> bool {
         self.data.iter().all(|x| x.is_finite())
+    }
+
+    /// Rows/cols of a 2-D tensor.
+    pub fn dims2(&self) -> Result<(usize, usize)> {
+        match self.shape.as_slice() {
+            [r, c] => Ok((*r, *c)),
+            other => bail!("expected a 2-D tensor, got shape {other:?}"),
+        }
+    }
+
+    /// `self · other` for 2-D tensors: `(m,k) × (k,n) → (m,n)`.
+    pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        let (m, k) = self.dims2()?;
+        let (k2, n) = other.dims2()?;
+        if k != k2 {
+            bail!("matmul: inner dims {k} vs {k2}");
+        }
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            let row = &self.data[i * k..(i + 1) * k];
+            let acc = &mut out[i * n..(i + 1) * n];
+            for (t, &a) in row.iter().enumerate() {
+                let brow = &other.data[t * n..(t + 1) * n];
+                for (o, &b) in acc.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+
+    /// `self · otherᵀ`: `(m,k) × (n,k) → (m,n)` — the Q·Kᵀ layout.
+    pub fn matmul_nt(&self, other: &Tensor) -> Result<Tensor> {
+        let (m, k) = self.dims2()?;
+        let (n, k2) = other.dims2()?;
+        if k != k2 {
+            bail!("matmul_nt: inner dims {k} vs {k2}");
+        }
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &other.data[j * k..(j + 1) * k];
+                let mut acc = 0f32;
+                for (&a, &b) in arow.iter().zip(brow) {
+                    acc += a * b;
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+
+    /// `selfᵀ · other`: `(k,m) × (k,n) → (m,n)` — the Pᵀ·dO layout.
+    pub fn matmul_tn(&self, other: &Tensor) -> Result<Tensor> {
+        let (k, m) = self.dims2()?;
+        let (k2, n) = other.dims2()?;
+        if k != k2 {
+            bail!("matmul_tn: inner dims {k} vs {k2}");
+        }
+        let mut out = vec![0f32; m * n];
+        for t in 0..k {
+            let arow = &self.data[t * m..(t + 1) * m];
+            let brow = &other.data[t * n..(t + 1) * n];
+            for (i, &a) in arow.iter().enumerate() {
+                let acc = &mut out[i * n..(i + 1) * n];
+                for (o, &b) in acc.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+
+    /// Transpose a 2-D tensor.
+    pub fn transpose(&self) -> Result<Tensor> {
+        let (m, n) = self.dims2()?;
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::from_vec(&[n, m], out)
+    }
+
+    /// Row-wise numerically-stable softmax of a 2-D tensor.
+    /// Returns `(P, lse)` with `lse[i] = log Σ_j exp(S[i,j])` — the
+    /// FlashAttention "L" residual.  Rows of all `-inf` produce zeros.
+    pub fn softmax_rows(&self) -> Result<(Tensor, Vec<f32>)> {
+        let (m, n) = self.dims2()?;
+        let mut p = vec![0f32; m * n];
+        let mut lse = vec![0f32; m];
+        for i in 0..m {
+            let row = &self.data[i * n..(i + 1) * n];
+            let max = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            if max == f32::NEG_INFINITY {
+                lse[i] = f32::NEG_INFINITY;
+                continue;
+            }
+            let out = &mut p[i * n..(i + 1) * n];
+            let mut z = 0f32;
+            for (o, &s) in out.iter_mut().zip(row) {
+                let e = (s - max).exp();
+                *o = e;
+                z += e;
+            }
+            for o in out.iter_mut() {
+                *o /= z;
+            }
+            lse[i] = max + z.ln();
+        }
+        Ok((Tensor::from_vec(&[m, n], p)?, lse))
+    }
+
+    /// Extract rows `[lo, hi)` of a 2-D tensor.
+    pub fn rows(&self, lo: usize, hi: usize) -> Result<Tensor> {
+        let (m, n) = self.dims2()?;
+        if lo > hi || hi > m {
+            bail!("rows {lo}..{hi} out of bounds for {m} rows");
+        }
+        Tensor::from_vec(&[hi - lo, n], self.data[lo * n..hi * n].to_vec())
     }
 }
 
@@ -201,5 +326,82 @@ mod tests {
     fn scalar_item() {
         assert_eq!(Tensor::scalar(2.5).item(), 2.5);
         assert_eq!(IntTensor::scalar(7).data, vec![7]);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let b = Tensor::from_vec(&[3, 2], vec![7., 8., 9., 10., 11., 12.]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.shape, vec![2, 2]);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_layout_variants_agree() {
+        let mut rng = Pcg64::new(3, 0);
+        let a = Tensor::randn(&[4, 6], 1.0, &mut rng.split(0));
+        let b = Tensor::randn(&[5, 6], 1.0, &mut rng.split(1));
+        // A·Bᵀ three ways.
+        let nt = a.matmul_nt(&b).unwrap();
+        let via_t = a.matmul(&b.transpose().unwrap()).unwrap();
+        let tn = a
+            .transpose()
+            .unwrap()
+            .matmul_tn(&b.transpose().unwrap())
+            .unwrap();
+        assert!(nt.rel_l2(&via_t) < 1e-6);
+        assert!(nt.rel_l2(&tn) < 1e-6);
+    }
+
+    #[test]
+    fn matmul_shape_errors() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[4, 2]);
+        assert!(a.matmul(&b).is_err());
+        assert!(a.matmul_nt(&Tensor::zeros(&[4, 4])).is_err());
+        assert!(Tensor::zeros(&[3]).matmul(&a).is_err());
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Pcg64::new(5, 0);
+        let a = Tensor::randn(&[3, 7], 1.0, &mut rng);
+        let back = a.transpose().unwrap().transpose().unwrap();
+        assert_eq!(a, back);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one_with_lse() {
+        let s = Tensor::from_vec(&[2, 3], vec![0., 1., 2., -5., 0., 5.]).unwrap();
+        let (p, lse) = s.softmax_rows().unwrap();
+        for row in p.data.chunks(3) {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6, "row sum {sum}");
+        }
+        // P[i,j] must equal exp(S[i,j] − lse[i]).
+        for i in 0..2 {
+            for j in 0..3 {
+                let expect = (s.data[i * 3 + j] - lse[i]).exp();
+                assert!((p.data[i * 3 + j] - expect).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_handles_masked_rows() {
+        let s = Tensor::from_vec(&[1, 2], vec![f32::NEG_INFINITY, f32::NEG_INFINITY]).unwrap();
+        let (p, lse) = s.softmax_rows().unwrap();
+        assert_eq!(p.data, vec![0.0, 0.0]);
+        assert_eq!(lse[0], f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn rows_slice() {
+        let a = Tensor::from_vec(&[3, 2], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let mid = a.rows(1, 3).unwrap();
+        assert_eq!(mid.shape, vec![2, 2]);
+        assert_eq!(mid.data, vec![3., 4., 5., 6.]);
+        assert!(a.rows(2, 4).is_err());
     }
 }

@@ -2,6 +2,13 @@
 //! and the §4.2 RMS probes) plus the timing summaries used by `bench`.
 
 /// Cosine similarity of two flattened tensors.
+///
+/// Zero-norm contract (degenerate comparisons must *signal*, not hide —
+/// an all-zero reference previously clamped the denominator and returned
+/// a misleading 0.0):
+/// * both vectors all-zero → `1.0` (they are identical);
+/// * exactly one all-zero  → `NaN` (direction undefined — check with
+///   `is_nan()` rather than comparing against a threshold).
 pub fn cossim(x: &[f32], y: &[f32]) -> f64 {
     assert_eq!(x.len(), y.len());
     let (mut dot, mut nx, mut ny) = (0f64, 0f64, 0f64);
@@ -10,10 +17,19 @@ pub fn cossim(x: &[f32], y: &[f32]) -> f64 {
         nx += a as f64 * a as f64;
         ny += b as f64 * b as f64;
     }
-    dot / (nx.sqrt() * ny.sqrt()).max(1e-300)
+    match (nx == 0.0, ny == 0.0) {
+        (true, true) => 1.0,
+        (true, false) | (false, true) => f64::NAN,
+        (false, false) => dot / (nx.sqrt() * ny.sqrt()),
+    }
 }
 
 /// Relative ℓ2 error ‖x − y‖ / ‖y‖ (y is the full-precision reference).
+///
+/// Zero-norm contract: with an all-zero reference the ratio is undefined,
+/// so the result is `0.0` when x is also all-zero (no error) and `+∞`
+/// otherwise (any deviation from a zero reference is infinitely large in
+/// relative terms) — never a silently-clamped finite value.
 pub fn rel_l2(x: &[f32], y: &[f32]) -> f64 {
     assert_eq!(x.len(), y.len());
     let (mut num, mut den) = (0f64, 0f64);
@@ -22,7 +38,10 @@ pub fn rel_l2(x: &[f32], y: &[f32]) -> f64 {
         num += d * d;
         den += b as f64 * b as f64;
     }
-    (num / den.max(1e-300)).sqrt()
+    if den == 0.0 {
+        return if num == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    (num / den).sqrt()
 }
 
 /// Root mean square.
@@ -149,6 +168,28 @@ mod tests {
         assert_eq!(rel_l2(&[1.0, 1.0], &[1.0, 1.0]), 0.0);
         let e = rel_l2(&[1.1, 0.9], &[1.0, 1.0]);
         assert!((e - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cossim_zero_norms_signal_degeneracy() {
+        // Both zero: identical vectors.
+        assert_eq!(cossim(&[0.0, 0.0], &[0.0, 0.0]), 1.0);
+        // One zero: undefined direction, NOT a misleading 0.0.
+        assert!(cossim(&[0.0, 0.0], &[1.0, 2.0]).is_nan());
+        assert!(cossim(&[1.0, 2.0], &[0.0, 0.0]).is_nan());
+        // Empty slices count as all-zero.
+        assert_eq!(cossim(&[], &[]), 1.0);
+    }
+
+    #[test]
+    fn rel_l2_zero_reference_signals_degeneracy() {
+        // Zero reference + zero candidate: no error.
+        assert_eq!(rel_l2(&[0.0, 0.0], &[0.0, 0.0]), 0.0);
+        // Zero reference + any deviation: infinite relative error.
+        assert_eq!(rel_l2(&[1e-6, 0.0], &[0.0, 0.0]), f64::INFINITY);
+        // Tiny-but-nonzero references still behave normally.
+        let r = rel_l2(&[2e-20], &[1e-20]);
+        assert!((r - 1.0).abs() < 1e-9, "{r}");
     }
 
     #[test]

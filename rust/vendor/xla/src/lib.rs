@@ -1,0 +1,326 @@
+//! Vendored stand-in for the `xla-rs` bindings used by the coordinator's
+//! XLA artifact path.
+//!
+//! Two halves with very different fidelity:
+//!
+//! * **Host-side [`Literal`]** — fully functional. Shape + element type +
+//!   raw little-endian bytes, exactly the interchange
+//!   `runtime::literal` relies on (`create_from_shape_and_untyped_data`,
+//!   `to_vec`, `array_shape`, `ty`). Unit and property tests over the
+//!   literal conversion layer run everywhere.
+//!
+//! * **PJRT device path** ([`PjRtClient`], [`PjRtLoadedExecutable`],
+//!   [`PjRtBuffer`], [`HloModuleProto`]) — API-compatible stubs whose
+//!   constructors return a descriptive [`Error`]. The real PJRT runtime is
+//!   not linked into offline builds; `Runtime::new` therefore fails fast
+//!   with a clear message and every harness that can run on the native CPU
+//!   kernel backend (`sagebwd --backend native`, see DESIGN.md §4) does so
+//!   without touching this path.
+
+use std::fmt;
+
+/// Stub error carrying a description (rendered via `{:?}` by callers).
+#[derive(Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: the XLA PJRT runtime is not linked into this build — \
+         use the native kernel backend (--backend native) or a build with \
+         the real xla-rs bindings"
+    ))
+}
+
+/// XLA element types (subset the artifacts use, plus a few for realism).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    F64,
+    S64,
+    U32,
+    Pred,
+}
+
+impl ElementType {
+    pub fn size_bytes(self) -> usize {
+        match self {
+            ElementType::F32 | ElementType::S32 | ElementType::U32 => 4,
+            ElementType::F64 | ElementType::S64 => 8,
+            ElementType::Pred => 1,
+        }
+    }
+}
+
+/// Host types that can live inside a [`Literal`].
+pub trait NativeType: Copy + 'static {
+    const TY: ElementType;
+    fn write_le(data: &[Self], out: &mut Vec<u8>);
+    fn read_le(bytes: &[u8]) -> Vec<Self>;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+
+    fn write_le(data: &[Self], out: &mut Vec<u8>) {
+        for x in data {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn read_le(bytes: &[u8]) -> Vec<Self> {
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+
+    fn write_le(data: &[Self], out: &mut Vec<u8>) {
+        for x in data {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn read_le(bytes: &[u8]) -> Vec<Self> {
+        bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+}
+
+/// Array shape of a non-tuple literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Host literal: either a dense array (type + dims + LE bytes) or a tuple.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    bytes: Vec<u8>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    /// Build a dense literal from raw little-endian bytes.
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let numel: usize = dims.iter().product();
+        let want = numel * ty.size_bytes();
+        if data.len() != want {
+            return Err(Error(format!(
+                "literal {ty:?}{dims:?} wants {want} bytes, got {}",
+                data.len()
+            )));
+        }
+        Ok(Literal {
+            ty,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            bytes: data.to_vec(),
+            tuple: None,
+        })
+    }
+
+    /// Build a tuple literal (what `return_tuple=True` executables yield).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal {
+            ty: ElementType::Pred,
+            dims: Vec::new(),
+            bytes: Vec::new(),
+            tuple: Some(parts),
+        }
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        if self.tuple.is_some() {
+            return Err(Error("array_shape on a tuple literal".into()));
+        }
+        Ok(ArrayShape {
+            dims: self.dims.clone(),
+            ty: self.ty,
+        })
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        if self.tuple.is_some() {
+            return Err(Error("ty on a tuple literal".into()));
+        }
+        Ok(self.ty)
+    }
+
+    /// Decode to a typed host vector; errors on element-type mismatch.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.tuple.is_some() {
+            return Err(Error("to_vec on a tuple literal".into()));
+        }
+        if self.ty != T::TY {
+            return Err(Error(format!(
+                "literal is {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        Ok(T::read_le(&self.bytes))
+    }
+
+    /// Split a tuple literal into its parts.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        self.tuple
+            .take()
+            .ok_or_else(|| Error("decompose_tuple on a non-tuple literal".into()))
+    }
+}
+
+/// PJRT client stub — construction reports the runtime as unavailable.
+#[derive(Debug, Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("creating PJRT CPU client"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compiling HLO"))
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("uploading host buffer"))
+    }
+}
+
+/// Parsed HLO module stub.
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("parsing HLO text"))
+    }
+}
+
+/// XLA computation stub.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Loaded executable stub.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("executing"))
+    }
+}
+
+/// Device buffer stub.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("downloading buffer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data = [1.5f32, -2.0, 0.25];
+        let mut bytes = Vec::new();
+        f32::write_le(&data, &mut bytes);
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        assert_eq!(lit.array_shape().unwrap().dims(), &[3]);
+        assert_eq!(lit.ty().unwrap(), ElementType::F32);
+    }
+
+    #[test]
+    fn literal_type_mismatch_rejected() {
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[1], &[0, 0, 0, 0])
+                .unwrap();
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn literal_size_checked() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::S32, &[2], &[0u8; 7]).is_err()
+        );
+    }
+
+    #[test]
+    fn tuple_decomposes_once() {
+        let part =
+            Literal::create_from_shape_and_untyped_data(ElementType::S32, &[1], &[1, 0, 0, 0])
+                .unwrap();
+        let mut tup = Literal::tuple(vec![part]);
+        assert!(tup.array_shape().is_err());
+        let parts = tup.decompose_tuple().unwrap();
+        assert_eq!(parts.len(), 1);
+        assert!(tup.decompose_tuple().is_err());
+    }
+
+    #[test]
+    fn pjrt_paths_fail_fast_with_guidance() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{err:?}").contains("--backend native"));
+    }
+}
