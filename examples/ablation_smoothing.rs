@@ -2,6 +2,9 @@
 //! trains SageBwd with {no smoothing, K-smoothing, QK-smoothing} plus the
 //! FPA reference, and prints the final-loss ranking.
 //!
+//! Runs on the native training engine by default (no artifacts, no XLA);
+//! pass `--backend xla` for the AOT path.
+//!
 //! ```text
 //! cargo run --release --example ablation_smoothing -- [--steps 60] [--tps 1024]
 //! ```
@@ -9,14 +12,17 @@
 use anyhow::Result;
 use sagebwd::cli::Args;
 use sagebwd::config::TrainConfig;
-use sagebwd::coordinator::{RunStatus, Trainer};
-use sagebwd::runtime::Runtime;
+use sagebwd::coordinator::{RunStatus, TrainerFactory};
 use sagebwd::telemetry::{run_dir, Log};
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
     let steps = args.u64_or("steps", 60)?;
     let tps = args.u64_or("tps", 1024)?;
+    let factory = TrainerFactory::new(
+        args.str_or("backend", "native"),
+        sagebwd::DEFAULT_ARTIFACTS_DIR,
+    )?;
     let log = Log::new(true);
 
     let grid = [
@@ -40,8 +46,9 @@ fn main() -> Result<()> {
             grad_noise_sigma: 0.0,
             checkpoint_every: 0,
             log_every: (steps / 6).max(1),
+            ..TrainConfig::default()
         };
-        let mut trainer = Trainer::new(Runtime::new(sagebwd::DEFAULT_ARTIFACTS_DIR)?, cfg)?;
+        let mut trainer = factory.trainer(cfg)?;
         let mut batches = trainer.make_batcher(512, 4)?;
         let report = trainer.run(&mut batches, &log)?;
         let dir = run_dir(

@@ -3,8 +3,8 @@
 //! attention at low tokens-per-step, on the synthetic corpus, logging both
 //! loss curves — the Figure-1b experiment at example scale.
 //!
-//! Everything on the hot path is Rust + AOT XLA executables; Python was
-//! only used at `make artifacts` time.
+//! Runs on the native training engine by default (no artifacts, no XLA —
+//! a bare checkout works); pass `--backend xla` for the AOT path.
 //!
 //! ```text
 //! cargo run --release --example pretrain_tps -- [--steps 120] [--tps 1024]
@@ -13,14 +13,17 @@
 use anyhow::Result;
 use sagebwd::cli::Args;
 use sagebwd::config::TrainConfig;
-use sagebwd::coordinator::Trainer;
-use sagebwd::runtime::Runtime;
+use sagebwd::coordinator::TrainerFactory;
 use sagebwd::telemetry::{run_dir, Log};
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
     let steps = args.u64_or("steps", 120)?;
     let tps = args.u64_or("tps", 1024)?;
+    let factory = TrainerFactory::new(
+        args.str_or("backend", "native"),
+        sagebwd::DEFAULT_ARTIFACTS_DIR,
+    )?;
     let log = Log::new(true);
 
     let mut outcomes = Vec::new();
@@ -38,8 +41,9 @@ fn main() -> Result<()> {
             grad_noise_sigma: 0.0,
             checkpoint_every: 0,
             log_every: (steps / 12).max(1),
+            ..TrainConfig::default()
         };
-        let mut trainer = Trainer::new(Runtime::new(sagebwd::DEFAULT_ARTIFACTS_DIR)?, cfg)?;
+        let mut trainer = factory.trainer(cfg)?;
         let mut batches = trainer.make_batcher(512, 4)?;
         let report = trainer.run(&mut batches, &log)?;
         let dir = run_dir(sagebwd::DEFAULT_RESULTS_DIR, &format!("pretrain_tps/{variant}"))?;

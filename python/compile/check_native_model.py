@@ -1,0 +1,504 @@
+"""Numerical blueprint + validation for the native Rust training engine.
+
+The Rust side (``rust/src/model/``, ``rust/src/coordinator/engine.rs``)
+implements a decoder-only transformer with *manual* forward/backward in
+f32.  This script is its numpy twin, kept formula-identical, and serves
+two purposes:
+
+1. **Gradcheck margins** — finite-difference checks for every building
+   block (RMSNorm, QK-norm, SwiGLU MLP, tied-embedding cross-entropy,
+   causal FPA attention, full model) in float32, printing the observed
+   relative errors.  ``rust/tests/model_gradcheck.rs`` mirrors the same
+   procedure and uses tolerances >= 3x the maxima printed here (the
+   margins are recorded in that file's comments).
+
+2. **Fig-1 divergence tuning** — simulates the fig1 TPS x variant grid
+   (AdamW, cosine schedule, token budget) to choose the default peak LR
+   at which the no-QK-norm high-TPS arm crosses the `max_attn_logit`
+   divergence ceiling (50.0) while the QK-norm arms complete.  The Rust
+   `fig1` harness uses the LR this script validates.
+
+Run:  python3 python/compile/check_native_model.py [--sim]
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+
+import numpy as np
+
+F = np.float32
+EPS_NORM = F(1e-6)
+
+# Model dims — must match rust/src/model/mod.rs NativeModelConfig::default.
+VOCAB, D_MODEL, N_HEADS, D_HEAD, D_FF, N_LAYERS = 512, 32, 2, 16, 64, 2
+SEQ, MICRO_B = 32, 2
+
+# AdamW — must match python/compile/model.py and rust/src/model/adamw.rs.
+B1, B2, ADAM_EPS, WD = 0.9, 0.95, 1e-8, 0.1
+
+CEILING = 50.0  # max_attn_logit divergence ceiling (TrainConfig default)
+
+
+# ---------------------------------------------------------------------------
+# Building blocks (formula-identical to rust/src/model/blocks.rs)
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_fwd(x, gamma):
+    """x (R, D), gamma (D,) -> y, cache."""
+    ms = np.mean(np.square(x), axis=-1, keepdims=True)
+    r = F(1.0) / np.sqrt(ms + EPS_NORM)
+    return x * r * gamma, (x, gamma, r)
+
+
+def rmsnorm_bwd(dy, cache):
+    x, gamma, r = cache
+    d = x.shape[-1]
+    w = dy * gamma
+    dgamma = np.sum(dy * x * r, axis=0)
+    wx = np.sum(w * x, axis=-1, keepdims=True)
+    dx = w * r - x * (r ** 3) * wx / F(d)
+    return dx.astype(F), dgamma.astype(F)
+
+
+def silu(x):
+    return x / (F(1.0) + np.exp(-x))
+
+
+def silu_grad(x):
+    s = F(1.0) / (F(1.0) + np.exp(-x))
+    return s * (F(1.0) + x * (F(1.0) - s))
+
+
+def mlp_fwd(y, w_gate, w_up, w_down):
+    g = y @ w_gate
+    u = y @ w_up
+    h = silu(g) * u
+    out = h @ w_down
+    return out, (y, g, u, h)
+
+
+def mlp_bwd(dout, cache, w_gate, w_up, w_down):
+    y, g, u, h = cache
+    dw_down = h.T @ dout
+    dh = dout @ w_down.T
+    du = dh * silu(g)
+    dg = dh * u * silu_grad(g)
+    dw_gate = y.T @ dg
+    dw_up = y.T @ du
+    dy = dg @ w_gate.T + du @ w_up.T
+    return dy.astype(F), dw_gate.astype(F), dw_up.astype(F), dw_down.astype(F)
+
+
+def attention_fwd(q, k, v, causal=True):
+    """Exact FPA attention on one (N, dh) head.  Returns o, cache, max|S|."""
+    n, dh = q.shape
+    s = (q @ k.T) / F(math.sqrt(dh))
+    if causal:
+        mask = np.triu(np.ones((n, n), dtype=bool), 1)
+        s = np.where(mask, F(-np.inf), s)
+    max_logit = float(np.max(np.abs(np.where(np.isfinite(s), s, 0.0))))
+    m = np.max(s, axis=-1, keepdims=True)
+    p = np.exp(s - m)
+    p /= np.sum(p, axis=-1, keepdims=True)
+    o = p @ v
+    return o.astype(F), (q, k, v, p.astype(F)), max_logit
+
+
+def attention_bwd(do, cache):
+    q, k, v, p = cache
+    n, dh = q.shape
+    inv = F(1.0 / math.sqrt(dh))
+    dv = p.T @ do
+    dp = do @ v.T
+    delta = np.sum(do * (p @ v), axis=-1, keepdims=True)
+    ds = p * (dp - delta)
+    dq = (ds @ k) * inv
+    dk = (ds.T @ q) * inv
+    return dq.astype(F), dk.astype(F), dv.astype(F)
+
+
+def ce_fwd(f, embed, targets):
+    """Tied head: logits = f @ embed.T; mean next-token CE."""
+    logits = f @ embed.T
+    m = np.max(logits, axis=-1, keepdims=True)
+    z = np.exp(logits - m)
+    zsum = np.sum(z, axis=-1, keepdims=True)
+    lse = (m + np.log(zsum)).squeeze(-1)
+    gold = logits[np.arange(len(targets)), targets]
+    loss = float(np.mean(lse - gold))
+    p = z / zsum
+    return loss, (f, p.astype(F), targets)
+
+
+def ce_bwd(cache, embed):
+    f, p, targets = cache
+    r = len(targets)
+    dlogits = p.copy()
+    dlogits[np.arange(r), targets] -= F(1.0)
+    dlogits /= F(r)
+    df = dlogits @ embed
+    dembed = dlogits.T @ f
+    return df.astype(F), dembed.astype(F)
+
+
+# ---------------------------------------------------------------------------
+# Parameters (schema mirrors python/compile/model.py & rust model/mod.rs)
+# ---------------------------------------------------------------------------
+
+
+def param_shapes(qk_norm):
+    shapes = {"embed": (VOCAB, D_MODEL), "final_norm": (D_MODEL,)}
+    for i in range(N_LAYERS):
+        p = f"layers.{i:02d}."
+        shapes[p + "attn_norm"] = (D_MODEL,)
+        shapes[p + "wq"] = (D_MODEL, N_HEADS * D_HEAD)
+        shapes[p + "wk"] = (D_MODEL, N_HEADS * D_HEAD)
+        shapes[p + "wv"] = (D_MODEL, N_HEADS * D_HEAD)
+        shapes[p + "wo"] = (N_HEADS * D_HEAD, D_MODEL)
+        if qk_norm:
+            shapes[p + "q_norm"] = (D_HEAD,)
+            shapes[p + "k_norm"] = (D_HEAD,)
+        shapes[p + "mlp_norm"] = (D_MODEL,)
+        shapes[p + "w_gate"] = (D_MODEL, D_FF)
+        shapes[p + "w_up"] = (D_MODEL, D_FF)
+        shapes[p + "w_down"] = (D_FF, D_MODEL)
+    return shapes
+
+
+def init_params(qk_norm, rng):
+    shapes = param_shapes(qk_norm)
+    resid = 1.0 / math.sqrt(2 * N_LAYERS)
+    params = {}
+    for name in sorted(shapes):
+        shape = shapes[name]
+        if name.endswith("norm"):
+            params[name] = np.ones(shape, F)
+        elif name.endswith(("wo", "w_down")):
+            params[name] = (0.02 * resid * rng.standard_normal(shape)).astype(F)
+        else:
+            params[name] = (0.02 * rng.standard_normal(shape)).astype(F)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Full model forward/backward (blueprint for rust model/transformer.rs)
+# ---------------------------------------------------------------------------
+
+
+def model_loss_and_grads(params, tokens, targets, qk_norm, want_grads=True):
+    """tokens/targets: (B, N) int.  Returns (loss, grads, max_attn_logit)."""
+    b, n = tokens.shape
+    flat = tokens.reshape(-1)
+    x = params["embed"][flat]  # (R, D)
+    caches = []
+    max_logit = 0.0
+    for i in range(N_LAYERS):
+        p = f"layers.{i:02d}."
+        y, an_cache = rmsnorm_fwd(x, params[p + "attn_norm"])
+        q = y @ params[p + "wq"]
+        k = y @ params[p + "wk"]
+        v = y @ params[p + "wv"]
+        heads = []
+        o = np.zeros_like(q)
+        for bi in range(b):
+            for h in range(N_HEADS):
+                rs = slice(bi * n, (bi + 1) * n)
+                cs = slice(h * D_HEAD, (h + 1) * D_HEAD)
+                qh, kh, vh = q[rs, cs], k[rs, cs], v[rs, cs]
+                if qk_norm:
+                    qh, qn_cache = rmsnorm_fwd(qh, params[p + "q_norm"])
+                    kh, kn_cache = rmsnorm_fwd(kh, params[p + "k_norm"])
+                else:
+                    qn_cache = kn_cache = None
+                oh, a_cache, ml = attention_fwd(qh, kh, vh)
+                max_logit = max(max_logit, ml)
+                o[rs, cs] = oh
+                heads.append((rs, cs, qn_cache, kn_cache, a_cache))
+        attn_out = o @ params[p + "wo"]
+        x1 = x + attn_out
+        ym, mn_cache = rmsnorm_fwd(x1, params[p + "mlp_norm"])
+        mlp_out, mlp_cache = mlp_fwd(
+            ym, params[p + "w_gate"], params[p + "w_up"], params[p + "w_down"])
+        x2 = x1 + mlp_out
+        caches.append((x, y, an_cache, o, heads, x1, mn_cache, mlp_cache))
+        x = x2
+    f, fn_cache = rmsnorm_fwd(x, params["final_norm"])
+    loss, ce_cache = ce_fwd(f, params["embed"], targets.reshape(-1))
+    if not want_grads:
+        return loss, None, max_logit
+
+    grads = {name: np.zeros_like(t) for name, t in params.items()}
+    df, dembed_head = ce_bwd(ce_cache, params["embed"])
+    grads["embed"] += dembed_head
+    dx, dg_final = rmsnorm_bwd(df, fn_cache)
+    grads["final_norm"] += dg_final
+    for i in reversed(range(N_LAYERS)):
+        p = f"layers.{i:02d}."
+        x_in, y, an_cache, o, heads, x1, mn_cache, mlp_cache = caches[i]
+        dym, dwg, dwu, dwd = mlp_bwd(
+            dx, mlp_cache, params[p + "w_gate"], params[p + "w_up"],
+            params[p + "w_down"])
+        grads[p + "w_gate"] += dwg
+        grads[p + "w_up"] += dwu
+        grads[p + "w_down"] += dwd
+        dx1, dg_m = rmsnorm_bwd(dym, mn_cache)
+        grads[p + "mlp_norm"] += dg_m
+        dx1 = dx1 + dx  # residual
+        grads[p + "wo"] += o.T @ dx1
+        do = dx1 @ params[p + "wo"].T
+        dq = np.zeros_like(do)
+        dk = np.zeros_like(do)
+        dv = np.zeros_like(do)
+        for rs, cs, qn_cache, kn_cache, a_cache in heads:
+            dqh, dkh, dvh = attention_bwd(do[rs, cs], a_cache)
+            if qk_norm:
+                dqh, dgq = rmsnorm_bwd(dqh, qn_cache)
+                dkh, dgk = rmsnorm_bwd(dkh, kn_cache)
+                grads[p + "q_norm"] += dgq
+                grads[p + "k_norm"] += dgk
+            dq[rs, cs] = dqh
+            dk[rs, cs] = dkh
+            dv[rs, cs] = dvh
+        grads[p + "wq"] += y.T @ dq
+        grads[p + "wk"] += y.T @ dk
+        grads[p + "wv"] += y.T @ dv
+        dy = dq @ params[p + "wq"].T + dk @ params[p + "wk"].T \
+            + dv @ params[p + "wv"].T
+        dxa, dg_a = rmsnorm_bwd(dy, an_cache)
+        grads[p + "attn_norm"] += dg_a
+        dx = dx1 + dxa  # residual into the block input
+    # embedding gather backward
+    np.add.at(grads["embed"], flat, dx)
+    return loss, grads, max_logit
+
+
+# ---------------------------------------------------------------------------
+# Finite-difference harness
+# ---------------------------------------------------------------------------
+
+
+def fd_check(fn_loss, tensors, grads, rng, n_probe=40, eps=5e-3):
+    """Central-difference check.  fn_loss() recomputes the scalar from the
+    (mutated) tensors; returns max |fd - analytic| / rms(analytic)."""
+    worst = 0.0
+    for t, g in zip(tensors, grads):
+        flat_t = t.reshape(-1)
+        flat_g = g.reshape(-1)
+        rms = float(np.sqrt(np.mean(np.square(flat_g.astype(np.float64))))) + 1e-12
+        idx = rng.choice(len(flat_t), size=min(n_probe, len(flat_t)), replace=False)
+        for j in idx:
+            orig = flat_t[j]
+            flat_t[j] = orig + F(eps)
+            lp = fn_loss()
+            flat_t[j] = orig - F(eps)
+            lm = fn_loss()
+            flat_t[j] = orig
+            fd = (lp - lm) / (2 * eps)
+            err = abs(fd - float(flat_g[j])) / rms
+            worst = max(worst, err)
+    return worst
+
+
+def run_gradchecks():
+    rng = np.random.default_rng(0)
+    report = []
+
+    # RMSNorm --------------------------------------------------------------
+    x = rng.standard_normal((8, 16)).astype(F)
+    gamma = (1.0 + 0.1 * rng.standard_normal(16)).astype(F)
+    w = rng.standard_normal((8, 16)).astype(F)
+
+    def loss_rms():
+        y, _ = rmsnorm_fwd(x, gamma)
+        return float(np.sum(w * y))
+
+    y, cache = rmsnorm_fwd(x, gamma)
+    dx, dgamma = rmsnorm_bwd(w, cache)
+    report.append(("rmsnorm", fd_check(loss_rms, [x, gamma], [dx, dgamma], rng)))
+
+    # QK-norm (same op at head width, gamma near 1) ------------------------
+    xq = rng.standard_normal((SEQ, D_HEAD)).astype(F)
+    gq = (1.0 + 0.05 * rng.standard_normal(D_HEAD)).astype(F)
+    wq = rng.standard_normal((SEQ, D_HEAD)).astype(F)
+
+    def loss_qk():
+        yq, _ = rmsnorm_fwd(xq, gq)
+        return float(np.sum(wq * yq))
+
+    yq, cq = rmsnorm_fwd(xq, gq)
+    dxq, dgq = rmsnorm_bwd(wq, cq)
+    report.append(("qk-norm", fd_check(loss_qk, [xq, gq], [dxq, dgq], rng)))
+
+    # SwiGLU MLP -----------------------------------------------------------
+    ym = rng.standard_normal((8, D_MODEL)).astype(F)
+    wg = (0.3 * rng.standard_normal((D_MODEL, D_FF))).astype(F)
+    wu = (0.3 * rng.standard_normal((D_MODEL, D_FF))).astype(F)
+    wd = (0.3 * rng.standard_normal((D_FF, D_MODEL))).astype(F)
+    wm = rng.standard_normal((8, D_MODEL)).astype(F)
+
+    def loss_mlp():
+        out, _ = mlp_fwd(ym, wg, wu, wd)
+        return float(np.sum(wm * out))
+
+    out, cm = mlp_fwd(ym, wg, wu, wd)
+    dy, dwg, dwu, dwd = mlp_bwd(wm, cm, wg, wu, wd)
+    report.append(("mlp", fd_check(loss_mlp, [ym, wg, wu, wd],
+                                   [dy, dwg, dwu, dwd], rng)))
+
+    # Causal FPA attention -------------------------------------------------
+    qa = rng.standard_normal((SEQ, D_HEAD)).astype(F)
+    ka = rng.standard_normal((SEQ, D_HEAD)).astype(F)
+    va = rng.standard_normal((SEQ, D_HEAD)).astype(F)
+    wa = rng.standard_normal((SEQ, D_HEAD)).astype(F)
+
+    def loss_attn():
+        o, _, _ = attention_fwd(qa, ka, va)
+        return float(np.sum(wa * o))
+
+    o, ca, _ = attention_fwd(qa, ka, va)
+    dqa, dka, dva = attention_bwd(wa, ca)
+    report.append(("attention", fd_check(loss_attn, [qa, ka, va],
+                                         [dqa, dka, dva], rng)))
+
+    # Tied-embedding cross-entropy ----------------------------------------
+    fx = rng.standard_normal((16, D_MODEL)).astype(F)
+    emb = (0.5 * rng.standard_normal((64, D_MODEL))).astype(F)
+    tgt = rng.integers(0, 64, size=16)
+
+    def loss_ce():
+        loss, _ = ce_fwd(fx, emb, tgt)
+        return loss
+
+    loss, cc = ce_fwd(fx, emb, tgt)
+    dfx, demb = ce_bwd(cc, emb)
+    report.append(("cross-entropy", fd_check(loss_ce, [fx, emb],
+                                             [dfx, demb], rng, eps=1e-2)))
+
+    # Full model, a few coordinates per leaf -------------------------------
+    params = init_params(True, rng)
+    tokens = rng.integers(0, VOCAB, size=(MICRO_B, SEQ))
+    targets = rng.integers(0, VOCAB, size=(MICRO_B, SEQ))
+
+    def loss_model():
+        l, _, _ = model_loss_and_grads(params, tokens, targets, True,
+                                       want_grads=False)
+        return l
+
+    _, grads, _ = model_loss_and_grads(params, tokens, targets, True)
+    leaves = ["embed", "layers.00.wq", "layers.00.q_norm", "layers.01.w_gate",
+              "final_norm"]
+    worst = 0.0
+    for name in leaves:
+        # eps 2e-2 balances f32 round-off vs truncation end-to-end (the
+        # sweep minimum); rust/tests/model_gradcheck.rs uses the same.
+        worst = max(worst, fd_check(loss_model, [params[name]], [grads[name]],
+                                    rng, n_probe=8, eps=2e-2))
+    report.append(("full-model", worst))
+
+    print("gradcheck: observed max |fd - analytic| / rms(analytic)  (float32)")
+    for name, err in report:
+        print(f"  {name:<14} {err:.3e}")
+    return report
+
+
+# ---------------------------------------------------------------------------
+# Fig-1 divergence simulation
+# ---------------------------------------------------------------------------
+
+
+def zipf_batch(rng, b, n):
+    """Zipf(1.2)-ish token stream — the synthetic-corpus stand-in."""
+    toks = np.minimum(
+        (rng.pareto(1.2, size=(b, n + 1)) * 4).astype(np.int64), VOCAB - 1)
+    return toks[:, :n], toks[:, 1:]
+
+
+def adamw_step(params, grads, m, v, lr, step):
+    """f32 moment storage, f64 per-element update math — exactly what
+    rust/src/model/adamw.rs does."""
+    c1 = 1.0 - B1 ** step
+    c2 = 1.0 - B2 ** step
+    for name in params:
+        g = grads[name].astype(np.float64)
+        m[name] = (B1 * m[name].astype(np.float64) + (1 - B1) * g).astype(F)
+        v[name] = (B2 * v[name].astype(np.float64) + (1 - B2) * g * g).astype(F)
+        upd = (m[name].astype(np.float64) / c1) \
+            / (np.sqrt(v[name].astype(np.float64) / c2) + ADAM_EPS)
+        decay = 0.0 if name.endswith("norm") else WD
+        params[name] = (params[name].astype(np.float64)
+                        - lr * (upd + decay * params[name].astype(np.float64))).astype(F)
+
+
+def cosine_lr(step, peak, warmup, total, min_frac=0.1):
+    if warmup > 0 and step < warmup:
+        return peak * (step + 1) / warmup
+    prog = min(max((step - warmup) / max(total - warmup, 1), 0.0), 1.0)
+    return peak * (min_frac + (1 - min_frac) * 0.5 * (1 + math.cos(math.pi * prog)))
+
+
+def train_cell(qk_norm, tps, budget, peak_lr, seed):
+    rng = np.random.default_rng(seed)
+    params = init_params(qk_norm, rng)
+    m = {k: np.zeros(t.shape, F) for k, t in params.items()}
+    v = {k: np.zeros(t.shape, F) for k, t in params.items()}
+    steps = max(budget // tps, 2)
+    warmup = max(steps // 20, 1)
+    micro = tps // (MICRO_B * SEQ)
+    first_loss, last_loss = None, None
+    for step in range(steps):
+        gsum = None
+        lsum = 0.0
+        ml_step = 0.0
+        for _ in range(micro):
+            tokens, targets = zipf_batch(rng, MICRO_B, SEQ)
+            loss, grads, ml = model_loss_and_grads(params, tokens, targets, qk_norm)
+            ml_step = max(ml_step, ml)
+            lsum += loss
+            if gsum is None:
+                gsum = {k: g.astype(np.float64) for k, g in grads.items()}
+            else:
+                for k in gsum:
+                    gsum[k] += grads[k]
+        loss = lsum / micro
+        for k in gsum:
+            gsum[k] /= micro
+        if first_loss is None:
+            first_loss = loss
+        last_loss = loss
+        if not math.isfinite(loss) or ml_step > CEILING:
+            return dict(status="DIVERGED", at=step, loss=loss, max_logit=ml_step,
+                        first_loss=first_loss)
+        lr = cosine_lr(step, peak_lr, warmup, steps)
+        adamw_step(params, gsum, m, v, lr, step + 1)
+    return dict(status="ok", at=steps, loss=last_loss, max_logit=ml_step,
+                first_loss=first_loss)
+
+
+def run_sim(budget=131072, tps_lo=1024, tps_hi=8192, lrs=(0.02, 0.05, 0.1, 0.2)):
+    print(f"\nfig1 sim: budget={budget} tps_lo={tps_lo} tps_hi={tps_hi} "
+          f"(steps hi={budget // tps_hi}, lo={budget // tps_lo})")
+    for lr in lrs:
+        print(f"-- peak_lr {lr}")
+        for qk, tps, label in [(True, tps_hi, "qknorm  @hi"),
+                               (False, tps_hi, "noqknorm@hi"),
+                               (True, tps_lo, "qknorm  @lo"),
+                               (False, tps_lo, "noqknorm@lo")]:
+            r = train_cell(qk, tps, budget, lr, seed=0)
+            print(f"   {label}: {r['status']:<8} at step {r['at']:>4} "
+                  f"loss {r['first_loss']:.3f}->{r['loss']:.3f} "
+                  f"max_logit {r['max_logit']:.1f}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sim", action="store_true", help="run the fig1 LR sweep")
+    ap.add_argument("--budget", type=int, default=131072)
+    ap.add_argument("--lrs", type=str, default="0.02,0.05,0.1,0.2")
+    args = ap.parse_args()
+    run_gradchecks()
+    if args.sim:
+        run_sim(budget=args.budget,
+                lrs=tuple(float(x) for x in args.lrs.split(",")))

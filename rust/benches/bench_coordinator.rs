@@ -63,6 +63,7 @@ fn main() {
         log_every: 0,
         clip_norm: 0.0,
         grad_noise_sigma: 0.0,
+        ..TrainConfig::default()
     };
     let mut trainer =
         Trainer::new(Runtime::new(dir).expect("runtime"), cfg).expect("trainer");

@@ -48,6 +48,11 @@ pub struct TrainConfig {
     /// Relative synthetic gradient-noise std (0 = off) — the §4.3
     /// hypothesis probe (see coordinator::noise).
     pub grad_noise_sigma: f64,
+    /// Divergence ceiling on the per-step `max |QKᵀ/√d|` telemetry
+    /// (§5.3): crossing it flags the run as diverged while the loss curve
+    /// is still plottable.  Only engines that report the statistic (the
+    /// native engine) can trip it; non-finite loss remains the backstop.
+    pub max_attn_logit_ceiling: f64,
 }
 
 impl Default for TrainConfig {
@@ -64,6 +69,7 @@ impl Default for TrainConfig {
             log_every: 10,
             clip_norm: 0.0,
             grad_noise_sigma: 0.0,
+            max_attn_logit_ceiling: 50.0,
         }
     }
 }
@@ -82,6 +88,7 @@ impl TrainConfig {
             ("log_every", (self.log_every as i64).into()),
             ("clip_norm", self.clip_norm.into()),
             ("grad_noise_sigma", self.grad_noise_sigma.into()),
+            ("max_attn_logit_ceiling", self.max_attn_logit_ceiling.into()),
         ])
     }
 
@@ -114,6 +121,7 @@ impl TrainConfig {
             log_every: get_u("log_every", d.log_every)?,
             clip_norm: get_f("clip_norm", d.clip_norm)?,
             grad_noise_sigma: get_f("grad_noise_sigma", d.grad_noise_sigma)?,
+            max_attn_logit_ceiling: get_f("max_attn_logit_ceiling", d.max_attn_logit_ceiling)?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -155,6 +163,9 @@ impl TrainConfig {
         }
         if self.clip_norm < 0.0 || self.grad_noise_sigma < 0.0 {
             bail!("clip_norm and grad_noise_sigma must be non-negative");
+        }
+        if !(self.max_attn_logit_ceiling > 0.0) {
+            bail!("max_attn_logit_ceiling must be positive");
         }
         Ok(())
     }
@@ -200,6 +211,9 @@ mod tests {
         assert!(cfg.validate().is_err());
         cfg = TrainConfig::default();
         cfg.min_lr_frac = 2.0;
+        assert!(cfg.validate().is_err());
+        cfg = TrainConfig::default();
+        cfg.max_attn_logit_ceiling = 0.0;
         assert!(cfg.validate().is_err());
     }
 

@@ -1,10 +1,23 @@
-//! Checkpoint substrate: a simple self-describing binary format for
-//! (params, optimizer moments, step) — the safetensors stand-in.
+//! Checkpoint substrate: a simple self-describing binary format for the
+//! full training state — the safetensors stand-in.
+//!
+//! **Format v2** (`SBWD0002`) covers the trainer-side state needed to
+//! resume bit-identically: parameters, AdamW moments (`m.*`/`v.*` name
+//! prefixes), the optimizer step, tokens seen, and the trainer's
+//! noise-RNG state.  (The data-stream position is *not* stored — the
+//! batcher is a pure function of (seed, shard), so callers replay it to
+//! the checkpointed step, as the resume tests do.)  v1 (`SBWD0001`,
+//! pre-`TrainEngine`) had no version-bump story and no RNG; loading one
+//! now fails with a clear "unsupported version" error instead of
+//! decoding garbage.
 //!
 //! Layout (little-endian):
 //! ```text
-//! magic  b"SBWD0001"
+//! magic  b"SBWD0002"
 //! u64    step
+//! u64    tokens_seen
+//! u8     rng_present
+//! if rng_present: u64 state, u64 inc, u8 has_spare, f64 spare
 //! u32    num_tensors
 //! per tensor:
 //!   u32 name_len, name bytes (UTF-8)
@@ -19,21 +32,59 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
 
-const MAGIC: &[u8; 8] = b"SBWD0001";
+const MAGIC_V2: &[u8; 8] = b"SBWD0002";
+const MAGIC_V1: &[u8; 8] = b"SBWD0001";
 
-/// A named tensor collection + step counter.
+/// Serialized PRNG state (the trainer's noise stream).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RngState {
+    pub state: u64,
+    pub inc: u64,
+    pub gauss_spare: Option<f64>,
+}
+
+impl RngState {
+    pub fn from_rng(rng: &Pcg64) -> RngState {
+        let (state, inc, gauss_spare) = rng.raw_state();
+        RngState {
+            state,
+            inc,
+            gauss_spare,
+        }
+    }
+
+    pub fn to_rng(&self) -> Pcg64 {
+        Pcg64::from_raw_state(self.state, self.inc, self.gauss_spare)
+    }
+}
+
+/// A named tensor collection + run counters + optional RNG state.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Checkpoint {
     pub step: u64,
+    pub tokens_seen: u64,
+    pub rng: Option<RngState>,
     pub tensors: Vec<(String, Tensor)>,
 }
 
 impl Checkpoint {
     pub fn save(&self, path: &Path) -> Result<()> {
         let mut buf: Vec<u8> = Vec::new();
-        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(MAGIC_V2);
         buf.extend_from_slice(&self.step.to_le_bytes());
+        buf.extend_from_slice(&self.tokens_seen.to_le_bytes());
+        match &self.rng {
+            Some(r) => {
+                buf.push(1);
+                buf.extend_from_slice(&r.state.to_le_bytes());
+                buf.extend_from_slice(&r.inc.to_le_bytes());
+                buf.push(u8::from(r.gauss_spare.is_some()));
+                buf.extend_from_slice(&r.gauss_spare.unwrap_or(0.0).to_le_bytes());
+            }
+            None => buf.push(0),
+        }
         buf.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
         for (name, t) in &self.tensors {
             buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
@@ -71,10 +122,35 @@ impl Checkpoint {
             *pos += n;
             Ok(s)
         };
-        if take(&mut pos, 8)? != MAGIC {
-            bail!("bad checkpoint magic in {}", path.display());
+        let magic = take(&mut pos, 8)?;
+        if magic == MAGIC_V1 {
+            bail!(
+                "{} is a format-v1 checkpoint (pre-TrainEngine: no version story, no \
+                 optimizer RNG); v1 is no longer readable — re-run training to produce \
+                 a v2 (SBWD0002) checkpoint",
+                path.display()
+            );
+        }
+        if magic != MAGIC_V2 {
+            bail!("bad checkpoint magic in {} (not an SBWD checkpoint)", path.display());
         }
         let step = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+        let tokens_seen = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+        let rng = match take(&mut pos, 1)?[0] {
+            0 => None,
+            1 => {
+                let state = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+                let inc = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+                let has_spare = take(&mut pos, 1)?[0];
+                let spare = f64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+                Some(RngState {
+                    state,
+                    inc,
+                    gauss_spare: (has_spare != 0).then_some(spare),
+                })
+            }
+            other => bail!("corrupt rng_present flag {other} in {}", path.display()),
+        };
         let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
         let mut tensors = Vec::with_capacity(count as usize);
         for _ in 0..count {
@@ -100,7 +176,12 @@ impl Checkpoint {
         if pos != buf.len() {
             bail!("trailing bytes in checkpoint {}", path.display());
         }
-        Ok(Checkpoint { step, tensors })
+        Ok(Checkpoint {
+            step,
+            tokens_seen,
+            rng,
+            tensors,
+        })
     }
 }
 
@@ -114,12 +195,17 @@ mod tests {
     }
 
     #[test]
-    fn roundtrip() {
+    fn roundtrip_with_rng() {
         let mut rng = Pcg64::new(0, 0);
+        let mut noise = Pcg64::new(9, 1);
+        noise.gaussian(); // odd draw count → spare cached
         let ckpt = Checkpoint {
             step: 1234,
+            tokens_seen: 1234 * 512,
+            rng: Some(RngState::from_rng(&noise)),
             tensors: vec![
                 ("embed".into(), Tensor::randn(&[8, 4], 1.0, &mut rng)),
+                ("m.embed".into(), Tensor::randn(&[8, 4], 1.0, &mut rng)),
                 ("scalar".into(), Tensor::scalar(2.5)),
             ],
         };
@@ -127,6 +213,39 @@ mod tests {
         ckpt.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(ckpt, back);
+        // The restored RNG continues the exact stream.
+        let mut restored = back.rng.unwrap().to_rng();
+        for _ in 0..8 {
+            assert_eq!(noise.gaussian(), restored.gaussian());
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn roundtrip_without_rng() {
+        let ckpt = Checkpoint {
+            step: 7,
+            tokens_seen: 0,
+            rng: None,
+            tensors: vec![("x".into(), Tensor::zeros(&[3]))],
+        };
+        let path = temp("nrng.ckpt");
+        ckpt.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), ckpt);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn v1_checkpoint_fails_with_version_error() {
+        let path = temp("v1.ckpt");
+        // A minimal v1 header: old magic + step + zero tensors.
+        let mut buf = b"SBWD0001".to_vec();
+        buf.extend_from_slice(&42u64.to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        std::fs::write(&path, &buf).unwrap();
+        let err = format!("{:#}", Checkpoint::load(&path).unwrap_err());
+        assert!(err.contains("format-v1"), "unhelpful v1 error: {err}");
+        assert!(err.contains("SBWD0002"), "error must name the current format: {err}");
         std::fs::remove_file(&path).unwrap();
     }
 
@@ -134,7 +253,8 @@ mod tests {
     fn corrupt_magic_rejected() {
         let path = temp("bad.ckpt");
         std::fs::write(&path, b"NOTMAGIC rest").unwrap();
-        assert!(Checkpoint::load(&path).is_err());
+        let err = format!("{:#}", Checkpoint::load(&path).unwrap_err());
+        assert!(err.contains("magic"));
         std::fs::remove_file(&path).unwrap();
     }
 
@@ -142,6 +262,8 @@ mod tests {
     fn truncated_rejected() {
         let ckpt = Checkpoint {
             step: 1,
+            tokens_seen: 64,
+            rng: None,
             tensors: vec![("x".into(), Tensor::zeros(&[16]))],
         };
         let path = temp("trunc.ckpt");
@@ -156,6 +278,8 @@ mod tests {
     fn empty_checkpoint() {
         let ckpt = Checkpoint {
             step: 0,
+            tokens_seen: 0,
+            rng: None,
             tensors: vec![],
         };
         let path = temp("empty.ckpt");

@@ -287,7 +287,7 @@ impl DistTrainer {
         };
         let apply_exe = leader.load_owned(apply_name)?;
         let schedule =
-            CosineSchedule::new(cfg.peak_lr, cfg.warmup_steps, cfg.steps, cfg.min_lr_frac);
+            CosineSchedule::new(cfg.peak_lr, cfg.warmup_steps, cfg.steps, cfg.min_lr_frac)?;
         let pool = WorkerPool::spawn(artifacts_dir, &cfg.variant, workers,
                                      cfg.seed, microbatch, seq_len)?;
         Ok(DistTrainer {

@@ -1,0 +1,538 @@
+//! `TrainEngine` — the execution half of training, split from the
+//! orchestration half (`Trainer`).
+//!
+//! The trainer owns the loop (accumulation, LR schedule, divergence
+//! detection, telemetry, checkpoints); an engine owns *how one microbatch
+//! gradient is computed and how one optimizer step is applied*:
+//!
+//! * [`NativeEngine`] — the in-process model (`crate::model`) + native
+//!   AdamW, attention routed through [`AttentionBackend`].  Runs from a
+//!   bare checkout: no artifacts, no Python, no XLA.  This is the default
+//!   for every training subcommand.
+//! * [`XlaEngine`] — the original AOT artifact path: `grad_step_*` /
+//!   `apply_step_*` executables under PJRT, with device-resident
+//!   parameter/moment buffers between steps (§Perf in DESIGN.md).
+//!
+//! [`TrainerFactory`] maps the `--backend native|xla` CLI flag to a
+//! ready [`Trainer`] so every experiment harness (fig1, fig4,
+//! noise-probe, train) is engine-agnostic.
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::TrainConfig;
+use crate::coordinator::trainer::Trainer;
+use crate::data::Batch;
+use crate::model::{AdamW, AttnVariant, Model, ModelDims};
+use crate::runtime::literal::f32_from_literal;
+use crate::runtime::{AttentionBackend, Executable, NativeBackend, Runtime, TensorSpec};
+use crate::tensor::Tensor;
+
+/// One microbatch's results, engine-agnostic.
+#[derive(Debug)]
+pub struct MicroStats {
+    pub loss: f64,
+    /// Gradients in parameter (ABI) order.
+    pub grads: Vec<Tensor>,
+    /// `max |QKᵀ/√d|` this microbatch — `None` when the engine cannot
+    /// observe it (the monolithic XLA executables don't expose it).
+    pub max_attn_logit: Option<f64>,
+}
+
+/// Host-side training state (checkpointing).
+#[derive(Debug, Clone)]
+pub struct EngineState {
+    pub names: Vec<String>,
+    pub params: Vec<Tensor>,
+    pub m: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+}
+
+/// The execution backend of one training run.
+pub trait TrainEngine {
+    /// Engine name for logs ("native" or "xla").
+    fn name(&self) -> &'static str;
+
+    /// `(microbatch, seq_len)` of the batches this engine consumes.
+    fn microbatch_shape(&self) -> (usize, usize);
+
+    /// Parameter leaf names in ABI order.
+    fn param_names(&self) -> &[String];
+
+    /// Gradient leaf shapes in ABI order (accumulator layout).
+    fn grad_shapes(&self) -> &[Vec<usize>];
+
+    /// Forward+backward of one microbatch against the current parameters.
+    fn grad_microbatch(&mut self, batch: &Batch) -> Result<MicroStats>;
+
+    /// One AdamW step with the (already averaged/post-processed) gradient.
+    /// `step` is 1-based for bias correction.
+    fn apply(&mut self, grads: &[Tensor], lr: f64, step: u64) -> Result<()>;
+
+    /// Loss of one batch without updating (held-out probes).
+    fn eval_loss(&mut self, batch: &Batch) -> Result<f64>;
+
+    /// Decode the full training state to host tensors.
+    fn state(&self) -> Result<EngineState>;
+
+    /// Restore state produced by [`Self::state`].
+    fn load_state(&mut self, state: &EngineState) -> Result<()>;
+}
+
+// ---------------------------------------------------------------------------
+// Native engine
+// ---------------------------------------------------------------------------
+
+/// In-process training: native model + native AdamW + kernel backend.
+pub struct NativeEngine {
+    model: Model,
+    backend: Box<dyn AttentionBackend>,
+    params: Vec<Tensor>,
+    opt: AdamW,
+}
+
+impl NativeEngine {
+    /// Default-dimension engine with the in-process kernel backend.
+    pub fn new(cfg: &TrainConfig) -> Result<NativeEngine> {
+        NativeEngine::with_dims(cfg, ModelDims::default())
+    }
+
+    pub fn with_dims(cfg: &TrainConfig, dims: ModelDims) -> Result<NativeEngine> {
+        let variant = AttnVariant::parse(&cfg.variant)?;
+        let model = Model::new(dims, variant)?;
+        let params = model.init_params(cfg.seed);
+        let opt = AdamW::new(model.param_names(), model.param_shapes());
+        Ok(NativeEngine {
+            model,
+            backend: Box::new(NativeBackend::new()),
+            params,
+            opt,
+        })
+    }
+
+    pub fn dims(&self) -> &ModelDims {
+        self.model.dims()
+    }
+}
+
+impl TrainEngine for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn microbatch_shape(&self) -> (usize, usize) {
+        (self.model.dims().microbatch, self.model.dims().seq_len)
+    }
+
+    fn param_names(&self) -> &[String] {
+        self.model.param_names()
+    }
+
+    fn grad_shapes(&self) -> &[Vec<usize>] {
+        self.model.param_shapes()
+    }
+
+    fn grad_microbatch(&mut self, batch: &Batch) -> Result<MicroStats> {
+        let out = self.model.loss_and_grads(
+            &self.params,
+            self.backend.as_mut(),
+            &batch.tokens,
+            &batch.targets,
+        )?;
+        Ok(MicroStats {
+            loss: out.loss,
+            grads: out.grads,
+            max_attn_logit: Some(out.max_attn_logit),
+        })
+    }
+
+    fn apply(&mut self, grads: &[Tensor], lr: f64, step: u64) -> Result<()> {
+        self.opt.apply(&mut self.params, grads, lr, step)
+    }
+
+    fn eval_loss(&mut self, batch: &Batch) -> Result<f64> {
+        let (loss, _) = self.model.loss_only(
+            &self.params,
+            self.backend.as_mut(),
+            &batch.tokens,
+            &batch.targets,
+        )?;
+        Ok(loss)
+    }
+
+    fn state(&self) -> Result<EngineState> {
+        let (m, v) = self.opt.state();
+        Ok(EngineState {
+            names: self.model.param_names().to_vec(),
+            params: self.params.clone(),
+            m: m.to_vec(),
+            v: v.to_vec(),
+        })
+    }
+
+    fn load_state(&mut self, state: &EngineState) -> Result<()> {
+        if state.names != self.model.param_names() {
+            bail!(
+                "checkpoint parameter names do not match this model/variant \
+                 ({} leaves vs {})",
+                state.names.len(),
+                self.model.param_names().len()
+            );
+        }
+        for (t, shape) in state.params.iter().zip(self.model.param_shapes()) {
+            if &t.shape != shape {
+                bail!("checkpoint shape {:?}, model wants {shape:?}", t.shape);
+            }
+        }
+        self.params = state.params.clone();
+        self.opt.load_state(state.m.clone(), state.v.clone())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// XLA engine (the original AOT artifact path)
+// ---------------------------------------------------------------------------
+
+/// AOT-artifact training: `grad_step_*` / `apply_step_*` executables with
+/// device-resident state buffers between steps.
+pub struct XlaEngine {
+    #[allow(dead_code)] // owns the PJRT client + compile cache
+    runtime: Runtime,
+    grad_exe: Executable,
+    apply_exe: Executable,
+    param_names: Vec<String>,
+    param_specs: Vec<TensorSpec>,
+    grad_shapes: Vec<Vec<usize>>,
+    /// Canonical state: device-resident buffers reused across microbatches
+    /// and steps — no host round-trip per microbatch (§Perf).
+    param_bufs: Vec<xla::PjRtBuffer>,
+    m_bufs: Vec<xla::PjRtBuffer>,
+    v_bufs: Vec<xla::PjRtBuffer>,
+    microbatch: usize,
+    seq_len: usize,
+}
+
+impl XlaEngine {
+    /// Load + compile the variant's artifacts and run `init_<variant>`.
+    pub fn new(mut runtime: Runtime, cfg: &TrainConfig) -> Result<XlaEngine> {
+        let grad_name = format!("grad_step_{}", cfg.variant);
+        let apply_name = if cfg.variant.contains("noqknorm") {
+            "apply_step_noqknorm".to_string()
+        } else {
+            "apply_step_qknorm".to_string()
+        };
+        let init_name = format!("init_{}", cfg.variant);
+
+        // init: seed → params (uploaded once as device buffers).
+        let init_exe = runtime.load_owned(&init_name)?;
+        let seed_lit = crate::runtime::literal::literal_from_i32(
+            &crate::tensor::IntTensor::scalar(cfg.seed as i32),
+        )?;
+        let param_lits = init_exe
+            .execute_literals(&[&seed_lit])
+            .with_context(|| format!("running {init_name}"))?;
+
+        let grad_exe = runtime.load_owned(&grad_name)?;
+        let gm = &grad_exe.manifest;
+        let param_names = gm.param_names()?;
+        if param_names.len() != param_lits.len() {
+            bail!(
+                "init produced {} params, grad_step manifest lists {}",
+                param_lits.len(),
+                param_names.len()
+            );
+        }
+        // The first N grad_step inputs are the parameters, in ABI order.
+        let param_specs: Vec<TensorSpec> = gm.inputs[..param_names.len()].to_vec();
+        let grad_shapes: Vec<Vec<usize>> = param_specs.iter().map(|s| s.shape.clone()).collect();
+        let tokens_spec = gm.input("tokens")?;
+        let (microbatch, seq_len) = (tokens_spec.shape[0], tokens_spec.shape[1]);
+
+        let param_bufs: Vec<xla::PjRtBuffer> = param_lits
+            .iter()
+            .map(|l| grad_exe.buffer_from_literal(l))
+            .collect::<Result<_>>()?;
+        // Zero moments, as device buffers.
+        let zeros = |spec: &TensorSpec| -> Result<xla::PjRtBuffer> {
+            grad_exe.upload_f32(&Tensor::zeros(&spec.shape))
+        };
+        let m_bufs = param_specs.iter().map(zeros).collect::<Result<Vec<_>>>()?;
+        let v_bufs = param_specs.iter().map(zeros).collect::<Result<Vec<_>>>()?;
+
+        // Pre-compile apply_step too, so the first step isn't an outlier.
+        let apply_exe = runtime.load_owned(&apply_name)?;
+
+        Ok(XlaEngine {
+            runtime,
+            grad_exe,
+            apply_exe,
+            param_names,
+            param_specs,
+            grad_shapes,
+            param_bufs,
+            m_bufs,
+            v_bufs,
+            microbatch,
+            seq_len,
+        })
+    }
+
+    fn decode(&self, bufs: &[xla::PjRtBuffer]) -> Result<Vec<Tensor>> {
+        bufs.iter()
+            .zip(&self.param_specs)
+            .map(|(b, s)| {
+                let lit = b
+                    .to_literal_sync()
+                    .map_err(|e| anyhow::anyhow!("downloading state: {e:?}"))?;
+                f32_from_literal(&lit, s)
+            })
+            .collect()
+    }
+}
+
+impl TrainEngine for XlaEngine {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn microbatch_shape(&self) -> (usize, usize) {
+        (self.microbatch, self.seq_len)
+    }
+
+    fn param_names(&self) -> &[String] {
+        &self.param_names
+    }
+
+    fn grad_shapes(&self) -> &[Vec<usize>] {
+        &self.grad_shapes
+    }
+
+    fn grad_microbatch(&mut self, batch: &Batch) -> Result<MicroStats> {
+        let grad_out_specs = &self.grad_exe.manifest.outputs;
+        let tok_buf = self.grad_exe.upload_i32(&batch.tokens)?;
+        let tgt_buf = self.grad_exe.upload_i32(&batch.targets)?;
+        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.param_bufs.len() + 2);
+        inputs.extend(self.param_bufs.iter());
+        inputs.push(&tok_buf);
+        inputs.push(&tgt_buf);
+        let outputs = self.grad_exe.execute_buffers(&inputs)?;
+        let loss = f32_from_literal(&outputs[0], &grad_out_specs[0])?.item() as f64;
+        let grads: Vec<Tensor> = outputs[1..]
+            .iter()
+            .zip(&grad_out_specs[1..])
+            .map(|(l, s)| f32_from_literal(l, s))
+            .collect::<Result<_>>()?;
+        Ok(MicroStats {
+            loss,
+            grads,
+            max_attn_logit: None,
+        })
+    }
+
+    fn apply(&mut self, grads: &[Tensor], lr: f64, step: u64) -> Result<()> {
+        // apply_step ABI: params + m + v + grads + lr + step(1-based).
+        let n = self.param_bufs.len();
+        let grad_bufs: Vec<xla::PjRtBuffer> = grads
+            .iter()
+            .map(|g| self.apply_exe.upload_f32(g))
+            .collect::<Result<_>>()?;
+        let lr_buf = self.apply_exe.upload_f32(&Tensor::scalar(lr as f32))?;
+        let step_buf = self
+            .apply_exe
+            .upload_i32(&crate::tensor::IntTensor::scalar(step as i32))?;
+        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(4 * n + 2);
+        inputs.extend(self.param_bufs.iter());
+        inputs.extend(self.m_bufs.iter());
+        inputs.extend(self.v_bufs.iter());
+        inputs.extend(grad_bufs.iter());
+        inputs.push(&lr_buf);
+        inputs.push(&step_buf);
+        let mut outputs = self.apply_exe.execute_buffers(&inputs)?;
+        if outputs.len() != 3 * n {
+            bail!(
+                "apply_step returned {} outputs, expected {}",
+                outputs.len(),
+                3 * n
+            );
+        }
+        // Re-upload the new state as device buffers for the next step.
+        let upload = |lits: Vec<xla::Literal>| -> Result<Vec<xla::PjRtBuffer>> {
+            lits.iter()
+                .map(|l| self.apply_exe.buffer_from_literal(l))
+                .collect()
+        };
+        let v_new = outputs.split_off(2 * n);
+        let m_new = outputs.split_off(n);
+        self.v_bufs = upload(v_new)?;
+        self.m_bufs = upload(m_new)?;
+        self.param_bufs = upload(outputs)?;
+        Ok(())
+    }
+
+    fn eval_loss(&mut self, batch: &Batch) -> Result<f64> {
+        // Decode only the loss output — not the full gradient set.
+        let tok_buf = self.grad_exe.upload_i32(&batch.tokens)?;
+        let tgt_buf = self.grad_exe.upload_i32(&batch.targets)?;
+        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.param_bufs.len() + 2);
+        inputs.extend(self.param_bufs.iter());
+        inputs.push(&tok_buf);
+        inputs.push(&tgt_buf);
+        let outputs = self.grad_exe.execute_buffers(&inputs)?;
+        let spec = &self.grad_exe.manifest.outputs[0];
+        Ok(f32_from_literal(&outputs[0], spec)?.item() as f64)
+    }
+
+    fn state(&self) -> Result<EngineState> {
+        Ok(EngineState {
+            names: self.param_names.clone(),
+            params: self.decode(&self.param_bufs)?,
+            m: self.decode(&self.m_bufs)?,
+            v: self.decode(&self.v_bufs)?,
+        })
+    }
+
+    fn load_state(&mut self, state: &EngineState) -> Result<()> {
+        if state.names != self.param_names {
+            bail!(
+                "checkpoint parameter names do not match the {} manifest",
+                self.grad_exe.manifest.artifact
+            );
+        }
+        let upload = |ts: &[Tensor]| -> Result<Vec<xla::PjRtBuffer>> {
+            ts.iter().map(|t| self.grad_exe.upload_f32(t)).collect()
+        };
+        self.param_bufs = upload(&state.params)?;
+        self.m_bufs = upload(&state.m)?;
+        self.v_bufs = upload(&state.v)?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Factory: `--backend` flag → Trainer
+// ---------------------------------------------------------------------------
+
+/// Which engine a factory builds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    Native,
+    Xla,
+}
+
+/// Builds engine-backed [`Trainer`]s from the CLI's `--backend` flag —
+/// what the training harnesses (fig1/fig4/noise-probe/train) receive
+/// instead of an XLA `Runtime` factory.
+pub struct TrainerFactory {
+    kind: EngineKind,
+    artifacts_dir: String,
+}
+
+impl TrainerFactory {
+    pub fn new(backend: &str, artifacts_dir: &str) -> Result<TrainerFactory> {
+        let kind = match backend {
+            "native" => EngineKind::Native,
+            "xla" => EngineKind::Xla,
+            other => bail!("unknown backend {other:?}; known: native, xla"),
+        };
+        Ok(TrainerFactory {
+            kind,
+            artifacts_dir: artifacts_dir.to_string(),
+        })
+    }
+
+    pub fn kind(&self) -> EngineKind {
+        self.kind
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        match self.kind {
+            EngineKind::Native => "native",
+            EngineKind::Xla => "xla",
+        }
+    }
+
+    /// Build a trainer for one run configuration.
+    pub fn trainer(&self, cfg: TrainConfig) -> Result<Trainer> {
+        match self.kind {
+            EngineKind::Native => Trainer::native(cfg),
+            EngineKind::Xla => Trainer::new(Runtime::new(self.artifacts_dir.clone())?, cfg),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Batcher, Tokenizer};
+
+    fn native_cfg(variant: &str) -> TrainConfig {
+        TrainConfig {
+            variant: variant.into(),
+            steps: 2,
+            tokens_per_step: 128,
+            warmup_steps: 1,
+            ..TrainConfig::default()
+        }
+    }
+
+    fn one_batch(engine: &dyn TrainEngine) -> Batch {
+        let (b, n) = engine.microbatch_shape();
+        let mut batcher = Batcher::new(Tokenizer::bytes_only(), 7, 0, b, n);
+        batcher.next_batch().unwrap()
+    }
+
+    #[test]
+    fn native_engine_produces_schema_shaped_grads() {
+        let mut e = NativeEngine::new(&native_cfg("fpa_qknorm")).unwrap();
+        assert_eq!(e.name(), "native");
+        assert_eq!(e.microbatch_shape(), (2, 32));
+        let batch = one_batch(&e);
+        let stats = e.grad_microbatch(&batch).unwrap();
+        assert!(stats.loss.is_finite());
+        assert!(stats.max_attn_logit.unwrap() > 0.0);
+        assert_eq!(stats.grads.len(), e.grad_shapes().len());
+        for (g, s) in stats.grads.iter().zip(e.grad_shapes()) {
+            assert_eq!(&g.shape, s);
+        }
+    }
+
+    #[test]
+    fn native_apply_changes_params_and_lowers_same_batch_loss() {
+        let mut e = NativeEngine::new(&native_cfg("sage_qknorm")).unwrap();
+        let batch = one_batch(&e);
+        let before = e.grad_microbatch(&batch).unwrap();
+        e.apply(&before.grads, 0.01, 1).unwrap();
+        let after = e.eval_loss(&batch).unwrap();
+        // One sign-SGD-sized AdamW step on the same batch must reduce loss.
+        assert!(after < before.loss, "{after} !< {}", before.loss);
+    }
+
+    #[test]
+    fn native_state_roundtrips_through_load() {
+        let cfg = native_cfg("sage_qknorm");
+        let mut a = NativeEngine::new(&cfg).unwrap();
+        let batch = one_batch(&a);
+        let s = a.grad_microbatch(&batch).unwrap();
+        a.apply(&s.grads, 0.01, 1).unwrap();
+        let saved = a.state().unwrap();
+        let mut b = NativeEngine::new(&cfg).unwrap();
+        b.load_state(&saved).unwrap();
+        let la = a.eval_loss(&batch).unwrap();
+        let lb = b.eval_loss(&batch).unwrap();
+        assert_eq!(la, lb);
+        // Wrong variant (different schema) must be rejected.
+        let mut c = NativeEngine::new(&native_cfg("sage_noqknorm")).unwrap();
+        assert!(c.load_state(&saved).is_err());
+    }
+
+    #[test]
+    fn factory_maps_backend_names() {
+        assert_eq!(TrainerFactory::new("native", "artifacts").unwrap().kind(),
+                   EngineKind::Native);
+        assert_eq!(TrainerFactory::new("xla", "artifacts").unwrap().kind(),
+                   EngineKind::Xla);
+        assert!(TrainerFactory::new("bogus", "artifacts").is_err());
+        let t = TrainerFactory::new("native", "artifacts").unwrap()
+            .trainer(native_cfg("fpa_qknorm")).unwrap();
+        assert_eq!(t.engine_name(), "native");
+    }
+}

@@ -1,16 +1,24 @@
 //! Layer-3 coordinator: the pre-training orchestration the paper's
 //! experiments run on — tokens-per-step control via gradient accumulation
-//! (§4.3), warmup+cosine LR (§5.1), divergence detection (§5.3),
-//! checkpointing.
+//! (§4.3), warmup+cosine LR (§5.1), divergence detection (§5.3 — the
+//! `max_attn_logit` ceiling plus the non-finite backstop), checkpointing.
+//!
+//! Execution is split behind [`engine::TrainEngine`]: the [`Trainer`]
+//! owns the loop, an engine (native model or AOT XLA artifacts) owns the
+//! math.  [`engine::TrainerFactory`] maps `--backend native|xla` to a
+//! ready trainer for every experiment harness.
 
 pub mod accumulator;
 pub mod checkpoint;
 pub mod distributed;
+pub mod engine;
 pub mod noise;
 pub mod schedule;
 pub mod trainer;
 
 pub use accumulator::{microbatches_for_tps, GradAccumulator};
-pub use checkpoint::Checkpoint;
+pub use checkpoint::{Checkpoint, RngState};
+pub use engine::{EngineKind, EngineState, MicroStats, NativeEngine, TrainEngine, TrainerFactory,
+                 XlaEngine};
 pub use schedule::CosineSchedule;
 pub use trainer::{RunReport, RunStatus, Trainer};

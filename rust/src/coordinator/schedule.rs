@@ -1,8 +1,10 @@
 //! Learning-rate schedule: linear warmup → cosine decay (paper §5.1).
 //!
-//! The schedule runs in the coordinator and is fed to the AOT `apply_step`
-//! artifact as a scalar input each optimizer step, so one compiled
-//! executable serves every schedule.
+//! The schedule runs in the coordinator; each engine receives the scalar
+//! LR per optimizer step (the AOT `apply_step` artifact as an input, the
+//! native AdamW as an argument), so one engine serves every schedule.
+
+use anyhow::{bail, Result};
 
 /// Warmup + cosine decay to `peak_lr * min_frac`.
 #[derive(Debug, Clone, Copy)]
@@ -14,15 +16,32 @@ pub struct CosineSchedule {
 }
 
 impl CosineSchedule {
-    pub fn new(peak_lr: f64, warmup_steps: u64, total_steps: u64, min_frac: f64) -> CosineSchedule {
-        assert!(total_steps > warmup_steps, "warmup must be < total");
-        assert!((0.0..=1.0).contains(&min_frac));
-        CosineSchedule {
+    /// Validated constructor — bad configs surface as CLI errors instead
+    /// of panicking mid-run.
+    pub fn new(
+        peak_lr: f64,
+        warmup_steps: u64,
+        total_steps: u64,
+        min_frac: f64,
+    ) -> Result<CosineSchedule> {
+        if total_steps <= warmup_steps {
+            bail!(
+                "cosine schedule: warmup_steps ({warmup_steps}) must be < total_steps \
+                 ({total_steps})"
+            );
+        }
+        if !(peak_lr > 0.0 && peak_lr.is_finite()) {
+            bail!("cosine schedule: peak_lr must be positive and finite, got {peak_lr}");
+        }
+        if !(0.0..=1.0).contains(&min_frac) {
+            bail!("cosine schedule: min_frac must be in [0, 1], got {min_frac}");
+        }
+        Ok(CosineSchedule {
             peak_lr,
             warmup_steps,
             total_steps,
             min_frac,
-        }
+        })
     }
 
     /// LR for a 0-based optimizer step.
@@ -45,7 +64,49 @@ mod tests {
     use crate::util::quickcheck::{check, Gen};
 
     fn sched() -> CosineSchedule {
-        CosineSchedule::new(1e-3, 10, 100, 0.1)
+        CosineSchedule::new(1e-3, 10, 100, 0.1).unwrap()
+    }
+
+    #[test]
+    fn boundary_step_zero() {
+        // With warmup: first step is peak/warmup exactly.
+        let s = sched();
+        assert_eq!(s.lr(0), 1e-3 * 1.0 / 10.0);
+        // Without warmup: step 0 is exactly the peak (cos(0) = 1).
+        let s0 = CosineSchedule::new(1e-3, 0, 50, 0.1).unwrap();
+        assert_eq!(s0.lr(0), 1e-3);
+    }
+
+    #[test]
+    fn boundary_warmup_end_is_exact_peak() {
+        // step == warmup_steps is the first decay step: progress 0,
+        // cos(0) = 1 ⟹ lr == peak exactly (no floating slop).
+        let s = sched();
+        assert_eq!(s.lr(10), 1e-3);
+        // and the last warmup step also reaches peak (linear ramp ends).
+        assert!((s.lr(9) - 1e-3).abs() < 1e-15);
+    }
+
+    #[test]
+    fn boundary_final_step_hits_min_frac_exactly() {
+        // progress 1, cos(π) = −1 ⟹ lr == peak·min_frac with no error.
+        let s = sched();
+        assert_eq!(s.lr(100), 1e-3 * 0.1);
+        // clamped beyond the end too
+        assert_eq!(s.lr(101), 1e-3 * 0.1);
+        let s2 = CosineSchedule::new(7e-4, 3, 17, 0.25).unwrap();
+        assert_eq!(s2.lr(17), 7e-4 * 0.25);
+    }
+
+    #[test]
+    fn invalid_configs_are_errors_not_panics() {
+        assert!(CosineSchedule::new(1e-3, 10, 10, 0.1).is_err()); // warmup == total
+        assert!(CosineSchedule::new(1e-3, 11, 10, 0.1).is_err()); // warmup > total
+        assert!(CosineSchedule::new(0.0, 0, 10, 0.1).is_err()); // lr 0
+        assert!(CosineSchedule::new(-1e-3, 0, 10, 0.1).is_err());
+        assert!(CosineSchedule::new(f64::NAN, 0, 10, 0.1).is_err());
+        assert!(CosineSchedule::new(1e-3, 0, 10, -0.1).is_err()); // bad frac
+        assert!(CosineSchedule::new(1e-3, 0, 10, 1.5).is_err());
     }
 
     #[test]
@@ -68,7 +129,7 @@ mod tests {
         check("cosine monotone", |g: &mut Gen| {
             let warmup = g.usize_in(0, 20) as u64;
             let total = warmup + 2 + g.usize_in(0, 500) as u64;
-            let s = CosineSchedule::new(g.f64_in(1e-6, 1e-2), warmup, total, g.f64_in(0.0, 0.9));
+            let s = CosineSchedule::new(g.f64_in(1e-6, 1e-2), warmup, total, g.f64_in(0.0, 0.9)).unwrap();
             let mut prev = f64::INFINITY;
             for step in warmup..total {
                 let lr = s.lr(step);
@@ -87,7 +148,7 @@ mod tests {
             let warmup = g.usize_in(0, 20) as u64;
             let total = warmup + 1 + g.usize_in(1, 300) as u64;
             let peak = g.f64_in(1e-6, 1e-2);
-            let s = CosineSchedule::new(peak, warmup, total, g.f64_in(0.01, 1.0));
+            let s = CosineSchedule::new(peak, warmup, total, g.f64_in(0.01, 1.0)).unwrap();
             for step in 0..total + 10 {
                 let lr = s.lr(step);
                 if !(lr > 0.0 && lr <= peak * (1.0 + 1e-12)) {
@@ -100,7 +161,7 @@ mod tests {
 
     #[test]
     fn no_warmup_starts_at_peak() {
-        let s = CosineSchedule::new(1e-3, 0, 50, 0.0);
+        let s = CosineSchedule::new(1e-3, 0, 50, 0.0).unwrap();
         assert!((s.lr(0) - 1e-3).abs() < 1e-12);
     }
 }

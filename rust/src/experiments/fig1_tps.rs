@@ -4,18 +4,28 @@
 //! Paper setup → ours (DESIGN.md §6): 2.1M/260K TPS (ratio 8×) becomes
 //! `tps_hi`/`tps_lo` with the same 8× ratio at our microbatch×seq_len
 //! granularity; curves are emitted per variant for plotting, and the
-//! summary prints final losses + the Sage−FPA gap.
+//! summary prints final losses, the Sage−FPA gap, and each cell's
+//! `max_attn_logit` (the §5.3 divergence statistic).
 //!
-//! Expected shape: at high TPS Sage trails FPA by a visible gap and the
-//! non-QK-norm run destabilizes; at low TPS Sage ≈ FPA within noise.
+//! Expected shape: the QK-normed arms complete with logits bounded far
+//! below the ceiling (the RMS-normalized rows cap |S| near √d·γ², the
+//! paper's claim (i) mechanism) while the no-QK-norm arms grow their
+//! logits until the `max_attn_logit` ceiling (default 50.0) flags
+//! divergence — at the high-TPS arm within the first quarter of the
+//! budget.  Runs on either engine via `--backend native|xla`; the native
+//! engine needs nothing but this checkout.
+//!
+//! Default `peak_lr` 0.1 is validated by the LR sweep in
+//! `python/compile/check_native_model.py --sim`: across seeds the
+//! no-QK-norm high-TPS arm crosses the ceiling by step ~3–6 of 16 and
+//! QK-norm arms stay ≥5× below it.
 
 use anyhow::Result;
 
 use crate::bench::Table;
 use crate::config::TrainConfig;
-use crate::coordinator::{RunStatus, Trainer};
+use crate::coordinator::{RunStatus, TrainerFactory};
 use crate::experiments::common::emit;
-use crate::runtime::Runtime;
 use crate::telemetry::{run_dir, Log};
 
 pub struct Outcome {
@@ -23,6 +33,8 @@ pub struct Outcome {
     pub tps: u64,
     pub final_loss: Option<f64>,
     pub diverged: bool,
+    pub diverged_at: Option<u64>,
+    pub max_attn_logit: Option<f64>,
 }
 
 /// One (variant, TPS) training run; loss curve lands in
@@ -30,12 +42,14 @@ pub struct Outcome {
 ///
 /// `token_budget` is fixed across cells (the paper's comparison: 78B
 /// tokens at both TPS settings), so high-TPS cells take fewer steps.
+#[allow(clippy::too_many_arguments)]
 pub fn run_cell(
-    rt_factory: &dyn Fn() -> Result<Runtime>,
+    factory: &TrainerFactory,
     results_dir: &str,
     variant: &str,
     tps: u64,
     token_budget: u64,
+    peak_lr: f64,
     seed: u64,
     log: &Log,
 ) -> Result<Outcome> {
@@ -45,42 +59,51 @@ pub fn run_cell(
         steps,
         tokens_per_step: tps,
         warmup_steps: (steps / 20).max(1),
-        peak_lr: 3e-3,
+        peak_lr,
         min_lr_frac: 0.1,
         seed,
         checkpoint_every: 0,
         log_every: (steps / 10).max(1),
         clip_norm: 0.0,
         grad_noise_sigma: 0.0,
+        ..TrainConfig::default()
     };
-    let mut trainer = Trainer::new(rt_factory()?, cfg)?;
+    let mut trainer = factory.trainer(cfg)?;
     let mut batches = trainer.make_batcher(512, 4)?;
     let report = trainer.run(&mut batches, log)?;
     let dir = run_dir(results_dir, "fig1")?;
-    // One CSV per curve: fig1/<variant>_tps<tps>.{train_loss,lr,...}.csv
+    // One CSV per curve: fig1/<variant>_tps<tps>.{train_loss,max_attn_logit,...}.csv
     let curve_dir = dir.join(format!("{variant}_tps{tps}"));
     trainer.metrics.flush_csv(&curve_dir)?;
+    let diverged_at = match report.status {
+        RunStatus::Diverged { at_step } => Some(at_step),
+        RunStatus::Completed => None,
+    };
     Ok(Outcome {
         variant: variant.to_string(),
         tps,
         final_loss: report.final_loss,
-        diverged: matches!(report.status, RunStatus::Diverged { .. }),
+        diverged: diverged_at.is_some(),
+        diverged_at,
+        max_attn_logit: report.max_attn_logit,
     })
 }
 
 /// The full Figure-1 grid.
 pub fn run(
-    rt_factory: &dyn Fn() -> Result<Runtime>,
+    factory: &TrainerFactory,
     results_dir: &str,
     token_budget: u64,
     tps_lo: u64,
     tps_hi: u64,
+    peak_lr: f64,
     seed: u64,
 ) -> Result<Vec<Outcome>> {
     let log = Log::new(true);
     println!(
-        "Figure 1: pretraining loss, SageBwd vs FPA at TPS_hi={tps_hi} / TPS_lo={tps_lo} \
-         (fixed budget {token_budget} tokens per cell)"
+        "Figure 1 [{} engine]: pretraining loss, SageBwd vs FPA at TPS_hi={tps_hi} / \
+         TPS_lo={tps_lo} (fixed budget {token_budget} tokens per cell, peak_lr {peak_lr})",
+        factory.backend_name(),
     );
     println!("(paper: hi-TPS gap 2.640 vs 2.586; lo-TPS parity 2.561 vs 2.563; no-QK-norm diverges at hi TPS)\n");
     let mut outcomes = Vec::new();
@@ -98,17 +121,29 @@ pub fn run(
     for &(variant, tps) in grid {
         log.info(&format!("--- fig1 cell: {variant} @ {tps} tok/step ---"));
         outcomes.push(run_cell(
-            rt_factory, results_dir, variant, tps, token_budget, seed, &log,
+            factory, results_dir, variant, tps, token_budget, peak_lr, seed, &log,
         )?);
     }
 
-    let mut table = Table::new(&["variant", "tokens_per_step", "final_loss", "status"]);
+    let mut table = Table::new(&[
+        "variant",
+        "tokens_per_step",
+        "final_loss",
+        "max_attn_logit",
+        "status",
+    ]);
     for o in &outcomes {
         table.row(vec![
             o.variant.clone(),
             o.tps.to_string(),
             o.final_loss.map(|l| format!("{l:.4}")).unwrap_or("-".into()),
-            if o.diverged { "DIVERGED".into() } else { "ok".into() },
+            o.max_attn_logit
+                .map(|m| format!("{m:.1}"))
+                .unwrap_or("-".into()),
+            match o.diverged_at {
+                Some(at) => format!("DIVERGED@{at}"),
+                None => "ok".into(),
+            },
         ]);
     }
     emit(&table, results_dir, "fig1_summary")?;

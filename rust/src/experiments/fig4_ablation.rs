@@ -4,25 +4,31 @@
 //!
 //! Expected shape: no-smoothing unstable or clearly worse; K-smoothing
 //! reaches FPA-level; QK-smoothing no consistent gain over K alone.
+//! Engine-agnostic via [`TrainerFactory`] (`--backend native|xla`).
 
 use anyhow::Result;
 
 use crate::bench::Table;
+use crate::coordinator::TrainerFactory;
 use crate::experiments::common::emit;
 use crate::experiments::fig1_tps::{run_cell, Outcome};
-use crate::runtime::Runtime;
 use crate::telemetry::Log;
 
+#[allow(clippy::too_many_arguments)]
 pub fn run(
-    rt_factory: &dyn Fn() -> Result<Runtime>,
+    factory: &TrainerFactory,
     results_dir: &str,
     token_budget: u64,
     tps_lo: u64,
     tps_hi: u64,
+    peak_lr: f64,
     seed: u64,
 ) -> Result<Vec<Outcome>> {
     let log = Log::new(true);
-    println!("Figure 4: smoothing ablation (none / K / QK), QK-norm on");
+    println!(
+        "Figure 4 [{} engine]: smoothing ablation (none / K / QK), QK-norm on",
+        factory.backend_name()
+    );
     println!("(paper: K-smoothing required even at 260K TPS; Q-smoothing no consistent benefit)\n");
     let variants = [
         "fpa_qknorm",        // FPA reference
@@ -34,14 +40,22 @@ pub fn run(
     for &tps in &[tps_hi, tps_lo] {
         for variant in variants {
             log.info(&format!("--- fig4 cell: {variant} @ {tps} tok/step ---"));
-            let mut o = run_cell(rt_factory, results_dir, variant, tps, token_budget, seed, &log)?;
-            // Re-home the curves under fig4/ naming via the summary only;
-            // curve CSVs live in results/fig1/<variant>_tps<tps>/ already.
-            o.variant = variant.to_string();
+            let o = run_cell(
+                factory, results_dir, variant, tps, token_budget, peak_lr, seed, &log,
+            )?;
+            // Curve CSVs live in results/fig1/<variant>_tps<tps>/ already;
+            // fig4 re-homes the comparison via its summary table only.
             outcomes.push(o);
         }
     }
-    let mut table = Table::new(&["smoothing", "variant", "tokens_per_step", "final_loss", "status"]);
+    let mut table = Table::new(&[
+        "smoothing",
+        "variant",
+        "tokens_per_step",
+        "final_loss",
+        "max_attn_logit",
+        "status",
+    ]);
     for o in &outcomes {
         let smoothing = match o.variant.as_str() {
             "sage_qknorm_nosm" => "none",
@@ -54,6 +68,9 @@ pub fn run(
             o.variant.clone(),
             o.tps.to_string(),
             o.final_loss.map(|l| format!("{l:.4}")).unwrap_or("-".into()),
+            o.max_attn_logit
+                .map(|m| format!("{m:.1}"))
+                .unwrap_or("-".into()),
             if o.diverged { "DIVERGED".into() } else { "ok".into() },
         ]);
     }

@@ -12,14 +12,14 @@
 //!
 //! If the hypothesis holds, moderate injected noise should *not hurt* (and
 //! may close part of) the Sage–FPA gap, mirroring what lowering TPS does.
+//! Engine-agnostic via [`TrainerFactory`] (`--backend native|xla`).
 
 use anyhow::Result;
 
 use crate::bench::Table;
 use crate::config::TrainConfig;
-use crate::coordinator::{RunStatus, Trainer};
+use crate::coordinator::{RunStatus, TrainerFactory};
 use crate::experiments::common::emit;
-use crate::runtime::Runtime;
 use crate::telemetry::{run_dir, Log};
 
 pub struct Outcome {
@@ -29,14 +29,17 @@ pub struct Outcome {
 }
 
 pub fn run(
-    rt_factory: &dyn Fn() -> Result<Runtime>,
+    factory: &TrainerFactory,
     results_dir: &str,
     token_budget: u64,
     tps: u64,
     seed: u64,
 ) -> Result<Vec<Outcome>> {
     let log = Log::new(true);
-    println!("Extension probe: synthetic gradient noise at high TPS (§4.3 mechanism)");
+    println!(
+        "Extension probe [{} engine]: synthetic gradient noise at high TPS (§4.3 mechanism)",
+        factory.backend_name()
+    );
     println!("(hypothesis: noise masks quantization bias — lowering TPS in disguise)\n");
     let steps = (token_budget / tps).max(2);
     let cells: &[(&str, f64)] = &[
@@ -65,8 +68,9 @@ pub fn run(
             log_every: (steps / 10).max(1),
             clip_norm: 0.0,
             grad_noise_sigma: sigma,
+            ..TrainConfig::default()
         };
-        let mut trainer = Trainer::new(rt_factory()?, cfg)?;
+        let mut trainer = factory.trainer(cfg)?;
         let mut batches = trainer.make_batcher(512, 4)?;
         let report = trainer.run(&mut batches, &log)?;
         let dir = run_dir(results_dir, "noise_probe")?;

@@ -94,6 +94,28 @@ fn rowsum_mul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
     Tensor::from_vec(&[n], out)
 }
 
+/// Divergence-telemetry statistic: `max |q_i·k_j| / √d` over unmasked
+/// `(i, j)` pairs, computed in full precision regardless of which kernel
+/// runs the attention itself (DESIGN.md §10 divergence contract).
+pub fn max_abs_logit(q: &Tensor, k: &Tensor, causal: bool) -> Result<f32> {
+    let (n, d) = check_inputs(q, k, k)?;
+    let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+    let mut max = 0f32;
+    for i in 0..n {
+        let qi = &q.data[i * d..(i + 1) * d];
+        let cols = if causal { i + 1 } else { n };
+        for j in 0..cols {
+            let kj = &k.data[j * d..(j + 1) * d];
+            let mut acc = 0f32;
+            for (&a, &b) in qi.iter().zip(kj) {
+                acc += a * b;
+            }
+            max = max.max((acc * inv_sqrt_d).abs());
+        }
+    }
+    Ok(max)
+}
+
 // ---------------------------------------------------------------------------
 // Exact full-precision attention (FPA) — the ground-truth oracle
 // ---------------------------------------------------------------------------
@@ -703,6 +725,25 @@ mod tests {
         let r_int8 = rel_l2(&int8.dq.data, &fpa.dq.data);
         let r_fpds = rel_l2(&fpds.dq.data, &fpa.dq.data);
         assert!(r_fpds <= r_int8 * 1.05, "fp-dS {r_fpds} vs int8 {r_int8}");
+    }
+
+    #[test]
+    fn max_abs_logit_matches_dense_logits() {
+        let [q, k, _, _] = inputs(32, 16, 2.0, 9);
+        let s = masked_logits(&q, &k, false).unwrap();
+        let want = s.data.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        let got = max_abs_logit(&q, &k, false).unwrap();
+        assert!((got - want).abs() < 1e-4, "{got} vs {want}");
+        // Causal: masked entries must not contribute.
+        let got_c = max_abs_logit(&q, &k, true).unwrap();
+        let mut want_c = 0f32;
+        for i in 0..32 {
+            for j in 0..=i {
+                want_c = want_c.max(s.data[i * 32 + j].abs());
+            }
+        }
+        assert!((got_c - want_c).abs() < 1e-4);
+        assert!(got_c <= got + 1e-6);
     }
 
     #[test]

@@ -18,5 +18,6 @@ pub mod attention;
 pub mod quant;
 pub mod smoothing;
 
-pub use attention::{fa2_fwd, fpa_bwd, fpa_fwd, pseudo_quant_trace, sage_bwd, sage_fwd};
+pub use attention::{fa2_fwd, fpa_bwd, fpa_fwd, max_abs_logit, pseudo_quant_trace, sage_bwd,
+                    sage_fwd};
 pub use attention::{AttnConfig, AttnTrace};

@@ -11,11 +11,16 @@
 //! * [`kernels`]     — native CPU SageBwd kernels: tiled INT8
 //!   forward/backward (Algorithms 1+2), K-smoothing, the FPA oracle, and
 //!   the §5.4 pseudo-quantized trace — no artifacts or XLA needed.
+//! * [`model`]       — the native training model: a decoder-only
+//!   transformer with manual forward/backward (RMSNorm, QK-norm, MHA via
+//!   the attention backends, SwiGLU, tied-embedding CE head) + AdamW, so
+//!   every training experiment runs from a bare checkout.
 //! * [`runtime`]     — backend selection (`--backend native|xla`); the XLA
 //!   half loads `artifacts/*.hlo.txt` + manifests, compiles once, executes
 //!   on the hot path.
-//! * [`coordinator`] — trainer, tokens-per-step gradient accumulator
-//!   (the paper's §4.3 axis), warmup+cosine LR schedule, checkpoints.
+//! * [`coordinator`] — trainer over a pluggable `TrainEngine`
+//!   (native|xla), tokens-per-step gradient accumulator (the paper's §4.3
+//!   axis), warmup+cosine LR schedule, divergence telemetry, checkpoints.
 //! * [`data`]        — synthetic-corpus substrate: generator, byte
 //!   tokenizer, deterministic shardable batcher with prefetch.
 //! * [`experiments`] — one harness per paper table/figure.
@@ -29,6 +34,7 @@ pub mod coordinator;
 pub mod data;
 pub mod experiments;
 pub mod kernels;
+pub mod model;
 pub mod runtime;
 pub mod telemetry;
 pub mod tensor;

@@ -12,19 +12,21 @@
 //! sagebwd inspect --artifact NAME [--stats]             manifest / HLO op stats
 //! sagebwd dist-train [--workers N --steps S --tps T]     data-parallel training
 //! sagebwd noise-probe [--budget B --tps T]               §4.3 noise-injection probe
-//! sagebwd plot --csv a.csv[,b.csv...]                    ASCII loss curves
+//! sagebwd plot --csv a.csv[,b.csv] | --run DIR[,DIR]     ASCII metric curves
 //! ```
 //!
-//! Trace/bench harnesses (table1, table2, ds-rms, fig23, fig56) take
-//! `--backend native|xla` (default `native`: in-process CPU kernels, no
-//! `artifacts/` needed — DESIGN.md §4).  Training subcommands require the
-//! AOT artifacts and therefore the xla backend.
+//! Every harness takes `--backend native|xla` (default `native`:
+//! in-process CPU kernels and the native training engine, no `artifacts/`
+//! needed — DESIGN.md §4/§10).  `--backend xla` selects the AOT artifact
+//! path for both trace/bench harnesses and training (`make artifacts`
+//! first).  Only `dist-train` is still XLA-only (worker pools own PJRT
+//! clients).
 
 use anyhow::{bail, Result};
 
 use sagebwd::cli::Args;
 use sagebwd::config::TrainConfig;
-use sagebwd::coordinator::Trainer;
+use sagebwd::coordinator::TrainerFactory;
 use sagebwd::experiments::{ds_rms, fig1_tps, fig23_speed, fig4_ablation, fig56_layers,
                            noise_probe, table1_sigma, table2_trace};
 use sagebwd::runtime::{make_backend, Runtime};
@@ -33,14 +35,27 @@ use sagebwd::{DEFAULT_ARTIFACTS_DIR, DEFAULT_RESULTS_DIR};
 
 const USAGE: &str = "usage: sagebwd <train|dist-train|table1|table2|ds-rms|fig1|fig4|fig23|fig56|noise-probe|plot|inspect> [options]
 common options:
-  --backend native|xla   kernel executor for table1/table2/ds-rms/fig23/fig56
-                         (default native: in-process CPU kernels, no artifacts
-                         needed; xla: AOT artifacts under --artifacts)
-  --artifacts DIR        artifact directory for the xla backend and training
-                         subcommands (default artifacts/, built by `make artifacts`)
+  --backend native|xla   executor for every harness, training included
+                         (default native: in-process CPU kernels + native
+                         training engine, no artifacts needed; xla: AOT
+                         artifacts under --artifacts)
+  --artifacts DIR        artifact directory for the xla backend
+                         (default artifacts/, built by `make artifacts`)
   --results DIR          output directory (default results/)
-training subcommands (train, dist-train, fig1, fig4, noise-probe) always run
-on the xla backend; run `make results` to regenerate every table and figure";
+training subcommands (train, fig1, fig4, noise-probe) run on either backend;
+only dist-train still requires --backend xla; run `make results` to
+regenerate every table and figure";
+
+/// Default fig1/fig4 peak LR on the **native** engine — the regime where
+/// the no-QK-norm arm visibly crosses the max_attn_logit ceiling while
+/// QK-norm arms train cleanly (validated in
+/// python/compile/check_native_model.py --sim).  The XLA engine keeps
+/// the historical 3e-3 default: it was never validated at 0.1 and cannot
+/// observe the logit ceiling (max_attn_logit: None), so divergence there
+/// would only surface as a late non-finite loss.
+fn fig_default_lr(backend: &str) -> f64 {
+    if backend == "native" { 0.1 } else { 3e-3 }
+}
 
 fn main() {
     if let Err(e) = run() {
@@ -53,26 +68,15 @@ fn run() -> Result<()> {
     let args = Args::from_env()?;
     let artifacts = args.str_or("artifacts", DEFAULT_ARTIFACTS_DIR).to_string();
     let results = args.str_or("results", DEFAULT_RESULTS_DIR).to_string();
-    let rt = || Runtime::new(artifacts.clone());
     // Trace/bench harnesses run on either backend; the native CPU kernels
     // are the default so a fresh checkout needs no `make artifacts`.
     let backend = || make_backend(args.str_or("backend", "native"), &artifacts);
-    // Training still requires the AOT grad_step/apply_step executables.
-    let training_backend_check = |cmd: &str| -> Result<()> {
-        match args.str_or("backend", "xla") {
-            "xla" => Ok(()),
-            other => bail!(
-                "`sagebwd {cmd}` runs full-model training, which --backend {other} does not \
-                 implement yet — run `make artifacts` and use --backend xla"
-            ),
-        }
-    };
+    // Training harnesses are engine-agnostic the same way: the factory
+    // maps --backend to a native or XLA TrainEngine per run.
+    let factory = || TrainerFactory::new(args.str_or("backend", "native"), &artifacts);
 
     match args.subcommand.as_str() {
-        "train" => {
-            training_backend_check("train")?;
-            cmd_train(&args, rt()?, &results)
-        }
+        "train" => cmd_train(&args, factory()?, &results),
         "table1" => {
             let reps = args.u64_or("reps", 3)?;
             table1_sigma::run(backend()?.as_mut(), &results, reps)?;
@@ -87,23 +91,23 @@ fn run() -> Result<()> {
             Ok(())
         }
         "fig1" => {
-            training_backend_check("fig1")?;
             // Fixed token budget per cell (paper: 78B tokens at each TPS);
             // 8× TPS ratio preserved from the paper's 2.1M / 260K.
             let budget = args.u64_or("budget", 131_072)?;
             let tps_lo = args.u64_or("tps-lo", 1024)?;
             let tps_hi = args.u64_or("tps-hi", 8192)?;
+            let peak_lr = args.f64_or("lr", fig_default_lr(args.str_or("backend", "native")))?;
             let seed = args.u64_or("seed", 0)?;
-            fig1_tps::run(&rt, &results, budget, tps_lo, tps_hi, seed)?;
+            fig1_tps::run(&factory()?, &results, budget, tps_lo, tps_hi, peak_lr, seed)?;
             Ok(())
         }
         "fig4" => {
-            training_backend_check("fig4")?;
             let budget = args.u64_or("budget", 131_072)?;
             let tps_lo = args.u64_or("tps-lo", 1024)?;
             let tps_hi = args.u64_or("tps-hi", 8192)?;
+            let peak_lr = args.f64_or("lr", fig_default_lr(args.str_or("backend", "native")))?;
             let seed = args.u64_or("seed", 0)?;
-            fig4_ablation::run(&rt, &results, budget, tps_lo, tps_hi, seed)?;
+            fig4_ablation::run(&factory()?, &results, budget, tps_lo, tps_hi, peak_lr, seed)?;
             Ok(())
         }
         "fig23" => {
@@ -115,8 +119,15 @@ fn run() -> Result<()> {
             Ok(())
         }
         "dist-train" => {
-            training_backend_check("dist-train")?;
-            // Data-parallel training demo: leader + N grad workers.
+            // Data-parallel training demo: leader + N grad workers, each
+            // owning a PJRT client — the one harness still XLA-only.
+            if args.str_or("backend", "xla") != "xla" {
+                bail!(
+                    "`sagebwd dist-train` is data-parallel over PJRT worker clients and \
+                     has no native-engine topology yet — run `make artifacts` and use \
+                     --backend xla (single-process native training: `sagebwd train`)"
+                );
+            }
             let workers = args.usize_or("workers", 2)?;
             let cfg = TrainConfig {
                 variant: args.str_or("variant", "sage_qknorm").to_string(),
@@ -130,6 +141,7 @@ fn run() -> Result<()> {
                 log_every: args.u64_or("log-every", 5)?,
                 clip_norm: 0.0,
                 grad_noise_sigma: 0.0,
+                ..TrainConfig::default()
             };
             let log = Log::new(true);
             let mut t = sagebwd::coordinator::distributed::DistTrainer::new(
@@ -141,31 +153,16 @@ fn run() -> Result<()> {
             Ok(())
         }
         "noise-probe" => {
-            training_backend_check("noise-probe")?;
             let budget = args.u64_or("budget", 65_536)?;
             let tps = args.u64_or("tps", 8192)?;
             let seed = args.u64_or("seed", 0)?;
-            noise_probe::run(&rt, &results, budget, tps, seed)?;
+            noise_probe::run(&factory()?, &results, budget, tps, seed)?;
             Ok(())
         }
-        "plot" => {
-            let csvs = args.require("csv")?;
-            let mut curves = Vec::new();
-            for path in csvs.split(',') {
-                let p = std::path::Path::new(path);
-                let name = p
-                    .parent()
-                    .and_then(|d| d.file_name())
-                    .map(|s| s.to_string_lossy().into_owned())
-                    .unwrap_or_else(|| path.to_string());
-                curves.push(sagebwd::telemetry::plot::load_csv(p, &name)?);
-            }
-            println!("{}", sagebwd::telemetry::plot::render(&curves, 100, 24));
-            Ok(())
-        }
+        "plot" => cmd_plot(&args),
         "inspect" => {
             let name = args.require("artifact")?;
-            let mut runtime = rt()?;
+            let mut runtime = Runtime::new(artifacts.clone())?;
             let exe = runtime.load(name)?;
             let m = &exe.manifest;
             println!("artifact: {}", m.artifact);
@@ -198,7 +195,45 @@ HLO stats: {} ops, {} bytes, ~{} dot-output-FLOPs",
     }
 }
 
-fn cmd_train(args: &Args, runtime: Runtime, results: &str) -> Result<()> {
+/// `plot --csv a.csv[,b.csv...]` renders explicit CSV files;
+/// `plot --run DIR[,DIR...] [--series NAME]` renders one metric series
+/// (default `train_loss`; e.g. `max_attn_logit` for fig1-style divergence
+/// curves, `step_ms` for per-step wall time) from run directories written
+/// by `Metrics::flush_csv`.
+fn cmd_plot(args: &Args) -> Result<()> {
+    let mut curves = Vec::new();
+    if let Some(runs) = args.opt("run") {
+        let series = args.str_or("series", "train_loss");
+        for dir in runs.split(',') {
+            let p = std::path::Path::new(dir).join(format!("{series}.csv"));
+            let name = format!(
+                "{}:{series}",
+                std::path::Path::new(dir)
+                    .file_name()
+                    .map(|s| s.to_string_lossy().into_owned())
+                    .unwrap_or_else(|| dir.to_string())
+            );
+            curves.push(sagebwd::telemetry::plot::load_csv(&p, &name)?);
+        }
+    } else {
+        let csvs = args.require("csv").map_err(|_| {
+            anyhow::anyhow!("plot needs --csv FILE[,FILE...] or --run DIR[,DIR...]")
+        })?;
+        for path in csvs.split(',') {
+            let p = std::path::Path::new(path);
+            let name = p
+                .parent()
+                .and_then(|d| d.file_name())
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| path.to_string());
+            curves.push(sagebwd::telemetry::plot::load_csv(p, &name)?);
+        }
+    }
+    println!("{}", sagebwd::telemetry::plot::render(&curves, 100, 24));
+    Ok(())
+}
+
+fn cmd_train(args: &Args, factory: TrainerFactory, results: &str) -> Result<()> {
     let cfg = if let Some(path) = args.opt("config") {
         TrainConfig::load(std::path::Path::new(path))?
     } else {
@@ -214,11 +249,13 @@ fn cmd_train(args: &Args, runtime: Runtime, results: &str) -> Result<()> {
             log_every: args.u64_or("log-every", 10)?,
             clip_norm: args.f64_or("clip-norm", 0.0)?,
             grad_noise_sigma: args.f64_or("grad-noise", 0.0)?,
+            max_attn_logit_ceiling: args
+                .f64_or("logit-ceiling", TrainConfig::default().max_attn_logit_ceiling)?,
         }
     };
     let run_name = args.str_or("run-name", &format!("train_{}_tps{}", cfg.variant, cfg.tokens_per_step)).to_string();
     let log = Log::new(args.flag("verbose"));
-    let mut trainer = Trainer::new(runtime, cfg.clone())?;
+    let mut trainer = factory.trainer(cfg.clone())?;
     let mut batches = trainer.make_batcher(512, 4)?;
     let report = trainer.run(&mut batches, &log)?;
     let dir = run_dir(results, &run_name)?;
@@ -226,7 +263,8 @@ fn cmd_train(args: &Args, runtime: Runtime, results: &str) -> Result<()> {
     cfg.save(&dir.join("config.json"))?;
     trainer.save_checkpoint(&dir.join("final.ckpt"))?;
     log.info(&format!(
-        "done: {:?}, final loss {:?}, curves in {}",
+        "done [{} engine]: {:?}, final loss {:?}, curves in {}",
+        trainer.engine_name(),
         report.status,
         report.final_loss,
         dir.display()

@@ -1,0 +1,201 @@
+//! Native AdamW — the optimizer half of the native training engine.
+//!
+//! Hyperparameters and update rule mirror `python/compile/model.py`
+//! (β₁=0.9, β₂=0.95, ε=1e-8, decoupled weight decay 0.1, bias
+//! correction, no decay on any `*norm` γ).  Moments are stored as f32
+//! tensors (checkpointable through the existing `Checkpoint` format);
+//! the per-element update is computed in f64 — the same arithmetic the
+//! numpy blueprint (`python/compile/check_native_model.py`) validates.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+pub const ADAM_B1: f64 = 0.9;
+pub const ADAM_B2: f64 = 0.95;
+pub const ADAM_EPS: f64 = 1e-8;
+pub const WEIGHT_DECAY: f64 = 0.1;
+
+/// AdamW state for a flat parameter list.
+pub struct AdamW {
+    m: Vec<Tensor>,
+    v: Vec<Tensor>,
+    /// Per-leaf decoupled weight decay (0 for norm γ leaves).
+    decay: Vec<f64>,
+}
+
+impl AdamW {
+    /// Zero-initialized moments for the given schema.  Leaves whose name
+    /// ends in `norm` (attn/mlp/final/q/k norms) are exempt from decay.
+    pub fn new(names: &[String], shapes: &[Vec<usize>]) -> AdamW {
+        AdamW {
+            m: shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+            v: shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+            decay: names
+                .iter()
+                .map(|n| if n.ends_with("norm") { 0.0 } else { WEIGHT_DECAY })
+                .collect(),
+        }
+    }
+
+    /// One optimizer step.  `step` is 1-based (bias correction).
+    pub fn apply(
+        &mut self,
+        params: &mut [Tensor],
+        grads: &[Tensor],
+        lr: f64,
+        step: u64,
+    ) -> Result<()> {
+        if params.len() != self.m.len() || grads.len() != self.m.len() {
+            bail!(
+                "AdamW has {} leaves, got {} params / {} grads",
+                self.m.len(),
+                params.len(),
+                grads.len()
+            );
+        }
+        if step == 0 {
+            bail!("AdamW step is 1-based");
+        }
+        let c1 = 1.0 - ADAM_B1.powi(step as i32);
+        let c2 = 1.0 - ADAM_B2.powi(step as i32);
+        for (((p, g), (m, v)), &decay) in params
+            .iter_mut()
+            .zip(grads)
+            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
+            .zip(&self.decay)
+        {
+            if p.shape != g.shape || p.shape != m.shape {
+                bail!(
+                    "AdamW shape mismatch: param {:?} grad {:?} moment {:?}",
+                    p.shape,
+                    g.shape,
+                    m.shape
+                );
+            }
+            for (((pv, &gv), mv), vv) in p
+                .data
+                .iter_mut()
+                .zip(&g.data)
+                .zip(m.data.iter_mut())
+                .zip(v.data.iter_mut())
+            {
+                let g64 = gv as f64;
+                let m_n = ADAM_B1 * (*mv as f64) + (1.0 - ADAM_B1) * g64;
+                let v_n = ADAM_B2 * (*vv as f64) + (1.0 - ADAM_B2) * g64 * g64;
+                *mv = m_n as f32;
+                *vv = v_n as f32;
+                let update = ((*mv as f64) / c1) / (((*vv as f64) / c2).sqrt() + ADAM_EPS);
+                *pv = ((*pv as f64) - lr * (update + decay * (*pv as f64))) as f32;
+            }
+        }
+        Ok(())
+    }
+
+    /// Moment tensors (checkpointing).
+    pub fn state(&self) -> (&[Tensor], &[Tensor]) {
+        (&self.m, &self.v)
+    }
+
+    /// Restore moments saved by [`Self::state`].
+    pub fn load_state(&mut self, m: Vec<Tensor>, v: Vec<Tensor>) -> Result<()> {
+        if m.len() != self.m.len() || v.len() != self.v.len() {
+            bail!(
+                "AdamW restore: {} leaves, got m={} v={}",
+                self.m.len(),
+                m.len(),
+                v.len()
+            );
+        }
+        for ((cur, new_m), new_v) in self.m.iter().zip(&m).zip(&v) {
+            if cur.shape != new_m.shape || cur.shape != new_v.shape {
+                bail!(
+                    "AdamW restore shape mismatch: {:?} vs m {:?} / v {:?}",
+                    cur.shape,
+                    new_m.shape,
+                    new_v.shape
+                );
+            }
+        }
+        self.m = m;
+        self.v = v;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn names(decayed: &str, norm: &str) -> Vec<String> {
+        vec![decayed.to_string(), norm.to_string()]
+    }
+
+    #[test]
+    fn first_step_moves_against_gradient_by_lr() {
+        // With bias correction, step 1 update is g/(|g|+ε) ≈ sign(g).
+        let mut opt = AdamW::new(&names("w", "x_norm"), &[vec![2], vec![2]]);
+        let mut params = vec![
+            Tensor::from_vec(&[2], vec![0.0, 0.0]).unwrap(),
+            Tensor::from_vec(&[2], vec![1.0, 1.0]).unwrap(),
+        ];
+        let grads = vec![
+            Tensor::from_vec(&[2], vec![0.5, -2.0]).unwrap(),
+            Tensor::from_vec(&[2], vec![1.0, -1.0]).unwrap(),
+        ];
+        opt.apply(&mut params, &grads, 0.1, 1).unwrap();
+        assert!((params[0].data[0] - (-0.1)).abs() < 1e-4);
+        assert!((params[0].data[1] - 0.1).abs() < 1e-4);
+        // norm leaf: same sign-step, no decay term
+        assert!((params[1].data[0] - 0.9).abs() < 1e-4);
+    }
+
+    #[test]
+    fn weight_decay_only_on_non_norm_leaves() {
+        let mut opt = AdamW::new(&names("w", "g_norm"), &[vec![1], vec![1]]);
+        let mut params = vec![
+            Tensor::from_vec(&[1], vec![10.0]).unwrap(),
+            Tensor::from_vec(&[1], vec![10.0]).unwrap(),
+        ];
+        let grads = vec![Tensor::zeros(&[1]), Tensor::zeros(&[1])];
+        opt.apply(&mut params, &grads, 0.1, 1).unwrap();
+        // zero grad ⟹ pure decay: w ← w(1 − lr·0.1)
+        assert!((params[0].data[0] - 10.0 * (1.0 - 0.1 * 0.1) as f32).abs() < 1e-5);
+        assert_eq!(params[1].data[0], 10.0);
+    }
+
+    #[test]
+    fn moments_accumulate_and_roundtrip() {
+        let mut opt = AdamW::new(&names("w", "b_norm"), &[vec![3], vec![1]]);
+        let mut params = vec![Tensor::zeros(&[3]), Tensor::zeros(&[1])];
+        let grads = vec![
+            Tensor::from_vec(&[3], vec![1.0, -1.0, 0.5]).unwrap(),
+            Tensor::from_vec(&[1], vec![0.2]).unwrap(),
+        ];
+        for step in 1..=3 {
+            opt.apply(&mut params, &grads, 1e-2, step).unwrap();
+        }
+        let (m, v) = opt.state();
+        assert!(m[0].data[0] > 0.0 && v[0].data[0] > 0.0);
+        let (m_saved, v_saved) = (m.to_vec(), v.to_vec());
+        let mut opt2 = AdamW::new(&names("w", "b_norm"), &[vec![3], vec![1]]);
+        opt2.load_state(m_saved, v_saved).unwrap();
+        let mut p2 = params.clone();
+        opt.apply(&mut params, &grads, 1e-2, 4).unwrap();
+        opt2.apply(&mut p2, &grads, 1e-2, 4).unwrap();
+        assert_eq!(params[0].data, p2[0].data);
+    }
+
+    #[test]
+    fn mismatches_rejected() {
+        let mut opt = AdamW::new(&names("w", "b_norm"), &[vec![2], vec![1]]);
+        let mut params = vec![Tensor::zeros(&[2]), Tensor::zeros(&[1])];
+        let grads = vec![Tensor::zeros(&[2])];
+        assert!(opt.apply(&mut params, &grads, 0.1, 1).is_err());
+        let grads = vec![Tensor::zeros(&[3]), Tensor::zeros(&[1])];
+        assert!(opt.apply(&mut params, &grads, 0.1, 1).is_err());
+        let ok = vec![Tensor::zeros(&[2]), Tensor::zeros(&[1])];
+        assert!(opt.apply(&mut params, &ok, 0.1, 0).is_err()); // 0-based step
+        assert!(opt.load_state(vec![Tensor::zeros(&[2])], vec![]).is_err());
+    }
+}

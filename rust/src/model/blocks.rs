@@ -1,0 +1,374 @@
+//! Manual forward/backward building blocks for the native model.
+//!
+//! Every function here is formula-identical to its numpy twin in
+//! `python/compile/check_native_model.py`, which documents the observed
+//! finite-difference error of each backward pass; the tolerances in
+//! `rust/tests/model_gradcheck.rs` are ≥3× those margins.
+//!
+//! Conventions: activations are 2-D `(R, ·)` tensors with `R = microbatch
+//! × seq_len` flattened rows; backward functions return gradients in the
+//! same order as their forward inputs.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+// ---------------------------------------------------------------------------
+// RMSNorm (also used as QK-norm at head width, §4.1)
+// ---------------------------------------------------------------------------
+
+/// Residuals saved by [`rmsnorm_fwd`] for the backward pass.
+pub struct RmsNormCache {
+    x: Tensor,
+    /// Per-row `1/√(mean(x²)+ε)`.
+    r: Vec<f32>,
+}
+
+/// `y[i,:] = x[i,:] · r_i · γ` with `r_i = 1/√(mean(x[i,:]²)+ε)`.
+pub fn rmsnorm_fwd(x: &Tensor, gamma: &Tensor, eps: f32) -> Result<(Tensor, RmsNormCache)> {
+    let (rows, d) = x.dims2()?;
+    if gamma.shape != [d] {
+        bail!("rmsnorm γ shape {:?} != [{d}]", gamma.shape);
+    }
+    let mut y = Tensor::zeros(&[rows, d]);
+    let mut r = vec![0f32; rows];
+    for i in 0..rows {
+        let xr = &x.data[i * d..(i + 1) * d];
+        let ms = xr.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+        let ri = 1.0 / (ms + eps).sqrt();
+        r[i] = ri;
+        for (o, (&xv, &g)) in y.data[i * d..(i + 1) * d]
+            .iter_mut()
+            .zip(xr.iter().zip(&gamma.data))
+        {
+            *o = xv * ri * g;
+        }
+    }
+    Ok((y, RmsNormCache { x: x.clone(), r }))
+}
+
+/// Backward: returns `(dx, dγ)`.
+///
+/// With `w = dy∘γ`:  `dx = w·r − x·r³·(w·x)/D`,  `dγ = Σ_rows dy∘x·r`.
+pub fn rmsnorm_bwd(dy: &Tensor, gamma: &Tensor, cache: &RmsNormCache) -> Result<(Tensor, Tensor)> {
+    let (rows, d) = cache.x.dims2()?;
+    if dy.shape != cache.x.shape {
+        bail!("rmsnorm dy shape {:?} != {:?}", dy.shape, cache.x.shape);
+    }
+    let mut dx = Tensor::zeros(&[rows, d]);
+    let mut dgamma = Tensor::zeros(&[d]);
+    for i in 0..rows {
+        let xr = &cache.x.data[i * d..(i + 1) * d];
+        let dyr = &dy.data[i * d..(i + 1) * d];
+        let ri = cache.r[i];
+        let mut wx = 0f32;
+        for ((&dyv, &xv), &g) in dyr.iter().zip(xr).zip(&gamma.data) {
+            wx += dyv * g * xv;
+        }
+        let coef = ri * ri * ri * wx / d as f32;
+        for (j, ((&dyv, &xv), o)) in dyr
+            .iter()
+            .zip(xr)
+            .zip(dx.data[i * d..(i + 1) * d].iter_mut())
+            .enumerate()
+        {
+            *o = dyv * gamma.data[j] * ri - xv * coef;
+            dgamma.data[j] += dyv * xv * ri;
+        }
+    }
+    Ok((dx, dgamma))
+}
+
+// ---------------------------------------------------------------------------
+// SwiGLU MLP
+// ---------------------------------------------------------------------------
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x * sigmoid(x)
+}
+
+/// `d/dx silu(x) = σ(x)·(1 + x·(1−σ(x)))`.
+#[inline]
+pub fn silu_grad(x: f32) -> f32 {
+    let s = sigmoid(x);
+    s * (1.0 + x * (1.0 - s))
+}
+
+/// Residuals saved by [`mlp_fwd`].
+pub struct MlpCache {
+    y: Tensor,
+    g: Tensor,
+    u: Tensor,
+    h: Tensor,
+}
+
+/// `out = (silu(y·W_gate) ∘ (y·W_up)) · W_down`.
+pub fn mlp_fwd(
+    y: &Tensor,
+    w_gate: &Tensor,
+    w_up: &Tensor,
+    w_down: &Tensor,
+) -> Result<(Tensor, MlpCache)> {
+    let g = y.matmul(w_gate)?;
+    let u = y.matmul(w_up)?;
+    let mut h = Tensor::zeros(&g.shape);
+    for ((o, &gv), &uv) in h.data.iter_mut().zip(&g.data).zip(&u.data) {
+        *o = silu(gv) * uv;
+    }
+    let out = h.matmul(w_down)?;
+    Ok((
+        out,
+        MlpCache {
+            y: y.clone(),
+            g,
+            u,
+            h,
+        },
+    ))
+}
+
+/// Backward: returns `(dy, dW_gate, dW_up, dW_down)`.
+pub fn mlp_bwd(
+    dout: &Tensor,
+    cache: &MlpCache,
+    w_gate: &Tensor,
+    w_up: &Tensor,
+    w_down: &Tensor,
+) -> Result<(Tensor, Tensor, Tensor, Tensor)> {
+    let dw_down = cache.h.matmul_tn(dout)?;
+    let dh = dout.matmul_nt(w_down)?;
+    let mut dg = Tensor::zeros(&cache.g.shape);
+    let mut du = Tensor::zeros(&cache.u.shape);
+    for (((odg, odu), (&dhv, &gv)), &uv) in dg
+        .data
+        .iter_mut()
+        .zip(du.data.iter_mut())
+        .zip(dh.data.iter().zip(&cache.g.data))
+        .zip(&cache.u.data)
+    {
+        *odu = dhv * silu(gv);
+        *odg = dhv * uv * silu_grad(gv);
+    }
+    let dw_gate = cache.y.matmul_tn(&dg)?;
+    let dw_up = cache.y.matmul_tn(&du)?;
+    let mut dy = dg.matmul_nt(w_gate)?;
+    dy.add_assign(&du.matmul_nt(w_up)?);
+    Ok((dy, dw_gate, dw_up, dw_down))
+}
+
+// ---------------------------------------------------------------------------
+// Token embedding (gather / scatter-add)
+// ---------------------------------------------------------------------------
+
+/// `x[r,:] = embed[ids[r],:]`.
+pub fn gather_rows(embed: &Tensor, ids: &[i32]) -> Result<Tensor> {
+    let (v, d) = embed.dims2()?;
+    let mut out = Tensor::zeros(&[ids.len(), d]);
+    for (r, &id) in ids.iter().enumerate() {
+        if id < 0 || id as usize >= v {
+            bail!("token id {id} out of vocab range [0, {v})");
+        }
+        let src = id as usize * d;
+        out.data[r * d..(r + 1) * d].copy_from_slice(&embed.data[src..src + d]);
+    }
+    Ok(out)
+}
+
+/// `dembed[ids[r],:] += dx[r,:]` — the gather's backward.
+pub fn scatter_add_rows(dembed: &mut Tensor, ids: &[i32], dx: &Tensor) -> Result<()> {
+    let (v, d) = dembed.dims2()?;
+    let (rows, d2) = dx.dims2()?;
+    if rows != ids.len() || d2 != d {
+        bail!(
+            "scatter_add: dx {:?} vs {} ids × width {d}",
+            dx.shape,
+            ids.len()
+        );
+    }
+    for (r, &id) in ids.iter().enumerate() {
+        if id < 0 || id as usize >= v {
+            bail!("token id {id} out of vocab range [0, {v})");
+        }
+        let dst = id as usize * d;
+        for (o, &x) in dembed.data[dst..dst + d].iter_mut().zip(&dx.data[r * d..]) {
+            *o += x;
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Tied-embedding cross-entropy head
+// ---------------------------------------------------------------------------
+
+/// Residuals saved by [`cross_entropy_fwd`].
+pub struct CeCache {
+    f: Tensor,
+    /// Row-softmax of the logits.
+    p: Tensor,
+    targets: Vec<i32>,
+}
+
+/// `logits = f · embedᵀ`; mean next-token cross-entropy over all rows.
+pub fn cross_entropy_fwd(f: &Tensor, embed: &Tensor, targets: &[i32]) -> Result<(f64, CeCache)> {
+    let (rows, _d) = f.dims2()?;
+    let (v, _) = embed.dims2()?;
+    if targets.len() != rows {
+        bail!("{} targets for {rows} rows", targets.len());
+    }
+    let logits = f.matmul_nt(embed)?;
+    let (p, lse) = logits.softmax_rows()?;
+    let mut loss = 0f64;
+    for (r, &t) in targets.iter().enumerate() {
+        if t < 0 || t as usize >= v {
+            bail!("target id {t} out of vocab range [0, {v})");
+        }
+        loss += (lse[r] - logits.data[r * v + t as usize]) as f64;
+    }
+    loss /= rows as f64;
+    Ok((
+        loss,
+        CeCache {
+            f: f.clone(),
+            p,
+            targets: targets.to_vec(),
+        },
+    ))
+}
+
+/// Backward: returns `(df, dembed)` where `dembed` is the tied head's
+/// contribution only (the gather contribution is added separately).
+pub fn cross_entropy_bwd(cache: &CeCache, embed: &Tensor) -> Result<(Tensor, Tensor)> {
+    let (rows, v) = cache.p.dims2()?;
+    let mut dlogits = cache.p.clone();
+    let inv = 1.0 / rows as f32;
+    for (r, &t) in cache.targets.iter().enumerate() {
+        dlogits.data[r * v + t as usize] -= 1.0;
+    }
+    dlogits.scale(inv);
+    let df = dlogits.matmul(embed)?;
+    let dembed = dlogits.matmul_tn(&cache.f)?;
+    Ok((df, dembed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn rmsnorm_unit_gamma_normalizes_rows() {
+        let mut rng = Pcg64::new(1, 0);
+        let x = Tensor::randn(&[5, 8], 3.0, &mut rng);
+        let mut gamma = Tensor::zeros(&[8]);
+        gamma.fill(1.0);
+        let (y, _) = rmsnorm_fwd(&x, &gamma, 1e-6).unwrap();
+        for row in y.data.chunks(8) {
+            let rms = (row.iter().map(|&v| v * v).sum::<f32>() / 8.0).sqrt();
+            assert!((rms - 1.0).abs() < 1e-3, "row rms {rms}");
+        }
+    }
+
+    #[test]
+    fn rmsnorm_bwd_row_identity() {
+        // dS rows of a normalized vector are orthogonal to x: x·dx ≈ 0
+        // when dy ⊥ scaling direction is removed — check the cheap
+        // invariant instead: scaling x leaves y (γ=1) unchanged, so dx of
+        // a scaled input shrinks by the same factor.
+        let mut rng = Pcg64::new(2, 0);
+        let x = Tensor::randn(&[3, 8], 1.0, &mut rng);
+        let mut x2 = x.clone();
+        x2.scale(2.0);
+        let mut gamma = Tensor::zeros(&[8]);
+        gamma.fill(1.0);
+        let dy = Tensor::randn(&[3, 8], 1.0, &mut Pcg64::new(3, 0));
+        let (y1, c1) = rmsnorm_fwd(&x, &gamma, 0.0).unwrap();
+        let (y2, c2) = rmsnorm_fwd(&x2, &gamma, 0.0).unwrap();
+        assert!(y1.rel_l2(&y2) < 1e-5, "rmsnorm not scale-invariant");
+        let (dx1, _) = rmsnorm_bwd(&dy, &gamma, &c1).unwrap();
+        let (dx2, _) = rmsnorm_bwd(&dy, &gamma, &c2).unwrap();
+        let mut half = dx1.clone();
+        half.scale(0.5);
+        assert!(half.rel_l2(&dx2) < 1e-4, "dx must scale as 1/|x|");
+    }
+
+    #[test]
+    fn silu_matches_reference_points() {
+        assert!((silu(0.0) - 0.0).abs() < 1e-7);
+        assert!((silu(10.0) - 10.0 * (1.0 / (1.0 + (-10f32).exp()))).abs() < 1e-5);
+        // numeric derivative spot check
+        for &x in &[-2.0f32, -0.3, 0.0, 0.7, 3.0] {
+            let eps = 1e-3;
+            let num = (silu(x + eps) - silu(x - eps)) / (2.0 * eps);
+            assert!((num - silu_grad(x)).abs() < 1e-3, "silu'({x})");
+        }
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let mut rng = Pcg64::new(4, 0);
+        let embed = Tensor::randn(&[10, 4], 1.0, &mut rng);
+        let ids = [3i32, 0, 3, 9];
+        let x = gather_rows(&embed, &ids).unwrap();
+        assert_eq!(x.shape, vec![4, 4]);
+        assert_eq!(&x.data[0..4], &embed.data[12..16]);
+        let mut d = Tensor::zeros(&[10, 4]);
+        let mut dx = Tensor::zeros(&[4, 4]);
+        dx.fill(1.0);
+        scatter_add_rows(&mut d, &ids, &dx).unwrap();
+        // row 3 appears twice → accumulates 2.0
+        assert_eq!(d.data[3 * 4], 2.0);
+        assert_eq!(d.data[0], 1.0);
+        assert_eq!(d.data[9 * 4], 1.0);
+        assert_eq!(d.data[4], 0.0); // row 1 untouched
+        assert!(gather_rows(&embed, &[10]).is_err());
+        assert!(gather_rows(&embed, &[-1]).is_err());
+    }
+
+    #[test]
+    fn cross_entropy_uniform_logits_is_log_v() {
+        // f = 0 → logits all 0 → loss = ln(V) exactly.
+        let f = Tensor::zeros(&[3, 4]);
+        let mut rng = Pcg64::new(5, 0);
+        let embed = Tensor::randn(&[7, 4], 1.0, &mut rng);
+        let (loss, _) = cross_entropy_fwd(&f, &embed, &[0, 3, 6]).unwrap();
+        assert!((loss - (7f64).ln()).abs() < 1e-5, "loss {loss}");
+    }
+
+    #[test]
+    fn cross_entropy_dlogits_rows_sum_to_zero() {
+        let mut rng = Pcg64::new(6, 0);
+        let f = Tensor::randn(&[4, 5], 1.0, &mut rng.split(0));
+        let embed = Tensor::randn(&[9, 5], 1.0, &mut rng.split(1));
+        let (_, cache) = cross_entropy_fwd(&f, &embed, &[1, 2, 0, 8]).unwrap();
+        let (df, dembed) = cross_entropy_bwd(&cache, &embed).unwrap();
+        assert_eq!(df.shape, vec![4, 5]);
+        assert_eq!(dembed.shape, vec![9, 5]);
+        // Σ_v dlogits[r, v] = 0 ⟹ Σ_v dembed columns weighted — use the
+        // direct identity on p − onehot: sum of dembed over vocab rows
+        // equals Σ_r (Σ_v dlogits[r,v]) f[r,:] = 0.
+        for c in 0..5 {
+            let col: f32 = (0..9).map(|r| dembed.data[r * 5 + c]).sum();
+            assert!(col.abs() < 1e-5, "dembed col {c} sums to {col}");
+        }
+        assert!(cross_entropy_fwd(&f, &embed, &[1, 2]).is_err());
+        assert!(cross_entropy_fwd(&f, &embed, &[1, 2, 0, 9]).is_err());
+    }
+
+    #[test]
+    fn mlp_zero_gate_blocks_output() {
+        let mut rng = Pcg64::new(7, 0);
+        let y = Tensor::randn(&[3, 4], 1.0, &mut rng.split(0));
+        let w_gate = Tensor::zeros(&[4, 6]); // silu(0) = 0 ⟹ out = 0
+        let w_up = Tensor::randn(&[4, 6], 1.0, &mut rng.split(1));
+        let w_down = Tensor::randn(&[6, 4], 1.0, &mut rng.split(2));
+        let (out, _) = mlp_fwd(&y, &w_gate, &w_up, &w_down).unwrap();
+        assert!(out.max_abs() < 1e-6);
+    }
+}

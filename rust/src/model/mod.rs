@@ -1,0 +1,280 @@
+//! Native training model: a small decoder-only transformer with **manual
+//! forward/backward** in f32 — the subsystem that lets every training
+//! experiment (`train`, `fig1`, `fig4`, `noise-probe`) run from a bare
+//! checkout with no XLA artifacts (DESIGN.md §10).
+//!
+//! Architecture mirrors `python/compile/model.py` at the same substrate
+//! scale (minus RoPE, which none of the paper's training-side claims
+//! need):
+//!
+//! ```text
+//! embed → [RMSNorm → MHA(optional QK-norm, causal, fpa|sage via
+//!          runtime::AttentionBackend) → residual
+//!          → RMSNorm → SwiGLU → residual] × L
+//!       → RMSNorm → tied-embedding cross-entropy head
+//! ```
+//!
+//! Attention is *routed through the existing [`AttentionBackend`] trait*
+//! (artifact names `model_attn_*`, see `runtime::backend`), so the
+//! FPA/SageBwd/smoothing kernel variants plug into training unchanged.
+//! QK-norm (§4.1) is the per-token RMS normalization of Q and K with a
+//! learned γ — the paper's claim (i) is that it is *necessary* at large
+//! tokens-per-step because it bounds the attention logits and hence the
+//! INT8 quantization step.
+//!
+//! Formula-identical numpy twin + finite-difference margins:
+//! `python/compile/check_native_model.py`.
+//!
+//! [`AttentionBackend`]: crate::runtime::AttentionBackend
+
+pub mod adamw;
+pub mod blocks;
+pub mod transformer;
+
+pub use adamw::AdamW;
+pub use transformer::{MicroOutput, Model};
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+/// Dimensions of the native pre-training model.  The defaults are the
+/// substrate scale every training harness uses (DESIGN.md §6): small
+/// enough that a full fig1 grid runs on CPU in about a minute, large
+/// enough that QK-norm / TPS dynamics are visible.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelDims {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub seq_len: usize,
+    pub microbatch: usize,
+    pub norm_eps: f32,
+}
+
+impl Default for ModelDims {
+    fn default() -> ModelDims {
+        ModelDims {
+            vocab_size: 512, // matches the trained-BPE vocab the harnesses use
+            d_model: 32,
+            n_heads: 2,
+            d_head: 16,
+            d_ff: 64,
+            n_layers: 2,
+            seq_len: 32, // one SageBwd block: seq_len % block (32) == 0
+            microbatch: 2,
+            norm_eps: 1e-6,
+        }
+    }
+}
+
+impl ModelDims {
+    pub fn validate(&self) -> Result<()> {
+        if self.vocab_size == 0
+            || self.d_model == 0
+            || self.n_heads == 0
+            || self.d_head == 0
+            || self.d_ff == 0
+            || self.n_layers == 0
+            || self.seq_len == 0
+            || self.microbatch == 0
+        {
+            bail!("all model dimensions must be non-zero: {self:?}");
+        }
+        if self.n_heads * self.d_head != self.d_model {
+            bail!(
+                "n_heads ({}) × d_head ({}) must equal d_model ({})",
+                self.n_heads,
+                self.d_head,
+                self.d_model
+            );
+        }
+        Ok(())
+    }
+
+    /// Tokens contributed by one microbatch.
+    pub fn tokens_per_microbatch(&self) -> u64 {
+        (self.microbatch * self.seq_len) as u64
+    }
+}
+
+/// Which attention kernel the model routes through the backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttnImpl {
+    /// Exact full-precision attention (the paper's FPA baseline).
+    Fpa,
+    /// SageBwd INT8 with K-smoothing (paper default).
+    Sage,
+    /// SageBwd without smoothing.
+    SageNosm,
+    /// SageBwd with Q+K smoothing.
+    SageQksm,
+}
+
+impl AttnImpl {
+    /// Token used in `model_attn_<impl>_...` artifact names.
+    pub fn name(self) -> &'static str {
+        match self {
+            AttnImpl::Fpa => "fpa",
+            AttnImpl::Sage => "sage",
+            AttnImpl::SageNosm => "sage_nosm",
+            AttnImpl::SageQksm => "sage_qksm",
+        }
+    }
+}
+
+/// Training variant = attention kernel + whether QK-norm is applied.
+/// Parsed from the `config::VARIANTS` names the experiments use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AttnVariant {
+    pub imp: AttnImpl,
+    pub qk_norm: bool,
+}
+
+impl AttnVariant {
+    pub fn parse(variant: &str) -> Result<AttnVariant> {
+        let (imp, qk_norm) = match variant {
+            "sage_qknorm" => (AttnImpl::Sage, true),
+            "sage_noqknorm" => (AttnImpl::Sage, false),
+            "fpa_qknorm" => (AttnImpl::Fpa, true),
+            "fpa_noqknorm" => (AttnImpl::Fpa, false),
+            "sage_qknorm_nosm" => (AttnImpl::SageNosm, true),
+            "sage_qknorm_qksm" => (AttnImpl::SageQksm, true),
+            other => bail!(
+                "unknown training variant {other:?}; known: {:?}",
+                crate::config::VARIANTS
+            ),
+        };
+        Ok(AttnVariant { imp, qk_norm })
+    }
+}
+
+/// Flat `(name, shape)` schema in sorted-name (ABI) order — mirrors
+/// `python/compile/model.py::param_shapes`.
+pub fn param_schema(dims: &ModelDims, qk_norm: bool) -> Vec<(String, Vec<usize>)> {
+    let (d, hd, ff, v) = (
+        dims.d_model,
+        dims.n_heads * dims.d_head,
+        dims.d_ff,
+        dims.vocab_size,
+    );
+    let mut schema: Vec<(String, Vec<usize>)> =
+        vec![("embed".into(), vec![v, d]), ("final_norm".into(), vec![d])];
+    for i in 0..dims.n_layers {
+        let p = format!("layers.{i:02}.");
+        schema.push((format!("{p}attn_norm"), vec![d]));
+        schema.push((format!("{p}wq"), vec![d, hd]));
+        schema.push((format!("{p}wk"), vec![d, hd]));
+        schema.push((format!("{p}wv"), vec![d, hd]));
+        schema.push((format!("{p}wo"), vec![hd, d]));
+        if qk_norm {
+            schema.push((format!("{p}q_norm"), vec![dims.d_head]));
+            schema.push((format!("{p}k_norm"), vec![dims.d_head]));
+        }
+        schema.push((format!("{p}mlp_norm"), vec![d]));
+        schema.push((format!("{p}w_gate"), vec![d, ff]));
+        schema.push((format!("{p}w_up"), vec![d, ff]));
+        schema.push((format!("{p}w_down"), vec![ff, d]));
+    }
+    schema.sort_by(|a, b| a.0.cmp(&b.0));
+    schema
+}
+
+/// Scaled-normal init (std 0.02, Llama-style 1/√(2L) residual scaling on
+/// `wo`/`w_down`, ones for every norm γ).  Deterministic in `seed`; each
+/// leaf draws from its own RNG stream so the schema order can never
+/// change the values.
+pub fn init_params(dims: &ModelDims, qk_norm: bool, seed: u64) -> Vec<Tensor> {
+    let resid_scale = 1.0 / ((2 * dims.n_layers) as f32).sqrt();
+    param_schema(dims, qk_norm)
+        .iter()
+        .enumerate()
+        .map(|(i, (name, shape))| {
+            if name.ends_with("norm") {
+                let mut t = Tensor::zeros(shape);
+                t.fill(1.0);
+                t
+            } else {
+                let sigma = if name.ends_with("wo") || name.ends_with("w_down") {
+                    0.02 * resid_scale
+                } else {
+                    0.02
+                };
+                let mut rng = Pcg64::new(seed, 0x4D0D_E100 ^ i as u64);
+                Tensor::randn(shape, sigma, &mut rng)
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_dims_are_consistent() {
+        let d = ModelDims::default();
+        d.validate().unwrap();
+        assert_eq!(d.tokens_per_microbatch(), 64);
+    }
+
+    #[test]
+    fn bad_dims_rejected() {
+        let mut d = ModelDims::default();
+        d.d_head = 8; // 2×8 ≠ 32
+        assert!(d.validate().is_err());
+        let mut d = ModelDims::default();
+        d.n_layers = 0;
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn variant_parsing_covers_registry() {
+        for v in crate::config::VARIANTS {
+            AttnVariant::parse(v).unwrap();
+        }
+        assert!(AttnVariant::parse("bogus").is_err());
+        let v = AttnVariant::parse("sage_noqknorm").unwrap();
+        assert_eq!(v.imp, AttnImpl::Sage);
+        assert!(!v.qk_norm);
+        let v = AttnVariant::parse("sage_qknorm_qksm").unwrap();
+        assert_eq!(v.imp, AttnImpl::SageQksm);
+        assert!(v.qk_norm);
+    }
+
+    #[test]
+    fn schema_is_sorted_and_qknorm_adds_gammas() {
+        let dims = ModelDims::default();
+        let with = param_schema(&dims, true);
+        let without = param_schema(&dims, false);
+        assert_eq!(with.len(), without.len() + 2 * dims.n_layers);
+        let names: Vec<&str> = with.iter().map(|(n, _)| n.as_str()).collect();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+        assert!(names.contains(&"layers.01.q_norm"));
+        assert!(names.contains(&"embed"));
+    }
+
+    #[test]
+    fn init_is_deterministic_and_schema_shaped() {
+        let dims = ModelDims::default();
+        let a = init_params(&dims, true, 7);
+        let b = init_params(&dims, true, 7);
+        let c = init_params(&dims, true, 8);
+        assert_eq!(a.len(), param_schema(&dims, true).len());
+        for ((t, u), (name, shape)) in a.iter().zip(&b).zip(param_schema(&dims, true)) {
+            assert_eq!(t.shape, shape, "{name}");
+            assert_eq!(t.data, u.data, "{name} not deterministic");
+            if name.ends_with("norm") {
+                assert!(t.data.iter().all(|&x| x == 1.0), "{name} γ must init to 1");
+            }
+        }
+        // different seed changes at least the embedding
+        assert_ne!(a[0].data, c[0].data);
+    }
+}

@@ -134,16 +134,130 @@ impl AttentionBackend for NativeBackend {
             return run_bench_artifact(bench, inputs)
                 .with_context(|| format!("native backend executing {artifact}"));
         }
+        if let Some(spec) = parse_model_attn_name(artifact) {
+            return run_model_attn_artifact(spec, inputs)
+                .with_context(|| format!("native backend executing {artifact}"));
+        }
         if artifact.starts_with("init_")
             || artifact.starts_with("grad_step_")
             || artifact.starts_with("apply_step_")
         {
             bail!(
-                "artifact {artifact} needs the full-model training path, which the native \
-                 backend does not implement yet — run `make artifacts` and use --backend xla"
+                "artifact {artifact} is a monolithic AOT training executable; the native \
+                 engine trains through `model_attn_*` attention calls instead (any training \
+                 subcommand with --backend native) — to execute this artifact itself, run \
+                 `make artifacts` and use --backend xla"
             );
         }
         bail!("native backend knows no artifact named {artifact:?}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model-attention artifacts: causal per-head attention for the native
+// training engine (`model/transformer.rs`)
+// ---------------------------------------------------------------------------
+
+/// `model_attn_<impl>_<fwd|fwdbwd>_n<N>_d<D>` — always causal.
+///
+/// ABI: `fwd` takes `(q, k, v)`, returns `[o, max_logit]`; `fwdbwd` takes
+/// `(q, k, v, dO)` and returns `[o, dq, dk, dv]` (FlashAttention-style
+/// recompute: backward re-runs the forward).  The scalar `max_logit` is
+/// `kernels::max_abs_logit` on the *given* q/k in full precision — the
+/// trainer's divergence statistic (DESIGN.md §10).  Only the `fwd` path
+/// computes it: every training backward is preceded by the forward that
+/// already recorded the statistic, so the O(N²·d) sweep is not repeated
+/// on the backward hot path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct ModelAttnSpec {
+    imp: ModelAttnImpl,
+    fwdbwd: bool,
+    n: usize,
+    d: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ModelAttnImpl {
+    Fpa,
+    Sage,
+    SageNosm,
+    SageQksm,
+}
+
+fn parse_model_attn_name(artifact: &str) -> Option<ModelAttnSpec> {
+    let rest = artifact.strip_prefix("model_attn_")?;
+    let (imp, rest) = if let Some(r) = rest.strip_prefix("sage_nosm_") {
+        (ModelAttnImpl::SageNosm, r)
+    } else if let Some(r) = rest.strip_prefix("sage_qksm_") {
+        (ModelAttnImpl::SageQksm, r)
+    } else if let Some(r) = rest.strip_prefix("sage_") {
+        (ModelAttnImpl::Sage, r)
+    } else if let Some(r) = rest.strip_prefix("fpa_") {
+        (ModelAttnImpl::Fpa, r)
+    } else {
+        return None;
+    };
+    let (fwdbwd, rest) = if let Some(r) = rest.strip_prefix("fwdbwd_") {
+        (true, r)
+    } else if let Some(r) = rest.strip_prefix("fwd_") {
+        (false, r)
+    } else {
+        return None;
+    };
+    let rest = rest.strip_prefix('n')?;
+    let (n_str, d_part) = rest.split_once("_d")?;
+    let n = n_str.parse().ok()?;
+    let d = d_part.parse().ok()?;
+    Some(ModelAttnSpec { imp, fwdbwd, n, d })
+}
+
+fn model_attn_cfg(spec: ModelAttnSpec) -> AttnConfig {
+    let (k_sm, q_sm) = match spec.imp {
+        ModelAttnImpl::Fpa => (false, false), // unused by the FPA oracle
+        ModelAttnImpl::Sage => (true, false),
+        ModelAttnImpl::SageNosm => (false, false),
+        ModelAttnImpl::SageQksm => (true, true),
+    };
+    AttnConfig {
+        block_q: TRACE_BLOCK,
+        block_kv: TRACE_BLOCK,
+        causal: true,
+        k_smoothing: k_sm,
+        q_smoothing: q_sm,
+        quant_ds: true,
+    }
+}
+
+fn run_model_attn_artifact(spec: ModelAttnSpec, inputs: &[Value]) -> Result<Vec<Value>> {
+    let cfg = model_attn_cfg(spec);
+    if spec.imp != ModelAttnImpl::Fpa && spec.n % TRACE_BLOCK != 0 {
+        bail!(
+            "sage model attention tiles at block {TRACE_BLOCK}: N={} not divisible",
+            spec.n
+        );
+    }
+    if spec.fwdbwd {
+        let ins = take_f32_inputs(inputs, 4, spec.n, spec.d)?;
+        let (q, k, v, do_) = (ins[0], ins[1], ins[2], ins[3]);
+        let tr = match spec.imp {
+            ModelAttnImpl::Fpa => kernels::fpa_bwd(q, k, v, do_, true)?,
+            _ => kernels::sage_bwd(q, k, v, do_, &cfg)?,
+        };
+        Ok(vec![
+            Value::F32(tr.o),
+            Value::F32(tr.dq),
+            Value::F32(tr.dk),
+            Value::F32(tr.dv),
+        ])
+    } else {
+        let ins = take_f32_inputs(inputs, 3, spec.n, spec.d)?;
+        let (q, k, v) = (ins[0], ins[1], ins[2]);
+        let ml = kernels::max_abs_logit(q, k, true)?;
+        let o = match spec.imp {
+            ModelAttnImpl::Fpa => kernels::fpa_fwd(q, k, v, true)?.0,
+            _ => kernels::sage_fwd(q, k, v, &cfg)?.0,
+        };
+        Ok(vec![Value::F32(o), Value::F32(Tensor::scalar(ml))])
     }
 }
 
@@ -352,6 +466,62 @@ mod tests {
         let all_inputs: Vec<Value> = qkvdo.iter().cloned().map(Value::F32).collect();
         let out = be.execute("bench_sage_fwdbwd_d64_n128", &all_inputs).unwrap();
         assert_eq!(out.len(), 4);
+    }
+
+    #[test]
+    fn model_attn_name_parsing() {
+        let s = parse_model_attn_name("model_attn_fpa_fwd_n32_d16").unwrap();
+        assert_eq!(s, ModelAttnSpec { imp: ModelAttnImpl::Fpa, fwdbwd: false, n: 32, d: 16 });
+        let s = parse_model_attn_name("model_attn_sage_nosm_fwdbwd_n64_d16").unwrap();
+        assert_eq!(s, ModelAttnSpec { imp: ModelAttnImpl::SageNosm, fwdbwd: true, n: 64, d: 16 });
+        let s = parse_model_attn_name("model_attn_sage_fwd_n32_d8").unwrap();
+        assert_eq!(s.imp, ModelAttnImpl::Sage);
+        assert!(parse_model_attn_name("model_attn_bogus_fwd_n32_d8").is_none());
+        assert!(parse_model_attn_name("bench_sage_fwd_d64_n128").is_none());
+    }
+
+    #[test]
+    fn model_attn_fwd_abi_and_causality() {
+        let mut be = NativeBackend::new();
+        let qkvdo = gaussian_qkvdo(32, 16, 1.0, 1.0, 1.0, 1.0, 11);
+        let fwd: Vec<Value> = qkvdo[..3].iter().cloned().map(Value::F32).collect();
+        let out = be.execute("model_attn_fpa_fwd_n32_d16", &fwd).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].shape(), &[32, 16]);
+        assert_eq!(out[1].shape(), &[] as &[usize]); // max_logit scalar
+        // Causality: row 0 can only attend to itself ⟹ o[0,:] == v[0,:].
+        let o = out[0].as_f32().unwrap();
+        let v = qkvdo[2].clone();
+        for c in 0..16 {
+            assert!((o.data[c] - v.data[c]).abs() < 1e-5, "col {c}");
+        }
+        let ml = out[1].as_f32().unwrap().item();
+        let want = crate::kernels::max_abs_logit(&qkvdo[0], &qkvdo[1], true).unwrap();
+        assert!((ml - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn model_attn_fwdbwd_matches_fpa_kernel() {
+        let mut be = NativeBackend::new();
+        let qkvdo = gaussian_qkvdo(32, 16, 1.0, 1.0, 1.0, 1.0, 12);
+        let all: Vec<Value> = qkvdo.iter().cloned().map(Value::F32).collect();
+        let out = be.execute("model_attn_fpa_fwdbwd_n32_d16", &all).unwrap();
+        assert_eq!(out.len(), 4);
+        let tr = crate::kernels::fpa_bwd(&qkvdo[0], &qkvdo[1], &qkvdo[2], &qkvdo[3], true)
+            .unwrap();
+        for (idx, want) in [(1, &tr.dq), (2, &tr.dk), (3, &tr.dv)] {
+            let got = out[idx].as_f32().unwrap();
+            assert!(got.rel_l2(want) < 1e-6, "output {idx}");
+        }
+        // The sage variant runs too and tracks the oracle directionally.
+        let out_s = be.execute("model_attn_sage_fwdbwd_n32_d16", &all).unwrap();
+        let dq_s = out_s[1].as_f32().unwrap();
+        assert!(dq_s.cossim(&tr.dq) > 0.97, "sage dq cossim {}", dq_s.cossim(&tr.dq));
+        // Sage needs block-aligned N.
+        let short: Vec<Value> = gaussian_qkvdo(16, 8, 1.0, 1.0, 1.0, 1.0, 13)
+            .iter().cloned().map(Value::F32).collect();
+        assert!(be.execute("model_attn_sage_fwdbwd_n16_d8", &short).is_err());
+        assert!(be.execute("model_attn_fpa_fwdbwd_n16_d8", &short).is_ok());
     }
 
     #[test]

@@ -2,7 +2,11 @@
 //!
 //! The trainer emits `(step, name, value)` points; series are buffered in
 //! memory and flushed to `results/<run>/<series>.csv` so every paper
-//! figure can be regenerated from the raw curves.
+//! figure can be regenerated from the raw curves.  Standard training
+//! series: `train_loss`, `lr`, `grad_norm`, `tokens`, `max_attn_logit`
+//! (the §5.3 divergence statistic), `step_ms` (per-step wall time), and
+//! `diverged` (a single 1.0 at the flagged step).  Render any of them
+//! offline with `sagebwd plot --run DIR[,DIR] --series NAME`.
 
 pub mod plot;
 
@@ -39,6 +43,15 @@ impl Series {
         }
         let tail = &self.points[self.points.len().saturating_sub(k)..];
         Some(tail.iter().map(|&(_, v)| v).sum::<f64>() / tail.len() as f64)
+    }
+
+    /// Largest recorded value — e.g. the peak `max_attn_logit` of a run
+    /// (the fig1 divergence statistic).
+    pub fn max_value(&self) -> Option<f64> {
+        self.points
+            .iter()
+            .map(|&(_, v)| v)
+            .fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.max(v))))
     }
 }
 
@@ -143,5 +156,15 @@ mod tests {
         let s = Series::default();
         assert_eq!(s.last(), None);
         assert_eq!(s.tail_mean(3), None);
+        assert_eq!(s.max_value(), None);
+    }
+
+    #[test]
+    fn series_max_value() {
+        let mut s = Series::default();
+        for (i, v) in [1.5, 9.25, -3.0, 4.0].iter().enumerate() {
+            s.push(i as u64, *v);
+        }
+        assert_eq!(s.max_value(), Some(9.25));
     }
 }

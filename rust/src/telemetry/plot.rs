@@ -1,6 +1,8 @@
-//! Terminal plotting: render loss curves from `results/**/train_loss.csv`
-//! as ASCII charts (`sagebwd plot --runs a,b,...`), so the paper's figures
-//! can be eyeballed without leaving the terminal.
+//! Terminal plotting: render metric curves from `results/**/<series>.csv`
+//! as ASCII charts, so the paper's figures can be eyeballed without
+//! leaving the terminal.  `sagebwd plot --csv a.csv,b.csv` plots explicit
+//! files; `sagebwd plot --run DIR,DIR --series max_attn_logit` compares
+//! one series (loss, divergence logits, step wall-time, …) across runs.
 
 use std::fs;
 use std::path::Path;

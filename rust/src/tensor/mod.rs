@@ -226,6 +226,51 @@ impl Tensor {
         }
         Tensor::from_vec(&[hi - lo, n], self.data[lo * n..hi * n].to_vec())
     }
+
+    /// Extract the `(rows, cols)` sub-matrix starting at `(row0, col0)` —
+    /// the per-(batch, head) slicing the native model uses.
+    pub fn block(&self, row0: usize, col0: usize, rows: usize, cols: usize) -> Result<Tensor> {
+        let (m, n) = self.dims2()?;
+        if row0 + rows > m || col0 + cols > n {
+            bail!("block ({row0}+{rows}, {col0}+{cols}) out of bounds for ({m}, {n})");
+        }
+        let mut out = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            let base = (row0 + r) * n + col0;
+            out.extend_from_slice(&self.data[base..base + cols]);
+        }
+        Tensor::from_vec(&[rows, cols], out)
+    }
+
+    /// Overwrite the sub-matrix at `(row0, col0)` with `b`.
+    pub fn set_block(&mut self, row0: usize, col0: usize, b: &Tensor) -> Result<()> {
+        let (m, n) = self.dims2()?;
+        let (rows, cols) = b.dims2()?;
+        if row0 + rows > m || col0 + cols > n {
+            bail!("set_block ({row0}+{rows}, {col0}+{cols}) out of bounds for ({m}, {n})");
+        }
+        for r in 0..rows {
+            let base = (row0 + r) * n + col0;
+            self.data[base..base + cols].copy_from_slice(&b.data[r * cols..(r + 1) * cols]);
+        }
+        Ok(())
+    }
+
+    /// `self[row0.., col0..] += b` for a sub-matrix `b`.
+    pub fn add_block(&mut self, row0: usize, col0: usize, b: &Tensor) -> Result<()> {
+        let (m, n) = self.dims2()?;
+        let (rows, cols) = b.dims2()?;
+        if row0 + rows > m || col0 + cols > n {
+            bail!("add_block ({row0}+{rows}, {col0}+{cols}) out of bounds for ({m}, {n})");
+        }
+        for r in 0..rows {
+            let base = (row0 + r) * n + col0;
+            for (dst, &x) in self.data[base..base + cols].iter_mut().zip(&b.data[r * cols..]) {
+                *dst += x;
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Dense i32 tensor (token ids).
@@ -394,6 +439,31 @@ mod tests {
         let (p, lse) = s.softmax_rows().unwrap();
         assert_eq!(p.data, vec![0.0, 0.0]);
         assert_eq!(lse[0], f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn block_roundtrip_and_accumulate() {
+        let mut rng = Pcg64::new(21, 0);
+        let a = Tensor::randn(&[4, 6], 1.0, &mut rng);
+        let b = a.block(1, 2, 2, 3).unwrap();
+        assert_eq!(b.shape, vec![2, 3]);
+        assert_eq!(b.data[0], a.data[1 * 6 + 2]);
+        assert_eq!(b.data[5], a.data[2 * 6 + 4]);
+        // set_block writes back exactly; add_block doubles it.
+        let mut c = Tensor::zeros(&[4, 6]);
+        c.set_block(1, 2, &b).unwrap();
+        assert_eq!(c.block(1, 2, 2, 3).unwrap(), b);
+        c.add_block(1, 2, &b).unwrap();
+        let doubled = c.block(1, 2, 2, 3).unwrap();
+        for (x, y) in doubled.data.iter().zip(&b.data) {
+            assert_eq!(*x, 2.0 * y);
+        }
+        // untouched region stays zero
+        assert_eq!(c.data[0], 0.0);
+        // out-of-bounds rejected
+        assert!(a.block(3, 0, 2, 2).is_err());
+        assert!(c.set_block(0, 5, &b).is_err());
+        assert!(c.add_block(3, 0, &b).is_err());
     }
 
     #[test]

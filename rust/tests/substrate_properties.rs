@@ -88,6 +88,8 @@ fn checkpoint_roundtrip_random_tensors() {
             .collect();
         let ckpt = Checkpoint {
             step: g.usize_in(0, 1 << 20) as u64,
+            tokens_seen: g.usize_in(0, 1 << 24) as u64,
+            rng: None,
             tensors,
         };
         let path = std::env::temp_dir().join(format!(
@@ -126,7 +128,7 @@ fn warmup_then_decay_crosses_peak_once() {
     check_with(Config { cases: 50, seed: 23 }, "single peak", |g| {
         let warmup = g.usize_in(1, 30) as u64;
         let total = warmup + g.usize_in(2, 200) as u64;
-        let s = CosineSchedule::new(1e-3, warmup, total, 0.05);
+        let s = CosineSchedule::new(1e-3, warmup, total, 0.05).unwrap();
         // Strictly increasing before warmup end, non-increasing after.
         for step in 1..warmup {
             if s.lr(step) <= s.lr(step - 1) {

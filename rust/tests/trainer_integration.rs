@@ -27,6 +27,7 @@ fn cfg(variant: &str, steps: u64, tps: u64) -> TrainConfig {
         log_every: 0,
         clip_norm: 0.0,
         grad_noise_sigma: 0.0,
+        ..TrainConfig::default()
     }
 }
 
