@@ -5,24 +5,42 @@ Pallas kernels are tested against) on a small fixed input set and writes
 ``rust/tests/data/golden_attention.json``, which
 ``rust/tests/kernel_golden.rs`` checks the native backend against.
 
+Also generates ``rust/tests/data/golden_gemm.json`` for the cache-blocked
+compute engine (``rust/src/tensor/linalg.rs``): float32 GEMM results in
+the engine's documented accumulation order (per output element, products
+added in ascending reduction index from 0.0) plus an exact i8×i8→i32
+case.  Before emitting, a numpy twin of the blocked ``ikj``/MR kernel is
+checked **bitwise** against the naive per-element order across odd shapes
+— the same determinism contract the Rust property tests assert.  This
+half needs only numpy; run it standalone with ``--gemm-only`` when the
+jax toolchain is absent.
+
 Float round-tripping: every value is first cast to float32, then emitted
 via Python ``repr`` of the exact float64 promotion — Rust parses the f64
 and casts back to f32, recovering the bit pattern exactly.
 
-Usage:  cd python && python -m compile.make_golden
+Usage:  cd python && python -m compile.make_golden [--gemm-only]
 """
 
 from __future__ import annotations
 
 import json
 import os
+import sys
 
 import numpy as np
 
-from .kernels import ref
-
 N, D, BLOCK = 32, 8, 8
 SIGMA_QK, SIGMA_V, SIGMA_DO = 3.0, 1.0, 0.5
+
+DATA_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "rust", "tests", "data"
+)
+
+# Register-block height of the Rust engine's gemm_nn micro-kernel
+# (rust/src/tensor/linalg.rs MR) — mirrored here so the numpy twin blocks
+# identically.
+GEMM_MR = 4
 
 
 def _f32_list(x) -> list:
@@ -44,7 +62,91 @@ def _outputs(it: ref.AttnIntermediates, with_intermediates: bool) -> dict:
     return out
 
 
+def _gemm_naive_f32(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """`A·B` accumulated exactly like the Rust naive reference: per output
+    element, products added in ascending `t` order starting from 0.0, every
+    intermediate rounded to float32."""
+    m, k = a.shape
+    _, n = b.shape
+    out = np.zeros((m, n), dtype=np.float32)
+    for i in range(m):
+        for t in range(k):
+            out[i] += a[i, t] * b[t]  # f32 mul then f32 add, per lane
+    return out
+
+
+def _gemm_blocked_f32(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Numpy twin of linalg.rs `gemm_nn`: MR-row register block, `ikj`
+    order.  Must be bitwise-equal to `_gemm_naive_f32` — blocking reorders
+    *across* output elements only, never within one element's sum."""
+    m, k = a.shape
+    _, n = b.shape
+    out = np.zeros((m, n), dtype=np.float32)
+    i = 0
+    while i < m:
+        mr = min(GEMM_MR, m - i)
+        for t in range(k):
+            brow = b[t]
+            for r in range(mr):
+                out[i + r] += a[i + r, t] * brow
+        i += mr
+    return out
+
+
+def check_blocked_gemm() -> None:
+    """Assert the blocked twin is bitwise-identical to the naive order
+    across odd/edge shapes (the linalg.rs determinism contract)."""
+    rng = np.random.RandomState(7)
+    for m, k, n in [(1, 1, 1), (5, 3, 7), (17, 13, 9), (33, 7, 5), (64, 32, 48)]:
+        a = (rng.standard_normal((m, k)) * 3).astype(np.float32)
+        b = (rng.standard_normal((k, n)) * 3).astype(np.float32)
+        naive = _gemm_naive_f32(a, b)
+        blocked = _gemm_blocked_f32(a, b)
+        assert np.array_equal(
+            naive.view(np.uint32), blocked.view(np.uint32)
+        ), f"blocked GEMM not bitwise-equal to naive at ({m},{k},{n})"
+    print("blocked-GEMM check: bitwise-equal to naive across all shapes")
+
+
+def write_gemm_golden() -> None:
+    check_blocked_gemm()
+    rng = np.random.RandomState(20260730)
+    cases = []
+    for m, k, n in [(5, 3, 7), (16, 8, 16), (17, 13, 9)]:
+        a = (rng.standard_normal((m, k)) * 2).astype(np.float32)
+        b = (rng.standard_normal((k, n)) * 2).astype(np.float32)
+        c = _gemm_naive_f32(a, b)
+        cases.append({
+            "m": m, "k": k, "n": n,
+            "a": _f32_list(a), "b": _f32_list(b), "c": _f32_list(c),
+        })
+    # Exact integer case: i8 operands, i32 accumulation (order-free).
+    m, k, n = 6, 5, 9
+    ai = ((np.arange(m * k) * 37) % 255 - 127).astype(np.int64).reshape(m, k)
+    bi = ((np.arange(k * n) * 91) % 255 - 127).astype(np.int64).reshape(k, n)
+    ci = ai @ bi
+    int8_case = {
+        "m": m, "k": k, "n": n,
+        "a": [int(v) for v in ai.reshape(-1)],
+        "b": [int(v) for v in bi.reshape(-1)],
+        "c": [int(v) for v in ci.reshape(-1)],
+    }
+    doc = {"mr": GEMM_MR, "f32_cases": cases, "int8_case": int8_case}
+    out_path = os.path.join(DATA_DIR, "golden_gemm.json")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(doc, f)
+    print(f"wrote {os.path.normpath(out_path)} "
+          f"({os.path.getsize(out_path) / 1024:.0f} KiB, "
+          f"{len(cases)} f32 cases + 1 int8 case)")
+
+
 def main() -> None:
+    write_gemm_golden()
+    if "--gemm-only" in sys.argv[1:]:
+        return
+    from .kernels import ref
+
     rng = np.random.RandomState(20260729)
     q = (rng.standard_normal((N, D)) * SIGMA_QK).astype(np.float32)
     k = (rng.standard_normal((N, D)) * SIGMA_QK).astype(np.float32)

@@ -1,26 +1,234 @@
-//! **Figures 2–3 bench**: SageBwd vs FA2-style vs naive SDPA kernel
-//! throughput across head dims {64, 128} and sequence lengths, forward and
-//! forward+backward — plus the analytic tensor-core model (see
-//! `experiments::fig23_speed` for why both readings are reported).
+//! **Figures 2–3 bench + compute-engine bench**, with the machine-readable
+//! perf trajectory (DESIGN.md §11).
+//!
+//! Two sections:
+//!
+//! 1. **Engine rows** — serial-naive vs blocked vs parallel for the three
+//!    f32 GEMM layouts attention uses (`A·Bᵀ`, `A·B`, `Aᵀ·B`) and the
+//!    i8×i8→i32 GEMM, at the attention shapes (default n=1024, d=64;
+//!    `BENCH_QUICK=1` shrinks to n=256).  The acceptance bar tracked from
+//!    this PR onward: blocked+parallel ≥3× naive at n=1024/d=64 with 4
+//!    threads.
+//! 2. **Kernel rows** — SageBwd vs FA2-style vs naive SDPA throughput
+//!    across head dims and sequence lengths, forward and forward+backward
+//!    (see `experiments::fig23_speed` for the modeled/measured split).
+//!
+//! Every run *appends* to `BENCH_attention.json` (schema-checked after
+//! writing), so the perf trajectory persists across PRs.
 //!
 //! Runs on the native CPU kernels by default (no artifacts needed); set
-//! `BENCH_BACKEND=xla` to time the AOT executables instead.
+//! `BENCH_BACKEND=xla` to time the AOT executables instead, and
+//! `SAGEBWD_THREADS=N` to pin the engine's worker count.
 //!
 //! Run with `cargo bench --bench bench_attention` (or `make bench`).
 
+use std::path::Path;
+
+use sagebwd::bench::{
+    append_bench_json, check_bench_json, run as bench_run, BenchConfig, BenchRow, Measurement,
+    Table,
+};
 use sagebwd::experiments::fig23_speed;
+use sagebwd::kernels::quant;
 use sagebwd::runtime::make_backend;
+use sagebwd::tensor::linalg;
+use sagebwd::util::rng::Pcg64;
+
+const BENCH_JSON: &str = "BENCH_attention.json";
+
+fn randv(len: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed, 0xBE);
+    let mut v = vec![0f32; len];
+    rng.fill_gaussian(&mut v, 1.0);
+    v
+}
+
+/// `quant::int8_gemm`'s exact loop structure, minus its per-call output
+/// allocation — the comparable serial-naive baseline (checked against the
+/// allocating original once at startup).
+fn naive_int8_gemm(a: &[i8], b: &[i8], m: usize, k: usize, n: usize, out: &mut [i32]) {
+    out.fill(0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let acc = &mut out[i * n..(i + 1) * n];
+        for (t, &av) in arow.iter().enumerate() {
+            let av = av as i32;
+            let brow = &b[t * n..(t + 1) * n];
+            for (o, &bv) in acc.iter_mut().zip(brow) {
+                *o += av * bv as i32;
+            }
+        }
+    }
+}
+
+struct Ctx {
+    table: Table,
+    rows: Vec<BenchRow>,
+}
+
+impl Ctx {
+    /// Record one engine row.  `tokens_per_s` is always `None` here — raw
+    /// GEMMs have no token count; the fig23 kernel rows (which do) are
+    /// pushed directly.
+    fn record(&mut self, op: &str, shape: &str, variant: &str, threads: usize, m: &Measurement) {
+        let ns = m.mean() * 1e9;
+        self.table.row(vec![
+            op.to_string(),
+            shape.to_string(),
+            variant.to_string(),
+            threads.to_string(),
+            format!("{ns:.0}"),
+            "-".into(),
+        ]);
+        self.rows.push(BenchRow {
+            op: op.to_string(),
+            shape: shape.to_string(),
+            variant: variant.to_string(),
+            threads,
+            ns_per_iter: ns,
+            tokens_per_s: None,
+        });
+    }
+}
+
+/// naive / blocked / parallel rows for one op; returns (naive, parallel)
+/// mean seconds for the speedup summary.
+#[allow(clippy::too_many_arguments)]
+fn engine_op(
+    ctx: &mut Ctx,
+    cfg: BenchConfig,
+    op: &str,
+    shape: &str,
+    threads: usize,
+    mut naive: impl FnMut(),
+    mut blocked: impl FnMut(),
+    mut parallel: impl FnMut(),
+) -> (f64, f64) {
+    let mn = bench_run(cfg, &format!("{op}_naive"), &mut naive);
+    ctx.record(op, shape, "naive", 1, &mn);
+    let mb = bench_run(cfg, &format!("{op}_blocked"), &mut blocked);
+    ctx.record(op, shape, "blocked", 1, &mb);
+    let mp = bench_run(cfg, &format!("{op}_parallel"), &mut parallel);
+    ctx.record(op, shape, "parallel", threads, &mp);
+    (mn.mean(), mp.mean())
+}
 
 fn main() {
-    let backend_name = std::env::var("BENCH_BACKEND").unwrap_or_else(|_| "native".to_string());
-    let mut be = match make_backend(&backend_name, sagebwd::DEFAULT_ARTIFACTS_DIR) {
-        Ok(be) => be,
-        Err(e) => {
-            eprintln!("SKIP bench_attention: {e:#} (run `make artifacts` for BENCH_BACKEND=xla)");
-            return;
-        }
-    };
     let quick = std::env::var("BENCH_QUICK").is_ok();
-    fig23_speed::run(be.as_mut(), sagebwd::DEFAULT_RESULTS_DIR, quick)
-        .expect("fig23 bench failed");
+    let backend_name = std::env::var("BENCH_BACKEND").unwrap_or_else(|_| "native".to_string());
+    let threads = linalg::thread_count();
+    let cfg = if quick {
+        BenchConfig { warmup_iters: 1, iters: 3, max_secs: 3.0 }
+    } else {
+        BenchConfig { warmup_iters: 2, iters: 10, max_secs: 20.0 }
+    };
+    let (n, d) = if quick { (256usize, 64usize) } else { (1024, 64) };
+
+    let mut ctx = Ctx {
+        table: Table::new(&["op", "shape", "variant", "threads", "ns_per_iter", "tokens_per_s"]),
+        rows: Vec::new(),
+    };
+
+    // ---- Section 1: compute-engine GEMMs at attention shapes ----
+    // Each variant gets its own output buffer so the three timed closures
+    // can coexist as arguments.
+    println!("compute engine: serial-naive vs blocked vs parallel ({threads} threads)\n");
+    let a_nd = randv(n * d, 1);
+    let b_nd = randv(n * d, 2);
+    let a_nn = randv(n * n, 3);
+
+    // black_box on every output keeps release-mode dead-store elimination
+    // from hollowing out the timed kernels.
+    use std::hint::black_box;
+
+    // Q·Kᵀ: (n,d) × (n,d)ᵀ → (n,n).  Pack scratch is hoisted out of the
+    // timed closures (the production paths pool it too — timing a fresh
+    // allocation per iter would understate the engine).
+    let shape_nt = format!("m{n}_k{d}_n{n}");
+    let (mut o1, mut o2, mut o3) = (vec![0f32; n * n], vec![0f32; n * n], vec![0f32; n * n]);
+    let (mut pk2, mut pk3) = (Vec::new(), Vec::new());
+    let (base_nt, par_nt) = engine_op(
+        &mut ctx, cfg, "matmul_nt", &shape_nt, threads,
+        || { linalg::naive_matmul_nt(&a_nd, &b_nd, n, d, n, &mut o1); black_box(&o1); },
+        || { linalg::matmul_nt_scratch(&a_nd, &b_nd, n, d, n, &mut o2, 1, &mut pk2); black_box(&o2); },
+        || { linalg::matmul_nt_scratch(&a_nd, &b_nd, n, d, n, &mut o3, threads, &mut pk3); black_box(&o3); },
+    );
+
+    // P·V: (n,n) × (n,d) → (n,d)
+    let shape_nn = format!("m{n}_k{n}_n{d}");
+    let (mut o1, mut o2, mut o3) = (vec![0f32; n * d], vec![0f32; n * d], vec![0f32; n * d]);
+    let (base_nn, par_nn) = engine_op(
+        &mut ctx, cfg, "matmul_nn", &shape_nn, threads,
+        || { linalg::naive_matmul(&a_nn, &b_nd, n, n, d, &mut o1); black_box(&o1); },
+        || { linalg::gemm_nn(&a_nn, &b_nd, n, n, d, &mut o2); black_box(&o2); },
+        || { linalg::matmul_threads(&a_nn, &b_nd, n, n, d, &mut o3, threads); black_box(&o3); },
+    );
+
+    // Pᵀ·dO: (n,n)ᵀ-layout × (n,d) → (n,d)
+    let shape_tn = format!("m{n}_k{n}_n{d}");
+    let (mut o1, mut o2, mut o3) = (vec![0f32; n * d], vec![0f32; n * d], vec![0f32; n * d]);
+    let (mut pk2, mut pk3) = (Vec::new(), Vec::new());
+    let (base_tn, par_tn) = engine_op(
+        &mut ctx, cfg, "matmul_tn", &shape_tn, threads,
+        || { linalg::naive_matmul_tn(&a_nn, &b_nd, n, n, d, &mut o1); black_box(&o1); },
+        || { linalg::matmul_tn_scratch(&a_nn, &b_nd, n, n, d, &mut o2, 1, &mut pk2); black_box(&o2); },
+        || { linalg::matmul_tn_scratch(&a_nn, &b_nd, n, n, d, &mut o3, threads, &mut pk3); black_box(&o3); },
+    );
+
+    // ψ(P)·ψ(V): i8 (n,n) × (n,d) → i32 (n,d).  The naive row uses the
+    // same loop structure as `quant::int8_gemm` but writes a preallocated
+    // buffer, so all three variants exclude allocator time alike.
+    let qa: Vec<i8> = (0..n * n).map(|i| (i as i32 * 37 % 255 - 127) as i8).collect();
+    let qb: Vec<i8> = (0..n * d).map(|i| (i as i32 * 91 % 255 - 127) as i8).collect();
+    let (mut i0, mut i1, mut i2) = (vec![0i32; n * d], vec![0i32; n * d], vec![0i32; n * d]);
+    {
+        let want = quant::int8_gemm(&qa, &qb, n, n, d);
+        naive_int8_gemm(&qa, &qb, n, n, d, &mut i0);
+        assert_eq!(want, i0, "naive int8 twin drifted from quant::int8_gemm");
+    }
+    let (base_i8, par_i8) = engine_op(
+        &mut ctx, cfg, "int8_gemm_nn", &shape_nn, threads,
+        || { naive_int8_gemm(&qa, &qb, n, n, d, &mut i0); black_box(&i0); },
+        || { linalg::int8_gemm_nn(&qa, &qb, n, n, d, &mut i1); black_box(&i1); },
+        || { linalg::int8_gemm_nn_threads(&qa, &qb, n, n, d, &mut i2, threads); black_box(&i2); },
+    );
+
+    // ---- Section 2: attention kernel throughput (Figures 2–3) ----
+    // A backend failure (e.g. BENCH_BACKEND=xla without artifacts) skips
+    // only this section — the engine rows above still reach the
+    // trajectory file.
+    match make_backend(&backend_name, sagebwd::DEFAULT_ARTIFACTS_DIR) {
+        Ok(mut be) => {
+            let rows23 = fig23_speed::run(be.as_mut(), sagebwd::DEFAULT_RESULTS_DIR, quick)
+                .expect("fig23 bench failed");
+            for r in &rows23 {
+                ctx.rows.push(BenchRow {
+                    op: format!("attention_{}_{}", r.impl_name, r.mode),
+                    shape: format!("n{}_d{}", r.n, r.d),
+                    variant: r.impl_name.clone(),
+                    threads: r.threads,
+                    ns_per_iter: r.measured_ms * 1e6,
+                    tokens_per_s: Some(r.n as f64 / (r.measured_ms / 1e3)),
+                });
+            }
+        }
+        Err(e) => {
+            eprintln!("SKIP kernel section: {e:#} (run `make artifacts` for BENCH_BACKEND=xla)");
+        }
+    }
+
+    println!("{}", ctx.table.render());
+    for (op, base, par) in [
+        ("matmul_nt", base_nt, par_nt),
+        ("matmul_nn", base_nn, par_nn),
+        ("matmul_tn", base_tn, par_tn),
+        ("int8_gemm_nn", base_i8, par_i8),
+    ] {
+        println!("{op}: blocked+parallel speedup vs naive = {:.2}x", base / par);
+    }
+
+    let path = Path::new(BENCH_JSON);
+    append_bench_json(path, "attention", threads, &ctx.rows).expect("appending BENCH_attention.json");
+    let count = check_bench_json(path).expect("BENCH_attention.json schema check");
+    println!("\n{BENCH_JSON}: schema OK ({count} rows across all runs)");
 }

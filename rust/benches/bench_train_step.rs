@@ -1,14 +1,153 @@
 //! Train-step bench: wallclock of one `grad_step` microbatch and one
-//! `apply_step` for the sage and fpa variants — the end-to-end numbers
-//! behind the Figure-1 experiment budget, and the baseline for the
-//! EXPERIMENTS.md §Perf iteration log.
+//! `apply_step` — the end-to-end numbers behind the Figure-1 experiment
+//! budget, and the baseline for the perf trajectory in
+//! `BENCH_train_step.json` (appended every run, schema-checked after
+//! writing — DESIGN.md §11).
+//!
+//! Default: the **native** engine (no artifacts needed), timed at
+//! `SAGEBWD_THREADS=1` (serial) and at the default thread count
+//! (head-parallel attention + row-partitioned GEMMs), for the sage and
+//! fpa variants.  Set `BENCH_BACKEND=xla` for the original AOT artifact
+//! path (requires `make artifacts`).
 
-use sagebwd::bench::{run as bench_run, BenchConfig, Table};
-use sagebwd::runtime::{Runtime, Value};
-use sagebwd::tensor::{IntTensor, Tensor};
-use sagebwd::util::rng::Pcg64;
+use std::path::Path;
+
+use sagebwd::bench::{
+    append_bench_json, check_bench_json, run as bench_run, BenchConfig, BenchRow, Table,
+};
+use sagebwd::config::TrainConfig;
+use sagebwd::coordinator::engine::{NativeEngine, TrainEngine};
+use sagebwd::data::{Batcher, Tokenizer};
+use sagebwd::model::ModelDims;
+use sagebwd::tensor::linalg;
+
+const BENCH_JSON: &str = "BENCH_train_step.json";
 
 fn main() {
+    if std::env::var("BENCH_BACKEND").as_deref() == Ok("xla") {
+        xla_main();
+        return;
+    }
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let cfg = if quick {
+        BenchConfig { warmup_iters: 1, iters: 3, max_secs: 5.0 }
+    } else {
+        BenchConfig { warmup_iters: 1, iters: 8, max_secs: 30.0 }
+    };
+    // quick: the default toy dims; full: a model whose per-layer head
+    // batch crosses the engine's fan-out gate, so the threads=N rows
+    // really measure the parallel path.
+    let dims = if quick {
+        ModelDims::default()
+    } else {
+        ModelDims {
+            d_model: 64,
+            n_heads: 4,
+            d_head: 16,
+            d_ff: 128,
+            seq_len: 256,
+            ..ModelDims::default()
+        }
+    };
+    let default_threads = linalg::thread_count();
+    // Only emit multi-thread rows when the head batch actually engages
+    // the fan-out — otherwise threads=N would mislabel serial timings in
+    // the persisted trajectory.
+    let head_volume =
+        dims.microbatch * dims.n_heads * dims.seq_len * dims.seq_len * dims.d_head;
+    let thread_settings: Vec<usize> =
+        if default_threads > 1 && head_volume >= linalg::PAR_MIN_BATCH_VOLUME {
+            vec![1, default_threads]
+        } else {
+            vec![1]
+        };
+    let mut table = Table::new(&["op", "variant", "shape", "threads", "mean_ms", "tokens_per_sec"]);
+    let mut rows: Vec<BenchRow> = Vec::new();
+    for variant in ["sage_qknorm", "fpa_qknorm"] {
+        for &threads in &thread_settings {
+            // Panic-safe RAII pin (restores the caller's setting on drop).
+            let _pin = linalg::pin_threads(threads);
+            let tcfg = TrainConfig {
+                variant: variant.into(),
+                steps: 2,
+                tokens_per_step: 128,
+                warmup_steps: 1,
+                ..TrainConfig::default()
+            };
+            let mut engine =
+                NativeEngine::with_dims(&tcfg, dims).expect("building native engine");
+            let (b, nseq) = engine.microbatch_shape();
+            let mut batcher = Batcher::new(Tokenizer::bytes_only(), 7, 0, b, nseq);
+            let batch = batcher.next_batch().expect("drawing batch");
+            let shape = format!("b{b}_n{nseq}");
+            let tokens = (b * nseq) as f64;
+
+            let mg = bench_run(cfg, &format!("grad_step_{variant}_t{threads}"), || {
+                engine.grad_microbatch(&batch).expect("grad_microbatch failed");
+            });
+            table.row(vec![
+                "grad_step".into(),
+                variant.into(),
+                shape.clone(),
+                threads.to_string(),
+                format!("{:.2}", mg.mean() * 1e3),
+                format!("{:.0}", tokens / mg.mean()),
+            ]);
+            rows.push(BenchRow {
+                op: "grad_step".into(),
+                shape: shape.clone(),
+                variant: variant.into(),
+                threads,
+                ns_per_iter: mg.mean() * 1e9,
+                tokens_per_s: Some(tokens / mg.mean()),
+            });
+
+            let stats = engine.grad_microbatch(&batch).expect("grad_microbatch failed");
+            let ma = bench_run(cfg, &format!("apply_step_{variant}_t{threads}"), || {
+                engine.apply(&stats.grads, 1e-3, 1).expect("apply failed");
+            });
+            table.row(vec![
+                "apply_step".into(),
+                variant.into(),
+                shape.clone(),
+                threads.to_string(),
+                format!("{:.2}", ma.mean() * 1e3),
+                "-".into(),
+            ]);
+            rows.push(BenchRow {
+                op: "apply_step".into(),
+                shape,
+                variant: variant.into(),
+                threads,
+                ns_per_iter: ma.mean() * 1e9,
+                tokens_per_s: None,
+            });
+        }
+    }
+
+    println!("{}", table.render());
+    std::fs::create_dir_all(sagebwd::DEFAULT_RESULTS_DIR).ok();
+    std::fs::write(
+        format!("{}/bench_train_step.csv", sagebwd::DEFAULT_RESULTS_DIR),
+        table.to_csv(),
+    )
+    .ok();
+    let path = Path::new(BENCH_JSON);
+    append_bench_json(path, "train_step", default_threads, &rows)
+        .expect("appending BENCH_train_step.json");
+    let count = check_bench_json(path).expect("BENCH_train_step.json schema check");
+    println!("{BENCH_JSON}: schema OK ({count} rows across all runs)");
+}
+
+// ---------------------------------------------------------------------------
+// Original AOT artifact path (BENCH_BACKEND=xla) — unchanged measurement.
+// ---------------------------------------------------------------------------
+
+fn xla_main() {
+    use sagebwd::runtime::{Runtime, Value};
+    use sagebwd::tensor::{IntTensor, Tensor};
+    use sagebwd::util::rng::Pcg64;
+
     let mut rt = match Runtime::new(sagebwd::DEFAULT_ARTIFACTS_DIR) {
         Ok(rt) => rt,
         Err(e) => {

@@ -1,10 +1,31 @@
 //! Micro-benchmark harness substrate (no criterion in the vendored set).
 //!
 //! Warmup + timed iterations with mean/stddev/p50/p95 reporting, a
-//! text table formatter for paper-figure output, and CSV export.
+//! text table formatter for paper-figure output, CSV export, and the
+//! machine-readable `BENCH_*.json` perf trajectory (DESIGN.md §11):
+//! every bench run **appends** one entry to the per-bench JSON file, so
+//! the repo accumulates a perf history instead of overwriting it.
+//!
+//! ```text
+//! { "schema": "sagebwd-bench-v1", "bench": "attention",
+//!   "runs": [ { "threads_default": T, "rows": [
+//!       { "op", "shape", "variant", "threads", "ns_per_iter",
+//!         "tokens_per_s" } ... ] } ... ] }
+//! ```
+//!
+//! `variant` distinguishes the engine reading: `naive` (retained scalar
+//! reference), `blocked` (cache-blocked serial), `parallel` (blocked +
+//! scoped-thread row partition) — or a kernel/engine name for composite
+//! ops.  `tokens_per_s` is `null` where no token count is meaningful
+//! (raw GEMMs).  [`check_bench_json`] validates this schema (the CI
+//! bench smoke).
 
+use std::path::Path;
 use std::time::Instant;
 
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
 use crate::util::stats;
 
 /// One benchmark measurement series.
@@ -75,6 +96,121 @@ pub fn run(cfg: BenchConfig, name: &str, mut f: impl FnMut()) -> Measurement {
         name: name.to_string(),
         samples_secs: samples,
     }
+}
+
+/// The `BENCH_*.json` schema tag.
+pub const BENCH_SCHEMA: &str = "sagebwd-bench-v1";
+
+/// One machine-readable benchmark row.
+#[derive(Debug, Clone)]
+pub struct BenchRow {
+    /// What was measured, e.g. `matmul_nt`, `attention_sage_fwdbwd`,
+    /// `grad_step`.
+    pub op: String,
+    /// Problem size, e.g. `m1024_k64_n1024` or `n512_d64`.
+    pub shape: String,
+    /// `naive` | `blocked` | `parallel`, or a kernel/engine name.
+    pub variant: String,
+    /// Worker threads this row ran with.
+    pub threads: usize,
+    pub ns_per_iter: f64,
+    /// Tokens (sequence rows) processed per second; `None` where no token
+    /// count is meaningful.
+    pub tokens_per_s: Option<f64>,
+}
+
+impl BenchRow {
+    fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("op", Json::from(self.op.as_str())),
+            ("shape", Json::from(self.shape.as_str())),
+            ("variant", Json::from(self.variant.as_str())),
+            ("threads", Json::from(self.threads)),
+            ("ns_per_iter", Json::from(self.ns_per_iter)),
+            (
+                "tokens_per_s",
+                self.tokens_per_s.map(Json::from).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+}
+
+/// Append one run (a row set) to `path`, creating the file with the
+/// `BENCH_SCHEMA` envelope when absent — the persisted perf trajectory.
+pub fn append_bench_json(path: &Path, bench: &str, threads_default: usize, rows: &[BenchRow]) -> Result<()> {
+    let mut doc = match std::fs::read_to_string(path) {
+        Ok(text) if !text.trim().is_empty() => json::parse(&text)
+            .with_context(|| format!("parsing existing {}", path.display()))?,
+        _ => Json::from_pairs(vec![
+            ("schema", Json::from(BENCH_SCHEMA)),
+            ("bench", Json::from(bench)),
+            ("runs", Json::Arr(Vec::new())),
+        ]),
+    };
+    if doc.get("schema")?.as_str()? != BENCH_SCHEMA {
+        bail!(
+            "{} has schema {:?}, expected {BENCH_SCHEMA:?}",
+            path.display(),
+            doc.get("schema")?.as_str()?
+        );
+    }
+    if doc.get("bench")?.as_str()? != bench {
+        bail!(
+            "{} holds the {:?} trajectory, refusing to append {bench:?} runs",
+            path.display(),
+            doc.get("bench")?.as_str()?
+        );
+    }
+    let run = Json::from_pairs(vec![
+        ("threads_default", Json::from(threads_default)),
+        ("rows", Json::Arr(rows.iter().map(BenchRow::to_json).collect())),
+    ]);
+    let mut runs = doc.get("runs")?.as_arr()?.to_vec();
+    runs.push(run);
+    doc.set("runs", Json::Arr(runs));
+    std::fs::write(path, doc.to_string())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// Validate a `BENCH_*.json` file against the schema; returns the total
+/// row count across runs.  This is what `sagebwd bench-check` and the CI
+/// bench smoke call.
+pub fn check_bench_json(path: &Path) -> Result<usize> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let doc = json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+    if doc.get("schema")?.as_str()? != BENCH_SCHEMA {
+        bail!("schema {:?} != {BENCH_SCHEMA:?}", doc.get("schema")?.as_str()?);
+    }
+    doc.get("bench")?.as_str()?;
+    let runs = doc.get("runs")?.as_arr()?;
+    let mut total = 0;
+    for (ri, run) in runs.iter().enumerate() {
+        run.get("threads_default")?
+            .as_usize()
+            .with_context(|| format!("run {ri}: threads_default"))?;
+        let rows = run.get("rows")?.as_arr()?;
+        for (i, row) in rows.iter().enumerate() {
+            let ctx = || format!("run {ri} row {i}");
+            row.get("op")?.as_str().with_context(ctx)?;
+            row.get("shape")?.as_str().with_context(ctx)?;
+            row.get("variant")?.as_str().with_context(ctx)?;
+            row.get("threads")?.as_usize().with_context(ctx)?;
+            let ns = row.get("ns_per_iter")?.as_f64().with_context(ctx)?;
+            if !(ns > 0.0) {
+                bail!("run {ri} row {i}: ns_per_iter {ns} must be positive");
+            }
+            match row.get("tokens_per_s")? {
+                Json::Null => {}
+                other => {
+                    other.as_f64().with_context(ctx)?;
+                }
+            }
+            total += 1;
+        }
+    }
+    Ok(total)
 }
 
 /// Fixed-width text table (the `cargo bench` human output).
@@ -161,6 +297,48 @@ mod tests {
         let m = run(cfg, "noop", || calls += 1);
         assert_eq!(calls, 7); // 2 warmup + 5 timed
         assert_eq!(m.samples_secs.len(), 5);
+    }
+
+    #[test]
+    fn bench_json_append_and_check_roundtrip() {
+        let path = std::env::temp_dir().join(format!("sagebwd_bench_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let rows = vec![
+            BenchRow {
+                op: "matmul_nn".into(),
+                shape: "m8_k8_n8".into(),
+                variant: "naive".into(),
+                threads: 1,
+                ns_per_iter: 10.0,
+                tokens_per_s: None,
+            },
+            BenchRow {
+                op: "attention_sage_fwd".into(),
+                shape: "n128_d64".into(),
+                variant: "sage".into(),
+                threads: 4,
+                ns_per_iter: 99.5,
+                tokens_per_s: Some(1.3e6),
+            },
+        ];
+        append_bench_json(&path, "attention", 4, &rows).unwrap();
+        assert_eq!(check_bench_json(&path).unwrap(), 2);
+        // A second run appends to the trajectory instead of overwriting.
+        append_bench_json(&path, "attention", 2, &rows[..1]).unwrap();
+        assert_eq!(check_bench_json(&path).unwrap(), 3);
+        // Appending a different bench's runs is refused (no silent
+        // trajectory cross-contamination).
+        assert!(append_bench_json(&path, "train_step", 1, &rows[..1]).is_err());
+        // Missing row fields and wrong schema tags are rejected.
+        std::fs::write(
+            &path,
+            r#"{"schema":"sagebwd-bench-v1","bench":"x","runs":[{"threads_default":1,"rows":[{"op":"a"}]}]}"#,
+        )
+        .unwrap();
+        assert!(check_bench_json(&path).is_err());
+        std::fs::write(&path, r#"{"schema":"other","bench":"x","runs":[]}"#).unwrap();
+        assert!(check_bench_json(&path).is_err());
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

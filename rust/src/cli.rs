@@ -6,7 +6,10 @@
 //! Flags shared across subcommands (resolved in `main.rs`): `--artifacts`,
 //! `--results`, and `--backend native|xla` — the kernel-executor selector
 //! introduced with the native CPU backend (DESIGN.md §4; `native` needs no
-//! artifacts, `xla` is the unchanged AOT path).
+//! artifacts, `xla` is the unchanged AOT path).  The native compute
+//! engine's worker count is an *environment* knob, not a flag —
+//! `SAGEBWD_THREADS` (DESIGN.md §11) — because it must also reach `cargo
+//! test` / `cargo bench` binaries that never parse CLI options.
 
 use std::collections::BTreeMap;
 

@@ -83,6 +83,14 @@ pub trait TrainEngine {
 // ---------------------------------------------------------------------------
 
 /// In-process training: native model + native AdamW + kernel backend.
+///
+/// Hot-loop wiring (DESIGN.md §11): the engine owns both the [`Model`]
+/// (whose workspace pools the per-layer backward slabs and MLP scratch
+/// across steps) and the [`NativeBackend`] (whose workspace pools the
+/// attention tile scratch), and every per-head attention call is
+/// dispatched through `AttentionBackend::execute_many`, which fans heads
+/// out over the `SAGEBWD_THREADS` scoped-thread pool with results
+/// bitwise-identical to the serial loop.
 pub struct NativeEngine {
     model: Model,
     backend: Box<dyn AttentionBackend>,

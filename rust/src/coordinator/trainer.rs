@@ -181,8 +181,11 @@ impl Trainer {
             let stats = self.engine.grad_microbatch(&batch)?;
             acc.add(stats.loss as f32, &stats.grads)?;
             if let Some(ml) = stats.max_attn_logit {
+                // NaN-aware fold (same contract as the model's per-head
+                // fold): a plain max would discard a NaN from an earlier
+                // microbatch and hide the divergence from the ceiling.
                 let cur = step_max_logit.unwrap_or(f64::NEG_INFINITY);
-                step_max_logit = Some(cur.max(ml));
+                step_max_logit = Some(crate::util::stats::nan_max(cur, ml));
             }
             self.tokens_seen += batch.num_tokens();
         }
@@ -212,9 +215,13 @@ impl Trainer {
         }
 
         // §5.3 divergence: the logit ceiling fires first (while curves are
-        // still plottable); non-finite loss/grads is the backstop.
+        // still plottable); non-finite loss/grads is the backstop.  A NaN
+        // statistic counts as a ceiling hit — `NaN > ceiling` is false, so
+        // a plain comparison would let a non-finite activation sail past
+        // the check (the telemetry chain is NaN-propagating end to end:
+        // Tensor::max_abs → kernels::max_abs_logit → the model's fold).
         let ceiling_hit = step_max_logit
-            .map(|ml| ml > self.cfg.max_attn_logit_ceiling)
+            .map(|ml| !ml.is_finite() || ml > self.cfg.max_attn_logit_ceiling)
             .unwrap_or(false);
         if ceiling_hit || !loss.is_finite() || grads.iter().any(|g| !g.is_finite()) {
             self.diverged = true;
@@ -416,6 +423,71 @@ mod tests {
         assert_eq!(t.metrics.get("diverged").unwrap().points, vec![(0, 1.0)]);
         // train_step after divergence is an error, not a silent no-op.
         assert!(t.train_step(&mut b).is_err());
+    }
+
+    #[test]
+    fn nan_logit_statistic_counts_as_ceiling_hit() {
+        // Regression: `NaN > ceiling` is false, so a NaN max_attn_logit
+        // could evade the divergence ceiling whenever the loss happened to
+        // stay finite — the finite loss here proves the ceiling (not the
+        // non-finite backstop) is what fires.
+        struct NanLogitEngine {
+            names: Vec<String>,
+            shapes: Vec<Vec<usize>>,
+        }
+        impl TrainEngine for NanLogitEngine {
+            fn name(&self) -> &'static str {
+                "stub"
+            }
+            fn microbatch_shape(&self) -> (usize, usize) {
+                (2, 32)
+            }
+            fn param_names(&self) -> &[String] {
+                &self.names
+            }
+            fn grad_shapes(&self) -> &[Vec<usize>] {
+                &self.shapes
+            }
+            fn grad_microbatch(
+                &mut self,
+                _batch: &crate::data::Batch,
+            ) -> Result<crate::coordinator::engine::MicroStats> {
+                Ok(crate::coordinator::engine::MicroStats {
+                    loss: 1.0,
+                    grads: vec![Tensor::zeros(&[2])],
+                    max_attn_logit: Some(f64::NAN),
+                })
+            }
+            fn apply(&mut self, _g: &[Tensor], _lr: f64, _s: u64) -> Result<()> {
+                Ok(())
+            }
+            fn eval_loss(&mut self, _b: &crate::data::Batch) -> Result<f64> {
+                Ok(1.0)
+            }
+            fn state(&self) -> Result<EngineState> {
+                Ok(EngineState {
+                    names: self.names.clone(),
+                    params: vec![],
+                    m: vec![],
+                    v: vec![],
+                })
+            }
+            fn load_state(&mut self, _s: &EngineState) -> Result<()> {
+                Ok(())
+            }
+        }
+        let engine = NanLogitEngine {
+            names: vec!["w".into()],
+            shapes: vec![vec![2]],
+        };
+        let mut t = Trainer::with_engine(Box::new(engine), cfg("sage_qknorm", 3, 64)).unwrap();
+        let mut b = t.make_byte_batcher(1);
+        let report = t.run(&mut b, &Log::new(false)).unwrap();
+        assert_eq!(report.status, RunStatus::Diverged { at_step: 0 });
+        assert!(
+            report.final_loss.unwrap().is_finite(),
+            "the NaN ceiling, not the loss backstop, must fire"
+        );
     }
 
     #[test]

@@ -16,6 +16,7 @@ use anyhow::Result;
 use crate::bench::{run as bench_run, BenchConfig, Table};
 use crate::experiments::common::{emit, gaussian_qkvdo};
 use crate::runtime::{AttentionBackend, Value};
+use crate::tensor::linalg;
 
 pub const SEQ_LENS: &[usize] = &[128, 256, 512];
 pub const HEAD_DIMS: &[usize] = &[64, 128];
@@ -53,10 +54,24 @@ pub struct Row {
     pub mode: String,
     pub measured_ms: f64,
     pub modeled_rel: f64,
+    /// Worker threads the measurement ran with.  Pinned to 1 for the whole
+    /// comparison: the figure contrasts *kernel structure* (tiled INT8 vs
+    /// tiled FP vs dense), and letting the dense baselines auto-parallelize
+    /// their big matmuls while the tile kernels run serial would skew the
+    /// very ratios being reproduced.  Thread scaling is measured by the
+    /// engine rows of `bench_attention` instead.
+    pub threads: usize,
 }
 
 /// Measure every (impl, mode, d, n) artifact and emit both readings.
+/// Pins `SAGEBWD_THREADS=1` for the duration (restored afterward, even on
+/// panic) — see [`Row::threads`].
 pub fn run(be: &mut dyn AttentionBackend, results_dir: &str, quick: bool) -> Result<Vec<Row>> {
+    let _pin = linalg::pin_threads(1);
+    run_serial(be, results_dir, quick)
+}
+
+fn run_serial(be: &mut dyn AttentionBackend, results_dir: &str, quick: bool) -> Result<Vec<Row>> {
     let cfg = if quick {
         BenchConfig { warmup_iters: 1, iters: 5, max_secs: 5.0 }
     } else {
@@ -65,8 +80,10 @@ pub fn run(be: &mut dyn AttentionBackend, results_dir: &str, quick: bool) -> Res
     println!("Figures 2-3: kernel speed, SageBwd vs baselines");
     println!("(measured = CPU PJRT wallclock; modeled = INT8 tensor-core cost model — see module docs)\n");
     let mut rows = Vec::new();
+    let threads = linalg::thread_count(); // pinned to 1 by `run`
+    debug_assert_eq!(threads, 1);
     let mut table = Table::new(&[
-        "headdim", "seqlen", "impl", "mode", "measured_ms", "modeled_speedup_vs_fa2",
+        "headdim", "seqlen", "impl", "mode", "threads", "measured_ms", "modeled_speedup_vs_fa2",
     ]);
     for &d in HEAD_DIMS {
         for &n in SEQ_LENS {
@@ -94,6 +111,7 @@ pub fn run(be: &mut dyn AttentionBackend, results_dir: &str, quick: bool) -> Res
                         n.to_string(),
                         impl_name.into(),
                         mode.into(),
+                        threads.to_string(),
                         format!("{ms:.3}"),
                         format!("{modeled_rel:.2}x"),
                     ]);
@@ -104,6 +122,7 @@ pub fn run(be: &mut dyn AttentionBackend, results_dir: &str, quick: bool) -> Res
                         mode: mode.into(),
                         measured_ms: ms,
                         modeled_rel,
+                        threads,
                     });
                 }
             }

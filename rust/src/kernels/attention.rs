@@ -18,12 +18,23 @@
 //! * K-smoothing (§3): channel-mean subtraction folded into the softmax —
 //!   row-invariant in the forward, gradient-free in the backward because
 //!   every dS row sums to zero.
+//!
+//! Execution substrate (DESIGN.md §11): every matmul runs on the blocked
+//! compute engine in [`crate::tensor::linalg`]; quantized tiles live in
+//! one flat `i8` buffer per operand ([`QuantTiles`] — no jagged
+//! `Vec<Vec<i8>>`); all per-tile scratch comes from a reusable
+//! [`Workspace`], so the tile loops run allocation-free after warmup.
+//! The `*_ws` entry points let long-lived callers (the native backend)
+//! reuse one arena across calls; results are bitwise-independent of
+//! workspace state.
+
+use std::borrow::Cow;
 
 use anyhow::{bail, Result};
 
 use crate::kernels::quant;
 use crate::kernels::smoothing;
-use crate::tensor::Tensor;
+use crate::tensor::{linalg, Tensor, Workspace};
 
 /// Kernel configuration (mirrors `python/compile/configs.TraceConfig`).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -97,6 +108,11 @@ fn rowsum_mul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
 /// Divergence-telemetry statistic: `max |q_i·k_j| / √d` over unmasked
 /// `(i, j)` pairs, computed in full precision regardless of which kernel
 /// runs the attention itself (DESIGN.md §10 divergence contract).
+///
+/// NaN-propagating: a single non-finite logit makes the result NaN (∞
+/// simply dominates the max) so it cannot evade the trainer's
+/// `max_attn_logit` ceiling — a plain `f32::max` fold would silently
+/// discard NaN and report a healthy-looking maximum.
 pub fn max_abs_logit(q: &Tensor, k: &Tensor, causal: bool) -> Result<f32> {
     let (n, d) = check_inputs(q, k, k)?;
     let inv_sqrt_d = 1.0 / (d as f32).sqrt();
@@ -110,7 +126,13 @@ pub fn max_abs_logit(q: &Tensor, k: &Tensor, causal: bool) -> Result<f32> {
             for (&a, &b) in qi.iter().zip(kj) {
                 acc += a * b;
             }
-            max = max.max((acc * inv_sqrt_d).abs());
+            let a = (acc * inv_sqrt_d).abs();
+            if a.is_nan() {
+                return Ok(f32::NAN);
+            }
+            if a > max {
+                max = a;
+            }
         }
     }
     Ok(max)
@@ -179,6 +201,18 @@ pub fn fpa_bwd(q: &Tensor, k: &Tensor, v: &Tensor, do_: &Tensor, causal: bool) -
 /// FlashAttention-2-style tiled forward in full precision — the `fa2`
 /// baseline.  Bit-equal math to [`fpa_fwd`] up to summation order.
 pub fn fa2_fwd(q: &Tensor, k: &Tensor, v: &Tensor, cfg: &AttnConfig) -> Result<(Tensor, Vec<f32>)> {
+    fa2_fwd_ws(q, k, v, cfg, &mut Workspace::new())
+}
+
+/// [`fa2_fwd`] with a caller-owned scratch arena (allocation-free tile
+/// loop once the pools are warm).
+pub fn fa2_fwd_ws(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    cfg: &AttnConfig,
+    ws: &mut Workspace,
+) -> Result<(Tensor, Vec<f32>)> {
     let (n, d) = check_inputs(q, k, v)?;
     let (bq, bkv) = (cfg.block_q, cfg.block_kv);
     check_blocks(n, bq, bkv)?;
@@ -187,37 +221,59 @@ pub fn fa2_fwd(q: &Tensor, k: &Tensor, v: &Tensor, cfg: &AttnConfig) -> Result<(
 
     let mut o = vec![0f32; n * d];
     let mut lse = vec![0f32; n];
+    let mut acc = ws.take_f32(bq * d);
+    let mut m_i = ws.take_f32(bq);
+    let mut l_i = ws.take_f32(bq);
+    let mut s_ij = ws.take_f32(bq * bkv);
+    let mut p_ij = ws.take_f32(bq * bkv);
+    let mut corr = ws.take_f32(bq);
+    let mut pv = ws.take_f32(bq * d);
+    // Pre-pack every K tile transposed once — not per (i, j) pair.
+    let mut k_t = ws.take_f32(n * d);
+    for j in 0..tn {
+        linalg::pack_transpose_f32(
+            &k.data[j * bkv * d..(j + 1) * bkv * d],
+            bkv,
+            d,
+            &mut k_t[j * bkv * d..(j + 1) * bkv * d],
+        );
+    }
     for i in 0..tm {
-        let qi = q.rows(i * bq, (i + 1) * bq)?;
-        let mut acc = vec![0f32; bq * d];
-        let mut m_i = vec![f32::NEG_INFINITY; bq];
-        let mut l_i = vec![0f32; bq];
+        let qi = &q.data[i * bq * d..(i + 1) * bq * d];
+        acc.fill(0.0);
+        m_i.fill(f32::NEG_INFINITY);
+        l_i.fill(0.0);
         for j in 0..tn {
             if cfg.causal && j * bkv > (i + 1) * bq - 1 {
                 continue;
             }
-            let kj = k.rows(j * bkv, (j + 1) * bkv)?;
-            let vj = v.rows(j * bkv, (j + 1) * bkv)?;
-            let mut s_ij = qi.matmul_nt(&kj)?;
-            s_ij.scale(inv_sqrt_d);
-            apply_causal_tile(&mut s_ij.data, cfg.causal, i * bq, j * bkv, bq, bkv);
-            online_softmax_tile(&mut acc, &mut m_i, &mut l_i, &s_ij.data, &vj.data, bq, bkv, d, |p_ij, vj| {
-                // Full-precision P̃·V.
-                let mut pv = vec![0f32; bq * d];
-                for r in 0..bq {
-                    for (t, &pval) in p_ij[r * bkv..(r + 1) * bkv].iter().enumerate() {
-                        let vrow = &vj[t * d..(t + 1) * d];
-                        let out = &mut pv[r * d..(r + 1) * d];
-                        for (ov, &vv) in out.iter_mut().zip(vrow) {
-                            *ov += pval * vv;
-                        }
-                    }
-                }
-                pv
-            });
+            let ktj = &k_t[j * bkv * d..(j + 1) * bkv * d];
+            let vj = &v.data[j * bkv * d..(j + 1) * bkv * d];
+            linalg::gemm_nn(qi, ktj, bq, d, bkv, &mut s_ij);
+            for sv in s_ij.iter_mut() {
+                *sv *= inv_sqrt_d;
+            }
+            apply_causal_tile(&mut s_ij, cfg.causal, i * bq, j * bkv, bq, bkv);
+            online_softmax_tile(
+                &mut acc, &mut m_i, &mut l_i, &s_ij, bq, bkv, d,
+                &mut p_ij, &mut corr, &mut pv,
+                |p, pv_out| {
+                    // Full-precision P̃·V (same per-element accumulation
+                    // order as the pre-engine scalar loop).
+                    linalg::gemm_nn(p, vj, bq, bkv, d, pv_out);
+                },
+            );
         }
         finish_block(&mut o, &mut lse, i * bq, &acc, &m_i, &l_i, d);
     }
+    ws.give_f32(k_t);
+    ws.give_f32(pv);
+    ws.give_f32(corr);
+    ws.give_f32(p_ij);
+    ws.give_f32(s_ij);
+    ws.give_f32(l_i);
+    ws.give_f32(m_i);
+    ws.give_f32(acc);
     Ok((Tensor::from_vec(&[n, d], o)?, lse))
 }
 
@@ -257,22 +313,24 @@ fn apply_causal_tile(s: &mut [f32], causal: bool, row0: usize, col0: usize, bq: 
 }
 
 /// One online-softmax update over a `(bq, bkv)` logit tile.  `pv_fn` maps
-/// the un-normalized tile P̃ (and the V tile) to the `(bq, d)` partial
-/// output — full precision for FA2, INT8 for SageBwd.
+/// the un-normalized tile P̃ to the `(bq, d)` partial output written into
+/// `pv` — full precision for FA2, INT8 for SageBwd.  `p_ij`, `corr` and
+/// `pv` are caller scratch (overwritten here).
 #[allow(clippy::too_many_arguments)]
 fn online_softmax_tile(
     acc: &mut [f32],
     m_i: &mut [f32],
     l_i: &mut [f32],
     s_ij: &[f32],
-    vj: &[f32],
     bq: usize,
     bkv: usize,
     d: usize,
-    pv_fn: impl FnOnce(&[f32], &[f32]) -> Vec<f32>,
+    p_ij: &mut [f32],
+    corr: &mut [f32],
+    pv: &mut [f32],
+    pv_fn: impl FnOnce(&[f32], &mut [f32]),
 ) {
-    let mut p_ij = vec![0f32; bq * bkv];
-    let mut corr = vec![0f32; bq];
+    p_ij.fill(0.0);
     for r in 0..bq {
         let row = &s_ij[r * bkv..(r + 1) * bkv];
         let m_new = row.iter().fold(m_i[r], |a, &b| a.max(b));
@@ -292,7 +350,7 @@ fn online_softmax_tile(
         l_i[r] = l_i[r] * corr[r] + sum;
         m_i[r] = m_new;
     }
-    let pv = pv_fn(p_ij.as_slice(), vj);
+    pv_fn(&*p_ij, &mut *pv);
     for r in 0..bq {
         let arow = &mut acc[r * d..(r + 1) * d];
         let prow = &pv[r * d..(r + 1) * d];
@@ -321,100 +379,214 @@ fn finish_block(o: &mut [f32], lse: &mut [f32], row0: usize, acc: &[f32], m_i: &
 // SageBwd: Algorithms 1 & 2 (block-faithful, INT8)
 // ---------------------------------------------------------------------------
 
+/// Per-row-block INT8 tiles of an `(n, d)` matrix: one **flat** `i8`
+/// buffer (tile `b` covers rows `[b·block, (b+1)·block)`, so the flat
+/// layout is simply the quantized matrix row-major and tile offsets are
+/// `b · block · d`) plus one ψ scale per tile.  Replaces the jagged
+/// `Vec<Vec<i8>>` layout so the blocked integer GEMMs consume tiles as
+/// contiguous slices with no per-tile allocation or pointer chasing.
+pub struct QuantTiles {
+    data: Vec<i8>,
+    scales: Vec<f32>,
+    rows_per_tile: usize,
+    width: usize,
+}
+
+impl QuantTiles {
+    /// Per-block ψ of all `n / block` row tiles (requires `block | n`).
+    fn quantize(x: &Tensor, block: usize) -> Result<QuantTiles> {
+        let (n, d) = x.dims2()?;
+        if block == 0 || n % block != 0 {
+            bail!("QuantTiles: N={n} not divisible by block={block}");
+        }
+        let tiles = n / block;
+        let mut data = vec![0i8; n * d];
+        let mut scales = Vec::with_capacity(tiles);
+        for b in 0..tiles {
+            let lo = b * block * d;
+            let hi = (b + 1) * block * d;
+            scales.push(quant::quantize_per_block_into(&x.data[lo..hi], &mut data[lo..hi]));
+        }
+        Ok(QuantTiles { data, scales, rows_per_tile: block, width: d })
+    }
+
+    #[inline]
+    fn tile(&self, b: usize) -> &[i8] {
+        let len = self.rows_per_tile * self.width;
+        &self.data[b * len..(b + 1) * len]
+    }
+
+    #[inline]
+    fn scale(&self, b: usize) -> f32 {
+        self.scales[b]
+    }
+
+    fn tiles(&self) -> usize {
+        self.scales.len()
+    }
+
+    /// All tiles transposed into one flat buffer: tile `b` becomes a
+    /// `(width, rows_per_tile)` row-major panel at offset
+    /// `b · rows_per_tile · width` — the packed operand for the
+    /// `ψ(Q)·ψ(K)ᵀ` GEMMs, built once instead of per (i, j) pair.
+    fn transposed(&self) -> Vec<i8> {
+        let (r, w) = (self.rows_per_tile, self.width);
+        let mut out = vec![0i8; self.data.len()];
+        for b in 0..self.tiles() {
+            linalg::pack_transpose_i8(self.tile(b), r, w, &mut out[b * r * w..(b + 1) * r * w]);
+        }
+        out
+    }
+}
+
 /// Quantized residuals the backward pass reuses (Alg 2 line 1).
 pub struct SageResiduals {
-    q_q: Vec<Vec<i8>>,
-    q_s: Vec<f32>,
-    k_q: Vec<Vec<i8>>,
-    k_s: Vec<f32>,
-    v_q: Vec<Vec<i8>>,
-    v_s: Vec<f32>,
+    q_q: QuantTiles,
+    k_q: QuantTiles,
+    /// K tiles pre-transposed (`(d, bkv)` panels) for the S̃ GEMMs.
+    k_t: Vec<i8>,
+    v_q: QuantTiles,
     mu_q: Option<Vec<f32>>,
     /// Rank-1 logit bias row (μ_Q·K_smᵀ, length N) — empty without
     /// Q-smoothing (the add is skipped entirely).
     bias_row: Vec<f32>,
 }
 
-fn quantize_blocks(x: &Tensor, block: usize) -> Result<(Vec<Vec<i8>>, Vec<f32>)> {
-    let (n, _d) = x.dims2()?;
-    let mut qs = Vec::with_capacity(n / block);
-    let mut ss = Vec::with_capacity(n / block);
-    for b in 0..n / block {
-        let tile = x.rows(b * block, (b + 1) * block)?;
-        let (q, s) = quant::quantize_per_block(&tile.data);
-        qs.push(q);
-        ss.push(s);
-    }
-    Ok((qs, ss))
-}
-
 /// Algorithm 1: tiled INT8 forward.  Returns `(O, lse, residuals)`.
 pub fn sage_fwd(q: &Tensor, k: &Tensor, v: &Tensor, cfg: &AttnConfig) -> Result<(Tensor, Vec<f32>, SageResiduals)> {
+    sage_fwd_ws(q, k, v, cfg, &mut Workspace::new())
+}
+
+/// [`sage_fwd`] with a caller-owned scratch arena.
+pub fn sage_fwd_ws(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    cfg: &AttnConfig,
+    ws: &mut Workspace,
+) -> Result<(Tensor, Vec<f32>, SageResiduals)> {
     let (n, d) = check_inputs(q, k, v)?;
     let (bq, bkv) = (cfg.block_q, cfg.block_kv);
     check_blocks(n, bq, bkv)?;
     let inv_sqrt_d = 1.0 / (d as f32).sqrt();
 
-    let k_in = if cfg.k_smoothing { smoothing::k_smooth(k)?.0 } else { k.clone() };
-    let (q_in, mu_q, bias_row) = if cfg.q_smoothing {
+    // No-smoothing paths borrow the caller's tensors — the wholesale
+    // q.clone()/k.clone() copies only happen when smoothing really
+    // produces new data.
+    let k_in: Cow<'_, Tensor> = if cfg.k_smoothing {
+        Cow::Owned(smoothing::k_smooth(k)?.0)
+    } else {
+        Cow::Borrowed(k)
+    };
+    let (q_in, mu_q, bias_row): (Cow<'_, Tensor>, Option<Vec<f32>>, Vec<f32>) = if cfg.q_smoothing {
         let (q_sm, mu) = smoothing::q_smooth(q)?;
         let bias = smoothing::qk_logits_bias(&mu, &k_in)?;
-        (q_sm, Some(mu), bias)
+        (Cow::Owned(q_sm), Some(mu), bias)
     } else {
-        (q.clone(), None, Vec::new())
+        (Cow::Borrowed(q), None, Vec::new())
     };
 
-    // Per-block quantization of Q, K, V (Alg 1 line 3).
-    let (q_q, q_s) = quantize_blocks(&q_in, bq)?;
-    let (k_q, k_s) = quantize_blocks(&k_in, bkv)?;
-    let (v_q, v_s) = quantize_blocks(v, bkv)?;
+    // Per-block quantization of Q, K, V into flat tile buffers (Alg 1
+    // line 3); K additionally packed transposed for the S̃ GEMMs.
+    let q_q = QuantTiles::quantize(&q_in, bq)?;
+    let k_q = QuantTiles::quantize(&k_in, bkv)?;
+    let k_t = k_q.transposed();
+    let v_q = QuantTiles::quantize(v, bkv)?;
     let (tm, tn) = (n / bq, n / bkv);
 
     let mut o = vec![0f32; n * d];
     let mut lse = vec![0f32; n];
+    let mut acc = ws.take_f32(bq * d);
+    let mut m_i = ws.take_f32(bq);
+    let mut l_i = ws.take_f32(bq);
+    let mut s_i32 = ws.take_i32(bq * bkv);
+    let mut s_ij = ws.take_f32(bq * bkv);
+    let mut p_ij = ws.take_f32(bq * bkv);
+    let mut corr = ws.take_f32(bq);
+    let mut pv = ws.take_f32(bq * d);
+    let mut p_q8 = ws.take_i8(bq * bkv);
+    let mut p_scales = ws.take_f32(0);
+    let mut pv_i32 = ws.take_i32(bq * d);
     for i in 0..tm {
-        let mut acc = vec![0f32; bq * d];
-        let mut m_i = vec![f32::NEG_INFINITY; bq];
-        let mut l_i = vec![0f32; bq];
+        acc.fill(0.0);
+        m_i.fill(f32::NEG_INFINITY);
+        l_i.fill(0.0);
         for j in 0..tn {
             if cfg.causal && j * bkv > (i + 1) * bq - 1 {
                 continue;
             }
             // S̃_ij = ψ(Q)_i · ψ(K)_jᵀ · δ_Q δ_K / √d  (+ Q-smoothing bias).
-            let acc_i32 = quant::int8_gemm_nt(&q_q[i], &k_q[j], bq, d, bkv);
-            let mut s_ij = quant::scale_product(&acc_i32, q_s[i] * k_s[j], inv_sqrt_d);
+            let ktj = &k_t[j * bkv * d..(j + 1) * bkv * d];
+            linalg::int8_gemm_nn(q_q.tile(i), ktj, bq, d, bkv, &mut s_i32);
+            let sc = q_q.scale(i) * k_q.scale(j) * inv_sqrt_d;
+            for (sv, &x) in s_ij.iter_mut().zip(&s_i32) {
+                *sv = x as f32 * sc;
+            }
             add_bias_row(&mut s_ij, &bias_row, j * bkv, bkv, inv_sqrt_d);
             apply_causal_tile(&mut s_ij, cfg.causal, i * bq, j * bkv, bq, bkv);
-            let (v_qj, v_sj) = (&v_q[j], v_s[j]);
+            let (v_qj, v_sj) = (v_q.tile(j), v_q.scale(j));
             online_softmax_tile(
-                &mut acc, &mut m_i, &mut l_i, &s_ij, &[], bq, bkv, d,
-                |p_ij, _| {
+                &mut acc, &mut m_i, &mut l_i, &s_ij, bq, bkv, d,
+                &mut p_ij, &mut corr, &mut pv,
+                |p, pv_out| {
                     // Per-token ψ(P̃) (Alg 1 line 9), then exact INT8 P̃·V.
-                    let (p_q8, p_scales) = quant::quantize_per_token(p_ij, bq, bkv);
-                    let pv_i32 = quant::int8_gemm(&p_q8, v_qj, bq, bkv, d);
-                    quant::scale_product_rows(&pv_i32, &p_scales, v_sj, d)
+                    quant::quantize_per_token_into(p, bkv, &mut p_q8, &mut p_scales);
+                    linalg::int8_gemm_nn(&p_q8, v_qj, bq, bkv, d, &mut pv_i32);
+                    for ((orow, irow), &rs) in pv_out
+                        .chunks_exact_mut(d)
+                        .zip(pv_i32.chunks_exact(d))
+                        .zip(&p_scales)
+                    {
+                        let s = rs * v_sj;
+                        for (ov, &x) in orow.iter_mut().zip(irow) {
+                            *ov = x as f32 * s;
+                        }
+                    }
                 },
             );
         }
         finish_block(&mut o, &mut lse, i * bq, &acc, &m_i, &l_i, d);
     }
+    ws.give_i32(pv_i32);
+    ws.give_f32(p_scales);
+    ws.give_i8(p_q8);
+    ws.give_f32(pv);
+    ws.give_f32(corr);
+    ws.give_f32(p_ij);
+    ws.give_f32(s_ij);
+    ws.give_i32(s_i32);
+    ws.give_f32(l_i);
+    ws.give_f32(m_i);
+    ws.give_f32(acc);
     Ok((
         Tensor::from_vec(&[n, d], o)?,
         lse,
-        SageResiduals { q_q, q_s, k_q, k_s, v_q, v_s, mu_q, bias_row },
+        SageResiduals { q_q, k_q, k_t, v_q, mu_q, bias_row },
     ))
 }
 
 /// Algorithms 1+2: INT8 forward + backward with every intermediate
 /// materialized for the error analysis.
 pub fn sage_bwd(q: &Tensor, k: &Tensor, v: &Tensor, do_: &Tensor, cfg: &AttnConfig) -> Result<AttnTrace> {
+    sage_bwd_ws(q, k, v, do_, cfg, &mut Workspace::new())
+}
+
+/// [`sage_bwd`] with a caller-owned scratch arena.
+pub fn sage_bwd_ws(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    do_: &Tensor,
+    cfg: &AttnConfig,
+    ws: &mut Workspace,
+) -> Result<AttnTrace> {
     let (n, d) = check_inputs(q, k, v)?;
     if do_.shape != q.shape {
         bail!("dO shape {:?} != {:?}", do_.shape, q.shape);
     }
     let (bq, bkv) = (cfg.block_q, cfg.block_kv);
     let inv_sqrt_d = 1.0 / (d as f32).sqrt();
-    let (o, lse, res) = sage_fwd(q, k, v, cfg)?;
+    let (o, lse, res) = sage_fwd_ws(q, k, v, cfg, ws)?;
     let delta = rowsum_mul(do_, &o)?;
     let (tm, tn) = (n / bq, n / bkv);
 
@@ -428,27 +600,54 @@ pub fn sage_bwd(q: &Tensor, k: &Tensor, v: &Tensor, do_: &Tensor, cfg: &AttnConf
 
     // ψ(dO) depends only on the query tile — quantize each once, not per
     // (j, i) pair (Alg 2 line 6; bit-identical, tn× less work).
-    let mut do_tiles = Vec::with_capacity(tm);
-    for i in 0..tm {
-        let doi = do_.rows(i * bq, (i + 1) * bq)?;
-        let (do_q8, do_s) = quant::quantize_per_block(&doi.data);
-        do_tiles.push((doi, do_q8, do_s));
-    }
+    let do_q = QuantTiles::quantize(do_, bq)?;
+    // Same hoist for the §7 FP-dS variant's dequantized Q tiles (K's is
+    // per-j inside the outer loop).
+    let q_deq: Vec<Vec<f32>> = if cfg.quant_ds {
+        Vec::new()
+    } else {
+        (0..tm)
+            .map(|i| quant::dequantize(res.q_q.tile(i), res.q_q.scale(i)))
+            .collect()
+    };
+
+    let mut s_i32 = ws.take_i32(bq * bkv);
+    let mut s_ij = ws.take_f32(bq * bkv);
+    let mut p_ij = ws.take_f32(bq * bkv);
+    let mut dp_ij = ws.take_f32(bq * bkv);
+    let mut ds_ij = ws.take_f32(bq * bkv);
+    let mut ds_q8 = ws.take_i8(bq * bkv);
+    let mut acc_i32 = ws.take_i32(bq.max(bkv) * d);
+    let mut v_t = ws.take_f32(bkv * d);
+    let mut packf = ws.take_f32(0);
+    let mut packi = ws.take_i8(0);
 
     for j in 0..tn {
-        let vj = v.rows(j * bkv, (j + 1) * bkv)?;
+        let vj = &v.data[j * bkv * d..(j + 1) * bkv * d];
+        // V tile packed transposed once per j — the dP GEMM reuses it for
+        // every query tile i.
+        linalg::pack_transpose_f32(vj, bkv, d, &mut v_t);
+        let ktj = &res.k_t[j * bkv * d..(j + 1) * bkv * d];
+        let k_deq = if cfg.quant_ds {
+            Vec::new()
+        } else {
+            quant::dequantize(res.k_q.tile(j), res.k_q.scale(j))
+        };
         for i in 0..tm {
             if cfg.causal && j * bkv > (i + 1) * bq - 1 {
                 continue;
             }
-            let (doi, do_q8, do_s) = &do_tiles[i];
+            let doi = &do_.data[i * bq * d..(i + 1) * bq * d];
             // Recompute S̃_ij from the stored quantized tiles (Alg 2 line 3).
-            let acc_i32 = quant::int8_gemm_nt(&res.q_q[i], &res.k_q[j], bq, d, bkv);
-            let mut s_ij = quant::scale_product(&acc_i32, res.q_s[i] * res.k_s[j], inv_sqrt_d);
+            linalg::int8_gemm_nn(res.q_q.tile(i), ktj, bq, d, bkv, &mut s_i32);
+            let sc = res.q_q.scale(i) * res.k_q.scale(j) * inv_sqrt_d;
+            for (sv, &x) in s_ij.iter_mut().zip(&s_i32) {
+                *sv = x as f32 * sc;
+            }
             add_bias_row(&mut s_ij, &res.bias_row, j * bkv, bkv, inv_sqrt_d);
             apply_causal_tile(&mut s_ij, cfg.causal, i * bq, j * bkv, bq, bkv);
             // P_ij = exp(S̃_ij − lse_i) — normalized this time.
-            let mut p_ij = vec![0f32; bq * bkv];
+            p_ij.fill(0.0);
             for r in 0..bq {
                 let l = lse[i * bq + r];
                 if l == f32::NEG_INFINITY {
@@ -463,47 +662,58 @@ pub fn sage_bwd(q: &Tensor, k: &Tensor, v: &Tensor, do_: &Tensor, cfg: &AttnConf
             }
 
             // Alg 2 line 6: per-block ψ(P) (ψ(dO) precomputed) → INT8 dV.
-            let (p_q8, p_s) = quant::quantize_per_block(&p_ij);
-            let dv_i32 = quant::int8_gemm_tn(&p_q8, do_q8, bq, bkv, d);
-            let dv_ij = quant::scale_product(&dv_i32, p_s, *do_s);
-            for (dst, &x) in dv.data[j * bkv * d..(j + 1) * bkv * d].iter_mut().zip(&dv_ij) {
-                *dst += x;
+            let p_s = quant::quantize_per_block_into(&p_ij, &mut ds_q8);
+            let dv_i32 = &mut acc_i32[..bkv * d];
+            linalg::int8_gemm_tn(&ds_q8, do_q.tile(i), bkv, bq, d, dv_i32, &mut packi);
+            let dv_sc = p_s * do_q.scale(i);
+            for (dst, &x) in dv.data[j * bkv * d..(j + 1) * bkv * d].iter_mut().zip(dv_i32.iter()) {
+                *dst += x as f32 * dv_sc;
             }
 
             // Alg 2 line 8: dP = dO·Vᵀ in full precision.
-            let dp_ij = doi.matmul_nt(&vj)?;
-            let mut ds_ij = vec![0f32; bq * bkv];
+            linalg::gemm_nn(doi, &v_t, bq, d, bkv, &mut dp_ij);
             for r in 0..bq {
                 let di = delta.data[i * bq + r];
                 for c in 0..bkv {
-                    ds_ij[r * bkv + c] = p_ij[r * bkv + c] * (dp_ij.data[r * bkv + c] - di);
+                    ds_ij[r * bkv + c] = p_ij[r * bkv + c] * (dp_ij[r * bkv + c] - di);
                 }
             }
 
-            // Alg 2 line 9: ψ(dS) → INT8 dQ/dK (or the §7 FP-dS path).
-            let (dq_ij, dk_ij) = if cfg.quant_ds {
-                let (ds_q8, ds_s) = quant::quantize_per_block(&ds_ij);
-                let dq_i32 = quant::int8_gemm(&ds_q8, &res.k_q[j], bq, bkv, d);
-                let dk_i32 = quant::int8_gemm_tn(&ds_q8, &res.q_q[i], bq, bkv, d);
-                (
-                    quant::scale_product(&dq_i32, ds_s * res.k_s[j], inv_sqrt_d),
-                    quant::scale_product(&dk_i32, ds_s * res.q_s[i], inv_sqrt_d),
-                )
+            // Alg 2 line 9: ψ(dS) → INT8 dQ/dK (or the §7 FP-dS path) —
+            // accumulated straight into the output slabs, no per-tile
+            // result vectors.
+            if cfg.quant_ds {
+                let ds_s = quant::quantize_per_block_into(&ds_ij, &mut ds_q8);
+                let dq_i32 = &mut acc_i32[..bq * d];
+                linalg::int8_gemm_nn(&ds_q8, res.k_q.tile(j), bq, bkv, d, dq_i32);
+                let dq_sc = ds_s * res.k_q.scale(j) * inv_sqrt_d;
+                for (dst, &x) in dq.data[i * bq * d..(i + 1) * bq * d].iter_mut().zip(dq_i32.iter()) {
+                    *dst += x as f32 * dq_sc;
+                }
+                let dk_i32 = &mut acc_i32[..bkv * d];
+                linalg::int8_gemm_tn(&ds_q8, res.q_q.tile(i), bkv, bq, d, dk_i32, &mut packi);
+                let dk_sc = ds_s * res.q_q.scale(i) * inv_sqrt_d;
+                for (dst, &x) in dk.data[j * bkv * d..(j + 1) * bkv * d].iter_mut().zip(dk_i32.iter()) {
+                    *dst += x as f32 * dk_sc;
+                }
             } else {
-                let ds_t = Tensor::from_vec(&[bq, bkv], ds_ij.clone())?;
-                let k_deq = Tensor::from_vec(&[bkv, d], quant::dequantize(&res.k_q[j], res.k_s[j]))?;
-                let q_deq = Tensor::from_vec(&[bq, d], quant::dequantize(&res.q_q[i], res.q_s[i]))?;
-                let mut dq_t = ds_t.matmul(&k_deq)?;
-                dq_t.scale(inv_sqrt_d);
-                let mut dk_t = ds_t.matmul_tn(&q_deq)?;
-                dk_t.scale(inv_sqrt_d);
-                (dq_t.data, dk_t.data)
-            };
-            for (dst, &x) in dq.data[i * bq * d..(i + 1) * bq * d].iter_mut().zip(&dq_ij) {
-                *dst += x;
-            }
-            for (dst, &x) in dk.data[j * bkv * d..(j + 1) * bkv * d].iter_mut().zip(&dk_ij) {
-                *dst += x;
+                // §7 FP-dS: hoisted dequantized K/Q tiles, dS stays f32
+                // (no redundant copy of the tile — linalg reads it in
+                // place).
+                packf.clear();
+                packf.resize(bq * d, 0.0);
+                linalg::gemm_nn(&ds_ij, &k_deq, bq, bkv, d, &mut packf);
+                for (dst, &x) in dq.data[i * bq * d..(i + 1) * bq * d].iter_mut().zip(packf.iter()) {
+                    *dst += x * inv_sqrt_d;
+                }
+                let mut dk_f = ws.take_f32(bkv * d);
+                let mut pack2 = ws.take_f32(0);
+                linalg::matmul_tn_scratch(&ds_ij, &q_deq[i], bkv, bq, d, &mut dk_f, 1, &mut pack2);
+                for (dst, &x) in dk.data[j * bkv * d..(j + 1) * bkv * d].iter_mut().zip(dk_f.iter()) {
+                    *dst += x * inv_sqrt_d;
+                }
+                ws.give_f32(pack2);
+                ws.give_f32(dk_f);
             }
 
             // Materialize the big intermediates for the error analysis.
@@ -512,11 +722,21 @@ pub fn sage_bwd(q: &Tensor, k: &Tensor, v: &Tensor, do_: &Tensor, cfg: &AttnConf
                 let dst = row * n + j * bkv;
                 s_full.data[dst..dst + bkv].copy_from_slice(&s_ij[r * bkv..(r + 1) * bkv]);
                 p_full.data[dst..dst + bkv].copy_from_slice(&p_ij[r * bkv..(r + 1) * bkv]);
-                dp_full.data[dst..dst + bkv].copy_from_slice(&dp_ij.data[r * bkv..(r + 1) * bkv]);
+                dp_full.data[dst..dst + bkv].copy_from_slice(&dp_ij[r * bkv..(r + 1) * bkv]);
                 ds_full.data[dst..dst + bkv].copy_from_slice(&ds_ij[r * bkv..(r + 1) * bkv]);
             }
         }
     }
+    ws.give_i8(packi);
+    ws.give_f32(packf);
+    ws.give_f32(v_t);
+    ws.give_i32(acc_i32);
+    ws.give_i8(ds_q8);
+    ws.give_f32(ds_ij);
+    ws.give_f32(dp_ij);
+    ws.give_f32(p_ij);
+    ws.give_f32(s_ij);
+    ws.give_i32(s_i32);
 
     if cfg.q_smoothing {
         if let Some(mu_q) = &res.mu_q {
@@ -558,13 +778,17 @@ pub fn pseudo_quant_trace(q: &Tensor, k: &Tensor, v: &Tensor, do_: &Tensor, cfg:
     }
     let inv_sqrt_d = 1.0 / (d as f32).sqrt();
 
-    let k_in = if cfg.k_smoothing { smoothing::k_smooth(k)?.0 } else { k.clone() };
-    let (q_in, mu_q, bias) = if cfg.q_smoothing {
+    let k_in: Cow<'_, Tensor> = if cfg.k_smoothing {
+        Cow::Owned(smoothing::k_smooth(k)?.0)
+    } else {
+        Cow::Borrowed(k)
+    };
+    let (q_in, mu_q, bias): (Cow<'_, Tensor>, Option<Vec<f32>>, Vec<f32>) = if cfg.q_smoothing {
         let (q_sm, mu) = smoothing::q_smooth(q)?;
         let b = smoothing::qk_logits_bias(&mu, &k_in)?;
-        (q_sm, Some(mu), b)
+        (Cow::Owned(q_sm), Some(mu), b)
     } else {
-        (q.clone(), None, vec![0f32; n])
+        (Cow::Borrowed(q), None, vec![0f32; n])
     };
 
     let q_fq = Tensor::from_vec(&[n, d], quant::fake_quant_block(&q_in.data))?;
@@ -603,10 +827,10 @@ pub fn pseudo_quant_trace(q: &Tensor, k: &Tensor, v: &Tensor, do_: &Tensor, cfg:
             ds.data[i * n + j] = p.data[i * n + j] * (dp.data[i * n + j] - di);
         }
     }
-    let ds_fq = if cfg.quant_ds {
-        Tensor::from_vec(&[n, n], quant::fake_quant_block(&ds.data))?
+    let ds_fq: Cow<'_, Tensor> = if cfg.quant_ds {
+        Cow::Owned(Tensor::from_vec(&[n, n], quant::fake_quant_block(&ds.data))?)
     } else {
-        ds.clone()
+        Cow::Borrowed(&ds)
     };
     let mut dq = ds_fq.matmul(&k_fq)?;
     dq.scale(inv_sqrt_d);
@@ -704,6 +928,34 @@ mod tests {
     }
 
     #[test]
+    fn workspace_reuse_is_bitwise_stable() {
+        // A warm arena (dirty pooled buffers from a previous call) must
+        // not change any output bit — the allocation-free hot loop
+        // contract of DESIGN.md §11.
+        let [q, k, v, do_] = inputs(64, 16, 2.0, 16);
+        let cfg = AttnConfig { block_q: 16, block_kv: 32, causal: true, ..Default::default() };
+        let cold = sage_bwd(&q, &k, &v, &do_, &cfg).unwrap();
+        let mut ws = Workspace::new();
+        let warm1 = sage_bwd_ws(&q, &k, &v, &do_, &cfg, &mut ws).unwrap();
+        assert!(ws.pooled() > 0, "backward returned no buffers to the pool");
+        let warm2 = sage_bwd_ws(&q, &k, &v, &do_, &cfg, &mut ws).unwrap();
+        for (name, a, b, c) in [
+            ("o", &cold.o, &warm1.o, &warm2.o),
+            ("dq", &cold.dq, &warm1.dq, &warm2.dq),
+            ("dk", &cold.dk, &warm1.dk, &warm2.dk),
+            ("dv", &cold.dv, &warm1.dv, &warm2.dv),
+            ("ds", &cold.ds, &warm1.ds, &warm2.ds),
+        ] {
+            assert_eq!(a.data, b.data, "{name}: cold vs warm");
+            assert_eq!(b.data, c.data, "{name}: warm vs rewarm");
+        }
+        // Same for the FA2 tiled forward.
+        let (o_cold, _) = fa2_fwd(&q, &k, &v, &cfg).unwrap();
+        let (o_warm, _) = fa2_fwd_ws(&q, &k, &v, &cfg, &mut ws).unwrap();
+        assert_eq!(o_cold.data, o_warm.data);
+    }
+
+    #[test]
     fn pseudo_dp_is_exact() {
         // Table 2's structural property: the dP matmul stays full precision.
         let [q, k, v, do_] = inputs(64, 16, 4.0, 7);
@@ -728,6 +980,21 @@ mod tests {
     }
 
     #[test]
+    fn fp_ds_kernel_variant_runs_with_workspace() {
+        // The §7 FP-dS path of the blocked kernel (quant_ds = false) also
+        // tracks the oracle and is workspace-stable.
+        let [q, k, v, do_] = inputs(64, 16, 1.0, 17);
+        let cfg = AttnConfig { block_q: 16, block_kv: 16, quant_ds: false, ..Default::default() };
+        let mut ws = Workspace::new();
+        let a = sage_bwd_ws(&q, &k, &v, &do_, &cfg, &mut ws).unwrap();
+        let b = sage_bwd_ws(&q, &k, &v, &do_, &cfg, &mut ws).unwrap();
+        assert_eq!(a.dq.data, b.dq.data);
+        assert_eq!(a.dk.data, b.dk.data);
+        let fpa = fpa_bwd(&q, &k, &v, &do_, false).unwrap();
+        assert!(a.dq.cossim(&fpa.dq) > 0.99, "fp-dS dq cossim {}", a.dq.cossim(&fpa.dq));
+    }
+
+    #[test]
     fn max_abs_logit_matches_dense_logits() {
         let [q, k, _, _] = inputs(32, 16, 2.0, 9);
         let s = masked_logits(&q, &k, false).unwrap();
@@ -744,6 +1011,20 @@ mod tests {
         }
         assert!((got_c - want_c).abs() < 1e-4);
         assert!(got_c <= got + 1e-6);
+    }
+
+    #[test]
+    fn max_abs_logit_propagates_non_finite() {
+        // The fig1 divergence contract (DESIGN.md §10): a NaN activation
+        // must surface as a NaN statistic (and ∞ as ∞), never as a
+        // healthy-looking finite maximum.
+        let [mut q, k, _, _] = inputs(32, 16, 1.0, 10);
+        q.data[5] = f32::NAN;
+        assert!(max_abs_logit(&q, &k, false).unwrap().is_nan());
+        assert!(max_abs_logit(&q, &k, true).unwrap().is_nan());
+        let [mut q2, k2, _, _] = inputs(32, 16, 1.0, 10);
+        q2.data[0] = f32::INFINITY;
+        assert!(max_abs_logit(&q2, &k2, false).unwrap().is_infinite());
     }
 
     #[test]

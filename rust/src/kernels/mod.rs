@@ -18,6 +18,6 @@ pub mod attention;
 pub mod quant;
 pub mod smoothing;
 
-pub use attention::{fa2_fwd, fpa_bwd, fpa_fwd, max_abs_logit, pseudo_quant_trace, sage_bwd,
-                    sage_fwd};
+pub use attention::{fa2_fwd, fa2_fwd_ws, fpa_bwd, fpa_fwd, max_abs_logit, pseudo_quant_trace,
+                    sage_bwd, sage_bwd_ws, sage_fwd, sage_fwd_ws};
 pub use attention::{AttnConfig, AttnTrace};

@@ -12,6 +12,13 @@
 //! accumulate in i32, which is exact for every shape this repo uses
 //! (|x̂| ≤ 127 ⇒ per-product ≤ 16129; N ≤ 512 rows ⇒ |Σ| < 2³³⁄₂ ≪ i32::MAX
 //! holds for all tile sizes ≤ 512 actually used: 512·16129 ≈ 8.3·10⁶).
+//!
+//! Production kernels run on the blocked compute engine
+//! (`tensor::linalg`, DESIGN.md §11) via the `*_into` quantizers and
+//! flat tile buffers.  The allocating GEMM/scale helpers below
+//! (`int8_gemm*`, `scale_product*`, `quantize_per_token`) are **retained
+//! as reference implementations** — the exactness oracles the engine's
+//! property tests compare against — not hot-path API.
 
 /// Largest quantized magnitude.
 pub const INT8_MAX: f32 = 127.0;
@@ -46,6 +53,34 @@ pub fn quantize_per_block(x: &[f32]) -> (Vec<i8>, f32) {
     let amax = x.iter().fold(0f32, |m, &v| m.max(v.abs()));
     let scale = amax.max(EPS_SCALE) / INT8_MAX;
     (x.iter().map(|&v| quantize_one(v, scale)).collect(), scale)
+}
+
+/// [`quantize_per_block`] writing into caller storage (a tile of the flat
+/// quantized buffer the compute engine uses — no per-tile `Vec`).
+/// Returns the tile's scale δ.
+pub fn quantize_per_block_into(x: &[f32], out: &mut [i8]) -> f32 {
+    assert_eq!(x.len(), out.len());
+    let amax = x.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    let scale = amax.max(EPS_SCALE) / INT8_MAX;
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = quantize_one(v, scale);
+    }
+    scale
+}
+
+/// [`quantize_per_token`] writing into caller storage; `scales` receives
+/// one δ per row (its previous contents are cleared).
+pub fn quantize_per_token_into(x: &[f32], cols: usize, out: &mut [i8], scales: &mut Vec<f32>) {
+    assert_eq!(x.len(), out.len());
+    scales.clear();
+    for (row, orow) in x.chunks_exact(cols).zip(out.chunks_exact_mut(cols)) {
+        let amax = row.iter().fold(0f32, |m, &v| m.max(v.abs()));
+        let scale = amax.max(EPS_SCALE) / INT8_MAX;
+        scales.push(scale);
+        for (o, &v) in orow.iter_mut().zip(row) {
+            *o = quantize_one(v, scale);
+        }
+    }
 }
 
 /// ψ with one scale per row of a `(rows, cols)` tile (Alg 1 line 9 — each
@@ -197,6 +232,22 @@ mod tests {
         assert!(q.iter().all(|&v| v == 0));
         assert!(s > 0.0 && s.is_finite());
         assert!(dequantize(&q, s).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn into_variants_match_allocating_twins() {
+        let x: Vec<f32> = (0..24).map(|i| ((i * 31 % 47) as f32 - 23.0) / 5.0).collect();
+        let (q, s) = quantize_per_block(&x);
+        let mut q2 = vec![0i8; x.len()];
+        let s2 = quantize_per_block_into(&x, &mut q2);
+        assert_eq!(q, q2);
+        assert_eq!(s, s2);
+        let (qt, st) = quantize_per_token(&x, 4, 6);
+        let mut qt2 = vec![0i8; x.len()];
+        let mut st2 = vec![99.0; 2]; // stale contents must be cleared
+        quantize_per_token_into(&x, 6, &mut qt2, &mut st2);
+        assert_eq!(qt, qt2);
+        assert_eq!(st, st2);
     }
 
     #[test]

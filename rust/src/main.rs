@@ -13,6 +13,7 @@
 //! sagebwd dist-train [--workers N --steps S --tps T]     data-parallel training
 //! sagebwd noise-probe [--budget B --tps T]               §4.3 noise-injection probe
 //! sagebwd plot --csv a.csv[,b.csv] | --run DIR[,DIR]     ASCII metric curves
+//! sagebwd bench-check FILE.json                          BENCH_*.json schema check
 //! ```
 //!
 //! Every harness takes `--backend native|xla` (default `native`:
@@ -33,7 +34,7 @@ use sagebwd::runtime::{make_backend, Runtime};
 use sagebwd::telemetry::{run_dir, Log};
 use sagebwd::{DEFAULT_ARTIFACTS_DIR, DEFAULT_RESULTS_DIR};
 
-const USAGE: &str = "usage: sagebwd <train|dist-train|table1|table2|ds-rms|fig1|fig4|fig23|fig56|noise-probe|plot|inspect> [options]
+const USAGE: &str = "usage: sagebwd <train|dist-train|table1|table2|ds-rms|fig1|fig4|fig23|fig56|noise-probe|plot|inspect|bench-check> [options]
 common options:
   --backend native|xla   executor for every harness, training included
                          (default native: in-process CPU kernels + native
@@ -42,9 +43,15 @@ common options:
   --artifacts DIR        artifact directory for the xla backend
                          (default artifacts/, built by `make artifacts`)
   --results DIR          output directory (default results/)
+environment:
+  SAGEBWD_THREADS=N      worker threads for the native compute engine
+                         (default: available parallelism; 0 or 1 forces
+                         the serial path; results are bitwise-identical
+                         at any setting)
 training subcommands (train, fig1, fig4, noise-probe) run on either backend;
 only dist-train still requires --backend xla; run `make results` to
-regenerate every table and figure";
+regenerate every table and figure; `bench-check FILE.json` validates a
+BENCH_*.json perf-trajectory file emitted by the cargo bench harnesses";
 
 /// Default fig1/fig4 peak LR on the **native** engine — the regime where
 /// the no-QK-norm arm visibly crosses the max_attn_logit ceiling while
@@ -160,6 +167,18 @@ fn run() -> Result<()> {
             Ok(())
         }
         "plot" => cmd_plot(&args),
+        "bench-check" => {
+            let path = args
+                .opt("file")
+                .map(|s| s.to_string())
+                .or_else(|| args.positional.first().cloned())
+                .ok_or_else(|| {
+                    anyhow::anyhow!("usage: sagebwd bench-check FILE.json (or --file FILE)")
+                })?;
+            let rows = sagebwd::bench::check_bench_json(std::path::Path::new(&path))?;
+            println!("{path}: schema OK ({rows} rows)");
+            Ok(())
+        }
         "inspect" => {
             let name = args.require("artifact")?;
             let mut runtime = Runtime::new(artifacts.clone())?;

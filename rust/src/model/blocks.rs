@@ -11,7 +11,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::tensor::Tensor;
+use crate::tensor::{linalg, Tensor, Workspace};
 
 // ---------------------------------------------------------------------------
 // RMSNorm (also used as QK-norm at head width, §4.1)
@@ -134,17 +134,29 @@ pub fn mlp_fwd(
 }
 
 /// Backward: returns `(dy, dW_gate, dW_up, dW_down)`.
+///
+/// The dH/dG/dU intermediates come from (and return to) the caller's
+/// [`Workspace`], so the training hot loop runs this allocation-free for
+/// everything that does not escape as a gradient.
 pub fn mlp_bwd(
     dout: &Tensor,
     cache: &MlpCache,
     w_gate: &Tensor,
     w_up: &Tensor,
     w_down: &Tensor,
+    ws: &mut Workspace,
 ) -> Result<(Tensor, Tensor, Tensor, Tensor)> {
     let dw_down = cache.h.matmul_tn(dout)?;
-    let dh = dout.matmul_nt(w_down)?;
-    let mut dg = Tensor::zeros(&cache.g.shape);
-    let mut du = Tensor::zeros(&cache.u.shape);
+    let (rows, d_model) = dout.dims2()?;
+    let (_, d_ff) = cache.g.dims2()?;
+    let (w_dff, w_dmodel) = w_down.dims2()?;
+    if w_dff != d_ff || w_dmodel != d_model {
+        bail!("mlp_bwd: W_down {:?} vs dout {:?} / g {:?}", w_down.shape, dout.shape, cache.g.shape);
+    }
+    let mut dh = ws.take_tensor(&[rows, d_ff]);
+    linalg::matmul_nt_into(&dout.data, &w_down.data, rows, d_model, d_ff, &mut dh.data);
+    let mut dg = ws.take_tensor(&cache.g.shape);
+    let mut du = ws.take_tensor(&cache.u.shape);
     for (((odg, odu), (&dhv, &gv)), &uv) in dg
         .data
         .iter_mut()
@@ -159,6 +171,9 @@ pub fn mlp_bwd(
     let dw_up = cache.y.matmul_tn(&du)?;
     let mut dy = dg.matmul_nt(w_gate)?;
     dy.add_assign(&du.matmul_nt(w_up)?);
+    ws.give_tensor(du);
+    ws.give_tensor(dg);
+    ws.give_tensor(dh);
     Ok((dy, dw_gate, dw_up, dw_down))
 }
 
@@ -359,6 +374,25 @@ mod tests {
         }
         assert!(cross_entropy_fwd(&f, &embed, &[1, 2]).is_err());
         assert!(cross_entropy_fwd(&f, &embed, &[1, 2, 0, 9]).is_err());
+    }
+
+    #[test]
+    fn mlp_bwd_workspace_reuse_is_bitwise_stable() {
+        let mut rng = Pcg64::new(8, 0);
+        let y = Tensor::randn(&[4, 6], 1.0, &mut rng.split(0));
+        let w_gate = Tensor::randn(&[6, 10], 0.3, &mut rng.split(1));
+        let w_up = Tensor::randn(&[6, 10], 0.3, &mut rng.split(2));
+        let w_down = Tensor::randn(&[10, 6], 0.3, &mut rng.split(3));
+        let dout = Tensor::randn(&[4, 6], 1.0, &mut rng.split(4));
+        let (_, cache) = mlp_fwd(&y, &w_gate, &w_up, &w_down).unwrap();
+        let mut ws = Workspace::new();
+        let a = mlp_bwd(&dout, &cache, &w_gate, &w_up, &w_down, &mut ws).unwrap();
+        assert_eq!(ws.pooled(), 3, "dh/dg/du must return to the pool");
+        let b = mlp_bwd(&dout, &cache, &w_gate, &w_up, &w_down, &mut ws).unwrap();
+        assert_eq!(a.0.data, b.0.data);
+        assert_eq!(a.1.data, b.1.data);
+        // Shape mismatch still rejected.
+        assert!(mlp_bwd(&dout, &cache, &w_gate, &w_up, &y, &mut ws).is_err());
     }
 
     #[test]

@@ -9,12 +9,22 @@
 //! nothing quadratic is stored between passes.  Everything else keeps
 //! explicit residuals (`blocks::*Cache`).
 //!
+//! All per-layer head calls are dispatched as one
+//! [`AttentionBackend::execute_many`] batch: the native backend fans the
+//! heads out over a scoped-thread pool (each head computed whole by one
+//! worker, so results are bitwise-identical to the serial loop), and the
+//! head q/k/v tensors are *moved* through the call list instead of
+//! cloned.  A model-owned [`Workspace`] pools the per-layer backward
+//! slabs and MLP intermediates across microbatches and steps.
+//!
 //! Divergence telemetry contract (DESIGN.md §10): every forward reports
 //! `max_attn_logit = max |QKᵀ/√d|` over unmasked pairs, computed in full
 //! precision on the (QK-normed, pre-smoothing) attention inputs.  The
 //! trainer flags divergence when it crosses
 //! `TrainConfig::max_attn_logit_ceiling` — non-finite loss alone fires
 //! too late to plot the fig1 divergence point.
+
+use std::cell::RefCell;
 
 use anyhow::{bail, Context, Result};
 
@@ -24,7 +34,7 @@ use crate::model::blocks::{
 };
 use crate::model::{param_schema, AttnVariant, ModelDims};
 use crate::runtime::{AttentionBackend, Value};
-use crate::tensor::{IntTensor, Tensor};
+use crate::tensor::{IntTensor, Tensor, Workspace};
 
 /// One microbatch's training outputs.
 #[derive(Debug)]
@@ -45,6 +55,11 @@ pub struct Model {
     shapes: Vec<Vec<usize>>,
     fwd_artifact: String,
     fwdbwd_artifact: String,
+    /// Scratch arena for the per-layer backward slabs (dq/dk/dv) and the
+    /// MLP backward intermediates.  Owned by the model so the training
+    /// engine's hot loop reuses the same pools every microbatch/step;
+    /// interior mutability keeps the `&self` forward/backward API.
+    ws: RefCell<Workspace>,
 }
 
 struct HeadCache {
@@ -88,6 +103,7 @@ impl Model {
             variant,
             names,
             shapes,
+            ws: RefCell::new(Workspace::new()),
         })
     }
 
@@ -157,7 +173,7 @@ impl Model {
             rmsnorm_bwd(&df, &params[self.idx("final_norm")], &fn_cache)?;
         grads[self.idx("final_norm")].add_assign(&dg_final);
 
-        for (l, cache) in caches.iter().enumerate().rev() {
+        for (l, cache) in caches.into_iter().enumerate().rev() {
             let p = format!("layers.{l:02}.");
             let (i_wq, i_wk, i_wv, i_wo) = (
                 self.idx(&format!("{p}wq")),
@@ -172,6 +188,7 @@ impl Model {
                 &params[self.idx(&format!("{p}w_gate"))],
                 &params[self.idx(&format!("{p}w_up"))],
                 &params[self.idx(&format!("{p}w_down"))],
+                &mut self.ws.borrow_mut(),
             )?;
             grads[self.idx(&format!("{p}w_gate"))].add_assign(&dwg);
             grads[self.idx(&format!("{p}w_up"))].add_assign(&dwu);
@@ -185,25 +202,32 @@ impl Model {
             let mut dx1 = dx1m;
             dx1.add_assign(&dx); // MLP residual
 
-            // Attention half.
+            // Attention half.  One fwdbwd call per (batch row, head),
+            // dispatched as a batch so the native backend can fan heads
+            // out across threads; the cached q/k/v head tensors are moved
+            // into the calls — no per-head clones.
             grads[i_wo].add_assign(&cache.o.matmul_tn(&dx1)?);
             let do_full = dx1.matmul_nt(&params[i_wo])?;
-            let mut dq = Tensor::zeros(&[do_full.shape[0], hd]);
-            let mut dk = Tensor::zeros(&[do_full.shape[0], hd]);
-            let mut dv = Tensor::zeros(&[do_full.shape[0], hd]);
-            for head in &cache.heads {
+            let rows = do_full.shape[0];
+            let mut dq = self.ws.borrow_mut().take_tensor(&[rows, hd]);
+            let mut dk = self.ws.borrow_mut().take_tensor(&[rows, hd]);
+            let mut dv = self.ws.borrow_mut().take_tensor(&[rows, hd]);
+            let mut calls = Vec::with_capacity(cache.heads.len());
+            let mut meta = Vec::with_capacity(cache.heads.len());
+            for head in cache.heads {
                 let do_h = do_full.block(head.row0, head.col0, n, dh)?;
-                let out = backend
-                    .execute(
-                        &self.fwdbwd_artifact,
-                        &[
-                            Value::F32(head.qh.clone()),
-                            Value::F32(head.kh.clone()),
-                            Value::F32(head.vh.clone()),
-                            Value::F32(do_h),
-                        ],
-                    )
-                    .with_context(|| format!("attention backward {}", self.fwdbwd_artifact))?;
+                calls.push(vec![
+                    Value::F32(head.qh),
+                    Value::F32(head.kh),
+                    Value::F32(head.vh),
+                    Value::F32(do_h),
+                ]);
+                meta.push((head.row0, head.col0, head.qn, head.kn));
+            }
+            let outs = backend
+                .execute_many(&self.fwdbwd_artifact, &calls)
+                .with_context(|| format!("attention backward {}", self.fwdbwd_artifact))?;
+            for (out, (row0, col0, qn, kn)) in outs.into_iter().zip(meta) {
                 if out.len() != 4 {
                     bail!(
                         "{} returned {} outputs, expected 4 (o, dq, dk, dv)",
@@ -217,8 +241,8 @@ impl Model {
                 let mut dkh = it.next().unwrap().into_f32()?;
                 let dvh = it.next().unwrap().into_f32()?;
                 if self.variant.qk_norm {
-                    let qn = head.qn.as_ref().expect("qk_norm caches present");
-                    let kn = head.kn.as_ref().expect("qk_norm caches present");
+                    let qn = qn.as_ref().expect("qk_norm caches present");
+                    let kn = kn.as_ref().expect("qk_norm caches present");
                     let gq = &params[self.idx(&format!("{p}q_norm"))];
                     let gk = &params[self.idx(&format!("{p}k_norm"))];
                     let (dq_pre, dgq) = rmsnorm_bwd(&dqh, gq, qn)?;
@@ -228,9 +252,9 @@ impl Model {
                     dqh = dq_pre;
                     dkh = dk_pre;
                 }
-                dq.set_block(head.row0, head.col0, &dqh)?;
-                dk.set_block(head.row0, head.col0, &dkh)?;
-                dv.set_block(head.row0, head.col0, &dvh)?;
+                dq.set_block(row0, col0, &dqh)?;
+                dk.set_block(row0, col0, &dkh)?;
+                dv.set_block(row0, col0, &dvh)?;
             }
             grads[i_wq].add_assign(&cache.y.matmul_tn(&dq)?);
             grads[i_wk].add_assign(&cache.y.matmul_tn(&dk)?);
@@ -238,6 +262,12 @@ impl Model {
             let mut dy = dq.matmul_nt(&params[i_wq])?;
             dy.add_assign(&dk.matmul_nt(&params[i_wk])?);
             dy.add_assign(&dv.matmul_nt(&params[i_wv])?);
+            {
+                let mut ws = self.ws.borrow_mut();
+                ws.give_tensor(dv);
+                ws.give_tensor(dk);
+                ws.give_tensor(dq);
+            }
             let (dxa, dg_a) = rmsnorm_bwd(
                 &dy,
                 &params[self.idx(&format!("{p}attn_norm"))],
@@ -314,7 +344,13 @@ impl Model {
             let k = y.matmul(&params[self.idx(&format!("{p}wk"))])?;
             let v = y.matmul(&params[self.idx(&format!("{p}wv"))])?;
             let mut o = Tensor::zeros(&q.shape);
-            let mut heads = Vec::with_capacity(b * self.dims.n_heads);
+            // Build every (batch row, head) attention input first, dispatch
+            // them as one batch (head-parallel on the native backend,
+            // bitwise-identical to the serial loop), then reclaim the q/k/v
+            // tensors from the call list for the backward caches — moved,
+            // not cloned.
+            let mut calls = Vec::with_capacity(b * self.dims.n_heads);
+            let mut meta = Vec::with_capacity(b * self.dims.n_heads);
             for bi in 0..b {
                 for h in 0..self.dims.n_heads {
                     let (row0, col0) = (bi * n, h * dh);
@@ -338,28 +374,37 @@ impl Model {
                         qn = Some(qc);
                         kn = Some(kc);
                     }
-                    let out = backend
-                        .execute(
-                            &self.fwd_artifact,
-                            &[
-                                Value::F32(qh.clone()),
-                                Value::F32(kh.clone()),
-                                Value::F32(vh.clone()),
-                            ],
-                        )
-                        .with_context(|| format!("attention forward {}", self.fwd_artifact))?;
-                    if out.len() != 2 {
-                        bail!(
-                            "{} returned {} outputs, expected 2 (o, max_logit)",
-                            self.fwd_artifact,
-                            out.len()
-                        );
-                    }
-                    let mut it = out.into_iter();
-                    let oh = it.next().unwrap().into_f32()?;
-                    let ml = it.next().unwrap().into_f32()?.item() as f64;
-                    max_logit = max_logit.max(ml);
-                    o.set_block(row0, col0, &oh)?;
+                    calls.push(vec![Value::F32(qh), Value::F32(kh), Value::F32(vh)]);
+                    meta.push((row0, col0, qn, kn));
+                }
+            }
+            let outs = backend
+                .execute_many(&self.fwd_artifact, &calls)
+                .with_context(|| format!("attention forward {}", self.fwd_artifact))?;
+            let mut heads = Vec::with_capacity(calls.len());
+            for ((call, out), (row0, col0, qn, kn)) in
+                calls.into_iter().zip(outs).zip(meta)
+            {
+                if out.len() != 2 {
+                    bail!(
+                        "{} returned {} outputs, expected 2 (o, max_logit)",
+                        self.fwd_artifact,
+                        out.len()
+                    );
+                }
+                let mut it = out.into_iter();
+                let oh = it.next().unwrap().into_f32()?;
+                let ml = it.next().unwrap().into_f32()?.item() as f64;
+                // NaN-aware fold: a non-finite head statistic must poison
+                // the microbatch maximum so the trainer's divergence
+                // ceiling sees it (DESIGN.md §10).
+                max_logit = crate::util::stats::nan_max(max_logit, ml);
+                o.set_block(row0, col0, &oh)?;
+                if want_caches {
+                    let mut ci = call.into_iter();
+                    let qh = ci.next().unwrap().into_f32()?;
+                    let kh = ci.next().unwrap().into_f32()?;
+                    let vh = ci.next().unwrap().into_f32()?;
                     heads.push(HeadCache {
                         row0,
                         col0,

@@ -20,7 +20,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::kernels::{self, AttnConfig};
 use crate::runtime::{Runtime, Value};
-use crate::tensor::Tensor;
+use crate::tensor::{linalg, Tensor, Workspace};
 use crate::util::stats;
 
 /// A runtime capable of executing attention trace/bench artifacts by name.
@@ -30,6 +30,16 @@ pub trait AttentionBackend {
 
     /// Execute one artifact; outputs in manifest order.
     fn execute(&mut self, artifact: &str, inputs: &[Value]) -> Result<Vec<Value>>;
+
+    /// Execute many **independent** calls of the same artifact; results in
+    /// call order.  Default is the serial loop; implementations may fan
+    /// out (the native backend partitions calls over a scoped-thread pool
+    /// — per-head parallelism for the training engine) but must return
+    /// results bitwise-identical to the serial path, since every call is
+    /// computed whole by exactly one worker.
+    fn execute_many(&mut self, artifact: &str, calls: &[Vec<Value>]) -> Result<Vec<Vec<Value>>> {
+        calls.iter().map(|c| self.execute(artifact, c)).collect()
+    }
 }
 
 /// Build a backend from the `--backend` CLI flag.
@@ -110,14 +120,67 @@ const TRACE_SPECS: &[TraceSpec] = &[
     TraceSpec { name: "trace_pseudo_dsfp", imp: TraceImpl::Pseudo, n: 128, k_smoothing: true, q_smoothing: false, quant_ds: false },
 ];
 
-/// In-process CPU executor for trace/bench artifacts.
+/// In-process CPU executor for trace/bench artifacts.  Owns a reusable
+/// [`Workspace`] (serial calls) plus one per fan-out worker slot, so
+/// back-to-back kernel calls (the training hot loop) run allocation-free
+/// after warmup on both the serial and the parallel path.
 #[derive(Debug, Default)]
-pub struct NativeBackend;
+pub struct NativeBackend {
+    ws: Workspace,
+    /// Per-worker arenas for [`Self::execute_many`], indexed by partition
+    /// slot — persistent across batches so each worker's pools stay warm.
+    worker_ws: Vec<Workspace>,
+}
 
 impl NativeBackend {
     pub fn new() -> NativeBackend {
-        NativeBackend
+        NativeBackend::default()
     }
+}
+
+/// Dispatch one artifact by name against the in-process kernels.  Free
+/// function (not a method) so [`NativeBackend::execute_many`] workers can
+/// run it with per-thread workspaces.
+fn execute_native(artifact: &str, inputs: &[Value], ws: &mut Workspace) -> Result<Vec<Value>> {
+    if let Some(spec) = TRACE_SPECS.iter().find(|s| s.name == artifact) {
+        return run_trace_artifact(*spec, inputs, ws)
+            .with_context(|| format!("native backend executing {artifact}"));
+    }
+    if let Some(bench) = parse_bench_name(artifact) {
+        return run_bench_artifact(bench, inputs, ws)
+            .with_context(|| format!("native backend executing {artifact}"));
+    }
+    if let Some(spec) = parse_model_attn_name(artifact) {
+        return run_model_attn_artifact(spec, inputs, ws)
+            .with_context(|| format!("native backend executing {artifact}"));
+    }
+    if artifact.starts_with("init_")
+        || artifact.starts_with("grad_step_")
+        || artifact.starts_with("apply_step_")
+    {
+        bail!(
+            "artifact {artifact} is a monolithic AOT training executable; the native \
+             engine trains through `model_attn_*` attention calls instead (any training \
+             subcommand with --backend native) — to execute this artifact itself, run \
+             `make artifacts` and use --backend xla"
+        );
+    }
+    bail!("native backend knows no artifact named {artifact:?}");
+}
+
+/// Total MAC-volume estimate (`Σ n²·d` over calls) used to gate the
+/// scoped-thread fan-out against [`linalg::PAR_MIN_BATCH_VOLUME`]:
+/// toy-scale batches stay serial so spawn latency never lands on tiny
+/// hot loops.
+fn batch_mac_volume(calls: &[Vec<Value>]) -> usize {
+    calls
+        .iter()
+        .filter_map(|c| c.first())
+        .map(|v| match v.shape() {
+            [n, d] => n.saturating_mul(*n).saturating_mul(*d),
+            _ => 0,
+        })
+        .sum()
 }
 
 impl AttentionBackend for NativeBackend {
@@ -126,30 +189,51 @@ impl AttentionBackend for NativeBackend {
     }
 
     fn execute(&mut self, artifact: &str, inputs: &[Value]) -> Result<Vec<Value>> {
-        if let Some(spec) = TRACE_SPECS.iter().find(|s| s.name == artifact) {
-            return run_trace_artifact(*spec, inputs)
-                .with_context(|| format!("native backend executing {artifact}"));
+        execute_native(artifact, inputs, &mut self.ws)
+    }
+
+    /// Partition the calls over a std scoped-thread pool (`SAGEBWD_THREADS`
+    /// workers, default `available_parallelism`).  Each call is computed
+    /// whole by one worker with its own [`Workspace`], so outputs are
+    /// bitwise-identical to the serial loop at any thread count.
+    fn execute_many(&mut self, artifact: &str, calls: &[Vec<Value>]) -> Result<Vec<Vec<Value>>> {
+        let threads = linalg::thread_count().min(calls.len());
+        if threads <= 1 || batch_mac_volume(calls) < linalg::PAR_MIN_BATCH_VOLUME {
+            return calls
+                .iter()
+                .map(|c| execute_native(artifact, c, &mut self.ws))
+                .collect();
         }
-        if let Some(bench) = parse_bench_name(artifact) {
-            return run_bench_artifact(bench, inputs)
-                .with_context(|| format!("native backend executing {artifact}"));
+        let parts = linalg::partition(calls.len(), threads);
+        while self.worker_ws.len() < parts.len() {
+            self.worker_ws.push(Workspace::new());
         }
-        if let Some(spec) = parse_model_attn_name(artifact) {
-            return run_model_attn_artifact(spec, inputs)
-                .with_context(|| format!("native backend executing {artifact}"));
-        }
-        if artifact.starts_with("init_")
-            || artifact.starts_with("grad_step_")
-            || artifact.starts_with("apply_step_")
-        {
-            bail!(
-                "artifact {artifact} is a monolithic AOT training executable; the native \
-                 engine trains through `model_attn_*` attention calls instead (any training \
-                 subcommand with --backend native) — to execute this artifact itself, run \
-                 `make artifacts` and use --backend xla"
-            );
-        }
-        bail!("native backend knows no artifact named {artifact:?}");
+        let mut results: Vec<Option<Result<Vec<Value>>>> = Vec::with_capacity(calls.len());
+        results.resize_with(calls.len(), || None);
+        std::thread::scope(|s| {
+            let mut rest = results.as_mut_slice();
+            let mut pool = self.worker_ws.iter_mut();
+            for (lo, hi) in parts {
+                let (chunk, tail) = rest.split_at_mut(hi - lo);
+                rest = tail;
+                let calls_chunk = &calls[lo..hi];
+                let ws = pool.next().expect("worker_ws sized to the partition count");
+                s.spawn(move || {
+                    // Each call is computed whole by this worker: the inner
+                    // auto-dispatching GEMMs stay serial so T workers never
+                    // nest-spawn T more threads each.
+                    linalg::with_serial(|| {
+                        for (slot, call) in chunk.iter_mut().zip(calls_chunk) {
+                            *slot = Some(execute_native(artifact, call, ws));
+                        }
+                    });
+                });
+            }
+        });
+        results
+            .into_iter()
+            .map(|r| r.expect("every execute_many slot is filled by its worker"))
+            .collect()
     }
 }
 
@@ -228,7 +312,7 @@ fn model_attn_cfg(spec: ModelAttnSpec) -> AttnConfig {
     }
 }
 
-fn run_model_attn_artifact(spec: ModelAttnSpec, inputs: &[Value]) -> Result<Vec<Value>> {
+fn run_model_attn_artifact(spec: ModelAttnSpec, inputs: &[Value], ws: &mut Workspace) -> Result<Vec<Value>> {
     let cfg = model_attn_cfg(spec);
     if spec.imp != ModelAttnImpl::Fpa && spec.n % TRACE_BLOCK != 0 {
         bail!(
@@ -241,7 +325,7 @@ fn run_model_attn_artifact(spec: ModelAttnSpec, inputs: &[Value]) -> Result<Vec<
         let (q, k, v, do_) = (ins[0], ins[1], ins[2], ins[3]);
         let tr = match spec.imp {
             ModelAttnImpl::Fpa => kernels::fpa_bwd(q, k, v, do_, true)?,
-            _ => kernels::sage_bwd(q, k, v, do_, &cfg)?,
+            _ => kernels::sage_bwd_ws(q, k, v, do_, &cfg, ws)?,
         };
         Ok(vec![
             Value::F32(tr.o),
@@ -255,7 +339,7 @@ fn run_model_attn_artifact(spec: ModelAttnSpec, inputs: &[Value]) -> Result<Vec<
         let ml = kernels::max_abs_logit(q, k, true)?;
         let o = match spec.imp {
             ModelAttnImpl::Fpa => kernels::fpa_fwd(q, k, v, true)?.0,
-            _ => kernels::sage_fwd(q, k, v, &cfg)?.0,
+            _ => kernels::sage_fwd_ws(q, k, v, &cfg, ws)?.0,
         };
         Ok(vec![Value::F32(o), Value::F32(Tensor::scalar(ml))])
     }
@@ -289,7 +373,7 @@ fn trace_cfg(spec: TraceSpec) -> AttnConfig {
     }
 }
 
-fn run_trace_artifact(spec: TraceSpec, inputs: &[Value]) -> Result<Vec<Value>> {
+fn run_trace_artifact(spec: TraceSpec, inputs: &[Value], ws: &mut Workspace) -> Result<Vec<Value>> {
     let ins = take_f32_inputs(inputs, 4, spec.n, TRACE_D)?;
     let (q, k, v, do_) = (ins[0], ins[1], ins[2], ins[3]);
     let cfg = trace_cfg(spec);
@@ -300,7 +384,7 @@ fn run_trace_artifact(spec: TraceSpec, inputs: &[Value]) -> Result<Vec<Value>> {
             // Mirror aot.export_trace: the blocked kernel produces
             // (o, dq, dk, dv); the materialized intermediates come from the
             // §5.4 pseudo trace (same quantization scheme, dense layout).
-            let sage = kernels::sage_bwd(q, k, v, do_, &cfg)?;
+            let sage = kernels::sage_bwd_ws(q, k, v, do_, &cfg, ws)?;
             let mut it = kernels::pseudo_quant_trace(q, k, v, do_, &cfg)?;
             it.o = sage.o;
             it.dq = sage.dq;
@@ -366,7 +450,7 @@ fn parse_bench_name(artifact: &str) -> Option<BenchSpec> {
     Some(BenchSpec { imp, fwdbwd, d, n })
 }
 
-fn run_bench_artifact(spec: BenchSpec, inputs: &[Value]) -> Result<Vec<Value>> {
+fn run_bench_artifact(spec: BenchSpec, inputs: &[Value], ws: &mut Workspace) -> Result<Vec<Value>> {
     let cfg = AttnConfig {
         block_q: TRACE_BLOCK,
         block_kv: TRACE_BLOCK,
@@ -376,7 +460,7 @@ fn run_bench_artifact(spec: BenchSpec, inputs: &[Value]) -> Result<Vec<Value>> {
         let ins = take_f32_inputs(inputs, 4, spec.n, spec.d)?;
         let (q, k, v, do_) = (ins[0], ins[1], ins[2], ins[3]);
         let tr = match spec.imp {
-            BenchImpl::Sage => kernels::sage_bwd(q, k, v, do_, &cfg)?,
+            BenchImpl::Sage => kernels::sage_bwd_ws(q, k, v, do_, &cfg, ws)?,
             // Baselines differentiate exactly (aot uses jnp autodiff).
             BenchImpl::Fa2 | BenchImpl::Naive => kernels::fpa_bwd(q, k, v, do_, cfg.causal)?,
         };
@@ -390,8 +474,8 @@ fn run_bench_artifact(spec: BenchSpec, inputs: &[Value]) -> Result<Vec<Value>> {
         let ins = take_f32_inputs(inputs, 3, spec.n, spec.d)?;
         let (q, k, v) = (ins[0], ins[1], ins[2]);
         let o = match spec.imp {
-            BenchImpl::Sage => kernels::sage_fwd(q, k, v, &cfg)?.0,
-            BenchImpl::Fa2 => kernels::fa2_fwd(q, k, v, &cfg)?.0,
+            BenchImpl::Sage => kernels::sage_fwd_ws(q, k, v, &cfg, ws)?.0,
+            BenchImpl::Fa2 => kernels::fa2_fwd_ws(q, k, v, &cfg, ws)?.0,
             BenchImpl::Naive => kernels::fpa_fwd(q, k, v, cfg.causal)?.0,
         };
         Ok(vec![Value::F32(o)])
@@ -466,6 +550,35 @@ mod tests {
         let all_inputs: Vec<Value> = qkvdo.iter().cloned().map(Value::F32).collect();
         let out = be.execute("bench_sage_fwdbwd_d64_n128", &all_inputs).unwrap();
         assert_eq!(out.len(), 4);
+    }
+
+    #[test]
+    fn execute_many_matches_serial_execute() {
+        let mut be = NativeBackend::new();
+        // n²·d per call is large enough that the scoped-thread fan-out
+        // engages whenever the host has >1 core; the assertion is the
+        // determinism contract — parallel output == serial output, bitwise.
+        let artifact = "bench_sage_fwd_d64_n256";
+        let calls: Vec<Vec<Value>> = (0..3u64)
+            .map(|seed| {
+                let qkvdo = gaussian_qkvdo(256, 64, 1.0, 1.0, 1.0, 1.0, 40 + seed);
+                qkvdo[..3].iter().cloned().map(Value::F32).collect()
+            })
+            .collect();
+        let many = be.execute_many(artifact, &calls).unwrap();
+        assert_eq!(many.len(), 3);
+        for (call, out) in calls.iter().zip(&many) {
+            let serial = be.execute(artifact, call).unwrap();
+            assert_eq!(
+                out[0].as_f32().unwrap().data,
+                serial[0].as_f32().unwrap().data,
+                "parallel batch result differs from serial"
+            );
+        }
+        // Errors propagate out of the batch.
+        let mut bad = calls.clone();
+        bad[1].truncate(2);
+        assert!(be.execute_many(artifact, &bad).is_err());
     }
 
     #[test]

@@ -1,0 +1,542 @@
+//! Cache-blocked, optionally parallel dense micro-kernels — the compute
+//! engine behind every native matmul (DESIGN.md §11).
+//!
+//! Three f32 GEMM layouts (the ones attention uses: `A·B`, `A·Bᵀ`,
+//! `Aᵀ·B`) plus a flat i8×i8→i32 GEMM for the quantized tiles.  All of
+//! them reduce to one core kernel, [`gemm_nn`]: `ikj` loop order with an
+//! `MR`-row register block and slice-based inner loops (independent
+//! per-lane `acc[j] += a·b[j]` updates, so the compiler can autovectorize
+//! without reassociating float adds).  The transposed layouts pack the
+//! transposed operand once and then run the same kernel.
+//!
+//! ## Determinism contract
+//!
+//! For every output element `(i, j)` the products `a[i,t]·b[t,j]` are
+//! accumulated in ascending `t` order, starting from `0.0` — exactly the
+//! per-element order of the retained naive references ([`naive_matmul`],
+//! [`naive_matmul_nt`], [`naive_matmul_tn`]).  Row/column blocking and
+//! register blocking never touch that order, and parallelism partitions
+//! work by *output rows* (each row is written by exactly one thread, in
+//! the serial per-row order).  Therefore:
+//!
+//! > blocked == naive == parallel, **bitwise**, at any thread count.
+//!
+//! `rust/tests/linalg_properties.rs` asserts this across odd shapes and
+//! `SAGEBWD_THREADS ∈ {1, 4}`; `python/compile/make_golden.py` emits
+//! cross-language golden vectors computed in the same order.
+//!
+//! ## Threading
+//!
+//! [`thread_count`] reads `SAGEBWD_THREADS` (default:
+//! `available_parallelism`).  The auto-dispatching entry points only fan
+//! out when the MAC volume crosses [`PAR_MIN_VOLUME`] — tiny model-scale
+//! matmuls stay serial so thread spawn latency never lands on the
+//! training hot path.  The `*_threads` variants honor an explicit count
+//! (used by benches and the property tests).
+
+use std::sync::OnceLock;
+
+/// Rows processed together by the register block of [`gemm_nn`]: the B
+/// row loaded in the inner loop is reused `MR` times.
+const MR: usize = 4;
+
+/// Minimum `m·k·n` MAC volume before the auto entry points go parallel
+/// (~a 256×64×256 matmul).  Below this, scoped-thread spawn overhead
+/// outweighs the win; determinism is unaffected either way.
+pub const PAR_MIN_VOLUME: usize = 1 << 22;
+
+/// Minimum summed `n²·d` volume before a **batched coarse-grained** call
+/// set (the backend's `execute_many` head fan-out) goes parallel.  Much
+/// lower than [`PAR_MIN_VOLUME`]: each batched call is a whole attention
+/// forward/backward — quantization, online softmax, and several GEMMs,
+/// ≈5–10× the raw `n²·d` MACs — so thread spawn amortizes sooner.
+pub const PAR_MIN_BATCH_VOLUME: usize = 1 << 19;
+
+// ---------------------------------------------------------------------------
+// Thread-count resolution + work partitioning
+// ---------------------------------------------------------------------------
+
+fn default_threads() -> usize {
+    static CACHE: OnceLock<usize> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
+}
+
+/// Worker count: `SAGEBWD_THREADS` if set, else `available_parallelism`.
+/// `0` means serial (the conventional "off" value — falling back to all
+/// cores there would be the opposite of the user's intent); unparseable
+/// values fall back to the default.  Read per call so tests and
+/// harnesses can re-configure within one process.
+pub fn thread_count() -> usize {
+    match std::env::var("SAGEBWD_THREADS") {
+        Ok(s) => match s.trim().parse::<usize>() {
+            Ok(0) => 1,
+            Ok(n) => n,
+            Err(_) => default_threads(),
+        },
+        Err(_) => default_threads(),
+    }
+}
+
+/// Split `n` items into at most `parts` contiguous, near-equal, non-empty
+/// ranges (fewer when `n < parts`).
+pub fn partition(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.clamp(1, n.max(1));
+    let base = n / parts;
+    let rem = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < rem);
+        if len == 0 {
+            break;
+        }
+        out.push((lo, lo + len));
+        lo += len;
+    }
+    out
+}
+
+thread_local! {
+    /// When set, [`auto_threads`] stays serial regardless of volume — the
+    /// backend's `execute_many` workers run under this so coarse-grained
+    /// head fan-out never nest-spawns per-GEMM threads (T² cores-thrashing
+    /// oversubscription).  Explicit `*_threads` calls are unaffected.
+    static FORCE_SERIAL: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Run `f` with the auto-dispatching entry points pinned serial on this
+/// thread.  Results are unchanged (the determinism contract); only the
+/// dispatch decision differs.
+pub fn with_serial<R>(f: impl FnOnce() -> R) -> R {
+    FORCE_SERIAL.with(|c| {
+        let prev = c.replace(true);
+        let r = f();
+        c.set(prev);
+        r
+    })
+}
+
+/// RAII override of `SAGEBWD_THREADS`: pins the worker count until the
+/// guard drops; the previous value is restored even on panic.
+/// Process-global — callers must not have concurrent env readers at pin
+/// time (the bench harnesses pin while single-threaded).
+pub struct ThreadCountGuard(Option<String>);
+
+pub fn pin_threads(n: usize) -> ThreadCountGuard {
+    let saved = std::env::var("SAGEBWD_THREADS").ok();
+    std::env::set_var("SAGEBWD_THREADS", n.to_string());
+    ThreadCountGuard(saved)
+}
+
+impl Drop for ThreadCountGuard {
+    fn drop(&mut self) {
+        match self.0.take() {
+            Some(v) => std::env::set_var("SAGEBWD_THREADS", v),
+            None => std::env::remove_var("SAGEBWD_THREADS"),
+        }
+    }
+}
+
+fn auto_threads(m: usize, k: usize, n: usize) -> usize {
+    if FORCE_SERIAL.with(|c| c.get())
+        || m.saturating_mul(k).saturating_mul(n) < PAR_MIN_VOLUME
+    {
+        1
+    } else {
+        thread_count()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f32 core kernel + packing
+// ---------------------------------------------------------------------------
+
+/// Serial blocked `A·B` over output rows `[i0, i1)` of an `(m,k)×(k,n)`
+/// product.  `out` covers exactly those rows and must be zero-filled.
+fn gemm_nn_rows(a: &[f32], b: &[f32], k: usize, n: usize, i0: usize, i1: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), (i1 - i0) * n);
+    let mut i = i0;
+    while i < i1 {
+        let mr = MR.min(i1 - i);
+        let obase = (i - i0) * n;
+        for t in 0..k {
+            let brow = &b[t * n..(t + 1) * n];
+            for r in 0..mr {
+                let av = a[(i + r) * k + t];
+                let orow = &mut out[obase + r * n..obase + (r + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        i += mr;
+    }
+}
+
+/// Blocked serial `A·B`: `(m,k) × (k,n) → (m,n)`.  `out` is overwritten.
+pub fn gemm_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    gemm_nn_rows(a, b, k, n, 0, m, out);
+}
+
+/// `dst[(c, r)] = src[(r, c)]` — pack a transposed copy of a row-major
+/// `(rows, cols)` matrix; `dst` must hold `rows·cols` elements.
+fn pack_transpose<T: Copy>(src: &[T], rows: usize, cols: usize, dst: &mut [T]) {
+    debug_assert_eq!(src.len(), rows * cols);
+    debug_assert_eq!(dst.len(), rows * cols);
+    if rows == 0 || cols == 0 {
+        // Degenerate panel: nothing to pack (and `chunks_exact(0)` panics).
+        return;
+    }
+    for (r, row) in src.chunks_exact(cols).enumerate() {
+        for (c, &v) in row.iter().enumerate() {
+            dst[c * rows + r] = v;
+        }
+    }
+}
+
+/// [`pack_transpose`] for the f32 panels.
+pub fn pack_transpose_f32(src: &[f32], rows: usize, cols: usize, dst: &mut [f32]) {
+    pack_transpose(src, rows, cols, dst);
+}
+
+/// [`pack_transpose`] for the i8 panels.
+pub fn pack_transpose_i8(src: &[i8], rows: usize, cols: usize, dst: &mut [i8]) {
+    pack_transpose(src, rows, cols, dst);
+}
+
+fn par_gemm_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], threads: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    let threads = threads.clamp(1, m.max(1));
+    if threads <= 1 {
+        gemm_nn_rows(a, b, k, n, 0, m, out);
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut rest = out;
+        for (i0, i1) in partition(m, threads) {
+            let (chunk, tail) = rest.split_at_mut((i1 - i0) * n);
+            rest = tail;
+            s.spawn(move || gemm_nn_rows(a, b, k, n, i0, i1, chunk));
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// f32 public layouts
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    /// Per-thread pack scratch for the auto entry points, so the
+    /// `Tensor::matmul_nt`/`matmul_tn` hot paths (model forward/backward)
+    /// stay allocation-free after warmup without threading a workspace
+    /// through every Tensor method.
+    static AUTO_PACK: std::cell::RefCell<Vec<f32>> = const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// `A·B` with an explicit thread count (`(m,k) × (k,n) → (m,n)`).
+pub fn matmul_threads(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], threads: usize) {
+    par_gemm_nn(a, b, m, k, n, out, threads);
+}
+
+/// `A·B`, auto-dispatching serial/parallel by MAC volume.
+pub fn matmul_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    par_gemm_nn(a, b, m, k, n, out, auto_threads(m, k, n));
+}
+
+/// `A·Bᵀ` (`(m,k) × (n,k) → (m,n)`) with explicit threads and caller
+/// scratch for the packed `Bᵀ` panel (resized to `k·n`).
+pub fn matmul_nt_scratch(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    threads: usize,
+    pack: &mut Vec<f32>,
+) {
+    debug_assert_eq!(b.len(), n * k);
+    pack.clear();
+    pack.resize(k * n, 0.0);
+    pack_transpose_f32(b, n, k, pack);
+    par_gemm_nn(a, pack, m, k, n, out, threads);
+}
+
+/// `A·Bᵀ` with an explicit thread count.
+pub fn matmul_nt_threads(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], threads: usize) {
+    matmul_nt_scratch(a, b, m, k, n, out, threads, &mut Vec::new());
+}
+
+/// `A·Bᵀ`, auto-dispatching by MAC volume (thread-local pack scratch).
+pub fn matmul_nt_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    AUTO_PACK.with(|p| {
+        matmul_nt_scratch(a, b, m, k, n, out, auto_threads(m, k, n), &mut p.borrow_mut())
+    });
+}
+
+/// `Aᵀ·B` (`(k,m) × (k,n) → (m,n)`) with explicit threads and caller
+/// scratch for the packed `Aᵀ` panel (resized to `k·m`).
+pub fn matmul_tn_scratch(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    threads: usize,
+    pack: &mut Vec<f32>,
+) {
+    debug_assert_eq!(a.len(), k * m);
+    pack.clear();
+    pack.resize(k * m, 0.0);
+    pack_transpose_f32(a, k, m, pack);
+    par_gemm_nn(pack, b, m, k, n, out, threads);
+}
+
+/// `Aᵀ·B` with an explicit thread count.
+pub fn matmul_tn_threads(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], threads: usize) {
+    matmul_tn_scratch(a, b, m, k, n, out, threads, &mut Vec::new());
+}
+
+/// `Aᵀ·B`, auto-dispatching by MAC volume (thread-local pack scratch).
+pub fn matmul_tn_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    AUTO_PACK.with(|p| {
+        matmul_tn_scratch(a, b, m, k, n, out, auto_threads(m, k, n), &mut p.borrow_mut())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// i8 × i8 → i32 blocked GEMM (flat tiles; integer, so exact in any order)
+// ---------------------------------------------------------------------------
+
+/// Serial blocked i8 `A·B` over rows `[i0, i1)`; `out` zero-filled by the
+/// caller.
+fn i8_gemm_nn_rows(a: &[i8], b: &[i8], k: usize, n: usize, i0: usize, i1: usize, out: &mut [i32]) {
+    debug_assert_eq!(out.len(), (i1 - i0) * n);
+    let mut i = i0;
+    while i < i1 {
+        let mr = MR.min(i1 - i);
+        let obase = (i - i0) * n;
+        for t in 0..k {
+            let brow = &b[t * n..(t + 1) * n];
+            for r in 0..mr {
+                let av = a[(i + r) * k + t] as i32;
+                let orow = &mut out[obase + r * n..obase + (r + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv as i32;
+                }
+            }
+        }
+        i += mr;
+    }
+}
+
+/// Blocked i8 `A·B`: `(m,k) × (k,n) → (m,n)` in exact i32.
+pub fn int8_gemm_nn(a: &[i8], b: &[i8], m: usize, k: usize, n: usize, out: &mut [i32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0);
+    i8_gemm_nn_rows(a, b, k, n, 0, m, out);
+}
+
+/// Blocked i8 `A·B` with an explicit thread count (output-row partition).
+pub fn int8_gemm_nn_threads(a: &[i8], b: &[i8], m: usize, k: usize, n: usize, out: &mut [i32], threads: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0);
+    let threads = threads.clamp(1, m.max(1));
+    if threads <= 1 {
+        i8_gemm_nn_rows(a, b, k, n, 0, m, out);
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut rest = out;
+        for (i0, i1) in partition(m, threads) {
+            let (chunk, tail) = rest.split_at_mut((i1 - i0) * n);
+            rest = tail;
+            s.spawn(move || i8_gemm_nn_rows(a, b, k, n, i0, i1, chunk));
+        }
+    });
+}
+
+/// Blocked i8 `A·Bᵀ`: `(m,k) × (n,k) → (m,n)`; `pack` is scratch for the
+/// transposed `Bᵀ` panel.
+pub fn int8_gemm_nt(a: &[i8], b: &[i8], m: usize, k: usize, n: usize, out: &mut [i32], pack: &mut Vec<i8>) {
+    debug_assert_eq!(b.len(), n * k);
+    pack.clear();
+    pack.resize(k * n, 0);
+    pack_transpose_i8(b, n, k, pack);
+    int8_gemm_nn(a, pack, m, k, n, out);
+}
+
+/// Blocked i8 `Aᵀ·B`: `(k,m) × (k,n) → (m,n)`; `pack` is scratch for the
+/// transposed `Aᵀ` panel.
+pub fn int8_gemm_tn(a: &[i8], b: &[i8], m: usize, k: usize, n: usize, out: &mut [i32], pack: &mut Vec<i8>) {
+    debug_assert_eq!(a.len(), k * m);
+    pack.clear();
+    pack.resize(k * m, 0);
+    pack_transpose_i8(a, k, m, pack);
+    int8_gemm_nn(pack, b, m, k, n, out);
+}
+
+// ---------------------------------------------------------------------------
+// Naive references (retained verbatim from the pre-engine substrate; the
+// bitwise-equality oracle for everything above)
+// ---------------------------------------------------------------------------
+
+/// Naive `A·B` — the original `Tensor::matmul` triple loop.
+pub fn naive_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    for i in 0..m {
+        let row = &a[i * k..(i + 1) * k];
+        let acc = &mut out[i * n..(i + 1) * n];
+        for (t, &av) in row.iter().enumerate() {
+            let brow = &b[t * n..(t + 1) * n];
+            for (o, &bv) in acc.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// Naive `A·Bᵀ` — the original `Tensor::matmul_nt` dot-product loop.
+pub fn naive_matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            out[i * n + j] = acc;
+        }
+    }
+}
+
+/// Naive `Aᵀ·B` — the original `Tensor::matmul_tn` loop.
+pub fn naive_matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    for t in 0..k {
+        let arow = &a[t * m..(t + 1) * m];
+        let brow = &b[t * n..(t + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            let acc = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in acc.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn randv(len: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed, 0x11A6);
+        let mut v = vec![0f32; len];
+        rng.fill_gaussian(&mut v, 1.0);
+        v
+    }
+
+    #[test]
+    fn partition_covers_and_balances() {
+        assert_eq!(partition(10, 3), vec![(0, 4), (4, 7), (7, 10)]);
+        assert_eq!(partition(2, 8), vec![(0, 1), (1, 2)]);
+        assert_eq!(partition(0, 4), Vec::<(usize, usize)>::new());
+        assert_eq!(partition(5, 1), vec![(0, 5)]);
+    }
+
+    #[test]
+    fn blocked_nn_bitwise_matches_naive() {
+        for &(m, k, n) in &[(1, 1, 1), (5, 3, 7), (17, 13, 9), (64, 32, 48)] {
+            let a = randv(m * k, 1 + m as u64);
+            let b = randv(k * n, 2 + n as u64);
+            let mut want = vec![0f32; m * n];
+            let mut got = vec![0f32; m * n];
+            naive_matmul(&a, &b, m, k, n, &mut want);
+            gemm_nn(&a, &b, m, k, n, &mut got);
+            assert_eq!(want, got, "serial ({m},{k},{n})");
+            for threads in [2, 4, 7] {
+                matmul_threads(&a, &b, m, k, n, &mut got, threads);
+                assert_eq!(want, got, "threads={threads} ({m},{k},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn nt_and_tn_bitwise_match_their_naive_layouts() {
+        let (m, k, n) = (11, 6, 13);
+        let a = randv(m * k, 3);
+        let bt = randv(n * k, 4); // (n, k) for nt
+        let at = randv(k * m, 5); // (k, m) for tn
+        let b = randv(k * n, 6);
+        let mut want = vec![0f32; m * n];
+        let mut got = vec![0f32; m * n];
+        naive_matmul_nt(&a, &bt, m, k, n, &mut want);
+        matmul_nt_threads(&a, &bt, m, k, n, &mut got, 3);
+        assert_eq!(want, got, "nt");
+        naive_matmul_tn(&at, &b, m, k, n, &mut want);
+        matmul_tn_threads(&at, &b, m, k, n, &mut got, 3);
+        assert_eq!(want, got, "tn");
+    }
+
+    #[test]
+    fn i8_gemm_matches_quant_reference() {
+        let (m, k, n) = (6, 5, 9);
+        let a: Vec<i8> = (0..m * k).map(|i| (i as i32 * 37 % 255 - 127) as i8).collect();
+        let b: Vec<i8> = (0..k * n).map(|i| (i as i32 * 91 % 255 - 127) as i8).collect();
+        let want = crate::kernels::quant::int8_gemm(&a, &b, m, k, n);
+        let mut got = vec![0i32; m * n];
+        int8_gemm_nn(&a, &b, m, k, n, &mut got);
+        assert_eq!(want, got);
+        int8_gemm_nn_threads(&a, &b, m, k, n, &mut got, 4);
+        assert_eq!(want, got);
+        // nt/tn via packing agree with the quant references too.
+        let mut pack = Vec::new();
+        let mut bt = vec![0i8; k * n];
+        pack_transpose_i8(&b, k, n, &mut bt);
+        int8_gemm_nt(&a, &bt, m, k, n, &mut got, &mut pack);
+        assert_eq!(want, got, "nt");
+        let mut at = vec![0i8; m * k];
+        pack_transpose_i8(&a, m, k, &mut at);
+        int8_gemm_tn(&at, &b, m, k, n, &mut got, &mut pack);
+        assert_eq!(want, got, "tn");
+    }
+
+    #[test]
+    fn pack_transpose_roundtrip() {
+        let src: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let mut t = vec![0f32; 12];
+        pack_transpose_f32(&src, 3, 4, &mut t);
+        assert_eq!(t[0], 0.0);
+        assert_eq!(t[1], 4.0); // (1,0) → col-major of (3,4)
+        let mut back = vec![0f32; 12];
+        pack_transpose_f32(&t, 4, 3, &mut back);
+        assert_eq!(src, back);
+    }
+
+    #[test]
+    fn thread_count_is_positive() {
+        assert!(thread_count() >= 1);
+        assert!(default_threads() >= 1);
+    }
+}

@@ -7,6 +7,16 @@
 //! added the small dense-linear-algebra core it needs: 2-D matmuls in the
 //! three layouts attention uses (`A·B`, `A·Bᵀ`, `Aᵀ·B`), transpose, and a
 //! numerically-stable row softmax with logsumexp.
+//!
+//! The matmuls now execute on the cache-blocked, row-parallel compute
+//! engine in [`linalg`] (bitwise-identical to the retained naive
+//! references at any `SAGEBWD_THREADS` — DESIGN.md §11); [`workspace`]
+//! provides the reusable scratch arena the hot loops thread through.
+
+pub mod linalg;
+pub mod workspace;
+
+pub use workspace::Workspace;
 
 use anyhow::{bail, Result};
 
@@ -97,8 +107,23 @@ impl Tensor {
         stats::rel_l2(&self.data, &other.data)
     }
 
+    /// Largest |x| — NaN-propagating: a single NaN element makes the
+    /// result NaN (and ∞ dominates), so non-finite activations cannot
+    /// evade ceiling checks built on this statistic (the fig1
+    /// `max_attn_logit` divergence contract, DESIGN.md §10).  A plain
+    /// `f32::max` fold would silently discard NaN.
     pub fn max_abs(&self) -> f32 {
-        self.data.iter().fold(0f32, |m, &x| m.max(x.abs()))
+        let mut m = 0f32;
+        for &x in &self.data {
+            let a = x.abs();
+            if a.is_nan() {
+                return f32::NAN;
+            }
+            if a > m {
+                m = a;
+            }
+        }
+        m
     }
 
     pub fn is_finite(&self) -> bool {
@@ -114,6 +139,10 @@ impl Tensor {
     }
 
     /// `self · other` for 2-D tensors: `(m,k) × (k,n) → (m,n)`.
+    ///
+    /// Executes on the cache-blocked (auto-parallel) engine in [`linalg`]
+    /// — bitwise-identical to the original naive triple loop at any
+    /// `SAGEBWD_THREADS` (linalg's determinism contract, DESIGN.md §11).
     pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
         let (m, k) = self.dims2()?;
         let (k2, n) = other.dims2()?;
@@ -121,16 +150,7 @@ impl Tensor {
             bail!("matmul: inner dims {k} vs {k2}");
         }
         let mut out = vec![0f32; m * n];
-        for i in 0..m {
-            let row = &self.data[i * k..(i + 1) * k];
-            let acc = &mut out[i * n..(i + 1) * n];
-            for (t, &a) in row.iter().enumerate() {
-                let brow = &other.data[t * n..(t + 1) * n];
-                for (o, &b) in acc.iter_mut().zip(brow) {
-                    *o += a * b;
-                }
-            }
-        }
+        linalg::matmul_into(&self.data, &other.data, m, k, n, &mut out);
         Tensor::from_vec(&[m, n], out)
     }
 
@@ -142,17 +162,7 @@ impl Tensor {
             bail!("matmul_nt: inner dims {k} vs {k2}");
         }
         let mut out = vec![0f32; m * n];
-        for i in 0..m {
-            let arow = &self.data[i * k..(i + 1) * k];
-            for j in 0..n {
-                let brow = &other.data[j * k..(j + 1) * k];
-                let mut acc = 0f32;
-                for (&a, &b) in arow.iter().zip(brow) {
-                    acc += a * b;
-                }
-                out[i * n + j] = acc;
-            }
-        }
+        linalg::matmul_nt_into(&self.data, &other.data, m, k, n, &mut out);
         Tensor::from_vec(&[m, n], out)
     }
 
@@ -164,16 +174,7 @@ impl Tensor {
             bail!("matmul_tn: inner dims {k} vs {k2}");
         }
         let mut out = vec![0f32; m * n];
-        for t in 0..k {
-            let arow = &self.data[t * m..(t + 1) * m];
-            let brow = &other.data[t * n..(t + 1) * n];
-            for (i, &a) in arow.iter().enumerate() {
-                let acc = &mut out[i * n..(i + 1) * n];
-                for (o, &b) in acc.iter_mut().zip(brow) {
-                    *o += a * b;
-                }
-            }
-        }
+        linalg::matmul_tn_into(&self.data, &other.data, m, k, n, &mut out);
         Tensor::from_vec(&[m, n], out)
     }
 
@@ -357,6 +358,19 @@ mod tests {
         assert!((a.cossim(&a) - 1.0).abs() < 1e-12);
         assert_eq!(a.rel_l2(&a), 0.0);
         assert_eq!(a.max_abs(), 4.0);
+    }
+
+    #[test]
+    fn max_abs_propagates_non_finite() {
+        // Regression for the fig1 telemetry path (DESIGN.md §10): the
+        // divergence ceiling compares against this statistic, and a
+        // NaN-discarding fold would let a non-finite activation evade it.
+        let mut a = Tensor::from_vec(&[3], vec![1.0, -2.0, 0.5]).unwrap();
+        assert_eq!(a.max_abs(), 2.0);
+        a.data[1] = f32::NAN;
+        assert!(a.max_abs().is_nan());
+        a.data[1] = f32::NEG_INFINITY;
+        assert_eq!(a.max_abs(), f32::INFINITY);
     }
 
     #[test]

@@ -1,0 +1,147 @@
+//! Reusable scratch arena for the native compute paths (DESIGN.md §11).
+//!
+//! The tiled attention kernels and the training engine used to allocate a
+//! fresh `Vec` for every tile / layer / step (`s_ij`, `p_ij`, quantized
+//! tiles, `dP`, MLP scratch, …).  A [`Workspace`] turns those into
+//! take/give pairs against per-type buffer pools, so after the first
+//! iteration the hot loops run allocation-free.
+//!
+//! Contract:
+//!
+//! * [`Workspace::take_f32`] (and the `i8`/`i32` twins) return a buffer of
+//!   *exactly* the requested length, zero-filled — callers can treat it
+//!   like a fresh `vec![0; len]`.
+//! * [`Workspace::give_f32`] returns a buffer to the pool.  Forgetting to
+//!   give a buffer back is not a leak (it just drops); giving back is what
+//!   enables reuse.
+//! * Pools are LIFO, so tight loops that take/give the same sizes settle
+//!   into steady-state reuse after one iteration.
+//! * A `Workspace` is deliberately `!Sync`-by-use: parallel regions give
+//!   each worker thread its own `Workspace` (they are cheap to create —
+//!   empty pools), which keeps the threading determinism contract trivial.
+
+use crate::tensor::Tensor;
+
+/// Pooled scratch buffers for f32 / i8 / i32 intermediates.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    f32s: Vec<Vec<f32>>,
+    i8s: Vec<Vec<i8>>,
+    i32s: Vec<Vec<i32>>,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Take a zero-filled f32 buffer of exactly `len`.
+    pub fn take_f32(&mut self, len: usize) -> Vec<f32> {
+        let mut b = self.f32s.pop().unwrap_or_default();
+        b.clear();
+        b.resize(len, 0.0);
+        b
+    }
+
+    pub fn give_f32(&mut self, b: Vec<f32>) {
+        self.f32s.push(b);
+    }
+
+    /// Take a zero-filled i8 buffer of exactly `len`.
+    pub fn take_i8(&mut self, len: usize) -> Vec<i8> {
+        let mut b = self.i8s.pop().unwrap_or_default();
+        b.clear();
+        b.resize(len, 0);
+        b
+    }
+
+    pub fn give_i8(&mut self, b: Vec<i8>) {
+        self.i8s.push(b);
+    }
+
+    /// Take a zero-filled i32 buffer of exactly `len`.
+    pub fn take_i32(&mut self, len: usize) -> Vec<i32> {
+        let mut b = self.i32s.pop().unwrap_or_default();
+        b.clear();
+        b.resize(len, 0);
+        b
+    }
+
+    pub fn give_i32(&mut self, b: Vec<i32>) {
+        self.i32s.push(b);
+    }
+
+    /// Take a zero-filled scratch [`Tensor`] (its `data` comes from the
+    /// f32 pool; return it with [`Self::give_tensor`]).
+    pub fn take_tensor(&mut self, shape: &[usize]) -> Tensor {
+        let len = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: self.take_f32(len),
+        }
+    }
+
+    pub fn give_tensor(&mut self, t: Tensor) {
+        self.give_f32(t.data);
+    }
+
+    /// Buffers currently pooled (diagnostics only).
+    pub fn pooled(&self) -> usize {
+        self.f32s.len() + self.i8s.len() + self.i32s.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zeroed_and_reuses_capacity() {
+        let mut ws = Workspace::new();
+        let mut a = ws.take_f32(8);
+        a[3] = 5.0;
+        let cap = a.capacity();
+        let ptr = a.as_ptr();
+        ws.give_f32(a);
+        assert_eq!(ws.pooled(), 1);
+        let b = ws.take_f32(4);
+        // Same allocation, shrunk view, zeroed contents.
+        assert_eq!(b.as_ptr(), ptr);
+        assert!(b.capacity() >= cap.min(4));
+        assert!(b.iter().all(|&x| x == 0.0));
+        assert_eq!(b.len(), 4);
+        assert_eq!(ws.pooled(), 0);
+    }
+
+    #[test]
+    fn grow_after_reuse_is_zeroed() {
+        let mut ws = Workspace::new();
+        let mut a = ws.take_i32(2);
+        a[0] = 7;
+        a[1] = 9;
+        ws.give_i32(a);
+        let b = ws.take_i32(6);
+        assert_eq!(b, vec![0; 6]);
+    }
+
+    #[test]
+    fn tensor_roundtrip() {
+        let mut ws = Workspace::new();
+        let t = ws.take_tensor(&[2, 3]);
+        assert_eq!(t.shape, vec![2, 3]);
+        assert_eq!(t.data, vec![0.0; 6]);
+        ws.give_tensor(t);
+        assert_eq!(ws.pooled(), 1);
+    }
+
+    #[test]
+    fn pools_are_per_type() {
+        let mut ws = Workspace::new();
+        ws.give_f32(vec![1.0]);
+        ws.give_i8(vec![1]);
+        ws.give_i32(vec![1]);
+        assert_eq!(ws.pooled(), 3);
+        let _ = ws.take_i8(1);
+        assert_eq!(ws.pooled(), 2);
+    }
+}

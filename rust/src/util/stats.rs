@@ -44,6 +44,19 @@ pub fn rel_l2(x: &[f32], y: &[f32]) -> f64 {
     (num / den).sqrt()
 }
 
+/// NaN-propagating max: a NaN operand poisons the result, where
+/// `f64::max` would silently discard it.  This is the one fold the
+/// divergence-telemetry chain (DESIGN.md §10) is allowed to use —
+/// `Tensor::max_abs` / `kernels::max_abs_logit` implement the same
+/// contract with early-exit scanning loops on their f32 hot paths.
+pub fn nan_max(a: f64, b: f64) -> f64 {
+    if a.is_nan() || b.is_nan() {
+        f64::NAN
+    } else {
+        a.max(b)
+    }
+}
+
 /// Root mean square.
 pub fn rms(x: &[f32]) -> f64 {
     if x.is_empty() {
@@ -149,6 +162,16 @@ mod tests {
     fn cossim_identical_is_one() {
         let x = vec![1.0, -2.0, 3.0];
         assert!((cossim(&x, &x) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nan_max_poisons_on_either_side() {
+        assert_eq!(nan_max(1.0, 2.0), 2.0);
+        assert_eq!(nan_max(2.0, 1.0), 2.0);
+        assert!(nan_max(f64::NAN, 1.0).is_nan());
+        assert!(nan_max(1.0, f64::NAN).is_nan());
+        assert_eq!(nan_max(f64::NEG_INFINITY, 3.0), 3.0);
+        assert_eq!(nan_max(f64::INFINITY, 3.0), f64::INFINITY);
     }
 
     #[test]

@@ -1,0 +1,271 @@
+//! Property tests for the cache-blocked compute engine
+//! (`rust/src/tensor/linalg.rs`): the determinism contract of DESIGN.md
+//! §11 — **blocked == naive == parallel, bitwise, at any thread count** —
+//! across odd/edge shapes and `SAGEBWD_THREADS ∈ {1, 4}`, plus the
+//! cross-language golden GEMM vectors emitted by
+//! `python -m compile.make_golden --gemm-only`.
+//!
+//! `SAGEBWD_THREADS` is process-global state: exactly one test here
+//! mutates it, behind [`ENV_LOCK`], and every *other* test in this binary
+//! uses the explicit `*_threads` entry points (which never read the
+//! environment) or stays below the auto-dispatch volume gate — so no
+//! concurrent env reads exist.  Any future test that touches the variable
+//! must hold the same lock.
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use sagebwd::kernels::quant;
+use sagebwd::tensor::{linalg, Tensor, Workspace};
+use sagebwd::util::json;
+use sagebwd::util::rng::Pcg64;
+
+/// Odd/edge shapes: 1×1, degenerate k=0 reduction, primes, exact
+/// register-block multiples, and non-multiple-of-block sizes.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (2, 0, 3),
+    (5, 3, 7),
+    (17, 13, 9),
+    (33, 7, 5),
+    (4, 4, 4),
+    (64, 32, 48),
+    (127, 63, 31),
+];
+
+fn randv(len: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed, 0x11A7);
+    let mut v = vec![0f32; len];
+    rng.fill_gaussian(&mut v, 2.0);
+    v
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn all_three_layouts_bitwise_equal_naive_across_shapes_and_threads() {
+    for &(m, k, n) in SHAPES {
+        let a = randv(m * k, 1 + (m * 31 + k) as u64);
+        let b = randv(k * n, 2 + (n * 17 + k) as u64);
+        let bt = randv(n * k, 3 + (m + n) as u64); // (n, k) operand for nt
+        let at = randv(k * m, 4 + (m * 7) as u64); // (k, m) operand for tn
+        let mut want = vec![0f32; m * n];
+        let mut got = vec![0f32; m * n];
+
+        linalg::naive_matmul(&a, &b, m, k, n, &mut want);
+        linalg::gemm_nn(&a, &b, m, k, n, &mut got);
+        assert_eq!(bits(&want), bits(&got), "nn blocked ({m},{k},{n})");
+        for threads in [1, 2, 4, 7] {
+            got.fill(f32::NAN); // stale contents must not leak through
+            linalg::matmul_threads(&a, &b, m, k, n, &mut got, threads);
+            assert_eq!(bits(&want), bits(&got), "nn threads={threads} ({m},{k},{n})");
+        }
+
+        linalg::naive_matmul_nt(&a, &bt, m, k, n, &mut want);
+        for threads in [1, 4] {
+            got.fill(f32::NAN);
+            linalg::matmul_nt_threads(&a, &bt, m, k, n, &mut got, threads);
+            assert_eq!(bits(&want), bits(&got), "nt threads={threads} ({m},{k},{n})");
+        }
+
+        linalg::naive_matmul_tn(&at, &b, m, k, n, &mut want);
+        for threads in [1, 4] {
+            got.fill(f32::NAN);
+            linalg::matmul_tn_threads(&at, &b, m, k, n, &mut got, threads);
+            assert_eq!(bits(&want), bits(&got), "tn threads={threads} ({m},{k},{n})");
+        }
+    }
+}
+
+#[test]
+fn k_zero_reduction_is_exactly_zero_not_garbage() {
+    // The k=0 "empty sum" case: every layout must produce an all-zero
+    // output (the naive references' defined behavior), never stale or
+    // uninitialized values.
+    let (m, k, n) = (3, 0, 5);
+    let a: Vec<f32> = vec![];
+    let b: Vec<f32> = vec![];
+    let mut out = vec![7.0f32; m * n];
+    linalg::gemm_nn(&a, &b, m, k, n, &mut out);
+    assert!(out.iter().all(|&x| x == 0.0), "blocked k=0 must zero the output");
+    out.fill(7.0);
+    linalg::matmul_threads(&a, &b, m, k, n, &mut out, 4);
+    assert!(out.iter().all(|&x| x == 0.0), "parallel k=0 must zero the output");
+    let mut out_i = vec![9i32; m * n];
+    linalg::int8_gemm_nn(&[], &[], m, k, n, &mut out_i);
+    assert!(out_i.iter().all(|&x| x == 0), "i8 k=0 must zero the output");
+}
+
+#[test]
+fn int8_gemm_bitwise_equal_reference_across_shapes_and_threads() {
+    for &(m, k, n) in SHAPES {
+        let a: Vec<i8> = (0..m * k).map(|i| (i as i32 * 37 % 255 - 127) as i8).collect();
+        let b: Vec<i8> = (0..k * n).map(|i| (i as i32 * 91 % 255 - 127) as i8).collect();
+        let want = quant::int8_gemm(&a, &b, m, k, n);
+        let mut got = vec![0i32; m * n];
+        linalg::int8_gemm_nn(&a, &b, m, k, n, &mut got);
+        assert_eq!(want, got, "i8 nn ({m},{k},{n})");
+        for threads in [1, 4] {
+            got.fill(-1);
+            linalg::int8_gemm_nn_threads(&a, &b, m, k, n, &mut got, threads);
+            assert_eq!(want, got, "i8 threads={threads} ({m},{k},{n})");
+        }
+        // Transposed layouts against their quant references.
+        let mut pack = Vec::new();
+        let mut bt = vec![0i8; k * n];
+        linalg::pack_transpose_i8(&b, k, n, &mut bt);
+        linalg::int8_gemm_nt(&a, &bt, m, k, n, &mut got, &mut pack);
+        assert_eq!(want, got, "i8 nt ({m},{k},{n})");
+        let mut at = vec![0i8; m * k];
+        linalg::pack_transpose_i8(&a, m, k, &mut at);
+        linalg::int8_gemm_tn(&at, &b, m, k, n, &mut got, &mut pack);
+        assert_eq!(want, got, "i8 tn ({m},{k},{n})");
+    }
+}
+
+/// Serializes every test that mutates `SAGEBWD_THREADS` (see module doc).
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+#[test]
+fn sagebwd_threads_env_is_respected_and_result_invariant() {
+    // The env knob CI drives (`SAGEBWD_THREADS ∈ {1, 4}`): thread_count()
+    // honors it, and the auto-dispatching entry points produce bitwise
+    // identical results under both settings.
+    let _guard = ENV_LOCK.lock().unwrap();
+    let saved = std::env::var("SAGEBWD_THREADS").ok();
+    // Big enough to cross PAR_MIN_VOLUME so the auto path really fans out.
+    let (m, k, n) = (256, 64, 512);
+    assert!(m * k * n >= linalg::PAR_MIN_VOLUME);
+    let a = randv(m * k, 90);
+    let b = randv(k * n, 91);
+    let mut out1 = vec![0f32; m * n];
+    let mut out4 = vec![0f32; m * n];
+
+    std::env::set_var("SAGEBWD_THREADS", "1");
+    assert_eq!(linalg::thread_count(), 1);
+    linalg::matmul_into(&a, &b, m, k, n, &mut out1);
+
+    std::env::set_var("SAGEBWD_THREADS", "4");
+    assert_eq!(linalg::thread_count(), 4);
+    linalg::matmul_into(&a, &b, m, k, n, &mut out4);
+
+    // 0 means serial (the conventional "off" value), and garbage values
+    // fall back to the default rather than panicking.
+    std::env::set_var("SAGEBWD_THREADS", "0");
+    assert_eq!(linalg::thread_count(), 1);
+    std::env::set_var("SAGEBWD_THREADS", "zero");
+    assert!(linalg::thread_count() >= 1);
+
+    match saved {
+        Some(v) => std::env::set_var("SAGEBWD_THREADS", v),
+        None => std::env::remove_var("SAGEBWD_THREADS"),
+    }
+    assert_eq!(bits(&out1), bits(&out4), "auto dispatch must be thread-count invariant");
+}
+
+#[test]
+fn tensor_matmuls_ride_the_engine_bitwise() {
+    // Tensor::matmul{,_nt,_tn} now route through the blocked engine; they
+    // must still equal the naive per-element order bit for bit.
+    let mut rng = Pcg64::new(8, 0);
+    let a = Tensor::randn(&[13, 6], 1.5, &mut rng.split(0));
+    let b = Tensor::randn(&[6, 9], 1.5, &mut rng.split(1));
+    let c = a.matmul(&b).unwrap();
+    let mut want = vec![0f32; 13 * 9];
+    linalg::naive_matmul(&a.data, &b.data, 13, 6, 9, &mut want);
+    assert_eq!(bits(&c.data), bits(&want));
+
+    let bt = Tensor::randn(&[9, 6], 1.5, &mut rng.split(2));
+    let cnt = a.matmul_nt(&bt).unwrap();
+    linalg::naive_matmul_nt(&a.data, &bt.data, 13, 6, 9, &mut want);
+    assert_eq!(bits(&cnt.data), bits(&want));
+
+    let at = Tensor::randn(&[6, 13], 1.5, &mut rng.split(3));
+    let ctn = at.matmul_tn(&b).unwrap();
+    linalg::naive_matmul_tn(&at.data, &b.data, 13, 6, 9, &mut want);
+    assert_eq!(bits(&ctn.data), bits(&want));
+}
+
+#[test]
+fn scratch_variants_ignore_stale_pack_contents() {
+    let (m, k, n) = (11, 6, 13);
+    let a = randv(m * k, 60);
+    let bt = randv(n * k, 61);
+    let mut want = vec![0f32; m * n];
+    let mut got = vec![0f32; m * n];
+    linalg::naive_matmul_nt(&a, &bt, m, k, n, &mut want);
+    let mut ws = Workspace::new();
+    let mut pack = ws.take_f32(999); // deliberately wrong-sized, stale
+    pack.iter_mut().for_each(|x| *x = f32::NAN);
+    linalg::matmul_nt_scratch(&a, &bt, m, k, n, &mut got, 3, &mut pack);
+    assert_eq!(bits(&want), bits(&got));
+    ws.give_f32(pack);
+}
+
+#[test]
+fn golden_gemm_vectors_match_bitwise() {
+    // Cross-language determinism: numpy computed these in the engine's
+    // documented accumulation order (make_golden.write_gemm_golden, which
+    // also asserts blocked==naive bitwise on the Python side).
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/data/golden_gemm.json");
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!(
+            "missing golden fixture {} ({e}) — run `python -m compile.make_golden --gemm-only`",
+            path.display()
+        )
+    });
+    let doc = json::parse(&text).unwrap();
+    for case in doc.get("f32_cases").unwrap().as_arr().unwrap() {
+        let m = case.get("m").unwrap().as_usize().unwrap();
+        let k = case.get("k").unwrap().as_usize().unwrap();
+        let n = case.get("n").unwrap().as_usize().unwrap();
+        let readv = |key: &str| -> Vec<f32> {
+            case.get(key).unwrap().as_arr().unwrap()
+                .iter().map(|v| v.as_f64().unwrap() as f32).collect()
+        };
+        let (a, b, c) = (readv("a"), readv("b"), readv("c"));
+        let mut got = vec![0f32; m * n];
+        linalg::gemm_nn(&a, &b, m, k, n, &mut got);
+        assert_eq!(bits(&c), bits(&got), "golden gemm blocked ({m},{k},{n})");
+        linalg::matmul_threads(&a, &b, m, k, n, &mut got, 4);
+        assert_eq!(bits(&c), bits(&got), "golden gemm parallel ({m},{k},{n})");
+    }
+    let int8 = doc.get("int8_case").unwrap();
+    let m = int8.get("m").unwrap().as_usize().unwrap();
+    let k = int8.get("k").unwrap().as_usize().unwrap();
+    let n = int8.get("n").unwrap().as_usize().unwrap();
+    let readi = |key: &str| -> Vec<i64> {
+        int8.get(key).unwrap().as_arr().unwrap()
+            .iter().map(|v| v.as_i64().unwrap()).collect()
+    };
+    let a: Vec<i8> = readi("a").into_iter().map(|v| v as i8).collect();
+    let b: Vec<i8> = readi("b").into_iter().map(|v| v as i8).collect();
+    let want: Vec<i32> = readi("c").into_iter().map(|v| v as i32).collect();
+    let mut got = vec![0i32; m * n];
+    linalg::int8_gemm_nn(&a, &b, m, k, n, &mut got);
+    assert_eq!(want, got, "golden i8 gemm");
+}
+
+#[test]
+fn partition_is_exhaustive_and_ordered() {
+    for n in [0usize, 1, 2, 7, 64, 1000] {
+        for parts in [1usize, 2, 3, 8, 1000] {
+            let ranges = linalg::partition(n, parts);
+            let mut expect = 0;
+            for &(lo, hi) in &ranges {
+                assert_eq!(lo, expect, "contiguous");
+                assert!(hi > lo, "non-empty");
+                expect = hi;
+            }
+            assert_eq!(expect, n, "covers 0..{n} with {parts} parts");
+            assert!(ranges.len() <= parts.max(1));
+            if n > 0 {
+                let max = ranges.iter().map(|&(a, b)| b - a).max().unwrap();
+                let min = ranges.iter().map(|&(a, b)| b - a).min().unwrap();
+                assert!(max - min <= 1, "balanced within 1");
+            }
+        }
+    }
+}

@@ -20,7 +20,7 @@ use sagebwd::model::blocks::{
 };
 use sagebwd::model::{AttnImpl, AttnVariant, Model, ModelDims};
 use sagebwd::runtime::{AttentionBackend, NativeBackend, Value};
-use sagebwd::tensor::{IntTensor, Tensor};
+use sagebwd::tensor::{IntTensor, Tensor, Workspace};
 use sagebwd::util::rng::Pcg64;
 
 const NORM_EPS: f32 = 1e-6;
@@ -134,7 +134,8 @@ fn gradcheck_swiglu_mlp() {
     let w_down = randn(&[64, 32], 0.3, &mut rng.split(3));
     let w = randn(&[8, 32], 1.0, &mut rng.split(4));
     let (_, cache) = mlp_fwd(&y, &w_gate, &w_up, &w_down).unwrap();
-    let (dy, dwg, dwu, dwd) = mlp_bwd(&w, &cache, &w_gate, &w_up, &w_down).unwrap();
+    let (dy, dwg, dwu, dwd) =
+        mlp_bwd(&w, &cache, &w_gate, &w_up, &w_down, &mut Workspace::new()).unwrap();
     let eval = |ts: &[Tensor]| {
         let (out, _) = mlp_fwd(&ts[0], &ts[1], &ts[2], &ts[3]).unwrap();
         weighted_sum(&out, &w)
