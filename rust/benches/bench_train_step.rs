@@ -137,6 +137,29 @@ fn main() {
         .expect("appending BENCH_train_step.json");
     let count = check_bench_json(path).expect("BENCH_train_step.json schema check");
     println!("{BENCH_JSON}: schema OK ({count} rows across all runs)");
+    record_trajectory_snapshot("train_step", path);
+}
+
+/// Snapshot the appended trajectory into the run registry: the file stays
+/// where CI expects it and its current bytes get a content address.
+fn record_trajectory_snapshot(bench: &str, path: &Path) {
+    use sagebwd::registry::{Registry, RunState};
+    use sagebwd::util::json::Json;
+    let snapshot = || -> anyhow::Result<String> {
+        let registry = Registry::open(sagebwd::DEFAULT_RESULTS_DIR)?;
+        let config = Json::from_pairs(vec![
+            ("bench", Json::from(bench)),
+            ("kind", Json::from("bench-trajectory")),
+        ]);
+        let mut run = registry.begin_run("bench", bench, config)?;
+        let hash = run.record_file(&format!("BENCH_{bench}.json"), path)?;
+        run.finish(RunState::Complete)?;
+        Ok(hash)
+    };
+    match snapshot() {
+        Ok(hash) => println!("registry: trajectory snapshot sha256 {}", &hash[..16]),
+        Err(e) => eprintln!("registry snapshot skipped: {e:#}"),
+    }
 }
 
 // ---------------------------------------------------------------------------

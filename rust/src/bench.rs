@@ -25,7 +25,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::util::json::{self, Json};
+use crate::util::json::{self, schema, Json};
 use crate::util::stats;
 
 /// One benchmark measurement series.
@@ -147,18 +147,13 @@ pub fn append_bench_json(path: &Path, bench: &str, threads_default: usize, rows:
             ("runs", Json::Arr(Vec::new())),
         ]),
     };
-    if doc.get("schema")?.as_str()? != BENCH_SCHEMA {
+    schema::expect_tag(&doc, BENCH_SCHEMA)
+        .with_context(|| format!("{}", path.display()))?;
+    let existing_bench = schema::str_field(&doc, "bench")?;
+    if existing_bench != bench {
         bail!(
-            "{} has schema {:?}, expected {BENCH_SCHEMA:?}",
+            "{} holds the {existing_bench:?} trajectory, refusing to append {bench:?} runs",
             path.display(),
-            doc.get("schema")?.as_str()?
-        );
-    }
-    if doc.get("bench")?.as_str()? != bench {
-        bail!(
-            "{} holds the {:?} trajectory, refusing to append {bench:?} runs",
-            path.display(),
-            doc.get("bench")?.as_str()?
         );
     }
     let run = Json::from_pairs(vec![
@@ -180,33 +175,25 @@ pub fn check_bench_json(path: &Path) -> Result<usize> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading {}", path.display()))?;
     let doc = json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
-    if doc.get("schema")?.as_str()? != BENCH_SCHEMA {
-        bail!("schema {:?} != {BENCH_SCHEMA:?}", doc.get("schema")?.as_str()?);
-    }
-    doc.get("bench")?.as_str()?;
-    let runs = doc.get("runs")?.as_arr()?;
+    schema::expect_tag(&doc, BENCH_SCHEMA)?;
+    schema::str_field(&doc, "bench")?;
+    let runs = schema::arr_field(&doc, "runs")?;
     let mut total = 0;
     for (ri, run) in runs.iter().enumerate() {
-        run.get("threads_default")?
-            .as_usize()
-            .with_context(|| format!("run {ri}: threads_default"))?;
-        let rows = run.get("rows")?.as_arr()?;
+        let run_ctx = || format!("run {ri}");
+        schema::usize_field(run, "threads_default").with_context(run_ctx)?;
+        let rows = schema::arr_field(run, "rows").with_context(run_ctx)?;
         for (i, row) in rows.iter().enumerate() {
             let ctx = || format!("run {ri} row {i}");
-            row.get("op")?.as_str().with_context(ctx)?;
-            row.get("shape")?.as_str().with_context(ctx)?;
-            row.get("variant")?.as_str().with_context(ctx)?;
-            row.get("threads")?.as_usize().with_context(ctx)?;
-            let ns = row.get("ns_per_iter")?.as_f64().with_context(ctx)?;
+            schema::str_field(row, "op").with_context(ctx)?;
+            schema::str_field(row, "shape").with_context(ctx)?;
+            schema::str_field(row, "variant").with_context(ctx)?;
+            schema::usize_field(row, "threads").with_context(ctx)?;
+            let ns = schema::f64_field(row, "ns_per_iter").with_context(ctx)?;
             if !(ns > 0.0) {
                 bail!("run {ri} row {i}: ns_per_iter {ns} must be positive");
             }
-            match row.get("tokens_per_s")? {
-                Json::Null => {}
-                other => {
-                    other.as_f64().with_context(ctx)?;
-                }
-            }
+            schema::nullable_f64_field(row, "tokens_per_s").with_context(ctx)?;
             total += 1;
         }
     }

@@ -114,12 +114,22 @@ impl Checkpoint {
             .and_then(|mut f| f.read_to_end(&mut buf))
             .with_context(|| format!("reading checkpoint {}", path.display()))?;
         let mut pos = 0usize;
+        // `n` is attacker-controlled for name/dim/data reads (it comes from
+        // length fields in the file), so the bound check must not itself
+        // overflow: `*pos + n` with n near usize::MAX would wrap and pass.
         let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
-            if *pos + n > buf.len() {
-                bail!("truncated checkpoint at byte {}", *pos);
-            }
-            let s = &buf[*pos..*pos + n];
-            *pos += n;
+            let end = pos
+                .checked_add(n)
+                .filter(|&end| end <= buf.len())
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "truncated checkpoint: need {n} bytes at offset {} but file has {}",
+                        *pos,
+                        buf.len()
+                    )
+                })?;
+            let s = &buf[*pos..end];
+            *pos = end;
             Ok(s)
         };
         let magic = take(&mut pos, 8)?;
@@ -151,18 +161,44 @@ impl Checkpoint {
             }
             other => bail!("corrupt rng_present flag {other} in {}", path.display()),
         };
-        let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
-        let mut tensors = Vec::with_capacity(count as usize);
+        let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        // Never size an allocation from an untrusted count alone: every
+        // tensor record occupies at least 16 bytes (name_len + ndim +
+        // data_len fields), so a count the remaining bytes cannot hold is
+        // corruption, not a 4-billion-entry checkpoint.
+        let remaining = buf.len() - pos;
+        if count > remaining / 16 {
+            bail!(
+                "corrupt checkpoint: claims {count} tensors but only {remaining} bytes remain"
+            );
+        }
+        let mut tensors = Vec::with_capacity(count);
         for _ in 0..count {
             let name_len = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
             let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())
                 .context("non-UTF-8 tensor name")?;
             let ndim = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+            if ndim > (buf.len() - pos) / 8 {
+                bail!(
+                    "tensor {name}: claims {ndim} dims but only {} bytes remain",
+                    buf.len() - pos
+                );
+            }
             let mut shape = Vec::with_capacity(ndim);
             for _ in 0..ndim {
                 shape.push(u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize);
             }
-            let data_bytes = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize;
+            // Keep the declared length in u64 until it has been checked
+            // against the file: `as usize` first would silently truncate a
+            // huge value on 32-bit targets and read the wrong span.
+            let data_bytes_u64 = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+            if data_bytes_u64 > (buf.len() - pos) as u64 {
+                bail!(
+                    "tensor {name}: claims {data_bytes_u64} data bytes but only {} remain",
+                    buf.len() - pos
+                );
+            }
+            let data_bytes = data_bytes_u64 as usize;
             if data_bytes % 4 != 0 {
                 bail!("tensor {name}: data length {data_bytes} not a multiple of 4");
             }
@@ -272,6 +308,85 @@ mod tests {
         std::fs::write(&path, &bytes[..bytes.len() - 7]).unwrap();
         assert!(Checkpoint::load(&path).is_err());
         std::fs::remove_file(&path).unwrap();
+    }
+
+    /// Valid one-tensor checkpoint bytes for corruption tests.
+    fn valid_bytes(name: &str) -> Vec<u8> {
+        let ckpt = Checkpoint {
+            step: 5,
+            tokens_seen: 320,
+            rng: None,
+            tensors: vec![("w".into(), Tensor::zeros(&[2, 3]))],
+        };
+        let path = temp(name);
+        ckpt.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        bytes
+    }
+
+    fn load_err(name: &str, bytes: &[u8]) -> String {
+        let path = temp(name);
+        std::fs::write(&path, bytes).unwrap();
+        let err = format!("{:#}", Checkpoint::load(&path).unwrap_err());
+        std::fs::remove_file(&path).unwrap();
+        err
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let mut bytes = valid_bytes("tg_src.ckpt");
+        bytes.extend_from_slice(b"extra junk");
+        let err = load_err("tg.ckpt", &bytes);
+        assert!(err.contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn name_len_overflow_rejected() {
+        // Patch the first tensor's name_len field (right after the u32
+        // tensor count) to u32::MAX; the name would run past EOF.
+        let mut bytes = valid_bytes("nl_src.ckpt");
+        let count_off = 8 + 8 + 8 + 1; // magic + step + tokens + rng_present(0)
+        let name_len_off = count_off + 4;
+        bytes[name_len_off..name_len_off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = load_err("nl.ckpt", &bytes);
+        assert!(err.contains("truncated"), "must fail cleanly, got: {err}");
+    }
+
+    #[test]
+    fn data_len_overflow_rejected() {
+        // Patch data_len_bytes to u64::MAX: with a naive `pos + n` bound
+        // check this wraps around and reads out of bounds (or panics);
+        // it must instead return a clear error.
+        let mut bytes = valid_bytes("dl_src.ckpt");
+        let count_off = 8 + 8 + 8 + 1;
+        // count(4) + name_len(4) + name("w",1) + ndim(4) + dims(2×8)
+        let data_len_off = count_off + 4 + 4 + 1 + 4 + 16;
+        bytes[data_len_off..data_len_off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        let err = load_err("dl.ckpt", &bytes);
+        assert!(
+            err.contains("data bytes") || err.contains("truncated"),
+            "must fail cleanly, got: {err}"
+        );
+    }
+
+    #[test]
+    fn huge_ndim_rejected() {
+        let mut bytes = valid_bytes("nd_src.ckpt");
+        let count_off = 8 + 8 + 8 + 1;
+        let ndim_off = count_off + 4 + 4 + 1; // + name_len + name("w")
+        bytes[ndim_off..ndim_off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = load_err("nd.ckpt", &bytes);
+        assert!(err.contains("dims"), "must fail before allocating, got: {err}");
+    }
+
+    #[test]
+    fn huge_tensor_count_rejected() {
+        let mut bytes = valid_bytes("tc_src.ckpt");
+        let count_off = 8 + 8 + 8 + 1;
+        bytes[count_off..count_off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = load_err("tc.ckpt", &bytes);
+        assert!(err.contains("tensors"), "must fail before allocating, got: {err}");
     }
 
     #[test]

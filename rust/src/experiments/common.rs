@@ -6,8 +6,10 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use crate::bench::Table;
+use crate::registry::{Registry, RunState};
 use crate::runtime::{AttentionBackend, Value};
 use crate::tensor::Tensor;
+use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 
 /// Attention trace outputs, index-aligned with aot.TRACE_OUTPUTS.
@@ -74,15 +76,30 @@ pub fn run_trace(
     })
 }
 
-/// Print a table and also write it as CSV under results/.
+/// Print a table and record it through the run registry: the CSV becomes
+/// a content-addressed object with its legacy `results/<name>.csv` path
+/// kept as a view, and the footer reports where it went plus the content
+/// hash (so a figure in a writeup can cite the exact table bytes).
 pub fn emit(table: &Table, results_dir: &str, name: &str) -> Result<()> {
     println!("{}", table.render());
-    let dir = Path::new(results_dir);
-    std::fs::create_dir_all(dir)?;
-    let path = dir.join(format!("{name}.csv"));
-    std::fs::write(&path, table.to_csv())
-        .with_context(|| format!("writing {}", path.display()))?;
-    println!("→ wrote {}", path.display());
+    let csv = table.to_csv();
+    let registry = Registry::open(results_dir).context("opening run registry")?;
+    let config = Json::from_pairs(vec![
+        ("kind", Json::from("table")),
+        ("name", Json::from(name)),
+    ]);
+    let mut run = registry.begin_run("table", name, config)?;
+    let path = Path::new(results_dir).join(format!("{name}.csv"));
+    let hash = run
+        .record_bytes(&format!("{name}.csv"), csv.as_bytes(), Some(&path))
+        .with_context(|| format!("recording {}", path.display()))?;
+    run.finish(RunState::Complete)?;
+    println!(
+        "→ wrote {} ({} bytes, sha256 {})",
+        path.display(),
+        csv.len(),
+        &hash[..16]
+    );
     Ok(())
 }
 

@@ -15,18 +15,29 @@
 //! budget.  Runs on either engine via `--backend native|xla`; the native
 //! engine needs nothing but this checkout.
 //!
+//! Every cell records through the run registry (DESIGN.md §12): the
+//! curve CSVs are content-addressed objects with legacy views at
+//! `results/fig1/<variant>_tps<tps>[_seed<s>]/`, and a cell whose config
+//! already has a *finished* manifest (complete or diverged) is a registry
+//! hit — its outcome is replayed from the manifest summary instead of
+//! retrained.  `--fresh` forces recomputation.
+//!
 //! Default `peak_lr` 0.1 is validated by the LR sweep in
 //! `python/compile/check_native_model.py --sim`: across seeds the
 //! no-QK-norm high-TPS arm crosses the ceiling by step ~3–6 of 16 and
 //! QK-norm arms stay ≥5× below it.
 
-use anyhow::Result;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
 
 use crate::bench::Table;
 use crate::config::TrainConfig;
 use crate::coordinator::{RunStatus, TrainerFactory};
 use crate::experiments::common::emit;
-use crate::telemetry::{run_dir, Log};
+use crate::registry::{Registry, RunManifest, RunState};
+use crate::telemetry::Log;
+use crate::util::json::{schema, Json};
 
 pub struct Outcome {
     pub variant: String,
@@ -37,24 +48,34 @@ pub struct Outcome {
     pub max_attn_logit: Option<f64>,
 }
 
-/// One (variant, TPS) training run; loss curve lands in
-/// `results/fig1/<variant>_tps<k>.csv`.
+/// Everything a training cell needs besides its own (variant, tps, seed)
+/// coordinates — shared by the fig1/fig4 harnesses and the grid
+/// orchestrator's workers (all fields are `Sync`).
+pub struct CellCtx<'a> {
+    pub factory: &'a TrainerFactory,
+    pub registry: &'a Registry,
+    pub results_dir: &'a str,
+    /// Manifest grouping label (`fig1`, `fig4`, ...) — not part of the
+    /// run key, so identical configs dedup across grids.
+    pub experiment: &'a str,
+    /// Ignore finished manifests and retrain.
+    pub fresh: bool,
+}
+
+/// The exact `TrainConfig` of one (variant, TPS, seed) cell — factored
+/// out so harnesses and the orchestrator derive identical run keys.
 ///
 /// `token_budget` is fixed across cells (the paper's comparison: 78B
 /// tokens at both TPS settings), so high-TPS cells take fewer steps.
-#[allow(clippy::too_many_arguments)]
-pub fn run_cell(
-    factory: &TrainerFactory,
-    results_dir: &str,
+pub fn cell_config(
     variant: &str,
     tps: u64,
     token_budget: u64,
     peak_lr: f64,
     seed: u64,
-    log: &Log,
-) -> Result<Outcome> {
+) -> TrainConfig {
     let steps = (token_budget / tps).max(2);
-    let cfg = TrainConfig {
+    TrainConfig {
         variant: variant.to_string(),
         steps,
         tokens_per_step: tps,
@@ -67,18 +88,123 @@ pub fn run_cell(
         clip_norm: 0.0,
         grad_noise_sigma: 0.0,
         ..TrainConfig::default()
-    };
-    let mut trainer = factory.trainer(cfg)?;
+    }
+}
+
+/// The cell's human label == its legacy curve-dir name.  Seed 0 keeps the
+/// historical `<variant>_tps<tps>` (CI plots read those paths); other
+/// seeds get a `_seed<s>` suffix.
+pub fn cell_label(variant: &str, tps: u64, seed: u64) -> String {
+    if seed == 0 {
+        format!("{variant}_tps{tps}")
+    } else {
+        format!("{variant}_tps{tps}_seed{seed}")
+    }
+}
+
+/// Canonical key material for a training cell: the full config plus the
+/// execution backend (a native run is not an XLA run).
+pub fn cell_key(factory: &TrainerFactory, cfg: &TrainConfig) -> (Json, String) {
+    let mut config = cfg.to_json();
+    config.set("backend", Json::from(factory.backend_name()));
+    let key = Registry::run_key(&config, factory.backend_name());
+    (config, key)
+}
+
+/// Rebuild a cell outcome from a finished manifest's summary — the
+/// registry-hit path.
+fn outcome_from_manifest(variant: &str, tps: u64, m: &RunManifest) -> Result<Outcome> {
+    let s = &m.summary;
+    let diverged_at = schema::nullable_f64_field(s, "diverged_at")
+        .context("manifest summary")?
+        .map(|v| v as u64);
+    Ok(Outcome {
+        variant: variant.to_string(),
+        tps,
+        final_loss: schema::nullable_f64_field(s, "final_loss").context("manifest summary")?,
+        diverged: diverged_at.is_some(),
+        diverged_at,
+        max_attn_logit: schema::nullable_f64_field(s, "max_attn_logit")
+            .context("manifest summary")?,
+    })
+}
+
+fn num_or_null(v: Option<f64>) -> Json {
+    v.map(Json::from).unwrap_or(Json::Null)
+}
+
+/// One (variant, TPS, seed) training run through the registry; curve
+/// views land in `results/fig1/<label>/<series>.csv` (fig4 reuses the
+/// same shared curve dirs, exactly like the legacy layout did).
+pub fn run_cell(
+    ctx: &CellCtx<'_>,
+    variant: &str,
+    tps: u64,
+    token_budget: u64,
+    peak_lr: f64,
+    seed: u64,
+    log: &Log,
+) -> Result<Outcome> {
+    let cfg = cell_config(variant, tps, token_budget, peak_lr, seed);
+    let label = cell_label(variant, tps, seed);
+    let (config, key) = cell_key(ctx.factory, &cfg);
+
+    if !ctx.fresh {
+        if let Some(m) = ctx.registry.load_run(&key)? {
+            if m.status.is_finished() {
+                log.info(&format!(
+                    "registry hit [{}]: {label} already {} — skipping",
+                    &key[..16],
+                    m.status.as_str()
+                ));
+                // Re-materialize missing legacy views (plots keep working
+                // even if results/ was partially cleaned); best-effort —
+                // the manifest is the source of truth.
+                for a in &m.artifacts {
+                    if let Some(view) = &a.view {
+                        if let Err(e) = ctx.registry.write_view(&a.sha256, Path::new(view)) {
+                            log.debug(&format!("view {view} not restored: {e:#}"));
+                        }
+                    }
+                }
+                return outcome_from_manifest(variant, tps, &m);
+            }
+        }
+    }
+
+    let mut run = ctx.registry.begin_run_keyed(ctx.experiment, &label, config, key)?;
+    let mut trainer = ctx.factory.trainer(cfg)?;
     let mut batches = trainer.make_batcher(512, 4)?;
-    let report = trainer.run(&mut batches, log)?;
-    let dir = run_dir(results_dir, "fig1")?;
-    // One CSV per curve: fig1/<variant>_tps<tps>.{train_loss,max_attn_logit,...}.csv
-    let curve_dir = dir.join(format!("{variant}_tps{tps}"));
-    trainer.metrics.flush_csv(&curve_dir)?;
+    let report = match trainer.run(&mut batches, log) {
+        Ok(r) => r,
+        Err(e) => {
+            // Leave a `failed` manifest so `grid status` names the cell;
+            // the original error is what the caller sees.
+            let _ = run.finish(RunState::Failed);
+            return Err(e);
+        }
+    };
+
+    let view_dir = PathBuf::from(ctx.results_dir).join("fig1").join(&label);
+    run.record_metrics(&trainer.metrics, &view_dir)?;
+
     let diverged_at = match report.status {
         RunStatus::Diverged { at_step } => Some(at_step),
         RunStatus::Completed => None,
     };
+    run.set_summary(Json::from_pairs(vec![
+        ("diverged_at", num_or_null(diverged_at.map(|s| s as f64))),
+        ("final_loss", num_or_null(report.final_loss)),
+        ("max_attn_logit", num_or_null(report.max_attn_logit)),
+        ("steps_done", Json::from(report.steps_done as i64)),
+        ("tokens_seen", Json::from(report.tokens_seen as i64)),
+    ]));
+    run.finish(if diverged_at.is_some() {
+        RunState::Diverged
+    } else {
+        RunState::Complete
+    })?;
+
     Ok(Outcome {
         variant: variant.to_string(),
         tps,
@@ -89,25 +215,9 @@ pub fn run_cell(
     })
 }
 
-/// The full Figure-1 grid.
-pub fn run(
-    factory: &TrainerFactory,
-    results_dir: &str,
-    token_budget: u64,
-    tps_lo: u64,
-    tps_hi: u64,
-    peak_lr: f64,
-    seed: u64,
-) -> Result<Vec<Outcome>> {
-    let log = Log::new(true);
-    println!(
-        "Figure 1 [{} engine]: pretraining loss, SageBwd vs FPA at TPS_hi={tps_hi} / \
-         TPS_lo={tps_lo} (fixed budget {token_budget} tokens per cell, peak_lr {peak_lr})",
-        factory.backend_name(),
-    );
-    println!("(paper: hi-TPS gap 2.640 vs 2.586; lo-TPS parity 2.561 vs 2.563; no-QK-norm diverges at hi TPS)\n");
-    let mut outcomes = Vec::new();
-    let grid: &[(&str, u64)] = &[
+/// The Figure-1 arm list: (variant, tps) per cell.
+pub fn grid(tps_lo: u64, tps_hi: u64) -> Vec<(&'static str, u64)> {
+    vec![
         // Figure 1a (high TPS): the gap + the divergence case.
         ("fpa_qknorm", tps_hi),
         ("sage_qknorm", tps_hi),
@@ -117,11 +227,41 @@ pub fn run(
         ("sage_qknorm", tps_lo),
         ("sage_noqknorm", tps_lo),
         ("fpa_noqknorm", tps_lo),
-    ];
-    for &(variant, tps) in grid {
+    ]
+}
+
+/// The full Figure-1 grid.
+#[allow(clippy::too_many_arguments)]
+pub fn run(
+    factory: &TrainerFactory,
+    results_dir: &str,
+    token_budget: u64,
+    tps_lo: u64,
+    tps_hi: u64,
+    peak_lr: f64,
+    seed: u64,
+    fresh: bool,
+) -> Result<Vec<Outcome>> {
+    let log = Log::new(true);
+    println!(
+        "Figure 1 [{} engine]: pretraining loss, SageBwd vs FPA at TPS_hi={tps_hi} / \
+         TPS_lo={tps_lo} (fixed budget {token_budget} tokens per cell, peak_lr {peak_lr})",
+        factory.backend_name(),
+    );
+    println!("(paper: hi-TPS gap 2.640 vs 2.586; lo-TPS parity 2.561 vs 2.563; no-QK-norm diverges at hi TPS)\n");
+    let registry = Registry::open(results_dir)?;
+    let ctx = CellCtx {
+        factory,
+        registry: &registry,
+        results_dir,
+        experiment: "fig1",
+        fresh,
+    };
+    let mut outcomes = Vec::new();
+    for (variant, tps) in grid(tps_lo, tps_hi) {
         log.info(&format!("--- fig1 cell: {variant} @ {tps} tok/step ---"));
         outcomes.push(run_cell(
-            factory, results_dir, variant, tps, token_budget, peak_lr, seed, &log,
+            &ctx, variant, tps, token_budget, peak_lr, seed, &log,
         )?);
     }
 

@@ -11,8 +11,26 @@ use anyhow::Result;
 use crate::bench::Table;
 use crate::coordinator::TrainerFactory;
 use crate::experiments::common::emit;
-use crate::experiments::fig1_tps::{run_cell, Outcome};
+use crate::experiments::fig1_tps::{run_cell, CellCtx, Outcome};
+use crate::registry::Registry;
 use crate::telemetry::Log;
+
+/// The Figure-4 arm list: (variant, tps) per cell, all QK-normed.
+pub fn grid(tps_lo: u64, tps_hi: u64) -> Vec<(&'static str, u64)> {
+    let variants = [
+        "fpa_qknorm",        // FPA reference
+        "sage_qknorm_nosm",  // no smoothing
+        "sage_qknorm",       // K-smoothing (paper default)
+        "sage_qknorm_qksm",  // Q+K smoothing
+    ];
+    let mut cells = Vec::new();
+    for &tps in &[tps_hi, tps_lo] {
+        for variant in variants {
+            cells.push((variant, tps));
+        }
+    }
+    cells
+}
 
 #[allow(clippy::too_many_arguments)]
 pub fn run(
@@ -23,6 +41,7 @@ pub fn run(
     tps_hi: u64,
     peak_lr: f64,
     seed: u64,
+    fresh: bool,
 ) -> Result<Vec<Outcome>> {
     let log = Log::new(true);
     println!(
@@ -30,23 +49,24 @@ pub fn run(
         factory.backend_name()
     );
     println!("(paper: K-smoothing required even at 260K TPS; Q-smoothing no consistent benefit)\n");
-    let variants = [
-        "fpa_qknorm",        // FPA reference
-        "sage_qknorm_nosm",  // no smoothing
-        "sage_qknorm",       // K-smoothing (paper default)
-        "sage_qknorm_qksm",  // Q+K smoothing
-    ];
+    let registry = Registry::open(results_dir)?;
+    let ctx = CellCtx {
+        factory,
+        registry: &registry,
+        results_dir,
+        experiment: "fig4",
+        fresh,
+    };
     let mut outcomes = Vec::new();
-    for &tps in &[tps_hi, tps_lo] {
-        for variant in variants {
-            log.info(&format!("--- fig4 cell: {variant} @ {tps} tok/step ---"));
-            let o = run_cell(
-                factory, results_dir, variant, tps, token_budget, peak_lr, seed, &log,
-            )?;
-            // Curve CSVs live in results/fig1/<variant>_tps<tps>/ already;
-            // fig4 re-homes the comparison via its summary table only.
-            outcomes.push(o);
-        }
+    for (variant, tps) in grid(tps_lo, tps_hi) {
+        log.info(&format!("--- fig4 cell: {variant} @ {tps} tok/step ---"));
+        // Curve views live in results/fig1/<variant>_tps<tps>/ (shared
+        // with fig1, like the legacy layout); the two overlapping arms
+        // (fpa_qknorm, sage_qknorm) are registry hits when fig1 already
+        // ran them — identical config ⇒ identical run key.
+        outcomes.push(run_cell(
+            &ctx, variant, tps, token_budget, peak_lr, seed, &log,
+        )?);
     }
     let mut table = Table::new(&[
         "smoothing",

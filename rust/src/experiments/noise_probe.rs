@@ -14,13 +14,17 @@
 //! may close part of) the Sage–FPA gap, mirroring what lowering TPS does.
 //! Engine-agnostic via [`TrainerFactory`] (`--backend native|xla`).
 
+use std::path::PathBuf;
+
 use anyhow::Result;
 
 use crate::bench::Table;
 use crate::config::TrainConfig;
 use crate::coordinator::{RunStatus, TrainerFactory};
 use crate::experiments::common::emit;
-use crate::telemetry::{run_dir, Log};
+use crate::registry::{Registry, RunState};
+use crate::telemetry::Log;
+use crate::util::json::{schema, Json};
 
 pub struct Outcome {
     pub label: String,
@@ -34,6 +38,7 @@ pub fn run(
     token_budget: u64,
     tps: u64,
     seed: u64,
+    fresh: bool,
 ) -> Result<Vec<Outcome>> {
     let log = Log::new(true);
     println!(
@@ -41,6 +46,7 @@ pub fn run(
         factory.backend_name()
     );
     println!("(hypothesis: noise masks quantization bias — lowering TPS in disguise)\n");
+    let registry = Registry::open(results_dir)?;
     let steps = (token_budget / tps).max(2);
     let cells: &[(&str, f64)] = &[
         ("fpa_qknorm", 0.0),
@@ -70,15 +76,55 @@ pub fn run(
             grad_noise_sigma: sigma,
             ..TrainConfig::default()
         };
+        let mut config = cfg.to_json();
+        config.set("backend", Json::from(factory.backend_name()));
+        let key = Registry::run_key(&config, factory.backend_name());
+        if !fresh {
+            if let Some(m) = registry.load_run(&key)? {
+                if m.status.is_finished() {
+                    log.info(&format!(
+                        "registry hit [{}]: {label} already {} — skipping",
+                        &key[..16],
+                        m.status.as_str()
+                    ));
+                    outcomes.push(Outcome {
+                        label,
+                        final_loss: schema::nullable_f64_field(&m.summary, "final_loss")?,
+                        diverged: m.status == RunState::Diverged,
+                    });
+                    continue;
+                }
+            }
+        }
+        let mut run = registry.begin_run_keyed("noise_probe", &label, config, key)?;
         let mut trainer = factory.trainer(cfg)?;
         let mut batches = trainer.make_batcher(512, 4)?;
-        let report = trainer.run(&mut batches, &log)?;
-        let dir = run_dir(results_dir, "noise_probe")?;
-        trainer.metrics.flush_csv(&dir.join(&label))?;
+        let report = match trainer.run(&mut batches, &log) {
+            Ok(r) => r,
+            Err(e) => {
+                let _ = run.finish(RunState::Failed);
+                return Err(e);
+            }
+        };
+        let view_dir = PathBuf::from(results_dir).join("noise_probe").join(&label);
+        run.record_metrics(&trainer.metrics, &view_dir)?;
+        let diverged = matches!(report.status, RunStatus::Diverged { .. });
+        run.set_summary(Json::from_pairs(vec![
+            (
+                "final_loss",
+                report.final_loss.map(Json::from).unwrap_or(Json::Null),
+            ),
+            ("grad_noise_sigma", Json::from(sigma)),
+        ]));
+        run.finish(if diverged {
+            RunState::Diverged
+        } else {
+            RunState::Complete
+        })?;
         outcomes.push(Outcome {
             label,
             final_loss: report.final_loss,
-            diverged: matches!(report.status, RunStatus::Diverged { .. }),
+            diverged,
         });
     }
 

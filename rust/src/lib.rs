@@ -24,6 +24,9 @@
 //! * [`data`]        — synthetic-corpus substrate: generator, byte
 //!   tokenizer, deterministic shardable batcher with prefetch.
 //! * [`experiments`] — one harness per paper table/figure.
+//! * [`registry`]    — content-addressed run registry: pure-std SHA-256,
+//!   the `sagebwd-run-v1` manifest schema, the object store with legacy
+//!   views, and the resumable grid orchestrator (`sagebwd grid`).
 //! * [`tensor`], [`util`], [`telemetry`], [`cli`], [`bench`] — substrates
 //!   built in-repo (offline environment: no serde/clap/criterion/rand).
 
@@ -35,6 +38,7 @@ pub mod data;
 pub mod experiments;
 pub mod kernels;
 pub mod model;
+pub mod registry;
 pub mod runtime;
 pub mod telemetry;
 pub mod tensor;

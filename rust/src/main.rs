@@ -12,6 +12,7 @@
 //! sagebwd inspect --artifact NAME [--stats]             manifest / HLO op stats
 //! sagebwd dist-train [--workers N --steps S --tps T]     data-parallel training
 //! sagebwd noise-probe [--budget B --tps T]               §4.3 noise-injection probe
+//! sagebwd grid run|status|resume --exp fig1|fig4 [...]   resumable registry grid
 //! sagebwd plot --csv a.csv[,b.csv] | --run DIR[,DIR]     ASCII metric curves
 //! sagebwd bench-check FILE.json                          BENCH_*.json schema check
 //! ```
@@ -25,16 +26,19 @@
 
 use anyhow::{bail, Result};
 
+use sagebwd::bench::Table;
 use sagebwd::cli::Args;
 use sagebwd::config::TrainConfig;
 use sagebwd::coordinator::TrainerFactory;
 use sagebwd::experiments::{ds_rms, fig1_tps, fig23_speed, fig4_ablation, fig56_layers,
                            noise_probe, table1_sigma, table2_trace};
+use sagebwd::registry::{orchestrator, Registry, RunState};
 use sagebwd::runtime::{make_backend, Runtime};
 use sagebwd::telemetry::{run_dir, Log};
+use sagebwd::util::json::Json;
 use sagebwd::{DEFAULT_ARTIFACTS_DIR, DEFAULT_RESULTS_DIR};
 
-const USAGE: &str = "usage: sagebwd <train|dist-train|table1|table2|ds-rms|fig1|fig4|fig23|fig56|noise-probe|plot|inspect|bench-check> [options]
+const USAGE: &str = "usage: sagebwd <train|dist-train|table1|table2|ds-rms|fig1|fig4|fig23|fig56|noise-probe|grid|plot|inspect|bench-check> [options]
 common options:
   --backend native|xla   executor for every harness, training included
                          (default native: in-process CPU kernels + native
@@ -43,13 +47,23 @@ common options:
   --artifacts DIR        artifact directory for the xla backend
                          (default artifacts/, built by `make artifacts`)
   --results DIR          output directory (default results/)
+  --fresh                retrain cells whose registry manifests are already
+                         finished (fig1 / fig4 / noise-probe / grid)
+grid orchestrator (DESIGN.md §12):
+  sagebwd grid run    --exp fig1|fig4 [--budget B --tps-lo L --tps-hi H
+                      --lr LR --seeds 0,1,... --jobs J --limit N --fresh]
+  sagebwd grid status --exp ... same grid options; prints each cell's
+                      registry state without executing anything
+  sagebwd grid resume same as run, but errors if no registry exists yet
+  finished cells (complete or diverged) are skipped by key; --jobs J runs
+  J cells concurrently, splitting the SAGEBWD_THREADS budget between them
 environment:
   SAGEBWD_THREADS=N      worker threads for the native compute engine
                          (default: available parallelism; 0 or 1 forces
                          the serial path; results are bitwise-identical
                          at any setting)
-training subcommands (train, fig1, fig4, noise-probe) run on either backend;
-only dist-train still requires --backend xla; run `make results` to
+training subcommands (train, fig1, fig4, noise-probe, grid) run on either
+backend; only dist-train still requires --backend xla; run `make results` to
 regenerate every table and figure; `bench-check FILE.json` validates a
 BENCH_*.json perf-trajectory file emitted by the cargo bench harnesses";
 
@@ -105,7 +119,8 @@ fn run() -> Result<()> {
             let tps_hi = args.u64_or("tps-hi", 8192)?;
             let peak_lr = args.f64_or("lr", fig_default_lr(args.str_or("backend", "native")))?;
             let seed = args.u64_or("seed", 0)?;
-            fig1_tps::run(&factory()?, &results, budget, tps_lo, tps_hi, peak_lr, seed)?;
+            fig1_tps::run(&factory()?, &results, budget, tps_lo, tps_hi, peak_lr, seed,
+                          args.flag("fresh"))?;
             Ok(())
         }
         "fig4" => {
@@ -114,9 +129,11 @@ fn run() -> Result<()> {
             let tps_hi = args.u64_or("tps-hi", 8192)?;
             let peak_lr = args.f64_or("lr", fig_default_lr(args.str_or("backend", "native")))?;
             let seed = args.u64_or("seed", 0)?;
-            fig4_ablation::run(&factory()?, &results, budget, tps_lo, tps_hi, peak_lr, seed)?;
+            fig4_ablation::run(&factory()?, &results, budget, tps_lo, tps_hi, peak_lr, seed,
+                               args.flag("fresh"))?;
             Ok(())
         }
+        "grid" => cmd_grid(&args, factory()?, &results),
         "fig23" => {
             fig23_speed::run(backend()?.as_mut(), &results, args.flag("quick"))?;
             Ok(())
@@ -163,7 +180,7 @@ fn run() -> Result<()> {
             let budget = args.u64_or("budget", 65_536)?;
             let tps = args.u64_or("tps", 8192)?;
             let seed = args.u64_or("seed", 0)?;
-            noise_probe::run(&factory()?, &results, budget, tps, seed)?;
+            noise_probe::run(&factory()?, &results, budget, tps, seed, args.flag("fresh"))?;
             Ok(())
         }
         "plot" => cmd_plot(&args),
@@ -252,6 +269,99 @@ fn cmd_plot(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `grid <run|status|resume>` — the resumable experiment orchestrator
+/// over the content-addressed run registry (DESIGN.md §12).
+fn cmd_grid(args: &Args, factory: TrainerFactory, results: &str) -> Result<()> {
+    let action = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| anyhow::anyhow!("usage: sagebwd grid <run|status|resume> [options]"))?;
+    let exp = args.str_or("exp", "fig1");
+    let budget = args.u64_or("budget", 131_072)?;
+    let tps_lo = args.u64_or("tps-lo", 1024)?;
+    let tps_hi = args.u64_or("tps-hi", 8192)?;
+    let peak_lr = args.f64_or("lr", fig_default_lr(args.str_or("backend", "native")))?;
+    let seeds = orchestrator::parse_seeds(args.str_or("seeds", "0"))?;
+    let jobs = args.usize_or("jobs", 1)?;
+    let limit = args.usize_or("limit", 0)?;
+    let spec = orchestrator::grid_spec(exp, budget, tps_lo, tps_hi, peak_lr, &seeds)?;
+    let registry_dir = std::path::Path::new(results).join("registry");
+
+    match action {
+        "status" => {
+            if !registry_dir.is_dir() {
+                println!("no registry under {results} — nothing recorded yet");
+                return Ok(());
+            }
+            let registry = Registry::open(results)?;
+            let statuses = orchestrator::status(&factory, &registry, &spec)?;
+            let mut table = Table::new(&["cell", "key", "state"]);
+            let mut pending = 0usize;
+            for st in &statuses {
+                let state = match st.state {
+                    Some(s) => s.as_str().to_string(),
+                    None => {
+                        pending += 1;
+                        "pending".to_string()
+                    }
+                };
+                table.row(vec![st.label.clone(), st.key[..16].to_string(), state]);
+            }
+            println!("{}", table.render());
+            let finished = statuses
+                .iter()
+                .filter(|s| s.state.map(RunState::is_finished).unwrap_or(false))
+                .count();
+            println!(
+                "{exp} grid [{} backend]: {} cells, {finished} finished, {pending} pending, \
+                 {} other",
+                factory.backend_name(),
+                statuses.len(),
+                statuses.len() - finished - pending
+            );
+            Ok(())
+        }
+        "run" | "resume" => {
+            if action == "resume" && !registry_dir.is_dir() {
+                bail!(
+                    "nothing to resume: no registry under {results} — \
+                     start one with `sagebwd grid run`"
+                );
+            }
+            let registry = Registry::open(results)?;
+            let log = Log::new(true);
+            let report = orchestrator::run(
+                &factory,
+                &registry,
+                results,
+                &spec,
+                jobs,
+                limit,
+                args.flag("fresh"),
+                &log,
+            )?;
+            println!(
+                "\n{exp} grid: {} cells — {} skipped (registry hits), {} ran, \
+                 {} left pending, {} failed",
+                report.total,
+                report.skipped,
+                report.ran,
+                report.remaining,
+                report.failed.len()
+            );
+            for (label, err) in &report.failed {
+                eprintln!("FAILED {label}: {err}");
+            }
+            if !report.failed.is_empty() {
+                bail!("{} grid cell(s) failed", report.failed.len());
+            }
+            Ok(())
+        }
+        other => bail!("unknown grid action {other:?}; usage: sagebwd grid <run|status|resume>"),
+    }
+}
+
 fn cmd_train(args: &Args, factory: TrainerFactory, results: &str) -> Result<()> {
     let cfg = if let Some(path) = args.opt("config") {
         TrainConfig::load(std::path::Path::new(path))?
@@ -274,15 +384,45 @@ fn cmd_train(args: &Args, factory: TrainerFactory, results: &str) -> Result<()> 
     };
     let run_name = args.str_or("run-name", &format!("train_{}_tps{}", cfg.variant, cfg.tokens_per_step)).to_string();
     let log = Log::new(args.flag("verbose"));
+    // run_dir versions on collision (train_x, train_x_2, ...), so a rerun
+    // never interleaves CSVs with an earlier run's directory.
+    let dir = run_dir(results, &run_name)?;
+    let registry = Registry::open(results)?;
+    let mut config = cfg.to_json();
+    config.set("backend", Json::from(factory.backend_name()));
+    let mut run = registry.begin_run("train", &run_name, config)?;
     let mut trainer = factory.trainer(cfg.clone())?;
     let mut batches = trainer.make_batcher(512, 4)?;
-    let report = trainer.run(&mut batches, &log)?;
-    let dir = run_dir(results, &run_name)?;
-    trainer.metrics.flush_csv(&dir)?;
-    cfg.save(&dir.join("config.json"))?;
+    let report = match trainer.run(&mut batches, &log) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = run.finish(RunState::Failed);
+            return Err(e);
+        }
+    };
+    run.record_metrics(&trainer.metrics, &dir)?;
+    run.record_bytes(
+        "config.json",
+        cfg.to_json().to_string().as_bytes(),
+        Some(&dir.join("config.json")),
+    )?;
     trainer.save_checkpoint(&dir.join("final.ckpt"))?;
+    run.record_file("final.ckpt", &dir.join("final.ckpt"))?;
+    run.set_summary(Json::from_pairs(vec![
+        (
+            "final_loss",
+            report.final_loss.map(Json::from).unwrap_or(Json::Null),
+        ),
+        ("steps_done", Json::from(report.steps_done as i64)),
+        ("tokens_seen", Json::from(report.tokens_seen as i64)),
+    ]));
+    let key16 = run.key16().to_string();
+    run.finish(match report.status {
+        sagebwd::coordinator::RunStatus::Diverged { .. } => RunState::Diverged,
+        sagebwd::coordinator::RunStatus::Completed => RunState::Complete,
+    })?;
     log.info(&format!(
-        "done [{} engine]: {:?}, final loss {:?}, curves in {}",
+        "done [{} engine]: {:?}, final loss {:?}, curves in {} (registry run {key16})",
         trainer.engine_name(),
         report.status,
         report.final_loss,

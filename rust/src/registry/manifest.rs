@@ -1,0 +1,284 @@
+//! The `sagebwd-run-v1` run manifest — one versioned schema for every
+//! experiment's products (DESIGN.md §12).
+//!
+//! A manifest lives at `registry/runs/<key16>/manifest.json` and names:
+//! the experiment + human label, the full run configuration (canonical
+//! JSON, the hash preimage), the content hash that keys the run, the
+//! code/schema versions, a lifecycle status, the named artifact refs
+//! (content hash + size + optional legacy view path), and a small
+//! summary object (final loss, divergence step, peak logit, ...).
+//!
+//! Serialization is deterministic end to end (`util::json` objects are
+//! BTreeMaps; artifact refs keep recording order), so a manifest's bytes
+//! are a pure function of the run — the resume test asserts completed
+//! manifests are byte-identical across `grid resume`.  Parsing is the
+//! third consumer of the shared `util::json::schema` checkers (after
+//! `BENCH_*.json` and the artifact manifests).
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, schema, Json};
+
+/// Schema tag: bump when the manifest layout changes (old manifests then
+/// fail parsing loudly instead of being half-read).
+pub const RUN_SCHEMA: &str = "sagebwd-run-v1";
+
+/// Run lifecycle.  `Complete` and `Diverged` are *finished* outcomes
+/// (divergence is a first-class experimental result here — the fig1
+/// no-QK-norm arms are supposed to cross the `max_attn_logit` ceiling),
+/// so the orchestrator skips both on resume.  `Pending` (no manifest
+/// yet), `Running` (stale crash leftover), and `Failed` are re-runnable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunState {
+    Pending,
+    Running,
+    Complete,
+    Failed,
+    Diverged,
+}
+
+impl RunState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RunState::Pending => "pending",
+            RunState::Running => "running",
+            RunState::Complete => "complete",
+            RunState::Failed => "failed",
+            RunState::Diverged => "diverged",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<RunState> {
+        Ok(match s {
+            "pending" => RunState::Pending,
+            "running" => RunState::Running,
+            "complete" => RunState::Complete,
+            "failed" => RunState::Failed,
+            "diverged" => RunState::Diverged,
+            other => bail!("unknown run status {other:?}"),
+        })
+    }
+
+    /// Finished outcomes are skipped by `grid run`/`resume`.
+    pub fn is_finished(self) -> bool {
+        matches!(self, RunState::Complete | RunState::Diverged)
+    }
+}
+
+/// One named product of a run, stored content-addressed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactRef {
+    /// Logical name within the run, e.g. `train_loss.csv`, `final.ckpt`.
+    pub name: String,
+    /// Content hash — the object lives at `registry/objects/<sha256>`.
+    pub sha256: String,
+    pub bytes: u64,
+    /// Legacy view path (symlink or copy) kept so existing plot/CI
+    /// tooling finds the file where it always did; `None` for artifacts
+    /// that only live in the store.
+    pub view: Option<String>,
+}
+
+impl ArtifactRef {
+    fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("name", Json::from(self.name.as_str())),
+            ("sha256", Json::from(self.sha256.as_str())),
+            ("bytes", Json::from(self.bytes as i64)),
+            (
+                "view",
+                self.view.as_deref().map(Json::from).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<ArtifactRef> {
+        Ok(ArtifactRef {
+            name: schema::str_field(j, "name")?.to_string(),
+            sha256: schema::str_field(j, "sha256")?.to_string(),
+            bytes: schema::u64_field(j, "bytes")?,
+            view: schema::opt_str_field(j, "view")?.map(str::to_string),
+        })
+    }
+}
+
+/// Parsed (or under-construction) run manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunManifest {
+    /// Grouping label (`fig1`, `fig4`, `noise_probe`, `train`, `bench`,
+    /// `table`, ...) — *not* part of the run key: identical configs are
+    /// one run no matter which grid asked for them.
+    pub experiment: String,
+    /// Human-readable cell label, e.g. `sage_qknorm_tps2048_seed0`.
+    pub label: String,
+    /// Canonical run configuration (part of the hash preimage).
+    pub config: Json,
+    /// Full sha256 of the key material — the run's identity.
+    pub config_hash: String,
+    /// Crate version that produced the run.
+    pub code_version: String,
+    pub status: RunState,
+    pub artifacts: Vec<ArtifactRef>,
+    /// Small outcome record (experiment-specific; `final_loss`,
+    /// `diverged_at`, `max_attn_logit`, ... for training cells).
+    pub summary: Json,
+}
+
+impl RunManifest {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("schema", Json::from(RUN_SCHEMA)),
+            ("experiment", Json::from(self.experiment.as_str())),
+            ("label", Json::from(self.label.as_str())),
+            ("config", self.config.clone()),
+            ("config_hash", Json::from(self.config_hash.as_str())),
+            ("code_version", Json::from(self.code_version.as_str())),
+            ("status", Json::from(self.status.as_str())),
+            (
+                "artifacts",
+                Json::Arr(self.artifacts.iter().map(ArtifactRef::to_json).collect()),
+            ),
+            ("summary", self.summary.clone()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunManifest> {
+        schema::expect_tag(j, RUN_SCHEMA)?;
+        Ok(RunManifest {
+            experiment: schema::str_field(j, "experiment")?.to_string(),
+            label: schema::str_field(j, "label")?.to_string(),
+            config: j.get("config")?.clone(),
+            config_hash: schema::str_field(j, "config_hash")?.to_string(),
+            code_version: schema::str_field(j, "code_version")?.to_string(),
+            status: RunState::parse(schema::str_field(j, "status")?)?,
+            artifacts: schema::arr_field(j, "artifacts")?
+                .iter()
+                .map(ArtifactRef::from_json)
+                .collect::<Result<Vec<_>>>()?,
+            summary: j.get("summary")?.clone(),
+        })
+    }
+
+    pub fn parse(text: &str) -> Result<RunManifest> {
+        RunManifest::from_json(&json::parse(text)?)
+    }
+
+    pub fn load(path: &Path) -> Result<RunManifest> {
+        let text = fs::read_to_string(path)
+            .with_context(|| format!("reading run manifest {}", path.display()))?;
+        RunManifest::parse(&text)
+            .with_context(|| format!("parsing run manifest {}", path.display()))
+    }
+
+    /// Atomic write: temp file + rename, so a reader never sees a
+    /// half-written manifest and a crash leaves either the old manifest
+    /// or the new one, never a torn file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("json.tmp");
+        fs::write(&tmp, self.to_json().to_string())
+            .with_context(|| format!("writing run manifest {}", tmp.display()))?;
+        fs::rename(&tmp, path)
+            .with_context(|| format!("renaming run manifest into {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactRef> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunManifest {
+        RunManifest {
+            experiment: "fig1".into(),
+            label: "sage_qknorm_tps2048_seed0".into(),
+            config: json::parse(r#"{"steps":4,"variant":"sage_qknorm"}"#).unwrap(),
+            config_hash: "ab".repeat(32),
+            code_version: "0.2.0".into(),
+            status: RunState::Complete,
+            artifacts: vec![
+                ArtifactRef {
+                    name: "train_loss.csv".into(),
+                    sha256: "cd".repeat(32),
+                    bytes: 120,
+                    view: Some("results/fig1/sage_qknorm_tps2048/train_loss.csv".into()),
+                },
+                ArtifactRef {
+                    name: "config.json".into(),
+                    sha256: "ef".repeat(32),
+                    bytes: 64,
+                    view: None,
+                },
+            ],
+            summary: json::parse(r#"{"diverged_at":null,"final_loss":2.5}"#).unwrap(),
+        }
+    }
+
+    #[test]
+    fn roundtrip_and_determinism() {
+        let m = sample();
+        let text = m.to_json().to_string();
+        let back = RunManifest::parse(&text).unwrap();
+        assert_eq!(m, back);
+        // Byte-determinism: re-serializing parses back to identical text.
+        assert_eq!(back.to_json().to_string(), text);
+        assert_eq!(m.artifact("config.json").unwrap().bytes, 64);
+        assert!(m.artifact("nope").is_none());
+    }
+
+    #[test]
+    fn status_lifecycle() {
+        for s in [
+            RunState::Pending,
+            RunState::Running,
+            RunState::Complete,
+            RunState::Failed,
+            RunState::Diverged,
+        ] {
+            assert_eq!(RunState::parse(s.as_str()).unwrap(), s);
+        }
+        assert!(RunState::parse("exploded").is_err());
+        assert!(RunState::Complete.is_finished());
+        assert!(RunState::Diverged.is_finished());
+        assert!(!RunState::Failed.is_finished());
+        assert!(!RunState::Running.is_finished());
+    }
+
+    #[test]
+    fn wrong_schema_tag_rejected() {
+        let mut j = sample().to_json();
+        j.set("schema", Json::from("sagebwd-run-v0"));
+        let err = format!("{:#}", RunManifest::from_json(&j).unwrap_err());
+        assert!(err.contains("sagebwd-run-v1"), "{err}");
+    }
+
+    #[test]
+    fn missing_required_key_rejected() {
+        let j = json::parse(&sample().to_json().to_string()).unwrap();
+        if let Json::Obj(mut o) = j {
+            o.remove("status");
+            assert!(RunManifest::from_json(&Json::Obj(o)).is_err());
+        } else {
+            unreachable!();
+        }
+    }
+
+    #[test]
+    fn file_roundtrip_atomic() {
+        let dir = std::env::temp_dir().join(format!("sagebwd_rm_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("manifest.json");
+        let m = sample();
+        m.save(&path).unwrap();
+        assert_eq!(RunManifest::load(&path).unwrap(), m);
+        // No temp file left behind.
+        assert!(!path.with_extension("json.tmp").exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

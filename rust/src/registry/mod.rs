@@ -1,0 +1,20 @@
+//! Content-addressed run registry + resumable experiment orchestration
+//! (DESIGN.md §12).
+//!
+//! - [`sha256`]: pure-std SHA-256 (FIPS 180-4), the content addressing
+//!   and run-identity hash — no new dependencies.
+//! - [`manifest`]: the versioned `sagebwd-run-v1` run-manifest schema.
+//! - [`store`]: the object store (`registry/objects/<sha256>`), run
+//!   manifests (`registry/runs/<key16>/manifest.json`), legacy views,
+//!   and the [`RunHandle`] every writer records artifacts through.
+//! - [`orchestrator`]: grid expansion → key-hashed cells → skip finished
+//!   → execute the rest on budget-capped worker threads (`sagebwd grid
+//!   run|status|resume`).
+
+pub mod manifest;
+pub mod orchestrator;
+pub mod sha256;
+pub mod store;
+
+pub use manifest::{ArtifactRef, RunManifest, RunState, RUN_SCHEMA};
+pub use store::{Registry, RunHandle};

@@ -1,0 +1,282 @@
+//! Resumable grid orchestrator (DESIGN.md §12): expand an experiment
+//! grid into config-hashed run keys, skip the cells whose manifests are
+//! already finished, execute the remainder on scoped worker threads, and
+//! report what was skipped / ran / failed.
+//!
+//! Interrupt-then-resume is the whole point: a killed grid leaves
+//! `complete`/`diverged` manifests for the cells that finished and (at
+//! most) one `running` leftover per worker; `grid resume` recomputes the
+//! same keys, skips everything finished, and picks up the rest.  The
+//! integration test asserts finished manifests are **byte-identical**
+//! across a resume — nothing rewrites a finished run.
+//!
+//! Thread budget: the orchestrator shares `SAGEBWD_THREADS` with the
+//! linalg pool instead of multiplying it.  With `J` workers, each cell
+//! trains under `linalg::with_thread_cap(max(1, T/J))`, so total compute
+//! threads stay ≈ T.  The engine's determinism contract (bitwise-equal
+//! results at any thread count, DESIGN.md §11) makes the cap invisible
+//! in the outputs.
+
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::TrainerFactory;
+use crate::experiments::{fig1_tps, fig4_ablation};
+use crate::registry::manifest::RunState;
+use crate::registry::store::Registry;
+use crate::telemetry::Log;
+use crate::tensor::linalg;
+
+/// One grid cell: a (variant, tps, seed) coordinate plus its display
+/// label (also the legacy curve-dir name).
+#[derive(Debug, Clone)]
+pub struct GridCell {
+    pub label: String,
+    pub variant: String,
+    pub tps: u64,
+    pub seed: u64,
+}
+
+/// A fully-expanded experiment grid.
+#[derive(Debug, Clone)]
+pub struct GridSpec {
+    /// Manifest grouping label: `fig1` or `fig4`.
+    pub experiment: String,
+    pub token_budget: u64,
+    pub peak_lr: f64,
+    pub cells: Vec<GridCell>,
+}
+
+/// Expand `fig1` or `fig4` arms × seeds into a [`GridSpec`] — the same
+/// arm lists the sequential harnesses run, so orchestrated and manual
+/// runs share registry keys.
+pub fn grid_spec(
+    experiment: &str,
+    token_budget: u64,
+    tps_lo: u64,
+    tps_hi: u64,
+    peak_lr: f64,
+    seeds: &[u64],
+) -> Result<GridSpec> {
+    let arms = match experiment {
+        "fig1" => fig1_tps::grid(tps_lo, tps_hi),
+        "fig4" => fig4_ablation::grid(tps_lo, tps_hi),
+        other => bail!("unknown grid experiment {other:?}; known: fig1, fig4"),
+    };
+    if seeds.is_empty() {
+        bail!("grid needs at least one seed");
+    }
+    let mut cells = Vec::new();
+    for &seed in seeds {
+        for &(variant, tps) in &arms {
+            cells.push(GridCell {
+                label: fig1_tps::cell_label(variant, tps, seed),
+                variant: variant.to_string(),
+                tps,
+                seed,
+            });
+        }
+    }
+    Ok(GridSpec {
+        experiment: experiment.to_string(),
+        token_budget,
+        peak_lr,
+        cells,
+    })
+}
+
+/// Registry state of one cell, as `grid status` reports it.
+#[derive(Debug, Clone)]
+pub struct CellStatus {
+    pub label: String,
+    pub key: String,
+    /// `None` = no manifest yet (pending).
+    pub state: Option<RunState>,
+}
+
+/// What a grid execution did.
+#[derive(Debug, Default)]
+pub struct GridReport {
+    pub total: usize,
+    /// Finished manifests found up front (registry hits).
+    pub skipped: usize,
+    /// Cells executed this invocation (complete or diverged).
+    pub ran: usize,
+    /// Cells left pending by `limit`.
+    pub remaining: usize,
+    /// (label, error) for cells that errored; the grid keeps going.
+    pub failed: Vec<(String, String)>,
+}
+
+/// Compute every cell's run key and current registry state (no
+/// execution).
+pub fn status(
+    factory: &TrainerFactory,
+    registry: &Registry,
+    spec: &GridSpec,
+) -> Result<Vec<CellStatus>> {
+    spec.cells
+        .iter()
+        .map(|cell| {
+            let cfg = fig1_tps::cell_config(
+                &cell.variant,
+                cell.tps,
+                spec.token_budget,
+                spec.peak_lr,
+                cell.seed,
+            );
+            let (_, key) = fig1_tps::cell_key(factory, &cfg);
+            let state = registry.load_run(&key)?.map(|m| m.status);
+            Ok(CellStatus {
+                label: cell.label.clone(),
+                key,
+                state,
+            })
+        })
+        .collect()
+}
+
+/// Execute the grid: skip finished cells, run up to `limit` of the rest
+/// on `jobs` scoped worker threads.  `limit = 0` means no limit (the CI
+/// registry smoke uses a strict subset to simulate a mid-grid kill).
+/// Per-cell failures are recorded as `failed` manifests and collected in
+/// the report; the grid keeps executing the remaining cells.
+#[allow(clippy::too_many_arguments)]
+pub fn run(
+    factory: &TrainerFactory,
+    registry: &Registry,
+    results_dir: &str,
+    spec: &GridSpec,
+    jobs: usize,
+    limit: usize,
+    fresh: bool,
+    log: &Log,
+) -> Result<GridReport> {
+    let mut report = GridReport {
+        total: spec.cells.len(),
+        ..GridReport::default()
+    };
+
+    // Partition up front: finished manifests are registry hits.
+    let mut todo: Vec<&GridCell> = Vec::new();
+    for (cell, st) in spec.cells.iter().zip(status(factory, registry, spec)?) {
+        if !fresh && st.state.map(RunState::is_finished).unwrap_or(false) {
+            log.info(&format!(
+                "registry hit [{}]: {} already {} — skipping",
+                &st.key[..16],
+                cell.label,
+                st.state.unwrap().as_str()
+            ));
+            report.skipped += 1;
+        } else {
+            todo.push(cell);
+        }
+    }
+    if limit > 0 && todo.len() > limit {
+        report.remaining = todo.len() - limit;
+        todo.truncate(limit);
+        log.info(&format!(
+            "--limit {limit}: running {} of {} pending cells ({} left pending)",
+            todo.len(),
+            todo.len() + report.remaining,
+            report.remaining
+        ));
+    }
+    if todo.is_empty() {
+        return Ok(report);
+    }
+
+    let workers = jobs.clamp(1, todo.len());
+    // Split the thread budget across workers; each worker's cells train
+    // under the cap so the grid uses ≈ SAGEBWD_THREADS total threads.
+    let cap = (linalg::thread_count() / workers).max(1);
+    let ctx = fig1_tps::CellCtx {
+        factory,
+        registry,
+        results_dir,
+        experiment: &spec.experiment,
+        // The skip decision was already made above; workers must not
+        // re-skip a cell whose stale `running`/`failed` manifest is being
+        // replaced — and with `fresh` they must retrain finished cells.
+        fresh: true,
+    };
+    let queue: Mutex<Vec<&GridCell>> = Mutex::new(todo.into_iter().rev().collect());
+    let done: Mutex<(usize, Vec<(String, String)>)> = Mutex::new((0, Vec::new()));
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                linalg::with_thread_cap(cap, || loop {
+                    let Some(cell) = queue.lock().unwrap().pop() else {
+                        return;
+                    };
+                    let outcome = fig1_tps::run_cell(
+                        &ctx,
+                        &cell.variant,
+                        cell.tps,
+                        spec.token_budget,
+                        spec.peak_lr,
+                        cell.seed,
+                        log,
+                    );
+                    let mut d = done.lock().unwrap();
+                    match outcome {
+                        Ok(o) => {
+                            d.0 += 1;
+                            log.info(&format!(
+                                "grid cell done: {} ({})",
+                                cell.label,
+                                match o.diverged_at {
+                                    Some(at) => format!("diverged@{at}"),
+                                    None => "complete".to_string(),
+                                }
+                            ));
+                        }
+                        Err(e) => d.1.push((cell.label.clone(), format!("{e:#}"))),
+                    }
+                });
+            });
+        }
+    });
+
+    let (ran, failed) = done.into_inner().unwrap();
+    report.ran = ran;
+    report.failed = failed;
+    Ok(report)
+}
+
+/// Parse a `--seeds "0,1,2"` list.
+pub fn parse_seeds(s: &str) -> Result<Vec<u64>> {
+    s.split(',')
+        .map(|t| {
+            t.trim()
+                .parse::<u64>()
+                .with_context(|| format!("bad seed {t:?} in --seeds {s:?}"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_expands_arms_by_seeds() {
+        let spec = grid_spec("fig1", 4096, 256, 2048, 0.1, &[0, 7]).unwrap();
+        assert_eq!(spec.cells.len(), 14); // 7 arms × 2 seeds
+        assert_eq!(spec.cells[0].label, "fpa_qknorm_tps2048");
+        assert!(spec.cells[7].label.ends_with("_seed7"));
+        let fig4 = grid_spec("fig4", 4096, 256, 2048, 0.1, &[0]).unwrap();
+        assert_eq!(fig4.cells.len(), 8); // 4 variants × 2 TPS
+        assert!(grid_spec("fig9", 1, 1, 2, 0.1, &[0]).is_err());
+        assert!(grid_spec("fig1", 1, 1, 2, 0.1, &[]).is_err());
+    }
+
+    #[test]
+    fn seed_list_parses() {
+        assert_eq!(parse_seeds("0").unwrap(), vec![0]);
+        assert_eq!(parse_seeds("0, 1,9").unwrap(), vec![0, 1, 9]);
+        assert!(parse_seeds("0,x").is_err());
+    }
+}

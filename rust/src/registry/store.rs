@@ -1,0 +1,448 @@
+//! Content-addressed object store + run handles (DESIGN.md §12).
+//!
+//! Layout under `<results>/registry/`:
+//!
+//! ```text
+//! registry/objects/<sha256>          # immutable artifact bytes
+//! registry/runs/<key16>/manifest.json  # sagebwd-run-v1 manifests
+//! ```
+//!
+//! Objects are written atomically (unique temp file in `objects/`, then
+//! rename), so a crash never leaves a torn object and concurrent writers
+//! of the same content race benignly (same hash ⇒ same bytes).  A run's
+//! identity is the sha256 of its *key material* — canonical config JSON
+//! + execution backend + schema version — so identical configs are one
+//! run no matter which harness or grid asked for them, and re-running a
+//! finished config is a registry hit, not a recompute.
+//!
+//! Legacy output paths (`results/fig1/<cell>/train_loss.csv`, summary
+//! CSVs, ...) are kept as *views*: symlinks into the object store, plain
+//! copies where symlinks are unavailable.  Existing plot/CI tooling keeps
+//! working unchanged.
+
+use std::fs;
+use std::io::Read as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Context, Result};
+
+use crate::registry::manifest::{ArtifactRef, RunManifest, RunState, RUN_SCHEMA};
+use crate::registry::sha256;
+use crate::telemetry::Metrics;
+use crate::util::json::Json;
+
+/// Characters of the run key used for the on-disk run directory name
+/// (the full hash is in the manifest).
+const KEY_DIR_LEN: usize = 16;
+
+/// Monotonic discriminator for temp-file names (several orchestrator
+/// workers may stage objects concurrently in one process).
+static TMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Handle on one registry root.
+#[derive(Debug, Clone)]
+pub struct Registry {
+    root: PathBuf,
+}
+
+impl Registry {
+    /// Open (creating if needed) the registry under `<results>/registry`.
+    pub fn open(results_dir: &str) -> Result<Registry> {
+        let root = PathBuf::from(results_dir).join("registry");
+        fs::create_dir_all(root.join("objects"))
+            .with_context(|| format!("creating {}", root.join("objects").display()))?;
+        fs::create_dir_all(root.join("runs"))
+            .with_context(|| format!("creating {}", root.join("runs").display()))?;
+        Ok(Registry { root })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn object_path(&self, hash: &str) -> PathBuf {
+        self.root.join("objects").join(hash)
+    }
+
+    pub fn has_object(&self, hash: &str) -> bool {
+        self.object_path(hash).is_file()
+    }
+
+    /// Store `bytes` content-addressed; returns the sha256 hex address.
+    /// Atomic: staged under a unique temp name, renamed into place.
+    /// Idempotent: an existing object is left untouched.
+    pub fn put_bytes(&self, bytes: &[u8]) -> Result<String> {
+        let hash = sha256::hex_digest(bytes);
+        let dst = self.object_path(&hash);
+        if dst.is_file() {
+            return Ok(hash);
+        }
+        let tmp = self.root.join("objects").join(format!(
+            ".tmp-{}-{}",
+            std::process::id(),
+            TMP_COUNTER.fetch_add(1, Ordering::Relaxed)
+        ));
+        fs::write(&tmp, bytes).with_context(|| format!("staging object {}", tmp.display()))?;
+        fs::rename(&tmp, &dst)
+            .with_context(|| format!("renaming object into {}", dst.display()))?;
+        Ok(hash)
+    }
+
+    /// Store an existing file's contents (e.g. a checkpoint the trainer
+    /// already wrote); the source stays in place.
+    pub fn put_file(&self, path: &Path) -> Result<(String, u64)> {
+        let mut f = fs::File::open(path)
+            .with_context(|| format!("opening {} for hashing", path.display()))?;
+        let mut bytes = Vec::new();
+        f.read_to_end(&mut bytes)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let len = bytes.len() as u64;
+        Ok((self.put_bytes(&bytes)?, len))
+    }
+
+    pub fn read_object(&self, hash: &str) -> Result<Vec<u8>> {
+        fs::read(self.object_path(hash))
+            .with_context(|| format!("reading object {hash} from {}", self.root.display()))
+    }
+
+    /// Materialize a legacy view of an object at `view`: a symlink into
+    /// the object store where the platform supports it, a plain copy
+    /// otherwise.  Replaces whatever was there (the view is derived
+    /// state; the object is the source of truth).
+    pub fn write_view(&self, hash: &str, view: &Path) -> Result<()> {
+        if let Some(parent) = view.parent() {
+            if !parent.as_os_str().is_empty() {
+                fs::create_dir_all(parent)
+                    .with_context(|| format!("creating view dir {}", parent.display()))?;
+            }
+        }
+        let _ = fs::remove_file(view);
+        let obj = fs::canonicalize(self.object_path(hash))
+            .with_context(|| format!("resolving object {hash}"))?;
+        #[cfg(unix)]
+        {
+            if std::os::unix::fs::symlink(&obj, view).is_ok() {
+                return Ok(());
+            }
+        }
+        fs::copy(&obj, view)
+            .with_context(|| format!("copying object {hash} to view {}", view.display()))?;
+        Ok(())
+    }
+
+    /// The run key: sha256 over canonical key material.  `backend` is
+    /// part of the identity (a native run is not an XLA run); the
+    /// experiment label is *not* (identical configs dedup across grids —
+    /// fig4 reuses fig1's shared arms exactly like the legacy curve dirs
+    /// did).
+    pub fn run_key(config: &Json, backend: &str) -> String {
+        let material = Json::from_pairs(vec![
+            ("backend", Json::from(backend)),
+            ("config", config.clone()),
+            ("schema", Json::from(RUN_SCHEMA)),
+        ]);
+        sha256::hex_digest(material.to_string().as_bytes())
+    }
+
+    pub fn run_dir(&self, key: &str) -> PathBuf {
+        self.root.join("runs").join(&key[..KEY_DIR_LEN.min(key.len())])
+    }
+
+    pub fn manifest_path(&self, key: &str) -> PathBuf {
+        self.run_dir(key).join("manifest.json")
+    }
+
+    /// Load the manifest for a run key, if one exists.
+    pub fn load_run(&self, key: &str) -> Result<Option<RunManifest>> {
+        let path = self.manifest_path(key);
+        if !path.is_file() {
+            return Ok(None);
+        }
+        Ok(Some(RunManifest::load(&path)?))
+    }
+
+    /// List every recorded run (key16 dir name + manifest), sorted by
+    /// directory name for deterministic output.
+    pub fn list_runs(&self) -> Result<Vec<(String, RunManifest)>> {
+        let mut out = Vec::new();
+        let runs = self.root.join("runs");
+        let mut entries: Vec<_> = fs::read_dir(&runs)
+            .with_context(|| format!("listing {}", runs.display()))?
+            .collect::<std::io::Result<Vec<_>>>()?;
+        entries.sort_by_key(|e| e.file_name());
+        for e in entries {
+            let manifest = e.path().join("manifest.json");
+            if manifest.is_file() {
+                out.push((
+                    e.file_name().to_string_lossy().into_owned(),
+                    RunManifest::load(&manifest)?,
+                ));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Start a run: writes a `running` manifest immediately (so a crash
+    /// leaves a re-runnable `running` leftover, not silence) and returns
+    /// the handle every writer records through.
+    pub fn begin_run(&self, experiment: &str, label: &str, config: Json) -> Result<RunHandle<'_>> {
+        let key = Registry::run_key(&config, experiment_backend(&config));
+        self.begin_run_keyed(experiment, label, config, key)
+    }
+
+    /// `begin_run` with an explicit precomputed key (the orchestrator
+    /// computes keys up front for skip decisions).
+    pub fn begin_run_keyed(
+        &self,
+        experiment: &str,
+        label: &str,
+        config: Json,
+        key: String,
+    ) -> Result<RunHandle<'_>> {
+        let dir = self.run_dir(&key);
+        fs::create_dir_all(&dir).with_context(|| format!("creating {}", dir.display()))?;
+        let manifest = RunManifest {
+            experiment: experiment.to_string(),
+            label: label.to_string(),
+            config,
+            config_hash: key.clone(),
+            code_version: env!("CARGO_PKG_VERSION").to_string(),
+            status: RunState::Running,
+            artifacts: Vec::new(),
+            summary: Json::obj(),
+        };
+        manifest.save(&self.manifest_path(&key))?;
+        Ok(RunHandle {
+            registry: self,
+            key,
+            manifest,
+        })
+    }
+}
+
+/// Pull the backend out of a run config if the caller embedded one;
+/// harness-level runs (tables, benches) have no backend axis.
+fn experiment_backend(config: &Json) -> &str {
+    config
+        .get_opt("backend")
+        .and_then(|b| b.as_str().ok())
+        .unwrap_or("-")
+}
+
+/// An in-flight run: every artifact a writer produces goes through here,
+/// so the run's products are hashed and listed in its manifest.
+pub struct RunHandle<'a> {
+    registry: &'a Registry,
+    key: String,
+    manifest: RunManifest,
+}
+
+impl RunHandle<'_> {
+    pub fn key(&self) -> &str {
+        &self.key
+    }
+
+    /// Short key — the on-disk run dir name, handy for log lines.
+    pub fn key16(&self) -> &str {
+        &self.key[..KEY_DIR_LEN]
+    }
+
+    /// Record an artifact from bytes; optionally materialize a legacy
+    /// view at `view`.  Returns the content hash.
+    pub fn record_bytes(
+        &mut self,
+        name: &str,
+        bytes: &[u8],
+        view: Option<&Path>,
+    ) -> Result<String> {
+        let hash = self.registry.put_bytes(bytes)?;
+        if let Some(v) = view {
+            self.registry.write_view(&hash, v)?;
+        }
+        self.push_ref(name, hash.clone(), bytes.len() as u64, view);
+        Ok(hash)
+    }
+
+    /// Record an artifact that already exists on disk (checkpoints, the
+    /// appended `BENCH_*.json` trajectories).  The file stays where it is
+    /// and becomes its own view.
+    pub fn record_file(&mut self, name: &str, path: &Path) -> Result<String> {
+        let (hash, bytes) = self.registry.put_file(path)?;
+        self.push_ref(name, hash.clone(), bytes, Some(path));
+        Ok(hash)
+    }
+
+    /// Record every metric series as `<name>.csv`, with legacy views
+    /// under `view_dir` — the registry-era `Metrics::flush_csv`.
+    pub fn record_metrics(&mut self, metrics: &Metrics, view_dir: &Path) -> Result<()> {
+        for (name, series) in &metrics.series {
+            let file = format!("{name}.csv");
+            self.record_bytes(&file, series.to_csv().as_bytes(), Some(&view_dir.join(&file)))?;
+        }
+        Ok(())
+    }
+
+    /// Replace the manifest's summary object.
+    pub fn set_summary(&mut self, summary: Json) {
+        self.manifest.summary = summary;
+    }
+
+    /// Finish the run: writes the final manifest atomically.  This is the
+    /// last write — a crash before it leaves the `running` manifest, so
+    /// resume re-runs the cell (objects already staged are harmless:
+    /// content-addressed and idempotent).
+    pub fn finish(mut self, status: RunState) -> Result<RunManifest> {
+        self.manifest.status = status;
+        self.manifest
+            .save(&self.registry.manifest_path(&self.key))?;
+        Ok(self.manifest)
+    }
+
+    fn push_ref(&mut self, name: &str, sha256: String, bytes: u64, view: Option<&Path>) {
+        // Re-recording a name replaces the ref (idempotent writers).
+        self.manifest.artifacts.retain(|a| a.name != name);
+        self.manifest.artifacts.push(ArtifactRef {
+            name: name.to_string(),
+            sha256,
+            bytes,
+            view: view.map(|p| p.to_string_lossy().into_owned()),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn temp_results(tag: &str) -> String {
+        let dir = std::env::temp_dir().join(format!("sagebwd_reg_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir.to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn put_bytes_content_addressed_and_idempotent() {
+        let results = temp_results("put");
+        let reg = Registry::open(&results).unwrap();
+        let h1 = reg.put_bytes(b"hello registry").unwrap();
+        let h2 = reg.put_bytes(b"hello registry").unwrap();
+        assert_eq!(h1, h2);
+        assert_eq!(h1.len(), 64);
+        assert!(reg.has_object(&h1));
+        assert_eq!(reg.read_object(&h1).unwrap(), b"hello registry");
+        // No stray temp files.
+        let objs: Vec<_> = fs::read_dir(reg.root().join("objects"))
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(objs, vec![h1.clone()]);
+        assert_ne!(reg.put_bytes(b"other").unwrap(), h1);
+        fs::remove_dir_all(&results).unwrap();
+    }
+
+    #[test]
+    fn views_point_at_objects() {
+        let results = temp_results("view");
+        let reg = Registry::open(&results).unwrap();
+        let h = reg.put_bytes(b"step,value\n0,1\n").unwrap();
+        let view = PathBuf::from(&results).join("fig1/cell/train_loss.csv");
+        reg.write_view(&h, &view).unwrap();
+        assert_eq!(fs::read(&view).unwrap(), b"step,value\n0,1\n");
+        // Re-pointing the view at new content replaces it.
+        let h2 = reg.put_bytes(b"step,value\n0,2\n").unwrap();
+        reg.write_view(&h2, &view).unwrap();
+        assert_eq!(fs::read(&view).unwrap(), b"step,value\n0,2\n");
+        fs::remove_dir_all(&results).unwrap();
+    }
+
+    #[test]
+    fn run_key_is_stable_and_sensitive() {
+        let a = json::parse(r#"{"steps":4,"variant":"sage_qknorm"}"#).unwrap();
+        let b = json::parse(r#"{"variant":"sage_qknorm","steps":4}"#).unwrap();
+        // Canonical (sorted-key) serialization: field order is identity-
+        // irrelevant.
+        assert_eq!(Registry::run_key(&a, "native"), Registry::run_key(&b, "native"));
+        // Config and backend are both part of the identity.
+        let c = json::parse(r#"{"steps":5,"variant":"sage_qknorm"}"#).unwrap();
+        assert_ne!(Registry::run_key(&a, "native"), Registry::run_key(&c, "native"));
+        assert_ne!(Registry::run_key(&a, "native"), Registry::run_key(&a, "xla"));
+    }
+
+    #[test]
+    fn run_lifecycle_and_listing() {
+        let results = temp_results("life");
+        let reg = Registry::open(&results).unwrap();
+        let cfg = json::parse(r#"{"kind":"demo","n":1}"#).unwrap();
+        let key = Registry::run_key(&cfg, "-");
+        assert!(reg.load_run(&key).unwrap().is_none());
+
+        let mut run = reg.begin_run("demo", "demo_cell", cfg.clone()).unwrap();
+        assert_eq!(run.key(), key);
+        // begin_run writes a `running` manifest immediately.
+        let m = reg.load_run(&key).unwrap().unwrap();
+        assert_eq!(m.status, RunState::Running);
+
+        run.record_bytes("out.csv", b"a,b\n1,2\n", None).unwrap();
+        run.set_summary(Json::from_pairs(vec![("final_loss", Json::from(2.5))]));
+        let done = run.finish(RunState::Complete).unwrap();
+        assert_eq!(done.artifacts.len(), 1);
+        assert_eq!(done.artifacts[0].bytes, 8);
+
+        let m = reg.load_run(&key).unwrap().unwrap();
+        assert_eq!(m, done);
+        assert!(m.status.is_finished());
+        assert!(reg.has_object(&m.artifacts[0].sha256));
+
+        let listed = reg.list_runs().unwrap();
+        assert_eq!(listed.len(), 1);
+        assert_eq!(listed[0].0, &key[..KEY_DIR_LEN]);
+        assert_eq!(listed[0].1, m);
+        fs::remove_dir_all(&results).unwrap();
+    }
+
+    #[test]
+    fn record_metrics_writes_series_views() {
+        let results = temp_results("met");
+        let reg = Registry::open(&results).unwrap();
+        let mut metrics = Metrics::new();
+        metrics.record("train_loss", 0, 2.5);
+        metrics.record("train_loss", 1, 2.0);
+        metrics.record("lr", 0, 1e-3);
+        let mut run = reg
+            .begin_run("train", "t", json::parse(r#"{"kind":"demo","n":2}"#).unwrap())
+            .unwrap();
+        let view_dir = PathBuf::from(&results).join("train_demo");
+        run.record_metrics(&metrics, &view_dir).unwrap();
+        let m = run.finish(RunState::Complete).unwrap();
+        assert_eq!(m.artifacts.len(), 2); // lr.csv + train_loss.csv
+        let loss = fs::read_to_string(view_dir.join("train_loss.csv")).unwrap();
+        assert!(loss.starts_with("step,value\n0,2.5\n1,2\n"), "{loss}");
+        // The view's bytes hash to the recorded address.
+        let a = m.artifact("train_loss.csv").unwrap();
+        assert_eq!(sha256::hex_digest(loss.as_bytes()), a.sha256);
+        fs::remove_dir_all(&results).unwrap();
+    }
+
+    #[test]
+    fn record_file_hashes_in_place() {
+        let results = temp_results("file");
+        let reg = Registry::open(&results).unwrap();
+        let ext = PathBuf::from(&results).join("final.ckpt");
+        fs::write(&ext, b"SBWD0002-pretend").unwrap();
+        let mut run = reg
+            .begin_run("train", "t", json::parse(r#"{"kind":"demo","n":3}"#).unwrap())
+            .unwrap();
+        let h = run.record_file("final.ckpt", &ext).unwrap();
+        let m = run.finish(RunState::Complete).unwrap();
+        // Source untouched, object stored, ref points at the source path.
+        assert_eq!(fs::read(&ext).unwrap(), b"SBWD0002-pretend");
+        assert_eq!(reg.read_object(&h).unwrap(), b"SBWD0002-pretend");
+        assert_eq!(
+            m.artifact("final.ckpt").unwrap().view.as_deref(),
+            Some(ext.to_string_lossy().as_ref())
+        );
+        fs::remove_dir_all(&results).unwrap();
+    }
+}

@@ -6,7 +6,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::util::json::{self, Json};
+use crate::util::json::{self, schema, Json};
 
 /// Element type of one artifact input/output.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -43,16 +43,15 @@ impl TensorSpec {
     }
 
     fn from_json(j: &Json) -> Result<TensorSpec> {
-        let shape = j
-            .get("shape")?
-            .as_arr()?
+        let shape = schema::arr_field(j, "shape")?
             .iter()
             .map(|v| v.as_usize())
-            .collect::<Result<Vec<_>>>()?;
+            .collect::<Result<Vec<_>>>()
+            .context("field \"shape\"")?;
         Ok(TensorSpec {
-            name: j.get("name")?.as_str()?.to_string(),
+            name: schema::str_field(j, "name")?.to_string(),
             shape,
-            dtype: DType::parse(j.get("dtype")?.as_str()?)?,
+            dtype: DType::parse(schema::str_field(j, "dtype")?)?,
         })
     }
 }
@@ -70,14 +69,13 @@ impl Manifest {
     pub fn parse(text: &str) -> Result<Manifest> {
         let j = json::parse(text)?;
         let specs = |key: &str| -> Result<Vec<TensorSpec>> {
-            j.get(key)?
-                .as_arr()?
+            schema::arr_field(&j, key)?
                 .iter()
                 .map(TensorSpec::from_json)
                 .collect()
         };
         Ok(Manifest {
-            artifact: j.get("artifact")?.as_str()?.to_string(),
+            artifact: schema::str_field(&j, "artifact")?.to_string(),
             inputs: specs("inputs")?,
             outputs: specs("outputs")?,
             meta: j.get_opt("meta").cloned().unwrap_or(Json::obj()),

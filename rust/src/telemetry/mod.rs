@@ -12,7 +12,6 @@ pub mod plot;
 
 use std::collections::BTreeMap;
 use std::fs;
-use std::io::Write as _;
 use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
@@ -53,6 +52,17 @@ impl Series {
             .map(|&(_, v)| v)
             .fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.max(v))))
     }
+
+    /// The series as `step,value` CSV text — the one encoder behind both
+    /// [`Metrics::flush_csv`] and the registry's `RunHandle::record_metrics`
+    /// (identical bytes, so a flushed file hashes to its registry address).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("step,value\n");
+        for &(step, value) in &self.points {
+            out.push_str(&format!("{step},{value}\n"));
+        }
+        out
+    }
 }
 
 /// Metric registry for one run.
@@ -80,20 +90,49 @@ impl Metrics {
             .with_context(|| format!("creating metrics dir {}", dir.display()))?;
         for (name, series) in &self.series {
             let path = dir.join(format!("{name}.csv"));
-            let mut f = fs::File::create(&path)
-                .with_context(|| format!("creating {}", path.display()))?;
-            writeln!(f, "step,value")?;
-            for &(step, value) in &series.points {
-                writeln!(f, "{step},{value}")?;
-            }
+            fs::write(&path, series.to_csv())
+                .with_context(|| format!("writing {}", path.display()))?;
         }
         Ok(())
     }
 }
 
-/// Resolve (and create) the results directory for a named run.
+/// Resolve (and create) a **fresh** results directory for a named run.
+///
+/// Collision fix: re-running an experiment with the same run name used to
+/// write into (and interleave CSVs with) the previous run's directory.
+/// Now an existing *non-empty* `<base>/<run_name>` is left untouched and
+/// the run is versioned to `<run_name>_2`, `<run_name>_3`, ... (first
+/// free slot).  An existing empty directory is reused — nothing to
+/// clobber.  Registry-era experiment harnesses don't call this (their
+/// outputs are content-addressed views); the per-run CLI paths
+/// (`sagebwd train`, `dist-train`) do.
 pub fn run_dir(base: &str, run_name: &str) -> Result<PathBuf> {
-    let dir = PathBuf::from(base).join(run_name);
+    let is_free = |dir: &Path| -> Result<bool> {
+        if !dir.exists() {
+            return Ok(true);
+        }
+        if !dir.is_dir() {
+            return Ok(false);
+        }
+        Ok(fs::read_dir(dir)
+            .with_context(|| format!("listing {}", dir.display()))?
+            .next()
+            .is_none())
+    };
+    let base_dir = PathBuf::from(base);
+    let mut dir = base_dir.join(run_name);
+    let mut version = 1usize;
+    while !is_free(&dir)? {
+        version += 1;
+        if version > 10_000 {
+            anyhow::bail!(
+                "over 10000 versioned run dirs for {run_name:?} under {base} — \
+                 clean results/ or pick a new run name"
+            );
+        }
+        dir = base_dir.join(format!("{run_name}_{version}"));
+    }
     fs::create_dir_all(&dir).with_context(|| format!("creating {}", dir.display()))?;
     Ok(dir)
 }
@@ -157,6 +196,47 @@ mod tests {
         assert_eq!(s.last(), None);
         assert_eq!(s.tail_mean(3), None);
         assert_eq!(s.max_value(), None);
+    }
+
+    #[test]
+    fn run_dir_versions_instead_of_interleaving() {
+        let base = std::env::temp_dir().join(format!("sagebwd_rd_{}", std::process::id()));
+        let base_s = base.to_str().unwrap();
+
+        // Fresh name: plain dir.
+        let d1 = run_dir(base_s, "demo").unwrap();
+        assert_eq!(d1, base.join("demo"));
+
+        // Existing but empty: reused (nothing to clobber).
+        let d1b = run_dir(base_s, "demo").unwrap();
+        assert_eq!(d1b, d1);
+
+        // Existing and non-empty: versioned, previous run untouched.
+        std::fs::write(d1.join("train_loss.csv"), "step,value\n0,1\n").unwrap();
+        let d2 = run_dir(base_s, "demo").unwrap();
+        assert_eq!(d2, base.join("demo_2"));
+        std::fs::write(d2.join("train_loss.csv"), "step,value\n0,2\n").unwrap();
+        let d3 = run_dir(base_s, "demo").unwrap();
+        assert_eq!(d3, base.join("demo_3"));
+
+        // The original run's CSV was never interleaved into.
+        let first = std::fs::read_to_string(d1.join("train_loss.csv")).unwrap();
+        assert_eq!(first, "step,value\n0,1\n");
+
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn series_to_csv_matches_flush() {
+        let mut m = Metrics::new();
+        m.record("loss", 0, 2.5);
+        m.record("loss", 3, 1.25);
+        let dir = std::env::temp_dir().join(format!("sagebwd_tc_{}", std::process::id()));
+        m.flush_csv(&dir).unwrap();
+        let flushed = std::fs::read_to_string(dir.join("loss.csv")).unwrap();
+        assert_eq!(flushed, m.get("loss").unwrap().to_csv());
+        assert_eq!(flushed, "step,value\n0,2.5\n3,1.25\n");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -71,14 +71,16 @@ fn default_threads() -> usize {
 /// values fall back to the default.  Read per call so tests and
 /// harnesses can re-configure within one process.
 pub fn thread_count() -> usize {
-    match std::env::var("SAGEBWD_THREADS") {
+    let n = match std::env::var("SAGEBWD_THREADS") {
         Ok(s) => match s.trim().parse::<usize>() {
             Ok(0) => 1,
             Ok(n) => n,
             Err(_) => default_threads(),
         },
         Err(_) => default_threads(),
-    }
+    };
+    // The orchestrator's per-thread budget cap (see with_thread_cap).
+    THREAD_CAP.with(|c| c.get()).map_or(n, |cap| n.min(cap))
 }
 
 /// Split `n` items into at most `parts` contiguous, near-equal, non-empty
@@ -114,6 +116,32 @@ thread_local! {
 pub fn with_serial<R>(f: impl FnOnce() -> R) -> R {
     FORCE_SERIAL.with(|c| {
         let prev = c.replace(true);
+        let r = f();
+        c.set(prev);
+        r
+    })
+}
+
+thread_local! {
+    /// Per-thread ceiling on [`thread_count`] — the grid orchestrator's
+    /// budget-sharing primitive (DESIGN.md §12): J grid workers each run
+    /// their cell under a cap of ⌈T/J⌉ so grid-level × engine-level
+    /// threads stay ≈ `SAGEBWD_THREADS` instead of J·T.  Thread-local
+    /// (unlike [`pin_threads`]' process-global env override) so
+    /// concurrent workers can hold different caps without racing.
+    static THREAD_CAP: std::cell::Cell<Option<usize>> =
+        const { std::cell::Cell::new(None) };
+}
+
+/// Run `f` with the engine's worker count capped at `cap` on this thread
+/// (floor 1).  Results are unchanged — the determinism contract makes
+/// output independent of the realized thread count; only dispatch width
+/// differs.  The cap applies where spawn decisions are made (this
+/// thread); workers spawned under it run serial via the existing
+/// [`with_serial`] nesting guard in `execute_many`.
+pub fn with_thread_cap<R>(cap: usize, f: impl FnOnce() -> R) -> R {
+    THREAD_CAP.with(|c| {
+        let prev = c.replace(Some(cap.max(1)));
         let r = f();
         c.set(prev);
         r
@@ -538,5 +566,39 @@ mod tests {
     fn thread_count_is_positive() {
         assert!(thread_count() >= 1);
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn thread_cap_bounds_and_restores() {
+        let before = thread_count();
+        let capped = with_thread_cap(1, thread_count);
+        assert_eq!(capped, 1);
+        // Nesting: the tighter cap wins inside, the outer one is restored.
+        with_thread_cap(2, || {
+            assert!(thread_count() <= 2);
+            assert_eq!(with_thread_cap(1, thread_count), 1);
+            assert!(thread_count() <= 2);
+        });
+        // Cap of 0 floors at 1 (serial), never 0 workers.
+        assert_eq!(with_thread_cap(0, thread_count), 1);
+        assert_eq!(thread_count(), before);
+        // A cap larger than the configured count is a no-op.
+        assert_eq!(with_thread_cap(usize::MAX, thread_count), before);
+    }
+
+    #[test]
+    fn thread_cap_does_not_change_results() {
+        // The determinism contract extends to the cap: same bytes out.
+        let (m, k, n) = (9, 7, 11);
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.37).sin()).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.11).cos()).collect();
+        let mut want = vec![0f32; m * n];
+        matmul_into(&a, &b, m, k, n, &mut want);
+        let mut got = vec![0f32; m * n];
+        with_thread_cap(1, || matmul_into(&a, &b, m, k, n, &mut got));
+        assert_eq!(
+            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            got.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
     }
 }

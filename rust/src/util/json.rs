@@ -390,6 +390,69 @@ impl<'a> Parser<'a> {
     }
 }
 
+/// Shared required-key/type checking for the repo's versioned JSON
+/// schemas.  One checker, three consumers: `BENCH_*.json`
+/// (`bench::check_bench_json`), the artifact manifests
+/// (`runtime::manifest`), and the run registry's `sagebwd-run-v1`
+/// manifests (`registry::manifest`) — instead of each module hand-rolling
+/// its own missing-key/wrong-type errors.
+pub mod schema {
+    use super::Json;
+    use anyhow::{bail, Context, Result};
+
+    /// Check the document's `"schema"` tag.
+    pub fn expect_tag(doc: &Json, expected: &str) -> Result<()> {
+        let got = str_field(doc, "schema")?;
+        if got != expected {
+            bail!("schema {got:?} != {expected:?}");
+        }
+        Ok(())
+    }
+
+    /// Required string field.
+    pub fn str_field<'a>(obj: &'a Json, key: &str) -> Result<&'a str> {
+        obj.get(key)?.as_str().with_context(|| format!("field {key:?}"))
+    }
+
+    /// Required number field.
+    pub fn f64_field(obj: &Json, key: &str) -> Result<f64> {
+        obj.get(key)?.as_f64().with_context(|| format!("field {key:?}"))
+    }
+
+    /// Required exact-non-negative-integer field.
+    pub fn usize_field(obj: &Json, key: &str) -> Result<usize> {
+        obj.get(key)?.as_usize().with_context(|| format!("field {key:?}"))
+    }
+
+    /// Required exact-unsigned-integer field.
+    pub fn u64_field(obj: &Json, key: &str) -> Result<u64> {
+        let i = obj.get(key)?.as_i64().with_context(|| format!("field {key:?}"))?;
+        u64::try_from(i).with_context(|| format!("field {key:?}: negative {i}"))
+    }
+
+    /// Required array field.
+    pub fn arr_field<'a>(obj: &'a Json, key: &str) -> Result<&'a [Json]> {
+        obj.get(key)?.as_arr().with_context(|| format!("field {key:?}"))
+    }
+
+    /// Required field that is either a number or `null` (absent is an
+    /// error — the schema's way of saying "state it explicitly").
+    pub fn nullable_f64_field(obj: &Json, key: &str) -> Result<Option<f64>> {
+        match obj.get(key)? {
+            Json::Null => Ok(None),
+            other => Ok(Some(other.as_f64().with_context(|| format!("field {key:?}"))?)),
+        }
+    }
+
+    /// Optional string field: missing or `null` → `None`.
+    pub fn opt_str_field<'a>(obj: &'a Json, key: &str) -> Result<Option<&'a str>> {
+        match obj.get_opt(key) {
+            None | Some(Json::Null) => Ok(None),
+            Some(other) => Ok(Some(other.as_str().with_context(|| format!("field {key:?}"))?)),
+        }
+    }
+}
+
 fn utf8_len(first: u8) -> Result<usize> {
     match first {
         0xC0..=0xDF => Ok(2),
@@ -452,5 +515,30 @@ mod tests {
     fn deterministic_object_order() {
         let v = parse(r#"{"z":1,"a":2}"#).unwrap();
         assert_eq!(v.to_string(), r#"{"a":2,"z":1}"#);
+    }
+
+    #[test]
+    fn schema_helpers() {
+        let doc = parse(
+            r#"{"schema":"demo-v1","name":"x","n":3,"rows":[1],"maybe":null,"neg":-2}"#,
+        )
+        .unwrap();
+        schema::expect_tag(&doc, "demo-v1").unwrap();
+        let err = format!("{:#}", schema::expect_tag(&doc, "demo-v2").unwrap_err());
+        assert!(err.contains("demo-v1") && err.contains("demo-v2"), "{err}");
+        assert_eq!(schema::str_field(&doc, "name").unwrap(), "x");
+        assert_eq!(schema::usize_field(&doc, "n").unwrap(), 3);
+        assert_eq!(schema::u64_field(&doc, "n").unwrap(), 3);
+        assert!(schema::u64_field(&doc, "neg").is_err());
+        assert_eq!(schema::arr_field(&doc, "rows").unwrap().len(), 1);
+        assert_eq!(schema::nullable_f64_field(&doc, "maybe").unwrap(), None);
+        assert_eq!(schema::nullable_f64_field(&doc, "n").unwrap(), Some(3.0));
+        assert!(schema::nullable_f64_field(&doc, "absent").is_err());
+        assert_eq!(schema::opt_str_field(&doc, "absent").unwrap(), None);
+        assert_eq!(schema::opt_str_field(&doc, "maybe").unwrap(), None);
+        assert_eq!(schema::opt_str_field(&doc, "name").unwrap(), Some("x"));
+        // Errors carry the field name (the shared checker's whole point).
+        let err = format!("{:#}", schema::str_field(&doc, "n").unwrap_err());
+        assert!(err.contains("\"n\""), "{err}");
     }
 }

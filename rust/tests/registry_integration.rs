@@ -1,0 +1,174 @@
+//! End-to-end registry + orchestrator tests on the native engine: the
+//! interrupt-then-resume acceptance proof (a grid killed after N of M
+//! cells, simulated via `--limit`, resumes without rewriting a single
+//! finished manifest byte) and the run_cell registry-hit cache.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use sagebwd::coordinator::TrainerFactory;
+use sagebwd::experiments::fig1_tps::{self, CellCtx};
+use sagebwd::registry::{orchestrator, Registry, RunState};
+use sagebwd::telemetry::Log;
+
+fn temp_results(tag: &str) -> String {
+    let dir = std::env::temp_dir().join(format!("sagebwd_regint_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir.to_string_lossy().into_owned()
+}
+
+fn native() -> TrainerFactory {
+    TrainerFactory::new("native", "artifacts").unwrap()
+}
+
+/// A fig1 grid small enough for a test: 7 cells of 2–4 optimizer steps
+/// on the (2, 32)-microbatch native model.
+fn tiny_spec() -> orchestrator::GridSpec {
+    orchestrator::grid_spec("fig1", 256, 64, 128, 3e-3, &[0]).unwrap()
+}
+
+/// Read every finished manifest's raw bytes, keyed by run-dir name.
+fn manifest_bytes(results: &str) -> BTreeMap<String, Vec<u8>> {
+    let runs = PathBuf::from(results).join("registry/runs");
+    let mut out = BTreeMap::new();
+    for e in std::fs::read_dir(&runs).unwrap() {
+        let e = e.unwrap();
+        let m = e.path().join("manifest.json");
+        if m.is_file() {
+            out.insert(
+                e.file_name().to_string_lossy().into_owned(),
+                std::fs::read(&m).unwrap(),
+            );
+        }
+    }
+    out
+}
+
+#[test]
+fn grid_interrupt_then_resume_preserves_finished_manifests() {
+    let results = temp_results("resume");
+    let factory = native();
+    let registry = Registry::open(&results).unwrap();
+    let spec = tiny_spec();
+    let log = Log::new(false);
+
+    // "Kill" the grid after 3 of 7 cells: --limit 3 stops with the rest
+    // pending, exactly like a mid-grid SIGKILL that landed between cells.
+    let report =
+        orchestrator::run(&factory, &registry, &results, &spec, 1, 3, false, &log).unwrap();
+    assert_eq!(report.total, 7);
+    assert_eq!(report.skipped, 0);
+    assert_eq!(report.ran, 3, "failed: {:?}", report.failed);
+    assert_eq!(report.remaining, 4);
+    assert!(report.failed.is_empty(), "{:?}", report.failed);
+
+    let before = manifest_bytes(&results);
+    assert_eq!(before.len(), 3, "{:?}", before.keys());
+
+    // Resume: the 3 finished cells are registry hits; the other 4 run.
+    let report =
+        orchestrator::run(&factory, &registry, &results, &spec, 1, 0, false, &log).unwrap();
+    assert_eq!(report.skipped, 3);
+    assert_eq!(report.ran, 4, "failed: {:?}", report.failed);
+    assert!(report.failed.is_empty(), "{:?}", report.failed);
+
+    // Acceptance proof: not one byte of a finished manifest changed.
+    let after = manifest_bytes(&results);
+    assert_eq!(after.len(), 7);
+    for (key, bytes) in &before {
+        assert_eq!(
+            after.get(key),
+            Some(bytes),
+            "manifest {key} was rewritten across resume"
+        );
+    }
+
+    // Every cell is now finished; a third invocation skips everything.
+    let statuses = orchestrator::status(&factory, &registry, &spec).unwrap();
+    assert!(statuses
+        .iter()
+        .all(|s| s.state.map(RunState::is_finished).unwrap_or(false)));
+    let report =
+        orchestrator::run(&factory, &registry, &results, &spec, 1, 0, false, &log).unwrap();
+    assert_eq!(report.skipped, 7);
+    assert_eq!(report.ran, 0);
+
+    std::fs::remove_dir_all(&results).unwrap();
+}
+
+#[test]
+fn run_cell_is_cached_by_config_hash() {
+    let results = temp_results("cache");
+    let factory = native();
+    let registry = Registry::open(&results).unwrap();
+    let log = Log::new(false);
+    let ctx = CellCtx {
+        factory: &factory,
+        registry: &registry,
+        results_dir: &results,
+        experiment: "fig1",
+        fresh: false,
+    };
+
+    let first = fig1_tps::run_cell(&ctx, "sage_qknorm", 64, 256, 3e-3, 0, &log).unwrap();
+    // The curve views landed at the legacy path.
+    let loss_csv = PathBuf::from(&results).join("fig1/sage_qknorm_tps64/train_loss.csv");
+    let loss_bytes = std::fs::read(&loss_csv).unwrap();
+    assert!(loss_bytes.starts_with(b"step,value\n"));
+
+    // Second invocation: a registry hit — same outcome, no retraining
+    // (the view bytes are bit-identical because they're re-materialized
+    // from the same content-addressed object).
+    let second = fig1_tps::run_cell(&ctx, "sage_qknorm", 64, 256, 3e-3, 0, &log).unwrap();
+    assert_eq!(first.final_loss, second.final_loss);
+    assert_eq!(first.diverged_at, second.diverged_at);
+    assert_eq!(first.max_attn_logit, second.max_attn_logit);
+    assert_eq!(std::fs::read(&loss_csv).unwrap(), loss_bytes);
+
+    // A different seed is a different run key.
+    let cfg0 = fig1_tps::cell_config("sage_qknorm", 64, 256, 3e-3, 0);
+    let cfg1 = fig1_tps::cell_config("sage_qknorm", 64, 256, 3e-3, 1);
+    assert_ne!(
+        fig1_tps::cell_key(&factory, &cfg0).1,
+        fig1_tps::cell_key(&factory, &cfg1).1
+    );
+
+    std::fs::remove_dir_all(&results).unwrap();
+}
+
+#[test]
+fn grid_workers_share_thread_budget() {
+    // 2 workers over 7 tiny cells: results must match the sequential
+    // reference bitwise (determinism contract), and the run completes.
+    let results = temp_results("jobs");
+    let factory = native();
+    let registry = Registry::open(&results).unwrap();
+    let spec = tiny_spec();
+    let log = Log::new(false);
+    let report =
+        orchestrator::run(&factory, &registry, &results, &spec, 2, 0, false, &log).unwrap();
+    assert_eq!(report.ran, 7, "failed: {:?}", report.failed);
+    assert!(report.failed.is_empty(), "{:?}", report.failed);
+
+    // Sequential reference of one cell in a separate registry.
+    let results_seq = temp_results("jobs_seq");
+    let registry_seq = Registry::open(&results_seq).unwrap();
+    let ctx = CellCtx {
+        factory: &factory,
+        registry: &registry_seq,
+        results_dir: &results_seq,
+        experiment: "fig1",
+        fresh: false,
+    };
+    fig1_tps::run_cell(&ctx, "sage_qknorm", 64, 256, 3e-3, 0, &log).unwrap();
+
+    let curve = "fig1/sage_qknorm_tps64/train_loss.csv";
+    assert_eq!(
+        std::fs::read(PathBuf::from(&results).join(curve)).unwrap(),
+        std::fs::read(PathBuf::from(&results_seq).join(curve)).unwrap(),
+        "thread-capped grid output differs from sequential reference"
+    );
+
+    std::fs::remove_dir_all(&results).unwrap();
+    std::fs::remove_dir_all(&results_seq).unwrap();
+}
