@@ -1,0 +1,735 @@
+#!/usr/bin/env python3
+"""Numpy-free twin of `rust/src/analysis/` — the self-hosting invariant
+analyzer (DESIGN.md §13).
+
+This script mirrors the Rust lint pass line for line so the analyzer can
+be validated in a container without a Rust toolchain, exactly like
+`check_native_model.py` validates the native training engine.  It must
+agree with `sagebwd analyze` on every violation and on the A3 baseline
+counts; `--write-baseline` regenerates
+`rust/src/analysis/baseline.json` in the same canonical form the Rust
+side writes (sorted keys, one-line-per-file JSON).
+
+Usage:
+  python3 python/compile/check_analyzer.py [--root DIR] [--write-baseline]
+  python3 python/compile/check_analyzer.py --fixtures   # lint-fixture self-test
+"""
+
+import json
+import os
+import sys
+
+# --- shared constants (keep in lockstep with rust/src/analysis/lints.rs) ---
+
+NUMERIC_MODULES = ("rust/src/tensor/", "rust/src/kernels/",
+                   "rust/src/model/", "rust/src/experiments/")
+
+A1_BANNED = [
+    ("HashMap", "HashMap iteration order is nondeterministic",
+     "use BTreeMap (determinism contract, DESIGN.md S11/S13)"),
+    ("HashSet", "HashSet iteration order is nondeterministic",
+     "use BTreeSet (determinism contract, DESIGN.md S11/S13)"),
+    ("Instant", "wall-clock read inside a numeric module",
+     "time at the harness layer (bench.rs) instead"),
+    ("SystemTime", "wall-clock read inside a numeric module",
+     "time at the harness layer (bench.rs) instead"),
+    ("thread_rng", "OS randomness breaks bitwise reproducibility",
+     "use util::rng (seeded, deterministic)"),
+    ("RandomState", "randomized hasher state is nondeterministic",
+     "use BTreeMap or a fixed-seed hasher"),
+    ("getrandom", "OS randomness breaks bitwise reproducibility",
+     "use util::rng (seeded, deterministic)"),
+]
+
+A2_BANNED = [".clone()", ".to_vec()", "Vec::new", "vec!["]
+
+HOT_FUNCTIONS = [
+    ("rust/src/kernels/attention.rs", ["*_ws"]),
+    ("rust/src/tensor/linalg.rs",
+     ["gemm_nn_rows", "i8_gemm_nn_rows", "par_gemm_nn", "pack_transpose",
+      "int8_gemm_nn", "int8_gemm_nt", "int8_gemm_tn"]),
+    ("rust/src/model/blocks.rs",
+     ["rmsnorm_fwd", "rmsnorm_bwd", "mlp_fwd", "mlp_bwd",
+      "cross_entropy_fwd", "cross_entropy_bwd"]),
+    ("rust/src/model/transformer.rs", ["forward_with_targets", "loss_and_grads"]),
+]
+
+A3_TOKENS = [".unwrap()", ".expect(", "panic!"]
+
+BENCH_V1_FIELDS = ["schema", "bench", "runs", "threads_default", "rows",
+                   "op", "shape", "variant", "threads", "ns_per_iter",
+                   "tokens_per_s"]
+RUN_V1_FIELDS = ["schema", "experiment", "label", "config", "config_hash",
+                 "code_version", "status", "artifacts", "summary",
+                 "name", "sha256", "bytes", "view"]
+SCHEMA_TARGETS = [
+    ("rust/src/bench.rs", "sagebwd-bench-v1", BENCH_V1_FIELDS),
+    ("rust/src/registry/manifest.rs", "sagebwd-run-v1", RUN_V1_FIELDS),
+]
+
+BASELINE_REL = "rust/src/analysis/baseline.json"
+BASELINE_SCHEMA = "sagebwd-analysis-baseline-v1"
+
+
+# --- tokenizer (mirror of rust/src/analysis/tokenizer.rs) ---
+
+def is_ident(ch):
+    # ASCII-only on purpose: the Rust side works on bytes, and source
+    # identifiers in this repo are ASCII; non-ASCII (comment prose) must
+    # count as a boundary on both sides.
+    return (ch.isascii() and ch.isalnum()) or ch == "_"
+
+
+def tokenize(text):
+    """Return a list of lines: dicts with num, code (string/char/comment
+    contents stripped, string literals replaced by "<idx>" placeholders),
+    strings (literal contents, recorded on the closing line), comments
+    (comment text touching this line)."""
+    lines = []
+    num = 1
+    code, strings, comments = [], [], []
+    mode = "N"          # N | LC | BC | S | RS
+    bc_depth = 0
+    rs_hashes = 0
+    sbuf = []
+    comment_buf = []
+    i, n = 0, len(text)
+
+    def flush_line():
+        nonlocal code, strings, comments, num, comment_buf
+        if comment_buf:
+            comments.append("".join(comment_buf))
+            comment_buf = []
+        lines.append({"num": num, "code": "".join(code),
+                      "strings": strings, "comments": comments})
+        num += 1
+        code, strings, comments = [], [], []
+
+    while i < n:
+        ch = text[i]
+        if ch == "\n":
+            if mode == "LC":
+                mode = "N"
+            flush_line()
+            i += 1
+            continue
+        if mode == "LC":
+            comment_buf.append(ch)
+            i += 1
+            continue
+        if mode == "BC":
+            if ch == "/" and i + 1 < n and text[i + 1] == "*":
+                bc_depth += 1
+                comment_buf.append("/*")
+                i += 2
+                continue
+            if ch == "*" and i + 1 < n and text[i + 1] == "/":
+                bc_depth -= 1
+                i += 2
+                if bc_depth == 0:
+                    mode = "N"
+                    if comment_buf:
+                        comments.append("".join(comment_buf))
+                        comment_buf = []
+                else:
+                    comment_buf.append("*/")
+                continue
+            comment_buf.append(ch)
+            i += 1
+            continue
+        if mode == "S":
+            if ch == "\\" and i + 1 < n:
+                if text[i + 1] == "\n":  # escaped-newline continuation
+                    flush_line()
+                else:
+                    sbuf.append(text[i:i + 2])
+                i += 2
+                continue
+            if ch == '"':
+                strings.append("".join(sbuf))
+                code.append('"%d"' % (len(strings) - 1))
+                sbuf = []
+                mode = "N"
+                i += 1
+                continue
+            sbuf.append(ch)
+            i += 1
+            continue
+        if mode == "RS":
+            if ch == '"' and text[i + 1:i + 1 + rs_hashes] == "#" * rs_hashes:
+                strings.append("".join(sbuf))
+                code.append('"%d"' % (len(strings) - 1))
+                sbuf = []
+                mode = "N"
+                i += 1 + rs_hashes
+                continue
+            sbuf.append(ch)
+            i += 1
+            continue
+        # mode == N
+        prev = text[i - 1] if i > 0 else " "
+        if ch == "/" and i + 1 < n and text[i + 1] == "/":
+            mode = "LC"
+            i += 2
+            continue
+        if ch == "/" and i + 1 < n and text[i + 1] == "*":
+            mode = "BC"
+            bc_depth = 1
+            i += 2
+            continue
+        if ch == '"':
+            mode = "S"
+            sbuf = []
+            i += 1
+            continue
+        if ch in "rb" and not is_ident(prev):
+            # r"..." / r#"..."# / b"..." / br"..." raw and byte strings.
+            j = i + 1
+            if ch == "b" and j < n and text[j] == "r":
+                j += 1
+            hashes = 0
+            while j < n and text[j] == "#":
+                hashes += 1
+                j += 1
+            if j < n and text[j] == '"' and (hashes > 0 or
+                                             (ch == "r" and text[i + 1] == '"') or
+                                             (ch == "b" and text[i + 1] == '"') or
+                                             (ch == "b" and text[i + 1] == "r")):
+                if hashes > 0 or (ch == "r" or text[i + 1] == "r"):
+                    mode = "RS"
+                    rs_hashes = hashes
+                else:
+                    mode = "S"  # b"..."
+                sbuf = []
+                i = j + 1
+                continue
+            code.append(ch)
+            i += 1
+            continue
+        if ch == "'":
+            nxt = text[i + 1] if i + 1 < n else ""
+            if nxt == "\\":
+                j = i + 2
+                while j < n and text[j] != "'":
+                    j += 1
+                code.append("' '")
+                i = j + 1
+                continue
+            if i + 2 < n and text[i + 2] == "'":
+                code.append("' '")
+                i += 3
+                continue
+            code.append(ch)  # lifetime
+            i += 1
+            continue
+        code.append(ch)
+        i += 1
+    if code or strings or comments or comment_buf or mode != "N":
+        flush_line()
+    return lines
+
+
+# --- region + helper passes (mirror of analysis/lints.rs helpers) ---
+
+def test_lines(lines, relpath):
+    """Set of 1-based line numbers that are test code."""
+    if relpath.startswith("rust/tests/") or relpath.startswith("rust/benches/"):
+        return set(l["num"] for l in lines)
+    out = set()
+    pending = False
+    depth = 0
+    in_region = False
+    for l in lines:
+        if not in_region and "#[cfg(test)]" in l["code"]:
+            pending = True
+            out.add(l["num"])
+            continue
+        if pending or in_region:
+            out.add(l["num"])
+            for ch in l["code"]:
+                if ch == "{":
+                    depth += 1
+                    pending = False
+                    in_region = True
+                elif ch == "}":
+                    depth -= 1
+                    if in_region and depth == 0:
+                        in_region = False
+            if not pending and not in_region:
+                pass  # region closed on this line
+    return out
+
+
+def parse_allows(lines):
+    """line -> list of (lint_id, has_reason). An allow on line L covers
+    violations on L and L+1."""
+    allows = {}
+    for l in lines:
+        for c in l["comments"]:
+            idx = c.find("sagebwd-allow(")
+            while idx >= 0:
+                rest = c[idx + len("sagebwd-allow("):]
+                close = rest.find(")")
+                if close > 0:
+                    lint = rest[:close].strip()
+                    after = rest[close + 1:]
+                    reason = ""
+                    if after.lstrip().startswith(":"):
+                        reason = after.lstrip()[1:].strip()
+                    allows.setdefault(l["num"], []).append((lint, bool(reason)))
+                idx = c.find("sagebwd-allow(", idx + 1)
+    return allows
+
+
+def find_token(code, token):
+    """Start indices of identifier-boundary-checked occurrences."""
+    out = []
+    start = 0
+    ident_token = token[0].isalpha() or token[0] == "_"
+    while True:
+        idx = code.find(token, start)
+        if idx < 0:
+            return out
+        before = code[idx - 1] if idx > 0 else " "
+        end = idx + len(token)
+        after = code[end] if end < len(code) else " "
+        ok = True
+        if ident_token and is_ident(before):
+            ok = False
+        if token[-1].isalnum() or token[-1] == "_":
+            if is_ident(after):
+                ok = False
+        if ok:
+            out.append(idx)
+        start = idx + 1
+
+
+class Ctx:
+    def __init__(self, relpath, lines):
+        self.relpath = relpath
+        self.lines = lines
+        self.tests = test_lines(lines, relpath)
+        self.allows = parse_allows(lines)
+
+    def allowed(self, lint, num):
+        for at in (num, num - 1):
+            for (lid, has_reason) in self.allows.get(at, []):
+                if lid == lint and has_reason:
+                    return True
+        return False
+
+    def allow_comment_violations(self):
+        out = []
+        for num, lst in sorted(self.allows.items()):
+            for (lid, has_reason) in lst:
+                if not has_reason:
+                    out.append((self.relpath, num, "A0",
+                                "sagebwd-allow(%s) without a reason" % lid,
+                                "write // sagebwd-allow(%s): <why this site is safe>" % lid))
+        return out
+
+
+# --- the five lints ---
+
+def lint_a1(ctx):
+    out = []
+    if not any(ctx.relpath.startswith(p) for p in NUMERIC_MODULES):
+        return out
+    for l in ctx.lines:
+        if l["num"] in ctx.tests:
+            continue
+        for (tok, msg, hint) in A1_BANNED:
+            for _ in find_token(l["code"], tok):
+                if not ctx.allowed("A1", l["num"]):
+                    out.append((ctx.relpath, l["num"], "A1",
+                                "%s (`%s`)" % (msg, tok), hint))
+    return out
+
+
+def fn_matches(name, pattern):
+    if pattern.startswith("*"):
+        return name.endswith(pattern[1:])
+    if pattern.endswith("*"):
+        return name.startswith(pattern[:-1])
+    return name == pattern
+
+
+def hot_fn_spans(ctx, patterns):
+    """Yield (fn_name, [(line_num, [loop char ranges])...]) for manifest
+    functions: per body line, the char index ranges inside loop scopes."""
+    matched = set()
+    spans = []
+    nlines = len(ctx.lines)
+    li = 0
+    while li < nlines:
+        l = ctx.lines[li]
+        if l["num"] in ctx.tests:
+            li += 1
+            continue
+        code = l["code"]
+        for idx in find_token(code, "fn"):
+            rest = code[idx + 2:].lstrip()
+            name = ""
+            for ch in rest:
+                if is_ident(ch):
+                    name += ch
+                else:
+                    break
+            if not name:
+                continue
+            pats = [p for p in patterns if fn_matches(name, p)]
+            if not pats:
+                continue
+            matched.update(pats)
+            # scan body: from this point, find first '{', then track
+            # depth and loop scopes until the matching '}'.
+            body = []
+            depth = 0
+            started = False
+            pending_loop = False
+            loop_stack = []
+            word = ""
+            lj, cj = li, idx
+            done = False
+            while lj < nlines and not done:
+                lcode = ctx.lines[lj]["code"]
+                ranges = []
+                open_at = None
+                k = cj
+                while k < len(lcode):
+                    ch = lcode[k]
+                    if is_ident(ch):
+                        word += ch
+                    else:
+                        if word in ("for", "while", "loop"):
+                            pending_loop = True
+                        word = ""
+                    if ch == "{":
+                        if not started:
+                            started = True
+                            depth = 1
+                            loop_stack = []
+                        else:
+                            depth += 1
+                            loop_stack.append(pending_loop)
+                            if pending_loop and open_at is None:
+                                open_at = k
+                            pending_loop = False
+                    elif ch == ";":
+                        pending_loop = False
+                    elif ch == "}":
+                        if started:
+                            depth -= 1
+                            if depth == 0:
+                                done = True
+                                if any(loop_stack) or open_at is not None:
+                                    pass
+                                k += 1
+                                break
+                            was_loop = loop_stack.pop() if loop_stack else False
+                            if was_loop and not any(loop_stack):
+                                ranges.append((open_at if open_at is not None else 0, k))
+                                open_at = None
+                    k += 1
+                word = ""  # tokens never span lines
+                if started:
+                    in_loop = any(loop_stack)
+                    if in_loop and open_at is None:
+                        ranges.append((0, len(lcode)))
+                    elif open_at is not None:
+                        ranges.append((open_at, len(lcode)))
+                    if ranges:
+                        body.append((ctx.lines[lj]["num"], ranges))
+                lj += 1
+                cj = 0
+            spans.append((name, body))
+        li += 1
+    return spans, matched
+
+
+def lint_a2(ctx):
+    out = []
+    patterns = None
+    for (path, pats) in HOT_FUNCTIONS:
+        if ctx.relpath == path:
+            patterns = pats
+    if patterns is None:
+        return out
+    spans, matched = hot_fn_spans(ctx, patterns)
+    for p in patterns:
+        if p not in matched:
+            out.append((ctx.relpath, 1, "A2",
+                        "hot-function manifest entry `%s` matches no fn" % p,
+                        "update HOT_FUNCTIONS in analysis/lints.rs"))
+    line_code = {l["num"]: l["code"] for l in ctx.lines}
+    for (name, body) in spans:
+        for (num, ranges) in body:
+            code = line_code[num]
+            for tok in A2_BANNED:
+                for idx in find_token(code, tok):
+                    if any(lo <= idx <= hi for (lo, hi) in ranges):
+                        if not ctx.allowed("A2", num):
+                            out.append((ctx.relpath, num, "A2",
+                                        "`%s` inside a hot loop of `%s`" % (tok, name),
+                                        "hoist the buffer out of the loop (Workspace slab or argument)"))
+    return out
+
+
+def lint_a3_sites(ctx):
+    sites = []
+    if not ctx.relpath.startswith("rust/src/"):
+        return sites
+    for l in ctx.lines:
+        if l["num"] in ctx.tests:
+            continue
+        for tok in A3_TOKENS:
+            for _ in find_token(l["code"], tok):
+                if not ctx.allowed("A3", l["num"]):
+                    sites.append((l["num"], tok))
+    return sites
+
+
+def lint_a4(ctx):
+    out = []
+    comment_only = {}
+    by_num = {l["num"]: l for l in ctx.lines}
+    for l in ctx.lines:
+        comment_only[l["num"]] = (not l["code"].strip()) and bool(l["comments"])
+    for l in ctx.lines:
+        for _ in find_token(l["code"], "unsafe"):
+            ok = any("SAFETY:" in c for c in l["comments"])
+            num = l["num"] - 1
+            while not ok and num >= 1 and comment_only.get(num, False):
+                if any("SAFETY:" in c for c in by_num[num]["comments"]):
+                    ok = True
+                num -= 1
+            if not ok and not ctx.allowed("A4", l["num"]):
+                out.append((ctx.relpath, l["num"], "A4",
+                            "`unsafe` without a `// SAFETY:` comment",
+                            "document the invariant that makes this sound on the preceding line"))
+    return out
+
+
+IDENT_KEY = lambda s: s and s[0].isalpha() and s[0].islower() and all(
+    c.islower() or c.isdigit() or c == "_" for c in s)
+
+
+def json_keys(ctx):
+    """(key, line) pairs extracted from ("key", ...) and (..., "key")
+    call positions in non-test code."""
+    out = []
+    for l in ctx.lines:
+        if l["num"] in ctx.tests:
+            continue
+        code = l["code"]
+        for si, s in enumerate(l["strings"]):
+            ph = '"%d"' % si
+            idx = code.find(ph)
+            if idx < 0:
+                continue
+            before = code[:idx].rstrip()
+            after = code[idx + len(ph):].lstrip()
+            prevc = before[-1] if before else ""
+            nextc = after[0] if after else ""
+            if (prevc == "(" and nextc == ",") or (prevc == "," and nextc == ")"):
+                if IDENT_KEY(s):
+                    out.append((s, l["num"]))
+    return out
+
+
+def lint_a5(ctx):
+    out = []
+    target = None
+    for (path, tag, fields) in SCHEMA_TARGETS:
+        if ctx.relpath == path:
+            target = (tag, fields)
+    if target is None:
+        return out
+    tag, fields = target
+    all_strings = set()
+    for l in ctx.lines:
+        if l["num"] not in ctx.tests:
+            all_strings.update(l["strings"])
+    if tag not in all_strings:
+        out.append((ctx.relpath, 1, "A5",
+                    "schema tag \"%s\" not found in file" % tag,
+                    "keep the schema constant in lockstep with analysis/lints.rs"))
+    keys = json_keys(ctx)
+    seen = set(k for (k, _) in keys)
+    for (k, num) in keys:
+        if k not in fields and not ctx.allowed("A5", num):
+            out.append((ctx.relpath, num, "A5",
+                        "field \"%s\" is not in the documented %s schema" % (k, tag),
+                        "add it to the schema list in analysis/lints.rs + DESIGN.md, or rename"))
+    for f in fields:
+        if f not in seen:
+            out.append((ctx.relpath, 1, "A5",
+                        "documented %s field \"%s\" is no longer emitted/checked here" % (tag, f),
+                        "re-emit the field or remove it from the documented schema"))
+    return out
+
+
+# --- file walking + baseline (mirror of analysis/mod.rs + baseline.rs) ---
+
+def scan_paths(root):
+    out = []
+    for sub in ("rust/src", "rust/tests", "rust/benches", "examples"):
+        base = os.path.join(root, sub)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if d not in ("data", "vendor", "target")
+                                 and not d.startswith("."))
+            for f in sorted(filenames):
+                if f.endswith(".rs"):
+                    rel = os.path.relpath(os.path.join(dirpath, f), root)
+                    out.append(rel.replace(os.sep, "/"))
+    return sorted(out)
+
+
+def analyze(root, update_baseline=False):
+    violations = []
+    a3_counts = {}
+    for rel in scan_paths(root):
+        with open(os.path.join(root, rel), encoding="utf-8") as fh:
+            text = fh.read()
+        ctx = Ctx(rel, tokenize(text))
+        violations += ctx.allow_comment_violations()
+        violations += lint_a1(ctx)
+        violations += lint_a2(ctx)
+        violations += lint_a4(ctx)
+        violations += lint_a5(ctx)
+        sites = lint_a3_sites(ctx)
+        if sites:
+            a3_counts[rel] = sites
+    # A3 ratchet against the committed baseline.
+    bpath = os.path.join(root, BASELINE_REL)
+    baseline = {"files": {}, "total": 0}
+    have_baseline = os.path.isfile(bpath)
+    if have_baseline:
+        with open(bpath, encoding="utf-8") as fh:
+            baseline = json.load(fh)
+        if baseline.get("schema") != BASELINE_SCHEMA:
+            violations.append((BASELINE_REL, 1, "A3",
+                               "baseline has schema %r, want %r" % (
+                                   baseline.get("schema"), BASELINE_SCHEMA),
+                               "regenerate with `sagebwd analyze --write-baseline`"))
+            baseline = {"files": {}, "total": 0}
+    else:
+        violations.append((BASELINE_REL, 1, "A3", "missing A3 baseline file",
+                           "generate it with `sagebwd analyze --write-baseline`"))
+    bfiles = baseline.get("files", {})
+    tightened = False
+    for rel in sorted(a3_counts):
+        count = len(a3_counts[rel])
+        base = bfiles.get(rel, 0)
+        if count > base:
+            first = a3_counts[rel][max(0, base)][0] if a3_counts[rel] else 1
+            violations.append((rel, first, "A3",
+                               "%d unwrap()/expect()/panic! sites, baseline allows %d" % (count, base),
+                               "propagate with ? (or // sagebwd-allow(A3): reason), never raise the baseline"))
+        elif count < base:
+            tightened = True
+    for rel, base in bfiles.items():
+        if base > 0 and rel not in a3_counts:
+            tightened = True
+    total = sum(len(v) for v in a3_counts.values())
+    if update_baseline and have_baseline and tightened and \
+            not any(v[2] == "A3" for v in violations):
+        write_baseline(bpath, a3_counts)
+    return violations, a3_counts, baseline, tightened
+
+
+def baseline_json(a3_counts):
+    files = {rel: len(sites) for rel, sites in sorted(a3_counts.items())}
+    total = sum(files.values())
+    # Canonical form: matches util::json (sorted keys, no spaces).
+    doc = {"files": files, "schema": BASELINE_SCHEMA, "total": total}
+    return json.dumps(doc, sort_keys=True, separators=(",", ":"))
+
+
+def write_baseline(path, a3_counts):
+    with open(path, "w", encoding="utf-8") as fh:
+        fh.write(baseline_json(a3_counts))
+
+
+def check_fixtures(root):
+    """Mirror of rust/tests/analysis_lints.rs over the same fixtures."""
+    import shutil
+    import tempfile
+    fx = os.path.join(root, "rust/tests/data/lint_fixtures")
+    seeded, _, _, _ = analyze(os.path.join(fx, "seeded"))
+    got = sorted((f, line, lint) for (f, line, lint, _, _) in seeded)
+    expect = [
+        ("rust/src/bench.rs", 1, "A5"),
+        ("rust/src/bench.rs", 29, "A5"),
+        ("rust/src/kernels/attention.rs", 3, "A1"),
+        ("rust/src/kernels/attention.rs", 8, "A2"),
+        ("rust/src/main.rs", 4, "A3"),
+        ("rust/src/runtime/raw.rs", 4, "A4"),
+        ("rust/src/runtime/raw.rs", 13, "A0"),
+        ("rust/src/runtime/raw.rs", 14, "A4"),
+        ("rust/src/tensor/linalg.rs", 1, "A2"),
+        ("rust/src/tensor/timing.rs", 4, "A1"),
+    ]
+    assert got == expect, "seeded fixture mismatch:\n%s" % "\n".join(map(str, got))
+    for name in ("suppressed", "clean"):
+        v, counts, _, _ = analyze(os.path.join(fx, name))
+        assert not v, "%s fixture must be quiet: %s" % (name, v)
+        assert not counts, "%s fixture must have no A3 sites" % name
+
+    # Ratchet scenario in a temp tree (same steps as the Rust test).
+    tmp = tempfile.mkdtemp(prefix="sagebwd_ratchet_")
+    try:
+        src = os.path.join(tmp, "rust/src")
+        os.makedirs(os.path.join(src, "analysis"))
+        with open(os.path.join(src, "lib.rs"), "w") as fh:
+            fh.write("pub fn f(x: Option<u32>) -> u32 { x.unwrap() }\n")
+        v, counts, _, _ = analyze(tmp)
+        assert len(v) == 2 and all(x[2] == "A3" for x in v), v
+        write_baseline(os.path.join(tmp, BASELINE_REL), counts)
+        v, _, _, _ = analyze(tmp)
+        assert not v, v
+        with open(os.path.join(tmp, BASELINE_REL), "w") as fh:
+            fh.write('{"files":{"rust/src/lib.rs":3},'
+                     '"schema":"sagebwd-analysis-baseline-v1","total":3}')
+        v, _, _, tightened = analyze(tmp, update_baseline=True)
+        assert not v and tightened
+        with open(os.path.join(tmp, BASELINE_REL)) as fh:
+            assert json.load(fh)["total"] == 1, "auto-tighten must rewrite"
+        with open(os.path.join(src, "lib.rs"), "a") as fh:
+            fh.write("pub fn g(x: Option<u32>) -> u32 { x.unwrap() }\n")
+        v, _, _, _ = analyze(tmp, update_baseline=True)
+        assert len(v) == 1 and v[0][2] == "A3" and v[0][1] == 2, v
+        with open(os.path.join(tmp, BASELINE_REL)) as fh:
+            assert json.load(fh)["total"] == 1, "failing run must not rewrite"
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    print("fixture self-test OK")
+
+
+def main():
+    args = sys.argv[1:]
+    root = "."
+    if "--root" in args:
+        root = args[args.index("--root") + 1]
+    if "--fixtures" in args:
+        check_fixtures(root)
+        return
+    violations, a3_counts, baseline, tightened = analyze(
+        root, update_baseline="--write-baseline" in args)
+    for (f, line, lint, msg, hint) in sorted(violations):
+        print("%s:%d: %s: %s (fix: %s)" % (f, line, lint, msg, hint))
+    total = sum(len(v) for v in a3_counts.values())
+    print("A3 sites: %d (baseline %d)%s" % (
+        total, baseline.get("total", 0), ", ratchet can tighten" if tightened else ""))
+    print("%d violation(s)" % len(violations))
+    if "--write-baseline" in args:
+        write_baseline(os.path.join(root, BASELINE_REL), a3_counts)
+        print("baseline written: %d sites over %d files" % (total, len(a3_counts)))
+    sys.exit(1 if violations else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+//! The A3 ratchet baseline: per-file panic-site counts committed as
+//! `rust/src/analysis/baseline.json` (DESIGN.md §13).
+//!
+//! Canonical form — `util::json` output (sorted keys, no whitespace) so
+//! regeneration is byte-stable and diffs are honest:
+//!
+//! ```text
+//! {"files":{"rust/src/...":N,...},"schema":"sagebwd-analysis-baseline-v1","total":T}
+//! ```
+//!
+//! The ratchet is one-directional: a file's count may only go *down*.
+//! `sagebwd analyze` auto-rewrites the baseline when counts drop (so
+//! improvements are locked in by the same commit that makes them) and
+//! fails when any count rises; raising the baseline by hand is a code
+//! review matter, not a tooling feature.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, schema, Json};
+
+/// Schema tag of `baseline.json`.
+pub const BASELINE_SCHEMA: &str = "sagebwd-analysis-baseline-v1";
+
+/// Repo-relative path of the committed baseline.
+pub const BASELINE_REL: &str = "rust/src/analysis/baseline.json";
+
+/// Parsed baseline: per-file allowed A3 site counts.
+#[derive(Debug, Clone, Default)]
+pub struct Baseline {
+    pub files: BTreeMap<String, usize>,
+    pub total: usize,
+}
+
+impl Baseline {
+    /// Build from measured per-file counts (what `--write-baseline` and
+    /// the auto-tighten path persist).
+    pub fn from_counts(counts: &BTreeMap<String, usize>) -> Baseline {
+        let files: BTreeMap<String, usize> = counts
+            .iter()
+            .filter(|&(_, &c)| c > 0)
+            .map(|(k, &c)| (k.clone(), c))
+            .collect();
+        let total = files.values().sum();
+        Baseline { files, total }
+    }
+
+    /// Allowed count for a file (0 when unlisted).
+    pub fn allowed(&self, rel: &str) -> usize {
+        self.files.get(rel).copied().unwrap_or(0)
+    }
+
+    /// Load from disk; `Ok(None)` when the file does not exist.
+    pub fn load(path: &Path) -> Result<Option<Baseline>> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => {
+                return Err(e).with_context(|| format!("reading {}", path.display()))
+            }
+        };
+        let doc =
+            json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        schema::expect_tag(&doc, BASELINE_SCHEMA)
+            .with_context(|| format!("{}", path.display()))?;
+        let mut files = BTreeMap::new();
+        for (k, v) in doc.get("files")?.as_obj()? {
+            files.insert(k.clone(), v.as_usize()?);
+        }
+        let total = schema::usize_field(&doc, "total")?;
+        Ok(Some(Baseline { files, total }))
+    }
+
+    /// Canonical JSON (sorted keys, no whitespace).
+    pub fn to_json(&self) -> String {
+        let files: BTreeMap<String, Json> = self
+            .files
+            .iter()
+            .map(|(k, &v)| (k.clone(), Json::from(v)))
+            .collect();
+        Json::from_pairs(vec![
+            ("files", Json::Obj(files)),
+            ("schema", Json::from(BASELINE_SCHEMA)),
+            ("total", Json::from(self.total)),
+        ])
+        .to_string()
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_form_roundtrips() {
+        let mut counts = BTreeMap::new();
+        counts.insert("rust/src/b.rs".to_string(), 2);
+        counts.insert("rust/src/a.rs".to_string(), 3);
+        counts.insert("rust/src/clean.rs".to_string(), 0);
+        let b = Baseline::from_counts(&counts);
+        assert_eq!(b.total, 5);
+        assert_eq!(b.allowed("rust/src/clean.rs"), 0, "zero-count files are dropped");
+        let text = b.to_json();
+        assert_eq!(
+            text,
+            r#"{"files":{"rust/src/a.rs":3,"rust/src/b.rs":2},"schema":"sagebwd-analysis-baseline-v1","total":5}"#
+        );
+        let dir = std::env::temp_dir().join(format!("sagebwd_base_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("baseline.json");
+        b.save(&path).unwrap();
+        let back = Baseline::load(&path).unwrap().unwrap();
+        assert_eq!(back.total, 5);
+        assert_eq!(back.allowed("rust/src/a.rs"), 3);
+        assert!(Baseline::load(&dir.join("missing.json")).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,769 @@
+//! The five invariant lints (DESIGN.md §13) over tokenized sources.
+//!
+//! * **A1 determinism** — no `HashMap`/`HashSet`, wall clocks, or OS
+//!   randomness inside the numeric modules (`tensor/`, `kernels/`,
+//!   `model/`, `experiments/`): the bitwise-reproducibility contract of
+//!   DESIGN.md §11 at any `SAGEBWD_THREADS`.
+//! * **A2 hot-loop allocation** — no `clone()`/`to_vec()`/`Vec::new`/
+//!   `vec![` inside loop bodies of the [`HOT_FUNCTIONS`] manifest
+//!   (the PR-5 workspace discipline).  Prologue allocations are legal;
+//!   a manifest entry matching no `fn` is itself a violation, so the
+//!   manifest cannot silently rot.
+//! * **A3 panic-policy** — `unwrap()`/`expect()`/`panic!` in non-test
+//!   library code, ratcheted against `analysis/baseline.json`.
+//! * **A4 unsafe-audit** — every `unsafe` needs a `// SAFETY:` comment
+//!   on the same line or the run of comment-only lines above it.
+//! * **A5 schema-drift** — string keys emitted/checked by `bench.rs`
+//!   and `registry/manifest.rs` must match the documented
+//!   `sagebwd-bench-v1` / `sagebwd-run-v1` field lists.
+//!
+//! Suppression is per-site only: `// sagebwd-allow(A3): reason` on the
+//! violating line or the line above.  A reason is mandatory — an allow
+//! without one is reported as **A0**.
+//!
+//! Constants here are the spec; `python/compile/check_analyzer.py`
+//! mirrors them and must be updated in the same commit.
+
+use std::collections::BTreeMap;
+
+use crate::analysis::tokenizer::{is_ident, Line};
+
+/// Module prefixes under the determinism contract (A1).
+pub const NUMERIC_MODULES: [&str; 4] = [
+    "rust/src/tensor/",
+    "rust/src/kernels/",
+    "rust/src/model/",
+    "rust/src/experiments/",
+];
+
+/// (token, message, hint) triples banned in numeric modules (A1).
+pub const A1_BANNED: [(&str, &str, &str); 7] = [
+    (
+        "HashMap",
+        "HashMap iteration order is nondeterministic",
+        "use BTreeMap (determinism contract, DESIGN.md S11/S13)",
+    ),
+    (
+        "HashSet",
+        "HashSet iteration order is nondeterministic",
+        "use BTreeSet (determinism contract, DESIGN.md S11/S13)",
+    ),
+    (
+        "Instant",
+        "wall-clock read inside a numeric module",
+        "time at the harness layer (bench.rs) instead",
+    ),
+    (
+        "SystemTime",
+        "wall-clock read inside a numeric module",
+        "time at the harness layer (bench.rs) instead",
+    ),
+    (
+        "thread_rng",
+        "OS randomness breaks bitwise reproducibility",
+        "use util::rng (seeded, deterministic)",
+    ),
+    (
+        "RandomState",
+        "randomized hasher state is nondeterministic",
+        "use BTreeMap or a fixed-seed hasher",
+    ),
+    (
+        "getrandom",
+        "OS randomness breaks bitwise reproducibility",
+        "use util::rng (seeded, deterministic)",
+    ),
+];
+
+/// Allocation tokens banned inside hot loops (A2).
+pub const A2_BANNED: [&str; 4] = [".clone()", ".to_vec()", "Vec::new", "vec!["];
+
+/// The hot-function manifest: (file, fn-name patterns).  `*` at either
+/// end of a pattern is a prefix/suffix wildcard.
+pub const HOT_FUNCTIONS: [(&str, &[&str]); 4] = [
+    ("rust/src/kernels/attention.rs", &["*_ws"]),
+    (
+        "rust/src/tensor/linalg.rs",
+        &[
+            "gemm_nn_rows",
+            "i8_gemm_nn_rows",
+            "par_gemm_nn",
+            "pack_transpose",
+            "int8_gemm_nn",
+            "int8_gemm_nt",
+            "int8_gemm_tn",
+        ],
+    ),
+    (
+        "rust/src/model/blocks.rs",
+        &[
+            "rmsnorm_fwd",
+            "rmsnorm_bwd",
+            "mlp_fwd",
+            "mlp_bwd",
+            "cross_entropy_fwd",
+            "cross_entropy_bwd",
+        ],
+    ),
+    (
+        "rust/src/model/transformer.rs",
+        &["forward_with_targets", "loss_and_grads"],
+    ),
+];
+
+/// Panic-family tokens (A3).
+pub const A3_TOKENS: [&str; 3] = [".unwrap()", ".expect(", "panic!"];
+
+/// Documented `sagebwd-bench-v1` field names (A5).
+pub const BENCH_V1_FIELDS: [&str; 11] = [
+    "schema",
+    "bench",
+    "runs",
+    "threads_default",
+    "rows",
+    "op",
+    "shape",
+    "variant",
+    "threads",
+    "ns_per_iter",
+    "tokens_per_s",
+];
+
+/// Documented `sagebwd-run-v1` field names (A5).
+pub const RUN_V1_FIELDS: [&str; 13] = [
+    "schema",
+    "experiment",
+    "label",
+    "config",
+    "config_hash",
+    "code_version",
+    "status",
+    "artifacts",
+    "summary",
+    "name",
+    "sha256",
+    "bytes",
+    "view",
+];
+
+/// (file, schema tag, documented fields) targets for A5.
+pub fn schema_targets() -> [(&'static str, &'static str, &'static [&'static str]); 2] {
+    [
+        ("rust/src/bench.rs", "sagebwd-bench-v1", &BENCH_V1_FIELDS),
+        (
+            "rust/src/registry/manifest.rs",
+            "sagebwd-run-v1",
+            &RUN_V1_FIELDS,
+        ),
+    ]
+}
+
+/// One reported lint hit, rendered as `file:line: LINT: message (fix: hint)`.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub lint: &'static str,
+    pub message: String,
+    pub hint: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}:{}: {}: {} (fix: {})",
+            self.file, self.line, self.lint, self.message, self.hint
+        )
+    }
+}
+
+/// Per-file lint context: stripped lines + test-region and allow maps.
+pub struct FileCtx {
+    pub relpath: String,
+    pub lines: Vec<Line>,
+    tests: Vec<bool>,
+    allows: BTreeMap<usize, Vec<(String, bool)>>,
+}
+
+/// 1-based line numbers that are test code: whole files under
+/// `rust/tests/` and `rust/benches/`, and `#[cfg(test)]`-gated blocks in
+/// library sources (tracked by brace depth).
+fn test_flags(lines: &[Line], relpath: &str) -> Vec<bool> {
+    let max_num = lines.iter().map(|l| l.num).max().unwrap_or(0);
+    let mut flags = vec![false; max_num + 2];
+    if relpath.starts_with("rust/tests/") || relpath.starts_with("rust/benches/") {
+        for f in flags.iter_mut() {
+            *f = true;
+        }
+        return flags;
+    }
+    let mut pending = false;
+    let mut depth = 0usize;
+    let mut in_region = false;
+    for l in lines {
+        if !in_region && l.code.contains("#[cfg(test)]") {
+            pending = true;
+            flags[l.num] = true;
+            continue;
+        }
+        if pending || in_region {
+            flags[l.num] = true;
+            for ch in l.code.chars() {
+                if ch == '{' {
+                    depth += 1;
+                    pending = false;
+                    in_region = true;
+                } else if ch == '}' {
+                    depth = depth.saturating_sub(1);
+                    if in_region && depth == 0 {
+                        in_region = false;
+                    }
+                }
+            }
+        }
+    }
+    flags
+}
+
+/// line -> [(lint_id, has_reason)].  An allow on line L covers L and L+1.
+fn parse_allows(lines: &[Line]) -> BTreeMap<usize, Vec<(String, bool)>> {
+    const MARK: &str = "sagebwd-allow(";
+    let mut allows: BTreeMap<usize, Vec<(String, bool)>> = BTreeMap::new();
+    for l in lines {
+        for c in &l.comments {
+            let mut from = 0usize;
+            while let Some(off) = c[from..].find(MARK) {
+                let idx = from + off;
+                let rest = &c[idx + MARK.len()..];
+                if let Some(close) = rest.find(')') {
+                    if close > 0 {
+                        let lint = rest[..close].trim().to_string();
+                        let after = rest[close + 1..].trim_start();
+                        let reason = after
+                            .strip_prefix(':')
+                            .map(|r| !r.trim().is_empty())
+                            .unwrap_or(false);
+                        allows.entry(l.num).or_default().push((lint, reason));
+                    }
+                }
+                from = idx + 1;
+            }
+        }
+    }
+    allows
+}
+
+/// Start byte offsets of boundary-checked occurrences of `token` in
+/// `code`.  Tokens starting with an identifier char must not be preceded
+/// by one; tokens ending with one must not be followed by one.
+pub fn find_token(code: &str, token: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let bytes = code.as_bytes();
+    let tok_first = token.as_bytes()[0];
+    let tok_last = *token.as_bytes().last().unwrap_or(&b' ');
+    let ident_start = tok_first.is_ascii_alphabetic() || tok_first == b'_';
+    let ident_end = tok_last.is_ascii_alphanumeric() || tok_last == b'_';
+    let mut start = 0usize;
+    while let Some(off) = code[start..].find(token) {
+        let idx = start + off;
+        let before = if idx > 0 { bytes[idx - 1] as char } else { ' ' };
+        let end = idx + token.len();
+        let after = if end < bytes.len() {
+            bytes[end] as char
+        } else {
+            ' '
+        };
+        let mut ok = true;
+        if ident_start && is_ident(before) {
+            ok = false;
+        }
+        if ident_end && is_ident(after) {
+            ok = false;
+        }
+        if ok {
+            out.push(idx);
+        }
+        start = idx + 1;
+    }
+    out
+}
+
+impl FileCtx {
+    pub fn new(relpath: &str, text: &str) -> FileCtx {
+        let lines = crate::analysis::tokenizer::tokenize(text);
+        let tests = test_flags(&lines, relpath);
+        let allows = parse_allows(&lines);
+        FileCtx {
+            relpath: relpath.to_string(),
+            lines,
+            tests,
+            allows,
+        }
+    }
+
+    fn is_test(&self, num: usize) -> bool {
+        self.tests.get(num).copied().unwrap_or(false)
+    }
+
+    /// Is `lint` allowed (with a reason) on line `num`?
+    fn allowed(&self, lint: &str, num: usize) -> bool {
+        for at in [num, num.saturating_sub(1)] {
+            if let Some(list) = self.allows.get(&at) {
+                if list.iter().any(|(lid, has)| lid == lint && *has) {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// A0: every `sagebwd-allow` must carry a reason.
+    pub fn allow_comment_violations(&self) -> Vec<Violation> {
+        let mut out = Vec::new();
+        for (num, list) in &self.allows {
+            for (lid, has_reason) in list {
+                if !has_reason {
+                    out.push(Violation {
+                        file: self.relpath.clone(),
+                        line: *num,
+                        lint: "A0",
+                        message: format!("sagebwd-allow({lid}) without a reason"),
+                        hint: format!(
+                            "write // sagebwd-allow({lid}): <why this site is safe>"
+                        ),
+                    });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// A1: banned nondeterminism tokens in numeric modules.
+pub fn lint_a1(ctx: &FileCtx) -> Vec<Violation> {
+    let mut out = Vec::new();
+    if !NUMERIC_MODULES.iter().any(|p| ctx.relpath.starts_with(p)) {
+        return out;
+    }
+    for l in &ctx.lines {
+        if ctx.is_test(l.num) {
+            continue;
+        }
+        for (tok, msg, hint) in A1_BANNED {
+            for _ in find_token(&l.code, tok) {
+                if !ctx.allowed("A1", l.num) {
+                    out.push(Violation {
+                        file: ctx.relpath.clone(),
+                        line: l.num,
+                        lint: "A1",
+                        message: format!("{msg} (`{tok}`)"),
+                        hint: hint.to_string(),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+fn fn_matches(name: &str, pattern: &str) -> bool {
+    if let Some(suffix) = pattern.strip_prefix('*') {
+        return name.ends_with(suffix);
+    }
+    if let Some(prefix) = pattern.strip_suffix('*') {
+        return name.starts_with(prefix);
+    }
+    name == pattern
+}
+
+/// Per-line loop-body byte ranges of one matched hot function.
+struct FnSpan {
+    name: String,
+    /// (line number, [(lo, hi)] inclusive byte ranges inside loop scopes).
+    body: Vec<(usize, Vec<(usize, usize)>)>,
+}
+
+/// Find manifest functions and the byte ranges of their loop bodies.
+/// Returns the spans and the set of patterns that matched at least once.
+fn hot_fn_spans(ctx: &FileCtx, patterns: &[&str]) -> (Vec<FnSpan>, Vec<String>) {
+    let mut matched: Vec<String> = Vec::new();
+    let mut spans: Vec<FnSpan> = Vec::new();
+    let nlines = ctx.lines.len();
+    let mut li = 0usize;
+    while li < nlines {
+        let l = &ctx.lines[li];
+        if ctx.is_test(l.num) {
+            li += 1;
+            continue;
+        }
+        for idx in find_token(&l.code, "fn") {
+            let rest = l.code[idx + 2..].trim_start();
+            let name: String = rest.chars().take_while(|&c| is_ident(c)).collect();
+            if name.is_empty() {
+                continue;
+            }
+            let pats: Vec<&str> = patterns
+                .iter()
+                .copied()
+                .filter(|p| fn_matches(&name, p))
+                .collect();
+            if pats.is_empty() {
+                continue;
+            }
+            for p in &pats {
+                if !matched.iter().any(|m| m == p) {
+                    matched.push(p.to_string());
+                }
+            }
+            // Scan the body: find the first '{' from here, then track
+            // brace depth with a per-scope "opened by a loop keyword"
+            // stack until the matching '}'.
+            let mut body: Vec<(usize, Vec<(usize, usize)>)> = Vec::new();
+            let mut depth = 0usize;
+            let mut started = false;
+            let mut pending_loop = false;
+            let mut loop_stack: Vec<bool> = Vec::new();
+            let mut word = String::new();
+            let (mut lj, mut cj) = (li, idx);
+            let mut done = false;
+            while lj < nlines && !done {
+                let lcode = &ctx.lines[lj].code;
+                let lbytes = lcode.as_bytes();
+                let mut ranges: Vec<(usize, usize)> = Vec::new();
+                let mut open_at: Option<usize> = None;
+                let mut k = cj;
+                while k < lbytes.len() {
+                    let ch = lbytes[k] as char;
+                    if is_ident(ch) {
+                        word.push(ch);
+                    } else {
+                        if word == "for" || word == "while" || word == "loop" {
+                            pending_loop = true;
+                        }
+                        word.clear();
+                    }
+                    if ch == '{' {
+                        if !started {
+                            started = true;
+                            depth = 1;
+                            loop_stack.clear();
+                        } else {
+                            depth += 1;
+                            loop_stack.push(pending_loop);
+                            if pending_loop && open_at.is_none() {
+                                open_at = Some(k);
+                            }
+                            pending_loop = false;
+                        }
+                    } else if ch == ';' {
+                        pending_loop = false;
+                    } else if ch == '}' && started {
+                        depth -= 1;
+                        if depth == 0 {
+                            done = true;
+                            break;
+                        }
+                        let was_loop = loop_stack.pop().unwrap_or(false);
+                        if was_loop && !loop_stack.iter().any(|&b| b) {
+                            ranges.push((open_at.unwrap_or(0), k));
+                            open_at = None;
+                        }
+                    }
+                    k += 1;
+                }
+                word.clear(); // tokens never span lines
+                if started {
+                    let in_loop = loop_stack.iter().any(|&b| b);
+                    if in_loop && open_at.is_none() {
+                        ranges.push((0, lcode.len()));
+                    } else if let Some(at) = open_at {
+                        ranges.push((at, lcode.len()));
+                    }
+                    if !ranges.is_empty() {
+                        body.push((ctx.lines[lj].num, ranges));
+                    }
+                }
+                lj += 1;
+                cj = 0;
+            }
+            spans.push(FnSpan { name, body });
+        }
+        li += 1;
+    }
+    (spans, matched)
+}
+
+/// A2: allocation tokens inside hot-function loop bodies, plus
+/// manifest-drift (a pattern matching no fn).
+pub fn lint_a2(ctx: &FileCtx) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let Some(patterns) = HOT_FUNCTIONS
+        .iter()
+        .find(|(path, _)| *path == ctx.relpath)
+        .map(|(_, pats)| *pats)
+    else {
+        return out;
+    };
+    let (spans, matched) = hot_fn_spans(ctx, patterns);
+    for p in patterns {
+        if !matched.iter().any(|m| m == p) {
+            out.push(Violation {
+                file: ctx.relpath.clone(),
+                line: 1,
+                lint: "A2",
+                message: format!("hot-function manifest entry `{p}` matches no fn"),
+                hint: "update HOT_FUNCTIONS in analysis/lints.rs".to_string(),
+            });
+        }
+    }
+    let line_code: BTreeMap<usize, &str> =
+        ctx.lines.iter().map(|l| (l.num, l.code.as_str())).collect();
+    for span in &spans {
+        for (num, ranges) in &span.body {
+            let Some(code) = line_code.get(num) else {
+                continue;
+            };
+            for tok in A2_BANNED {
+                for idx in find_token(code, tok) {
+                    if ranges.iter().any(|&(lo, hi)| lo <= idx && idx <= hi)
+                        && !ctx.allowed("A2", *num)
+                    {
+                        out.push(Violation {
+                            file: ctx.relpath.clone(),
+                            line: *num,
+                            lint: "A2",
+                            message: format!(
+                                "`{tok}` inside a hot loop of `{}`",
+                                span.name
+                            ),
+                            hint: "hoist the buffer out of the loop (Workspace slab or argument)"
+                                .to_string(),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// A3 candidate sites: (line, token) of panic-family calls in non-test
+/// `rust/src/` code, allow-sites excluded.  The ratchet against the
+/// baseline happens in `analysis::analyze`.
+pub fn lint_a3_sites(ctx: &FileCtx) -> Vec<(usize, &'static str)> {
+    let mut sites = Vec::new();
+    if !ctx.relpath.starts_with("rust/src/") {
+        return sites;
+    }
+    for l in &ctx.lines {
+        if ctx.is_test(l.num) {
+            continue;
+        }
+        for tok in A3_TOKENS {
+            for _ in find_token(&l.code, tok) {
+                if !ctx.allowed("A3", l.num) {
+                    sites.push((l.num, tok));
+                }
+            }
+        }
+    }
+    sites
+}
+
+/// A4: `unsafe` without a `SAFETY:` comment on the same line or on the
+/// run of comment-only lines directly above.
+pub fn lint_a4(ctx: &FileCtx) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let by_num: BTreeMap<usize, &Line> = ctx.lines.iter().map(|l| (l.num, l)).collect();
+    let comment_only: BTreeMap<usize, bool> = ctx
+        .lines
+        .iter()
+        .map(|l| (l.num, l.code.trim().is_empty() && !l.comments.is_empty()))
+        .collect();
+    for l in &ctx.lines {
+        for _ in find_token(&l.code, "unsafe") {
+            let mut ok = l.comments.iter().any(|c| c.contains("SAFETY:"));
+            let mut num = l.num.saturating_sub(1);
+            while !ok && num >= 1 && comment_only.get(&num).copied().unwrap_or(false) {
+                if by_num[&num].comments.iter().any(|c| c.contains("SAFETY:")) {
+                    ok = true;
+                }
+                num = num.saturating_sub(1);
+            }
+            if !ok && !ctx.allowed("A4", l.num) {
+                out.push(Violation {
+                    file: ctx.relpath.clone(),
+                    line: l.num,
+                    lint: "A4",
+                    message: "`unsafe` without a `// SAFETY:` comment".to_string(),
+                    hint: "document the invariant that makes this sound on the preceding line"
+                        .to_string(),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Lowercase snake_case identifier — what a JSON schema key looks like.
+fn is_ident_key(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_lowercase() => {}
+        _ => return false,
+    }
+    s.chars()
+        .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+/// (key, line) pairs from `("key", ...)` and `(..., "key")` call
+/// positions in non-test code — the shapes `Json::from_pairs` entries
+/// and `schema::*_field` calls take.
+fn json_keys(ctx: &FileCtx) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for l in &ctx.lines {
+        if ctx.is_test(l.num) {
+            continue;
+        }
+        for (si, s) in l.strings.iter().enumerate() {
+            let ph = format!("\"{si}\"");
+            let Some(idx) = l.code.find(&ph) else {
+                continue;
+            };
+            let before = l.code[..idx].trim_end();
+            let after = l.code[idx + ph.len()..].trim_start();
+            let prevc = before.chars().last().unwrap_or(' ');
+            let nextc = after.chars().next().unwrap_or(' ');
+            if ((prevc == '(' && nextc == ',') || (prevc == ',' && nextc == ')'))
+                && is_ident_key(s)
+            {
+                out.push((s.clone(), l.num));
+            }
+        }
+    }
+    out
+}
+
+/// A5: schema-field drift in the emitter files.
+pub fn lint_a5(ctx: &FileCtx) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let Some((_, tag, fields)) = schema_targets()
+        .into_iter()
+        .find(|(path, _, _)| *path == ctx.relpath)
+    else {
+        return out;
+    };
+    let mut all_strings: Vec<&str> = Vec::new();
+    for l in &ctx.lines {
+        if !ctx.is_test(l.num) {
+            all_strings.extend(l.strings.iter().map(|s| s.as_str()));
+        }
+    }
+    if !all_strings.contains(&tag) {
+        out.push(Violation {
+            file: ctx.relpath.clone(),
+            line: 1,
+            lint: "A5",
+            message: format!("schema tag \"{tag}\" not found in file"),
+            hint: "keep the schema constant in lockstep with analysis/lints.rs".to_string(),
+        });
+    }
+    let keys = json_keys(ctx);
+    for (k, num) in &keys {
+        if !fields.contains(&k.as_str()) && !ctx.allowed("A5", *num) {
+            out.push(Violation {
+                file: ctx.relpath.clone(),
+                line: *num,
+                lint: "A5",
+                message: format!("field \"{k}\" is not in the documented {tag} schema"),
+                hint: "add it to the schema list in analysis/lints.rs + DESIGN.md, or rename"
+                    .to_string(),
+            });
+        }
+    }
+    for f in fields {
+        if !keys.iter().any(|(k, _)| k == f) {
+            out.push(Violation {
+                file: ctx.relpath.clone(),
+                line: 1,
+                lint: "A5",
+                message: format!(
+                    "documented {tag} field \"{f}\" is no longer emitted/checked here"
+                ),
+                hint: "re-emit the field or remove it from the documented schema".to_string(),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn find_token_respects_boundaries() {
+        assert_eq!(find_token("HashMap::new()", "HashMap"), vec![0]);
+        assert!(find_token("MyHashMap::new()", "HashMap").is_empty());
+        assert!(find_token("HashMapLike", "HashMap").is_empty());
+        assert_eq!(find_token("x.unwrap();", ".unwrap()"), vec![1]);
+        assert!(find_token("x.unwrap_or(1);", ".unwrap()").is_empty());
+    }
+
+    #[test]
+    fn fn_pattern_wildcards() {
+        assert!(fn_matches("sage_fwd_ws", "*_ws"));
+        assert!(!fn_matches("sage_fwd", "*_ws"));
+        assert!(fn_matches("int8_gemm_nn", "int8_*"));
+        assert!(fn_matches("mlp_fwd", "mlp_fwd"));
+    }
+
+    #[test]
+    fn allow_requires_reason_and_covers_next_line() {
+        let src = "// sagebwd-allow(A3): checked above\nlet x = y.unwrap();\n\
+                   // sagebwd-allow(A3)\nlet z = w.unwrap();\n";
+        let ctx = FileCtx::new("rust/src/foo.rs", src);
+        let sites = lint_a3_sites(&ctx);
+        assert_eq!(sites.len(), 1, "only the reason-less allow leaves a site");
+        assert_eq!(sites[0].0, 4);
+        assert_eq!(ctx.allow_comment_violations().len(), 1);
+    }
+
+    #[test]
+    fn a1_skips_tests_and_strings() {
+        let src = "use std::collections::HashMap;\n\
+                   let s = \"HashMap\";\n\
+                   #[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n}\n";
+        let ctx = FileCtx::new("rust/src/tensor/x.rs", src);
+        let v = lint_a1(&ctx);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].line, 1);
+    }
+
+    #[test]
+    fn a2_flags_loop_body_not_prologue() {
+        let src = "pub fn demo_ws(n: usize) -> Vec<f32> {\n\
+                   \x20   let mut out = vec![0f32; n];\n\
+                   \x20   for i in 0..n {\n\
+                   \x20       let t = out.clone();\n\
+                   \x20       out[i] = t[i];\n\
+                   \x20   }\n\
+                   \x20   out\n}\n";
+        let ctx = FileCtx::new("rust/src/kernels/attention.rs", src);
+        let v = lint_a2(&ctx);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].line, 4);
+        assert!(v[0].message.contains("demo_ws"));
+    }
+
+    #[test]
+    fn a4_accepts_safety_on_preceding_comment_run() {
+        let src = "// SAFETY: len checked above,\n// and alignment is 1.\n\
+                   let b = unsafe { f(x) };\nlet c = unsafe { f(x) };\n";
+        let ctx = FileCtx::new("rust/src/util/x.rs", src);
+        let v = lint_a4(&ctx);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].line, 4);
+    }
+}

@@ -1,0 +1,208 @@
+//! Self-hosting static analysis over the repo's own Rust sources
+//! (DESIGN.md §13): the `sagebwd analyze` subcommand and the tier-1
+//! `analysis_lints` test target both drive [`analyze`].
+//!
+//! Pure std, no external parser: [`tokenizer`] strips strings and
+//! comments line-aware, [`lints`] runs the five invariant passes
+//! (A1 determinism, A2 hot-loop allocation, A3 panic-policy ratchet,
+//! A4 unsafe-audit, A5 schema-drift), and [`baseline`] holds the
+//! committed A3 ratchet state.  `python/compile/check_analyzer.py` is
+//! the toolchain-free twin; the two must agree violation for violation.
+
+pub mod baseline;
+pub mod lints;
+pub mod tokenizer;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+pub use baseline::{Baseline, BASELINE_REL, BASELINE_SCHEMA};
+pub use lints::Violation;
+
+/// Knobs for one [`analyze`] run.
+#[derive(Debug, Clone, Copy)]
+pub struct AnalyzeOptions {
+    /// Rewrite `baseline.json` when the measured A3 counts dropped below
+    /// it (the auto-tighten half of the ratchet).  `--no-ratchet` turns
+    /// this off; read-only callers (the test target) also disable it.
+    pub update_baseline: bool,
+}
+
+impl Default for AnalyzeOptions {
+    fn default() -> AnalyzeOptions {
+        AnalyzeOptions {
+            update_baseline: true,
+        }
+    }
+}
+
+/// What one analysis run found.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    /// All violations, sorted by (file, line, lint).
+    pub violations: Vec<Violation>,
+    /// Files scanned.
+    pub files_scanned: usize,
+    /// Measured A3 sites per file (allow-sites excluded).
+    pub a3_counts: BTreeMap<String, usize>,
+    /// Sum over `a3_counts`.
+    pub a3_total: usize,
+    /// Total the committed baseline allows (0 when missing).
+    pub a3_baseline_total: usize,
+    /// Some file's count dropped below its baseline entry.
+    pub baseline_tightened: bool,
+    /// The baseline file was rewritten by this run.
+    pub baseline_updated: bool,
+}
+
+/// Repo-relative `.rs` paths to scan, sorted: `rust/src`, `rust/tests`,
+/// `rust/benches`, `examples`, skipping any directory named `data`
+/// (lint fixtures live under `rust/tests/data/`), `vendor`, `target`,
+/// or starting with `.`.
+pub fn scan_paths(root: &Path) -> Result<Vec<String>> {
+    fn walk(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<()> {
+        let mut entries: Vec<std::fs::DirEntry> = std::fs::read_dir(dir)
+            .with_context(|| format!("listing {}", dir.display()))?
+            .collect::<std::io::Result<_>>()
+            .with_context(|| format!("listing {}", dir.display()))?;
+        entries.sort_by_key(|e| e.file_name());
+        for entry in entries {
+            let path = entry.path();
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if path.is_dir() {
+                if name == "data" || name == "vendor" || name == "target" || name.starts_with('.')
+                {
+                    continue;
+                }
+                walk(root, &path, out)?;
+            } else if name.ends_with(".rs") {
+                let rel = path
+                    .strip_prefix(root)
+                    .unwrap_or(&path)
+                    .to_string_lossy()
+                    .replace(std::path::MAIN_SEPARATOR, "/");
+                out.push(rel);
+            }
+        }
+        Ok(())
+    }
+    let mut out = Vec::new();
+    for sub in ["rust/src", "rust/tests", "rust/benches", "examples"] {
+        let base = root.join(sub);
+        if base.is_dir() {
+            walk(root, &base, &mut out)?;
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Run every lint over the tree at `root` and ratchet A3 against the
+/// committed baseline.  Never returns `Err` for violations — those are
+/// data in the [`Report`]; `Err` is reserved for I/O failures.
+pub fn analyze(root: &Path, opts: &AnalyzeOptions) -> Result<Report> {
+    let mut report = Report::default();
+    let mut a3_sites: BTreeMap<String, Vec<(usize, &'static str)>> = BTreeMap::new();
+    for rel in scan_paths(root)? {
+        let text = std::fs::read_to_string(root.join(&rel))
+            .with_context(|| format!("reading {rel}"))?;
+        let ctx = lints::FileCtx::new(&rel, &text);
+        report.files_scanned += 1;
+        report.violations.extend(ctx.allow_comment_violations());
+        report.violations.extend(lints::lint_a1(&ctx));
+        report.violations.extend(lints::lint_a2(&ctx));
+        report.violations.extend(lints::lint_a4(&ctx));
+        report.violations.extend(lints::lint_a5(&ctx));
+        let sites = lints::lint_a3_sites(&ctx);
+        if !sites.is_empty() {
+            a3_sites.insert(rel, sites);
+        }
+    }
+    report.a3_counts = a3_sites
+        .iter()
+        .map(|(k, v)| (k.clone(), v.len()))
+        .collect();
+    report.a3_total = report.a3_counts.values().sum();
+
+    // A3 ratchet against the committed baseline.
+    let bpath = root.join(BASELINE_REL);
+    let loaded = Baseline::load(&bpath);
+    let (baseline, have_baseline) = match loaded {
+        Ok(Some(b)) => (b, true),
+        Ok(None) => {
+            report.violations.push(Violation {
+                file: BASELINE_REL.to_string(),
+                line: 1,
+                lint: "A3",
+                message: "missing A3 baseline file".to_string(),
+                hint: "generate it with `sagebwd analyze --write-baseline`".to_string(),
+            });
+            (Baseline::default(), false)
+        }
+        Err(e) => {
+            report.violations.push(Violation {
+                file: BASELINE_REL.to_string(),
+                line: 1,
+                lint: "A3",
+                message: format!("unreadable baseline: {e:#}"),
+                hint: "regenerate with `sagebwd analyze --write-baseline`".to_string(),
+            });
+            (Baseline::default(), false)
+        }
+    };
+    report.a3_baseline_total = baseline.total;
+    for (rel, sites) in &a3_sites {
+        let count = sites.len();
+        let base = baseline.allowed(rel);
+        if count > base {
+            // Point at the first site past the allowance — with a stable
+            // scan order that is the newest one.
+            let first = sites.get(base).map(|&(n, _)| n).unwrap_or(1);
+            report.violations.push(Violation {
+                file: rel.clone(),
+                line: first,
+                lint: "A3",
+                message: format!(
+                    "{count} unwrap()/expect()/panic! sites, baseline allows {base}"
+                ),
+                hint: "propagate with ? (or // sagebwd-allow(A3): reason), never raise the baseline"
+                    .to_string(),
+            });
+        } else if count < base {
+            report.baseline_tightened = true;
+        }
+    }
+    for (rel, &base) in &baseline.files {
+        if base > 0 && !a3_sites.contains_key(rel) {
+            report.baseline_tightened = true;
+        }
+    }
+    if opts.update_baseline
+        && have_baseline
+        && report.baseline_tightened
+        && !report.violations.iter().any(|v| v.lint == "A3")
+    {
+        Baseline::from_counts(&report.a3_counts).save(&bpath)?;
+        report.baseline_updated = true;
+    }
+    report.violations.sort();
+    Ok(report)
+}
+
+/// Compute and write the baseline from the current tree (CLI
+/// `--write-baseline`): the bootstrap path, and the only sanctioned way
+/// to create the file.
+pub fn write_baseline(root: &Path) -> Result<Report> {
+    let mut report = analyze(
+        root,
+        &AnalyzeOptions {
+            update_baseline: false,
+        },
+    )?;
+    let bpath = root.join(BASELINE_REL);
+    Baseline::from_counts(&report.a3_counts).save(&bpath)?;
+    report.baseline_updated = true;
+    Ok(report)
+}

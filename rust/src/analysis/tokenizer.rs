@@ -1,0 +1,282 @@
+//! Line-aware Rust source tokenizer for the invariant analyzer
+//! (DESIGN.md §13).
+//!
+//! Not a parser: a character state machine that strips comments and
+//! string/char literals from each line so the lint passes can match
+//! tokens in code text without false positives from prose, while
+//! keeping what was stripped — string-literal contents (A5 schema keys)
+//! and comment text (A4 `SAFETY:` markers, `sagebwd-allow` sites) —
+//! attached to the line it ended on.
+//!
+//! Mirrored line for line by `python/compile/check_analyzer.py` so the
+//! pass can be validated without a Rust toolchain; keep the two in
+//! lockstep.
+
+/// One source line after stripping.
+#[derive(Debug, Clone)]
+pub struct Line {
+    /// 1-based source line number.
+    pub num: usize,
+    /// Code text with comments removed; string literals are replaced by
+    /// `"<idx>"` placeholders into `strings`, char literals by `' '`.
+    pub code: String,
+    /// String-literal contents; a literal spanning lines is recorded on
+    /// its closing line.
+    pub strings: Vec<String>,
+    /// Comment text (markers stripped) touching this line.
+    pub comments: Vec<String>,
+}
+
+/// ASCII identifier character. ASCII-only on purpose: source
+/// identifiers in this repo are ASCII, and non-ASCII comment prose must
+/// count as a token boundary.
+pub fn is_ident(ch: char) -> bool {
+    ch.is_ascii_alphanumeric() || ch == '_'
+}
+
+enum Mode {
+    Normal,
+    LineComment,
+    BlockComment,
+    Str,
+    RawStr,
+}
+
+/// Split `text` into stripped [`Line`]s.
+pub fn tokenize(text: &str) -> Vec<Line> {
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let mut lines: Vec<Line> = Vec::new();
+    let mut num = 1usize;
+    let mut code = String::new();
+    let mut strings: Vec<String> = Vec::new();
+    let mut comments: Vec<String> = Vec::new();
+    let mut mode = Mode::Normal;
+    let mut bc_depth = 0usize;
+    let mut rs_hashes = 0usize;
+    let mut sbuf = String::new();
+    let mut comment_buf = String::new();
+    let mut i = 0usize;
+
+    macro_rules! flush_line {
+        () => {{
+            if !comment_buf.is_empty() {
+                comments.push(std::mem::take(&mut comment_buf));
+            }
+            lines.push(Line {
+                num,
+                code: std::mem::take(&mut code),
+                strings: std::mem::take(&mut strings),
+                comments: std::mem::take(&mut comments),
+            });
+            num += 1;
+        }};
+    }
+
+    while i < n {
+        let ch = chars[i];
+        if ch == '\n' {
+            if matches!(mode, Mode::LineComment) {
+                mode = Mode::Normal;
+            }
+            flush_line!();
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::LineComment => {
+                comment_buf.push(ch);
+                i += 1;
+            }
+            Mode::BlockComment => {
+                if ch == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    bc_depth += 1;
+                    comment_buf.push_str("/*");
+                    i += 2;
+                } else if ch == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    bc_depth -= 1;
+                    i += 2;
+                    if bc_depth == 0 {
+                        mode = Mode::Normal;
+                        if !comment_buf.is_empty() {
+                            comments.push(std::mem::take(&mut comment_buf));
+                        }
+                    } else {
+                        comment_buf.push_str("*/");
+                    }
+                } else {
+                    comment_buf.push(ch);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if ch == '\\' && i + 1 < n {
+                    if chars[i + 1] == '\n' {
+                        // Escaped-newline continuation: the literal goes
+                        // on, but the source line ends here — flush so
+                        // every later line number stays correct.
+                        flush_line!();
+                    } else {
+                        sbuf.push(ch);
+                        sbuf.push(chars[i + 1]);
+                    }
+                    i += 2;
+                } else if ch == '"' {
+                    strings.push(std::mem::take(&mut sbuf));
+                    code.push_str(&format!("\"{}\"", strings.len() - 1));
+                    mode = Mode::Normal;
+                    i += 1;
+                } else {
+                    sbuf.push(ch);
+                    i += 1;
+                }
+            }
+            Mode::RawStr => {
+                if ch == '"'
+                    && i + rs_hashes < n
+                    && chars[i + 1..i + 1 + rs_hashes].iter().all(|&c| c == '#')
+                {
+                    strings.push(std::mem::take(&mut sbuf));
+                    code.push_str(&format!("\"{}\"", strings.len() - 1));
+                    mode = Mode::Normal;
+                    i += 1 + rs_hashes;
+                } else {
+                    sbuf.push(ch);
+                    i += 1;
+                }
+            }
+            Mode::Normal => {
+                let prev = if i > 0 { chars[i - 1] } else { ' ' };
+                if ch == '/' && i + 1 < n && chars[i + 1] == '/' {
+                    mode = Mode::LineComment;
+                    i += 2;
+                } else if ch == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    mode = Mode::BlockComment;
+                    bc_depth = 1;
+                    i += 2;
+                } else if ch == '"' {
+                    mode = Mode::Str;
+                    sbuf.clear();
+                    i += 1;
+                } else if (ch == 'r' || ch == 'b') && !is_ident(prev) {
+                    // r"..." / r#"..."# / b"..." / br"..." raw and byte
+                    // string prefixes.
+                    let mut j = i + 1;
+                    if ch == 'b' && j < n && chars[j] == 'r' {
+                        j += 1;
+                    }
+                    let mut hashes = 0usize;
+                    while j < n && chars[j] == '#' {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    let next1 = if i + 1 < n { chars[i + 1] } else { ' ' };
+                    let is_prefix = j < n
+                        && chars[j] == '"'
+                        && (hashes > 0
+                            || (ch == 'r' && next1 == '"')
+                            || (ch == 'b' && next1 == '"')
+                            || (ch == 'b' && next1 == 'r'));
+                    if is_prefix {
+                        if hashes > 0 || ch == 'r' || next1 == 'r' {
+                            mode = Mode::RawStr;
+                            rs_hashes = hashes;
+                        } else {
+                            mode = Mode::Str; // b"..."
+                        }
+                        sbuf.clear();
+                        i = j + 1;
+                    } else {
+                        code.push(ch);
+                        i += 1;
+                    }
+                } else if ch == '\'' {
+                    let nxt = if i + 1 < n { chars[i + 1] } else { ' ' };
+                    if nxt == '\\' {
+                        // Escaped char literal: skip to the closing quote.
+                        let mut j = i + 2;
+                        while j < n && chars[j] != '\'' {
+                            j += 1;
+                        }
+                        code.push_str("' '");
+                        i = j + 1;
+                    } else if i + 2 < n && chars[i + 2] == '\'' {
+                        code.push_str("' '");
+                        i += 3;
+                    } else {
+                        code.push(ch); // lifetime
+                        i += 1;
+                    }
+                } else {
+                    code.push(ch);
+                    i += 1;
+                }
+            }
+        }
+    }
+    let pending = !code.is_empty()
+        || !strings.is_empty()
+        || !comments.is_empty()
+        || !comment_buf.is_empty()
+        || !matches!(mode, Mode::Normal);
+    if pending {
+        flush_line!();
+    }
+    lines
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_comments_and_strings() {
+        let src = "let x = \"HashMap\"; // HashMap here\nlet y = 2; /* Instant */\n";
+        let lines = tokenize(src);
+        assert_eq!(lines.len(), 2);
+        assert!(!lines[0].code.contains("HashMap"));
+        assert_eq!(lines[0].strings, vec!["HashMap".to_string()]);
+        assert_eq!(lines[0].comments, vec![" HashMap here".to_string()]);
+        assert!(!lines[1].code.contains("Instant"));
+        assert_eq!(lines[1].comments, vec![" Instant ".to_string()]);
+    }
+
+    #[test]
+    fn raw_and_byte_strings() {
+        let src = "let a = r#\"un\"safe\"#; let b = b\"panic!\"; let c = br#\"x\"#;\n";
+        let lines = tokenize(src);
+        assert!(!lines[0].code.contains("unsafe"));
+        assert!(!lines[0].code.contains("panic"));
+        assert_eq!(lines[0].strings.len(), 3);
+        assert_eq!(lines[0].strings[0], "un\"safe");
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) { let c = '{'; let d = '\\n'; }\n";
+        let lines = tokenize(src);
+        // The brace inside the char literal must not leak into code.
+        let braces = lines[0].code.matches('{').count();
+        assert_eq!(braces, 1);
+        assert!(lines[0].code.contains("'a"));
+    }
+
+    #[test]
+    fn escaped_newline_keeps_line_numbers() {
+        let src = "let m = \"one \\\ntwo\";\nlet after = 1;\n";
+        let lines = tokenize(src);
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[2].num, 3);
+        assert!(lines[2].code.contains("after"));
+        // The continued literal is recorded on its closing line.
+        assert_eq!(lines[1].strings, vec!["one two".to_string()]);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* outer /* inner */ still comment */ let x = 1;\n";
+        let lines = tokenize(src);
+        assert!(lines[0].code.contains("let x = 1;"));
+        assert!(!lines[0].code.contains("outer"));
+    }
+}

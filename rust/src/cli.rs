@@ -40,8 +40,8 @@ impl Args {
                 }
                 if let Some((k, v)) = name.split_once('=') {
                     args.options.insert(k.to_string(), v.to_string());
-                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    args.options.insert(name.to_string(), it.next().unwrap());
+                } else if let Some(value) = it.next_if(|n| !n.starts_with("--")) {
+                    args.options.insert(name.to_string(), value);
                 } else {
                     args.flags.push(name.to_string());
                 }

@@ -132,6 +132,19 @@ impl Checkpoint {
             *pos = end;
             Ok(s)
         };
+        // Fixed-width reads: `take` already guarantees the length, so the
+        // array conversions only fail on an internal logic error — which
+        // must surface as a corrupt-checkpoint error, not a panic.
+        let take8 = |pos: &mut usize| -> Result<[u8; 8]> {
+            take(pos, 8)?
+                .try_into()
+                .map_err(|_| anyhow::anyhow!("internal: take(8) returned a wrong-sized slice"))
+        };
+        let take4 = |pos: &mut usize| -> Result<[u8; 4]> {
+            take(pos, 4)?
+                .try_into()
+                .map_err(|_| anyhow::anyhow!("internal: take(4) returned a wrong-sized slice"))
+        };
         let magic = take(&mut pos, 8)?;
         if magic == MAGIC_V1 {
             bail!(
@@ -144,15 +157,15 @@ impl Checkpoint {
         if magic != MAGIC_V2 {
             bail!("bad checkpoint magic in {} (not an SBWD checkpoint)", path.display());
         }
-        let step = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
-        let tokens_seen = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+        let step = u64::from_le_bytes(take8(&mut pos)?);
+        let tokens_seen = u64::from_le_bytes(take8(&mut pos)?);
         let rng = match take(&mut pos, 1)?[0] {
             0 => None,
             1 => {
-                let state = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
-                let inc = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+                let state = u64::from_le_bytes(take8(&mut pos)?);
+                let inc = u64::from_le_bytes(take8(&mut pos)?);
                 let has_spare = take(&mut pos, 1)?[0];
-                let spare = f64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+                let spare = f64::from_le_bytes(take8(&mut pos)?);
                 Some(RngState {
                     state,
                     inc,
@@ -161,7 +174,7 @@ impl Checkpoint {
             }
             other => bail!("corrupt rng_present flag {other} in {}", path.display()),
         };
-        let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let count = u32::from_le_bytes(take4(&mut pos)?) as usize;
         // Never size an allocation from an untrusted count alone: every
         // tensor record occupies at least 16 bytes (name_len + ndim +
         // data_len fields), so a count the remaining bytes cannot hold is
@@ -174,10 +187,10 @@ impl Checkpoint {
         }
         let mut tensors = Vec::with_capacity(count);
         for _ in 0..count {
-            let name_len = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+            let name_len = u32::from_le_bytes(take4(&mut pos)?) as usize;
             let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())
                 .context("non-UTF-8 tensor name")?;
-            let ndim = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+            let ndim = u32::from_le_bytes(take4(&mut pos)?) as usize;
             if ndim > (buf.len() - pos) / 8 {
                 bail!(
                     "tensor {name}: claims {ndim} dims but only {} bytes remain",
@@ -186,12 +199,12 @@ impl Checkpoint {
             }
             let mut shape = Vec::with_capacity(ndim);
             for _ in 0..ndim {
-                shape.push(u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize);
+                shape.push(u64::from_le_bytes(take8(&mut pos)?) as usize);
             }
             // Keep the declared length in u64 until it has been checked
             // against the file: `as usize` first would silently truncate a
             // huge value on 32-bit targets and read the wrong span.
-            let data_bytes_u64 = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+            let data_bytes_u64 = u64::from_le_bytes(take8(&mut pos)?);
             if data_bytes_u64 > (buf.len() - pos) as u64 {
                 bail!(
                     "tensor {name}: claims {data_bytes_u64} data bytes but only {} remain",
@@ -205,7 +218,7 @@ impl Checkpoint {
             let raw = take(&mut pos, data_bytes)?;
             let data: Vec<f32> = raw
                 .chunks_exact(4)
-                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                 .collect();
             tensors.push((name, Tensor::from_vec(&shape, data)?));
         }

@@ -140,7 +140,9 @@ impl WorkerPool {
         }
         results.sort_by_key(|r| r.worker);
         let mut it = results.into_iter();
-        let first = it.next().unwrap();
+        let Some(first) = it.next() else {
+            bail!("no workers were assigned microbatches (total_microbatches = 0?)");
+        };
         let (mut loss_sum, mut count, mut grads) = (first.loss_sum, first.count, first.grads);
         for r in it {
             loss_sum += r.loss_sum;
@@ -227,12 +229,20 @@ fn worker_main(
                 }
             }
         }
+        let Some(grads) = grads else {
+            results_tx
+                .send(Err(anyhow::anyhow!(
+                    "worker {index} was assigned 0 microbatches"
+                )))
+                .ok();
+            continue;
+        };
         results_tx
             .send(Ok(TaskResult {
                 worker: index,
                 loss_sum,
                 count: microbatches,
-                grads: grads.unwrap(),
+                grads,
             }))
             .ok();
     }

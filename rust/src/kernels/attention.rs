@@ -629,6 +629,7 @@ pub fn sage_bwd_ws(
         linalg::pack_transpose_f32(vj, bkv, d, &mut v_t);
         let ktj = &res.k_t[j * bkv * d..(j + 1) * bkv * d];
         let k_deq = if cfg.quant_ds {
+            // sagebwd-allow(A2): Vec::new() is a zero-capacity placeholder, no heap touch
             Vec::new()
         } else {
             quant::dequantize(res.k_q.tile(j), res.k_q.scale(j))

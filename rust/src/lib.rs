@@ -27,9 +27,14 @@
 //! * [`registry`]    — content-addressed run registry: pure-std SHA-256,
 //!   the `sagebwd-run-v1` manifest schema, the object store with legacy
 //!   views, and the resumable grid orchestrator (`sagebwd grid`).
+//! * [`analysis`]    — self-hosting invariant lints over this repo's own
+//!   sources (`sagebwd analyze`, tier-1 test): determinism, hot-loop
+//!   allocation, panic-policy ratchet, unsafe audit, schema drift
+//!   (DESIGN.md §13).
 //! * [`tensor`], [`util`], [`telemetry`], [`cli`], [`bench`] — substrates
 //!   built in-repo (offline environment: no serde/clap/criterion/rand).
 
+pub mod analysis;
 pub mod bench;
 pub mod cli;
 pub mod config;

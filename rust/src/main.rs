@@ -15,6 +15,7 @@
 //! sagebwd grid run|status|resume --exp fig1|fig4 [...]   resumable registry grid
 //! sagebwd plot --csv a.csv[,b.csv] | --run DIR[,DIR]     ASCII metric curves
 //! sagebwd bench-check FILE.json                          BENCH_*.json schema check
+//! sagebwd analyze [--deny-all --no-ratchet --root DIR]    invariant lints (§13)
 //! ```
 //!
 //! Every harness takes `--backend native|xla` (default `native`:
@@ -38,7 +39,15 @@ use sagebwd::telemetry::{run_dir, Log};
 use sagebwd::util::json::Json;
 use sagebwd::{DEFAULT_ARTIFACTS_DIR, DEFAULT_RESULTS_DIR};
 
-const USAGE: &str = "usage: sagebwd <train|dist-train|table1|table2|ds-rms|fig1|fig4|fig23|fig56|noise-probe|grid|plot|inspect|bench-check> [options]
+const USAGE: &str = "usage: sagebwd <train|dist-train|table1|table2|ds-rms|fig1|fig4|fig23|fig56|noise-probe|grid|plot|inspect|bench-check|analyze> [options]
+static analysis (DESIGN.md §13):
+  sagebwd analyze [--deny-all] [--no-ratchet] [--root DIR]
+                  [--write-baseline]
+  runs the five invariant lints (A1 determinism, A2 hot-loop allocation,
+  A3 panic-policy ratchet, A4 unsafe audit, A5 schema drift) over the
+  repo's own sources; exits nonzero on any violation (--deny-all is the
+  explicit CI spelling of the same contract); a drop in A3 counts
+  auto-tightens analysis/baseline.json unless --no-ratchet
 common options:
   --backend native|xla   executor for every harness, training included
                          (default native: in-process CPU kernels + native
@@ -184,6 +193,7 @@ fn run() -> Result<()> {
             Ok(())
         }
         "plot" => cmd_plot(&args),
+        "analyze" => cmd_analyze(&args),
         "bench-check" => {
             let path = args
                 .opt("file")
@@ -266,6 +276,53 @@ fn cmd_plot(args: &Args) -> Result<()> {
         }
     }
     println!("{}", sagebwd::telemetry::plot::render(&curves, 100, 24));
+    Ok(())
+}
+
+/// `analyze` — the self-hosting invariant lints (DESIGN.md §13).  Any
+/// violation exits nonzero; `--deny-all` is accepted as the explicit CI
+/// spelling of that same contract.  `--write-baseline` (re)creates
+/// `analysis/baseline.json` from the current tree — the bootstrap path;
+/// day to day the ratchet only tightens it.
+fn cmd_analyze(args: &Args) -> Result<()> {
+    use sagebwd::analysis::{self, AnalyzeOptions};
+    let root = std::path::PathBuf::from(args.str_or("root", "."));
+    if args.flag("write-baseline") {
+        let report = analysis::write_baseline(&root)?;
+        println!(
+            "baseline written: {} sites over {} files",
+            report.a3_total,
+            report.a3_counts.len()
+        );
+        return Ok(());
+    }
+    let opts = AnalyzeOptions {
+        update_baseline: !args.flag("no-ratchet"),
+    };
+    let report = analysis::analyze(&root, &opts)?;
+    for v in &report.violations {
+        println!("{v}");
+    }
+    println!(
+        "A3 sites: {} (baseline {}){}",
+        report.a3_total,
+        report.a3_baseline_total,
+        if report.baseline_updated {
+            ", baseline tightened"
+        } else if report.baseline_tightened {
+            ", ratchet can tighten"
+        } else {
+            ""
+        }
+    );
+    println!(
+        "{} violation(s) across {} files",
+        report.violations.len(),
+        report.files_scanned
+    );
+    if !report.violations.is_empty() {
+        bail!("static analysis failed — see violations above");
+    }
     Ok(())
 }
 

@@ -161,16 +161,17 @@ pub fn run(
     // Partition up front: finished manifests are registry hits.
     let mut todo: Vec<&GridCell> = Vec::new();
     for (cell, st) in spec.cells.iter().zip(status(factory, registry, spec)?) {
-        if !fresh && st.state.map(RunState::is_finished).unwrap_or(false) {
-            log.info(&format!(
-                "registry hit [{}]: {} already {} — skipping",
-                &st.key[..16],
-                cell.label,
-                st.state.unwrap().as_str()
-            ));
-            report.skipped += 1;
-        } else {
-            todo.push(cell);
+        match st.state {
+            Some(state) if !fresh && state.is_finished() => {
+                log.info(&format!(
+                    "registry hit [{}]: {} already {} — skipping",
+                    &st.key[..16],
+                    cell.label,
+                    state.as_str()
+                ));
+                report.skipped += 1;
+            }
+            _ => todo.push(cell),
         }
     }
     if limit > 0 && todo.len() > limit {
@@ -208,6 +209,10 @@ pub fn run(
         for _ in 0..workers {
             scope.spawn(|| {
                 linalg::with_thread_cap(cap, || loop {
+                    // A poisoned queue mutex means a sibling worker panicked;
+                    // re-panicking is the right way to surface that inside
+                    // thread::scope.
+                    // sagebwd-allow(A3): propagate sibling-worker panic
                     let Some(cell) = queue.lock().unwrap().pop() else {
                         return;
                     };
@@ -220,6 +225,7 @@ pub fn run(
                         cell.seed,
                         log,
                     );
+                    // sagebwd-allow(A3): same poisoning argument as the queue lock above
                     let mut d = done.lock().unwrap();
                     match outcome {
                         Ok(o) => {
@@ -240,6 +246,9 @@ pub fn run(
         }
     });
 
+    // Scope has joined every worker, so poisoning here can only follow a
+    // worker panic, which thread::scope already re-raised.
+    // sagebwd-allow(A3): unreachable after thread::scope join
     let (ran, failed) = done.into_inner().unwrap();
     report.ran = ran;
     report.failed = failed;

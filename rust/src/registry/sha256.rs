@@ -79,6 +79,7 @@ impl Sha256 {
         // Whole blocks straight from the input.
         while data.len() >= 64 {
             let (block, rest) = data.split_at(64);
+            // sagebwd-allow(A3): split_at(64) guarantees block.len() == 64
             self.compress(block.try_into().unwrap());
             data = rest;
         }
@@ -110,7 +111,7 @@ impl Sha256 {
     fn compress(&mut self, block: &[u8; 64]) {
         let mut w = [0u32; 64];
         for (t, chunk) in block.chunks_exact(4).enumerate() {
-            w[t] = u32::from_be_bytes(chunk.try_into().unwrap());
+            w[t] = u32::from_be_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
         }
         for t in 16..64 {
             let s0 = w[t - 15].rotate_right(7) ^ w[t - 15].rotate_right(18) ^ (w[t - 15] >> 3);
@@ -161,10 +162,11 @@ pub fn digest(data: &[u8]) -> [u8; 32] {
 
 /// Lowercase hex of a digest.
 pub fn to_hex(digest: &[u8; 32]) -> String {
+    const HEX: &[u8; 16] = b"0123456789abcdef";
     let mut s = String::with_capacity(64);
     for b in digest {
-        s.push(char::from_digit((b >> 4) as u32, 16).unwrap());
-        s.push(char::from_digit((b & 0xf) as u32, 16).unwrap());
+        s.push(HEX[(b >> 4) as usize] as char);
+        s.push(HEX[(b & 0xf) as usize] as char);
     }
     s
 }

@@ -12,6 +12,10 @@ use crate::tensor::{IntTensor, Tensor};
 
 /// f32 tensor → literal.
 pub fn literal_from_f32(t: &Tensor) -> Result<Literal> {
+    // SAFETY: `t.data` is a live `Vec<f32>`, so its buffer is valid for
+    // `len * 4` bytes; every f32 bit pattern is a valid `[u8; 4]`, u8 has
+    // alignment 1, and the borrow of `t` outlives `bytes` (the literal
+    // constructor copies before we return).
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
     };
@@ -21,6 +25,9 @@ pub fn literal_from_f32(t: &Tensor) -> Result<Literal> {
 
 /// i32 tensor → literal.
 pub fn literal_from_i32(t: &IntTensor) -> Result<Literal> {
+    // SAFETY: same argument as [`literal_from_f32`] — `t.data` is a live
+    // `Vec<i32>` valid for `len * 4` bytes, i32→u8 reinterpretation is
+    // always defined, and the slice does not outlive the borrow.
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
     };

@@ -17,7 +17,7 @@ pub mod hlo_inspect;
 pub mod literal;
 pub mod manifest;
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -30,8 +30,9 @@ pub use manifest::{DType, Manifest, TensorSpec};
 pub struct Runtime {
     client: xla::PjRtClient,
     artifacts_dir: PathBuf,
-    /// Compile cache: artifact name → loaded executable.
-    cache: HashMap<String, Executable>,
+    /// Compile cache: artifact name → loaded executable.  BTreeMap so any
+    /// future iteration over it is deterministic (A1 lint, DESIGN.md §13).
+    cache: BTreeMap<String, Executable>,
 }
 
 /// One compiled artifact ready to execute.
@@ -56,7 +57,7 @@ impl Runtime {
         Ok(Runtime {
             client,
             artifacts_dir: dir,
-            cache: HashMap::new(),
+            cache: BTreeMap::new(),
         })
     }
 

@@ -240,7 +240,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn expect(&mut self, b: u8) -> Result<()> {
+    fn expect_byte(&mut self, b: u8) -> Result<()> {
         let got = self.bump()?;
         if got != b {
             bail!("expected {:?} at byte {}, got {:?}", b as char, self.pos - 1, got as char);
@@ -272,7 +272,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json> {
-        self.expect(b'{')?;
+        self.expect_byte(b'{')?;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -283,7 +283,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let key = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.expect_byte(b':')?;
             let value = self.value()?;
             map.insert(key, value);
             self.skip_ws();
@@ -296,7 +296,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json> {
-        self.expect(b'[')?;
+        self.expect_byte(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
@@ -315,7 +315,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         let mut s = String::new();
         loop {
             match self.bump()? {
@@ -341,8 +341,8 @@ impl<'a> Parser<'a> {
                         // Surrogate pairs: decode if a high surrogate is
                         // followed by \uDC00-\uDFFF.
                         if (0xD800..0xDC00).contains(&code) {
-                            self.expect(b'\\')?;
-                            self.expect(b'u')?;
+                            self.expect_byte(b'\\')?;
+                            self.expect_byte(b'u')?;
                             let mut low = 0u32;
                             for _ in 0..4 {
                                 let h = self.bump()?;
@@ -384,6 +384,7 @@ impl<'a> Parser<'a> {
         while matches!(self.peek(), Some(b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')) {
             self.pos += 1;
         }
+        // sagebwd-allow(A3): the number lexer only advanced over ASCII bytes
         let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
         let n: f64 = text.parse().with_context(|| format!("bad number {text:?}"))?;
         Ok(Json::Num(n))

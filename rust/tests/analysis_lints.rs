@@ -1,0 +1,194 @@
+//! Tier-1 gate for the self-hosting invariant analyzer (DESIGN.md §13).
+//!
+//! `repo_is_clean_at_head` is the contract: every PR runs the five lints
+//! over the real tree via `cargo test`, so a determinism regression, a
+//! hot-loop allocation, a new panic site, an unaudited `unsafe`, or a
+//! schema drift fails CI without anyone remembering to run `sagebwd
+//! analyze`.  The fixture tests under `rust/tests/data/lint_fixtures/`
+//! prove each lint actually fires, each `sagebwd-allow` suppression
+//! works, and the A3 baseline ratchets in one direction only.
+//! `python/compile/check_analyzer.py --fixtures` checks the same
+//! expectations without a Rust toolchain.
+
+use std::path::{Path, PathBuf};
+
+use sagebwd::analysis::{analyze, AnalyzeOptions, Baseline, Report};
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fixture(name: &str) -> PathBuf {
+    repo_root().join("rust/tests/data/lint_fixtures").join(name)
+}
+
+/// Read-only run: never rewrites any baseline from a test.
+fn run(root: &Path) -> Report {
+    analyze(
+        root,
+        &AnalyzeOptions {
+            update_baseline: false,
+        },
+    )
+    .expect("analysis run is I/O-infallible over a checked-out tree")
+}
+
+fn render(report: &Report) -> String {
+    report
+        .violations
+        .iter()
+        .map(|v| v.to_string())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[test]
+fn repo_is_clean_at_head() {
+    let report = run(&repo_root());
+    assert!(
+        report.violations.is_empty(),
+        "the tree must be lint-clean (A1/A2/A4/A5 everywhere, A3 at or \
+         below analysis/baseline.json):\n{}",
+        render(&report)
+    );
+    assert!(report.a3_total <= report.a3_baseline_total);
+    assert!(
+        !report.baseline_tightened,
+        "A3 counts dropped below the committed baseline — run \
+         `cargo run -- analyze` and commit the tightened baseline.json"
+    );
+    // The self-hosting sanity floor: the analyzer scanned its own
+    // sources plus the rest of the tree, not an empty directory.
+    assert!(report.files_scanned > 40, "only {} files scanned", report.files_scanned);
+}
+
+#[test]
+fn seeded_fixture_fires_every_lint() {
+    let report = run(&fixture("seeded"));
+    let got: Vec<(String, usize, String)> = report
+        .violations
+        .iter()
+        .map(|v| (v.file.clone(), v.line, v.lint.to_string()))
+        .collect();
+    // Kept in lockstep with check_analyzer.py --fixtures.
+    let expect: Vec<(String, usize, String)> = [
+        ("rust/src/bench.rs", 1, "A5"),  // ns_per_iter no longer emitted
+        ("rust/src/bench.rs", 29, "A5"), // ns_per_op not in the schema
+        ("rust/src/kernels/attention.rs", 3, "A1"), // HashMap
+        ("rust/src/kernels/attention.rs", 8, "A2"), // to_vec in hot loop
+        ("rust/src/main.rs", 4, "A3"),   // 3 sites over a 0 baseline
+        ("rust/src/runtime/raw.rs", 4, "A4"), // bare unsafe
+        ("rust/src/runtime/raw.rs", 13, "A0"), // allow without a reason
+        ("rust/src/runtime/raw.rs", 14, "A4"), // reason-less allow is void
+        ("rust/src/tensor/linalg.rs", 1, "A2"), // manifest entry matches no fn
+        ("rust/src/tensor/timing.rs", 4, "A1"), // Instant
+    ]
+    .iter()
+    .map(|(f, l, id)| (f.to_string(), *l, id.to_string()))
+    .collect();
+    assert_eq!(got, expect, "full report:\n{}", render(&report));
+    // The prologue `vec![...]` in the hot fn and the `#[cfg(test)]`
+    // Instant were NOT flagged — that is the loop-body / test-region
+    // scoping working, and the assert_eq above already proves it.
+    assert_eq!(report.a3_total, 3);
+}
+
+#[test]
+fn suppressed_fixture_is_quiet() {
+    let report = run(&fixture("suppressed"));
+    assert!(
+        report.violations.is_empty(),
+        "every sagebwd-allow(...) with a reason must suppress its site:\n{}",
+        render(&report)
+    );
+    assert_eq!(
+        report.a3_total, 0,
+        "allowed A3 sites must not count toward the ratchet"
+    );
+}
+
+#[test]
+fn clean_fixture_passes() {
+    let report = run(&fixture("clean"));
+    assert!(report.violations.is_empty(), "{}", render(&report));
+    assert!(!report.baseline_tightened);
+}
+
+#[test]
+fn ratchet_increase_fails_and_decrease_tightens() {
+    let dir = std::env::temp_dir().join(format!(
+        "sagebwd_ratchet_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let src = dir.join("rust/src");
+    std::fs::create_dir_all(src.join("analysis")).unwrap();
+    let bpath = src.join("analysis/baseline.json");
+    let one_site = "pub fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+    std::fs::write(src.join("lib.rs"), one_site).unwrap();
+
+    // No baseline at all: that is itself a violation (plus the count).
+    let report = run(&dir);
+    assert_eq!(report.violations.len(), 2, "{}", render(&report));
+    assert!(report.violations.iter().all(|v| v.lint == "A3"));
+
+    // Bootstrap via write_baseline, then the tree is clean.
+    sagebwd::analysis::write_baseline(&dir).unwrap();
+    assert_eq!(Baseline::load(&bpath).unwrap().unwrap().total, 1);
+    assert!(run(&dir).violations.is_empty());
+
+    // Counts below the baseline: no violation, and an updating run
+    // rewrites the baseline downward.
+    std::fs::write(
+        &bpath,
+        r#"{"files":{"rust/src/lib.rs":3},"schema":"sagebwd-analysis-baseline-v1","total":3}"#,
+    )
+    .unwrap();
+    let tightened = analyze(
+        &dir,
+        &AnalyzeOptions {
+            update_baseline: true,
+        },
+    )
+    .unwrap();
+    assert!(tightened.violations.is_empty());
+    assert!(tightened.baseline_tightened && tightened.baseline_updated);
+    assert_eq!(Baseline::load(&bpath).unwrap().unwrap().total, 1);
+
+    // Nothing further to tighten on the next run.
+    let again = analyze(
+        &dir,
+        &AnalyzeOptions {
+            update_baseline: true,
+        },
+    )
+    .unwrap();
+    assert!(!again.baseline_tightened && !again.baseline_updated);
+
+    // A second site appears: count 2 > baseline 1 fails, points at the
+    // first site past the allowance, and never rewrites the baseline.
+    std::fs::write(
+        src.join("lib.rs"),
+        "pub fn f(x: Option<u32>) -> u32 { x.unwrap() }\n\
+         pub fn g(x: Option<u32>) -> u32 { x.unwrap() }\n",
+    )
+    .unwrap();
+    let grown = analyze(
+        &dir,
+        &AnalyzeOptions {
+            update_baseline: true,
+        },
+    )
+    .unwrap();
+    assert_eq!(grown.violations.len(), 1, "{}", render(&grown));
+    assert_eq!(grown.violations[0].lint, "A3");
+    assert_eq!(grown.violations[0].line, 2);
+    assert!(!grown.baseline_updated);
+    assert_eq!(
+        Baseline::load(&bpath).unwrap().unwrap().total,
+        1,
+        "a failing run must never raise the baseline"
+    );
+
+    std::fs::remove_dir_all(&dir).ok();
+}

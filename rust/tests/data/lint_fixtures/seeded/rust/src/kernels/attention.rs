@@ -1,0 +1,11 @@
+//! Seeded A1+A2 fixture: nondeterministic container + hot-loop alloc.
+
+use std::collections::HashMap;
+
+pub fn demo_fwd_ws(n: usize, out: &mut [f32]) {
+    let scratch = vec![0f32; n]; // prologue allocation: legal
+    for i in 0..n {
+        let t = scratch.to_vec();
+        out[i] = t[i];
+    }
+}

@@ -1,0 +1,10 @@
+//! Seeded A3 fixture: three panic-family sites over a zero baseline.
+
+pub fn read_config(path: &str) -> usize {
+    let text = std::fs::read_to_string(path).unwrap();
+    let n: usize = text.trim().parse().expect("bad number");
+    if n == 0 {
+        panic!("zero config");
+    }
+    n
+}

@@ -1,0 +1,15 @@
+//! Seeded A4 fixture: unsafe audit.
+
+pub fn cast_a(x: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4) }
+}
+
+pub fn cast_b(x: &[f32]) -> &[u8] {
+    // SAFETY: x is a live &[f32]; len*4 bytes are valid and u8 alignment is 1.
+    unsafe { std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4) }
+}
+
+pub fn cast_c(x: &[f32]) -> &[u8] {
+    // sagebwd-allow(A4)
+    unsafe { std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4) }
+}

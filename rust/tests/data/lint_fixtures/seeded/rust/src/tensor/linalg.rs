@@ -1,0 +1,8 @@
+//! Seeded A2 manifest-drift fixture: `pack_transpose` is gone.
+
+pub fn gemm_nn_rows() {}
+pub fn i8_gemm_nn_rows() {}
+pub fn par_gemm_nn() {}
+pub fn int8_gemm_nn() {}
+pub fn int8_gemm_nt() {}
+pub fn int8_gemm_tn() {}

@@ -1,0 +1,14 @@
+//! Seeded A1 fixture: wall-clock read in a numeric module.
+
+pub fn tick() -> u64 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_nanos() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn clock_in_test_region_is_fine() {
+        let _ = std::time::Instant::now();
+    }
+}

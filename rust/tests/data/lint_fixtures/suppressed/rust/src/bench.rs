@@ -1,0 +1,33 @@
+//! Suppressed A5 fixture: full schema plus one allowed extra column.
+
+use crate::util::json::Json;
+
+pub const BENCH_SCHEMA: &str = "sagebwd-bench-v1";
+
+pub fn envelope(bench: &str) -> Json {
+    Json::from_pairs(vec![
+        ("schema", Json::from(BENCH_SCHEMA)),
+        ("bench", Json::from(bench)),
+        ("runs", Json::Arr(Vec::new())),
+    ])
+}
+
+pub fn run_to_json(threads_default: usize, rows: Vec<Json>) -> Json {
+    Json::from_pairs(vec![
+        ("threads_default", Json::from(threads_default)),
+        ("rows", Json::Arr(rows)),
+    ])
+}
+
+pub fn row_to_json(op: &str, shape: &str, variant: &str, threads: usize, ns: f64) -> Json {
+    Json::from_pairs(vec![
+        ("op", Json::from(op)),
+        ("shape", Json::from(shape)),
+        ("variant", Json::from(variant)),
+        ("threads", Json::from(threads)),
+        ("ns_per_iter", Json::from(ns)),
+        // sagebwd-allow(A5): experimental column, promoted next PR
+        ("ns_per_op", Json::from(ns * 2.0)),
+        ("tokens_per_s", Json::Null),
+    ])
+}

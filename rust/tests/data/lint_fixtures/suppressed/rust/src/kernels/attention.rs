@@ -1,0 +1,13 @@
+//! Suppressed twin of the seeded A1+A2 fixture.
+
+// sagebwd-allow(A1): fixture — exercising suppression
+use std::collections::HashMap;
+
+pub fn demo_fwd_ws(n: usize, out: &mut [f32]) {
+    let scratch = vec![0f32; n];
+    for i in 0..n {
+        // sagebwd-allow(A2): fixture — exercising suppression
+        let t = scratch.to_vec();
+        out[i] = t[i];
+    }
+}

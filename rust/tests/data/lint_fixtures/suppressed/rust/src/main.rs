@@ -1,0 +1,7 @@
+//! Suppressed A3 fixture: allowed sites never count toward the ratchet.
+
+pub fn read_config(path: &str) -> usize {
+    let text = std::fs::read_to_string(path).unwrap(); // sagebwd-allow(A3): fixture
+    let n: usize = text.trim().parse().expect("bad"); // sagebwd-allow(A3): fixture
+    n
+}

@@ -1,0 +1,6 @@
+//! Suppressed A4 fixture.
+
+pub fn cast_a(x: &[f32]) -> &[u8] {
+    // sagebwd-allow(A4): fixture — audited by hand
+    unsafe { std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4) }
+}

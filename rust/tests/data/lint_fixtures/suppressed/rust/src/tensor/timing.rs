@@ -1,0 +1,7 @@
+//! Suppressed A1 fixture.
+
+pub fn tick() -> u64 {
+    // sagebwd-allow(A1): fixture — harness-layer timer
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_nanos() as u64
+}
