@@ -62,9 +62,13 @@ BENCH_V1_FIELDS = ["schema", "bench", "runs", "threads_default", "rows",
 RUN_V1_FIELDS = ["schema", "experiment", "label", "config", "config_hash",
                  "code_version", "status", "artifacts", "summary",
                  "name", "sha256", "bytes", "view"]
+TRACE_V1_FIELDS = ["schema", "kind", "threads", "spans", "counters",
+                   "name", "parent", "calls", "total_ns", "self_ns",
+                   "min_ns", "max_ns", "p50_ns", "p99_ns", "value"]
 SCHEMA_TARGETS = [
     ("rust/src/bench.rs", "sagebwd-bench-v1", BENCH_V1_FIELDS),
     ("rust/src/registry/manifest.rs", "sagebwd-run-v1", RUN_V1_FIELDS),
+    ("rust/src/telemetry/trace.rs", "sagebwd-trace-v1", TRACE_V1_FIELDS),
 ]
 
 BASELINE_REL = "rust/src/analysis/baseline.json"
@@ -670,6 +674,8 @@ def check_fixtures(root):
         ("rust/src/runtime/raw.rs", 4, "A4"),
         ("rust/src/runtime/raw.rs", 13, "A0"),
         ("rust/src/runtime/raw.rs", 14, "A4"),
+        ("rust/src/telemetry/trace.rs", 1, "A5"),
+        ("rust/src/telemetry/trace.rs", 29, "A5"),
         ("rust/src/tensor/linalg.rs", 1, "A2"),
         ("rust/src/tensor/timing.rs", 4, "A1"),
     ]

@@ -13,9 +13,10 @@
 //!   library code, ratcheted against `analysis/baseline.json`.
 //! * **A4 unsafe-audit** — every `unsafe` needs a `// SAFETY:` comment
 //!   on the same line or the run of comment-only lines above it.
-//! * **A5 schema-drift** — string keys emitted/checked by `bench.rs`
-//!   and `registry/manifest.rs` must match the documented
-//!   `sagebwd-bench-v1` / `sagebwd-run-v1` field lists.
+//! * **A5 schema-drift** — string keys emitted/checked by `bench.rs`,
+//!   `registry/manifest.rs`, and `telemetry/trace.rs` must match the
+//!   documented `sagebwd-bench-v1` / `sagebwd-run-v1` /
+//!   `sagebwd-trace-v1` field lists.
 //!
 //! Suppression is per-site only: `// sagebwd-allow(A3): reason` on the
 //! violating line or the line above.  A reason is mandatory — an allow
@@ -146,14 +147,38 @@ pub const RUN_V1_FIELDS: [&str; 13] = [
     "view",
 ];
 
+/// Documented `sagebwd-trace-v1` field names (A5).
+pub const TRACE_V1_FIELDS: [&str; 15] = [
+    "schema",
+    "kind",
+    "threads",
+    "spans",
+    "counters",
+    "name",
+    "parent",
+    "calls",
+    "total_ns",
+    "self_ns",
+    "min_ns",
+    "max_ns",
+    "p50_ns",
+    "p99_ns",
+    "value",
+];
+
 /// (file, schema tag, documented fields) targets for A5.
-pub fn schema_targets() -> [(&'static str, &'static str, &'static [&'static str]); 2] {
+pub fn schema_targets() -> [(&'static str, &'static str, &'static [&'static str]); 3] {
     [
         ("rust/src/bench.rs", "sagebwd-bench-v1", &BENCH_V1_FIELDS),
         (
             "rust/src/registry/manifest.rs",
             "sagebwd-run-v1",
             &RUN_V1_FIELDS,
+        ),
+        (
+            "rust/src/telemetry/trace.rs",
+            "sagebwd-trace-v1",
+            &TRACE_V1_FIELDS,
         ),
     ]
 }

@@ -21,10 +21,10 @@
 //! bench smoke).
 
 use std::path::Path;
-use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::telemetry::trace;
 use crate::util::json::{self, schema, Json};
 use crate::util::stats;
 
@@ -78,17 +78,22 @@ impl Default for BenchConfig {
 }
 
 /// Time `f` under the config; `f` should perform one full operation.
+/// Samples are read off the telemetry span clock ([`trace::now_ns`]) —
+/// the same monotonic base the trainer's `step_ms` series uses, so bench
+/// numbers and training telemetry are directly comparable.
 pub fn run(cfg: BenchConfig, name: &str, mut f: impl FnMut()) -> Measurement {
     for _ in 0..cfg.warmup_iters {
         f();
     }
     let mut samples = Vec::with_capacity(cfg.iters);
-    let budget = Instant::now();
+    let budget0 = trace::now_ns();
     for _ in 0..cfg.iters {
-        let t0 = Instant::now();
+        let t0 = trace::now_ns();
         f();
-        samples.push(t0.elapsed().as_secs_f64());
-        if budget.elapsed().as_secs_f64() > cfg.max_secs && samples.len() >= 5 {
+        samples.push(trace::now_ns().saturating_sub(t0) as f64 / 1e9);
+        if trace::now_ns().saturating_sub(budget0) as f64 / 1e9 > cfg.max_secs
+            && samples.len() >= 5
+        {
             break;
         }
     }

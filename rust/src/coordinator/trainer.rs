@@ -40,7 +40,7 @@ use crate::coordinator::engine::{EngineState, NativeEngine, TrainEngine, XlaEngi
 use crate::coordinator::schedule::CosineSchedule;
 use crate::data::{Batcher, PrefetchBatcher, Tokenizer};
 use crate::runtime::Runtime;
-use crate::telemetry::{Log, Metrics};
+use crate::telemetry::{qerr, trace, Log, Metrics};
 use crate::tensor::Tensor;
 use crate::util::fmt_count;
 
@@ -173,7 +173,12 @@ impl Trainer {
         if self.diverged {
             bail!("trainer already diverged at step {}", self.step);
         }
-        let t0 = std::time::Instant::now();
+        // The span-clock read below is the single step-timing source
+        // (shared with the bench harness); the span itself roots the
+        // fwd/bwd → layer → attention → GEMM hierarchy under `--trace`.
+        let _span = trace::span("train_step");
+        let t0 = trace::now_ns();
+        qerr::begin_step(self.step);
         let mut acc = GradAccumulator::new(self.engine.grad_shapes());
         let mut step_max_logit: Option<f64> = None;
         for _ in 0..self.micro_per_step {
@@ -213,6 +218,15 @@ impl Trainer {
         if let Some(ml) = step_max_logit {
             self.metrics.record("max_attn_logit", self.step, ml);
         }
+        if qerr::probing_configured() {
+            // Sampled per-matmul quantization error (empty on unsampled
+            // steps and on engines that never ran an INT8 kernel).
+            for (name, rel, cos) in qerr::take_step() {
+                self.metrics.record(&format!("qerr_{name}"), self.step, rel);
+                self.metrics
+                    .record(&format!("qerr_{name}_cos"), self.step, cos);
+            }
+        }
 
         // §5.3 divergence: the logit ceiling fires first (while curves are
         // still plottable); non-finite loss/grads is the backstop.  A NaN
@@ -227,7 +241,7 @@ impl Trainer {
             self.diverged = true;
             self.metrics.record("diverged", self.step, 1.0);
             self.metrics
-                .record("step_ms", self.step, t0.elapsed().as_secs_f64() * 1e3);
+                .record("step_ms", self.step, trace::now_ns().saturating_sub(t0) as f64 / 1e6);
             self.step += 1;
             return Ok(loss);
         }
@@ -237,7 +251,7 @@ impl Trainer {
             .with_context(|| format!("applying optimizer step {}", self.step))?;
 
         self.metrics
-            .record("step_ms", self.step, t0.elapsed().as_secs_f64() * 1e3);
+            .record("step_ms", self.step, trace::now_ns().saturating_sub(t0) as f64 / 1e6);
         self.step += 1;
         Ok(loss)
     }
@@ -282,12 +296,17 @@ impl Trainer {
                 });
             }
             if self.cfg.log_every > 0 && self.step % self.cfg.log_every == 0 {
-                log.info(&format!(
+                let mut line = format!(
                     "step {:>5}/{total}  loss {:.4}  lr {:.2e}",
                     self.step,
                     loss,
                     self.schedule.lr(self.step - 1),
-                ));
+                );
+                // Heartbeat: current span aggregate, only under --trace.
+                if let Some(hb) = trace::heartbeat() {
+                    line.push_str(&format!("  [{hb}]"));
+                }
+                log.info(&line);
             }
         }
         let final_loss = self

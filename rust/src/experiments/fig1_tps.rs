@@ -36,7 +36,7 @@ use crate::config::TrainConfig;
 use crate::coordinator::{RunStatus, TrainerFactory};
 use crate::experiments::common::emit;
 use crate::registry::{Registry, RunManifest, RunState};
-use crate::telemetry::Log;
+use crate::telemetry::{trace, Log};
 use crate::util::json::{schema, Json};
 
 pub struct Outcome {
@@ -175,6 +175,13 @@ pub fn run_cell(
     let mut run = ctx.registry.begin_run_keyed(ctx.experiment, &label, config, key)?;
     let mut trainer = ctx.factory.trainer(cfg)?;
     let mut batches = trainer.make_batcher(512, 4)?;
+    // Fresh span/counter aggregate per cell so the recorded trace covers
+    // exactly this run.  (Under the parallel grid orchestrator, cells that
+    // overlap in time still share the process-global aggregate — see
+    // DESIGN.md §14 for that documented limitation.)
+    if trace::enabled() {
+        trace::reset();
+    }
     let report = match trainer.run(&mut batches, log) {
         Ok(r) => r,
         Err(e) => {
@@ -188,17 +195,36 @@ pub fn run_cell(
     let view_dir = PathBuf::from(ctx.results_dir).join("fig1").join(&label);
     run.record_metrics(&trainer.metrics, &view_dir)?;
 
+    // Persist the span/counter trace as a content-addressed run artifact
+    // (with a legacy view next to the curve CSVs) and fold its headline
+    // numbers into the manifest summary.
+    let trace_summary = if trace::enabled() {
+        let tr = trace::take_report();
+        run.record_bytes(
+            "trace.jsonl",
+            tr.to_jsonl().as_bytes(),
+            Some(&view_dir.join("trace.jsonl")),
+        )?;
+        Some(tr.summary_json())
+    } else {
+        None
+    };
+
     let diverged_at = match report.status {
         RunStatus::Diverged { at_step } => Some(at_step),
         RunStatus::Completed => None,
     };
-    run.set_summary(Json::from_pairs(vec![
+    let mut summary = vec![
         ("diverged_at", num_or_null(diverged_at.map(|s| s as f64))),
         ("final_loss", num_or_null(report.final_loss)),
         ("max_attn_logit", num_or_null(report.max_attn_logit)),
         ("steps_done", Json::from(report.steps_done as i64)),
         ("tokens_seen", Json::from(report.tokens_seen as i64)),
-    ]));
+    ];
+    if let Some(tr) = trace_summary {
+        summary.push(("trace", tr));
+    }
+    run.set_summary(Json::from_pairs(summary));
     run.finish(if diverged_at.is_some() {
         RunState::Diverged
     } else {

@@ -14,6 +14,7 @@
 //! sagebwd noise-probe [--budget B --tps T]               §4.3 noise-injection probe
 //! sagebwd grid run|status|resume --exp fig1|fig4 [...]   resumable registry grid
 //! sagebwd plot --csv a.csv[,b.csv] | --run DIR[,DIR]     ASCII metric curves
+//! sagebwd trace-report --run DIR | --file F.jsonl        span self-time table
 //! sagebwd bench-check FILE.json                          BENCH_*.json schema check
 //! sagebwd analyze [--deny-all --no-ratchet --root DIR]    invariant lints (§13)
 //! ```
@@ -25,7 +26,7 @@
 //! first).  Only `dist-train` is still XLA-only (worker pools own PJRT
 //! clients).
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use sagebwd::bench::Table;
 use sagebwd::cli::Args;
@@ -35,11 +36,11 @@ use sagebwd::experiments::{ds_rms, fig1_tps, fig23_speed, fig4_ablation, fig56_l
                            noise_probe, table1_sigma, table2_trace};
 use sagebwd::registry::{orchestrator, Registry, RunState};
 use sagebwd::runtime::{make_backend, Runtime};
-use sagebwd::telemetry::{run_dir, Log};
+use sagebwd::telemetry::{qerr, run_dir, trace, Log};
 use sagebwd::util::json::Json;
 use sagebwd::{DEFAULT_ARTIFACTS_DIR, DEFAULT_RESULTS_DIR};
 
-const USAGE: &str = "usage: sagebwd <train|dist-train|table1|table2|ds-rms|fig1|fig4|fig23|fig56|noise-probe|grid|plot|inspect|bench-check|analyze> [options]
+const USAGE: &str = "usage: sagebwd <train|dist-train|table1|table2|ds-rms|fig1|fig4|fig23|fig56|noise-probe|grid|plot|trace-report|inspect|bench-check|analyze> [options]
 static analysis (DESIGN.md §13):
   sagebwd analyze [--deny-all] [--no-ratchet] [--root DIR]
                   [--write-baseline]
@@ -58,6 +59,17 @@ common options:
   --results DIR          output directory (default results/)
   --fresh                retrain cells whose registry manifests are already
                          finished (fig1 / fig4 / noise-probe / grid)
+observability (DESIGN.md §14):
+  --trace                hierarchical span timers + arena/backend counters
+                         (or SAGEBWD_TRACE=1); emits sagebwd-trace-v1 JSONL
+                         per run; never perturbs numerics, one thread-local
+                         branch when off
+  --qerr-every N         on every Nth step, compare the seven INT8 attention
+                         matmuls against the FP path and record qerr_* /
+                         qerr_*_cos metric series (0 = off, the default)
+  sagebwd trace-report --run DIR | --file F.jsonl
+                         render the aggregated span self-time table from a
+                         recorded trace.jsonl
 grid orchestrator (DESIGN.md §12):
   sagebwd grid run    --exp fig1|fig4 [--budget B --tps-lo L --tps-hi H
                       --lr LR --seeds 0,1,... --jobs J --limit N --fresh]
@@ -96,6 +108,16 @@ fn main() {
 
 fn run() -> Result<()> {
     let args = Args::from_env()?;
+    // Observability knobs are global process state, deliberately *not*
+    // TrainConfig fields — registry run keys (config hashes) and resume
+    // byte-identity are unchanged whether tracing is on or off.
+    let trace_env = std::env::var("SAGEBWD_TRACE")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    if args.flag("trace") || trace_env {
+        trace::set_enabled(true);
+    }
+    qerr::set_every(args.u64_or("qerr-every", 0)?);
     let artifacts = args.str_or("artifacts", DEFAULT_ARTIFACTS_DIR).to_string();
     let results = args.str_or("results", DEFAULT_RESULTS_DIR).to_string();
     // Trace/bench harnesses run on either backend; the native CPU kernels
@@ -193,6 +215,7 @@ fn run() -> Result<()> {
             Ok(())
         }
         "plot" => cmd_plot(&args),
+        "trace-report" => cmd_trace_report(&args),
         "analyze" => cmd_analyze(&args),
         "bench-check" => {
             let path = args
@@ -276,6 +299,25 @@ fn cmd_plot(args: &Args) -> Result<()> {
         }
     }
     println!("{}", sagebwd::telemetry::plot::render(&curves, 100, 24));
+    Ok(())
+}
+
+/// `trace-report --run DIR | --file FILE.jsonl` — parse a recorded
+/// `sagebwd-trace-v1` event log (strict schema: unknown keys/kinds and
+/// count mismatches are errors) and render the aggregated self-time
+/// table plus counters.
+fn cmd_trace_report(args: &Args) -> Result<()> {
+    let path = if let Some(run) = args.opt("run") {
+        std::path::Path::new(run).join("trace.jsonl")
+    } else if let Some(file) = args.opt("file") {
+        std::path::PathBuf::from(file)
+    } else {
+        bail!("usage: sagebwd trace-report --run DIR | --file FILE.jsonl");
+    };
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    let report = sagebwd::telemetry::trace::TraceReport::parse_jsonl(&text)?;
+    print!("{}", report.render_table());
     Ok(())
 }
 
@@ -450,6 +492,9 @@ fn cmd_train(args: &Args, factory: TrainerFactory, results: &str) -> Result<()> 
     let mut run = registry.begin_run("train", &run_name, config)?;
     let mut trainer = factory.trainer(cfg.clone())?;
     let mut batches = trainer.make_batcher(512, 4)?;
+    if trace::enabled() {
+        trace::reset();
+    }
     let report = match trainer.run(&mut batches, &log) {
         Ok(r) => r,
         Err(e) => {
@@ -463,16 +508,31 @@ fn cmd_train(args: &Args, factory: TrainerFactory, results: &str) -> Result<()> 
         cfg.to_json().to_string().as_bytes(),
         Some(&dir.join("config.json")),
     )?;
+    let trace_summary = if trace::enabled() {
+        let tr = trace::take_report();
+        run.record_bytes(
+            "trace.jsonl",
+            tr.to_jsonl().as_bytes(),
+            Some(&dir.join("trace.jsonl")),
+        )?;
+        Some(tr.summary_json())
+    } else {
+        None
+    };
     trainer.save_checkpoint(&dir.join("final.ckpt"))?;
     run.record_file("final.ckpt", &dir.join("final.ckpt"))?;
-    run.set_summary(Json::from_pairs(vec![
+    let mut summary = vec![
         (
             "final_loss",
             report.final_loss.map(Json::from).unwrap_or(Json::Null),
         ),
         ("steps_done", Json::from(report.steps_done as i64)),
         ("tokens_seen", Json::from(report.tokens_seen as i64)),
-    ]));
+    ];
+    if let Some(tr) = trace_summary {
+        summary.push(("trace", tr));
+    }
+    run.set_summary(Json::from_pairs(summary));
     let key16 = run.key16().to_string();
     run.finish(match report.status {
         sagebwd::coordinator::RunStatus::Diverged { .. } => RunState::Diverged,

@@ -34,6 +34,7 @@ use crate::model::blocks::{
 };
 use crate::model::{param_schema, AttnVariant, ModelDims};
 use crate::runtime::{AttentionBackend, Value};
+use crate::telemetry::trace;
 use crate::tensor::{IntTensor, Tensor, Workspace};
 
 /// One microbatch's training outputs.
@@ -157,6 +158,7 @@ impl Model {
     ) -> Result<MicroOutput> {
         let (loss, caches, ce, x_final_cache, max_attn_logit) =
             self.forward_with_targets(params, backend, tokens, targets, true)?;
+        let _bwd = trace::span("bwd");
         let caches = caches.expect("forward(want_grads) returns caches");
         let (fn_cache, _f) = x_final_cache.expect("forward(want_grads) returns final-norm cache");
         let ce = ce.expect("forward(want_grads) returns CE cache");
@@ -174,6 +176,7 @@ impl Model {
         grads[self.idx("final_norm")].add_assign(&dg_final);
 
         for (l, cache) in caches.into_iter().enumerate().rev() {
+            let _layer = trace::span("layer");
             let p = format!("layers.{l:02}.");
             let (i_wq, i_wk, i_wv, i_wo) = (
                 self.idx(&format!("{p}wq")),
@@ -320,6 +323,7 @@ impl Model {
         Option<(RmsNormCache, Tensor)>,
         f64,
     )> {
+        let _fwd = trace::span("fwd");
         self.check_batch(tokens, targets)?;
         if params.len() != self.shapes.len() {
             bail!(
@@ -339,6 +343,7 @@ impl Model {
         let mut x = gather_rows(&params[self.idx("embed")], &tokens.data)?;
         let mut caches = Vec::with_capacity(self.dims.n_layers);
         for l in 0..self.dims.n_layers {
+            let _layer = trace::span("layer");
             let p = format!("layers.{l:02}.");
             let (y, an) = rmsnorm_fwd(&x, &params[self.idx(&format!("{p}attn_norm"))], eps)?;
             let q = y.matmul(&params[self.idx(&format!("{p}wq"))])?;

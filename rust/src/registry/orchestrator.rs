@@ -25,7 +25,7 @@ use crate::coordinator::TrainerFactory;
 use crate::experiments::{fig1_tps, fig4_ablation};
 use crate::registry::manifest::RunState;
 use crate::registry::store::Registry;
-use crate::telemetry::Log;
+use crate::telemetry::{trace, Log};
 use crate::tensor::linalg;
 
 /// One grid cell: a (variant, tps, seed) coordinate plus its display
@@ -216,6 +216,17 @@ pub fn run(
                     let Some(cell) = queue.lock().unwrap().pop() else {
                         return;
                     };
+                    // Per-run heartbeat: with tracing on, each worker notes
+                    // the cell it picks up (the trainer's step lines carry
+                    // the live span summary) and the done line below reports
+                    // wall time off the same span clock.
+                    if trace::enabled() {
+                        let hb = trace::heartbeat()
+                            .map(|h| format!(" [{h}]"))
+                            .unwrap_or_default();
+                        log.info(&format!("grid cell start: {}{hb}", cell.label));
+                    }
+                    let t0 = trace::now_ns();
                     let outcome = fig1_tps::run_cell(
                         &ctx,
                         &cell.variant,
@@ -230,8 +241,9 @@ pub fn run(
                     match outcome {
                         Ok(o) => {
                             d.0 += 1;
+                            let secs = trace::now_ns().saturating_sub(t0) as f64 / 1e9;
                             log.info(&format!(
-                                "grid cell done: {} ({})",
+                                "grid cell done: {} ({}, {secs:.1}s)",
                                 cell.label,
                                 match o.diverged_at {
                                     Some(at) => format!("diverged@{at}"),

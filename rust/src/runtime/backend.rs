@@ -20,6 +20,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::kernels::{self, AttnConfig};
 use crate::runtime::{Runtime, Value};
+use crate::telemetry::{qerr, trace};
 use crate::tensor::{linalg, Tensor, Workspace};
 use crate::util::stats;
 
@@ -197,14 +198,21 @@ impl AttentionBackend for NativeBackend {
     /// whole by one worker with its own [`Workspace`], so outputs are
     /// bitwise-identical to the serial loop at any thread count.
     fn execute_many(&mut self, artifact: &str, calls: &[Vec<Value>]) -> Result<Vec<Vec<Value>>> {
+        let _t = trace::span("execute_many");
+        trace::counter_add("exec_many_batches", 1);
+        trace::counter_add("exec_many_calls", calls.len() as u64);
         let threads = linalg::thread_count().min(calls.len());
         if threads <= 1 || batch_mac_volume(calls) < linalg::PAR_MIN_BATCH_VOLUME {
+            trace::counter_add("exec_many_serial_batches", 1);
             return calls
                 .iter()
                 .map(|c| execute_native(artifact, c, &mut self.ws))
                 .collect();
         }
         let parts = linalg::partition(calls.len(), threads);
+        // Fan-out occupancy: workers actually spawned vs the thread cap.
+        trace::counter_add("exec_many_workers", parts.len() as u64);
+        trace::counter_max("exec_many_peak_workers", parts.len() as u64);
         while self.worker_ws.len() < parts.len() {
             self.worker_ws.push(Workspace::new());
         }
@@ -313,6 +321,7 @@ fn model_attn_cfg(spec: ModelAttnSpec) -> AttnConfig {
 }
 
 fn run_model_attn_artifact(spec: ModelAttnSpec, inputs: &[Value], ws: &mut Workspace) -> Result<Vec<Value>> {
+    let _t = trace::span("attention");
     let cfg = model_attn_cfg(spec);
     if spec.imp != ModelAttnImpl::Fpa && spec.n % TRACE_BLOCK != 0 {
         bail!(
@@ -325,7 +334,18 @@ fn run_model_attn_artifact(spec: ModelAttnSpec, inputs: &[Value], ws: &mut Works
         let (q, k, v, do_) = (ins[0], ins[1], ins[2], ins[3]);
         let tr = match spec.imp {
             ModelAttnImpl::Fpa => kernels::fpa_bwd(q, k, v, do_, true)?,
-            _ => kernels::sage_bwd_ws(q, k, v, do_, &cfg, ws)?,
+            _ => {
+                let tr = kernels::sage_bwd_ws(q, k, v, do_, &cfg, ws)?;
+                // Sampled quantization-error probe: re-run the exact FPA
+                // oracle and fold the seven matmul errors (read-only —
+                // outputs and numerics are untouched, see telemetry::qerr).
+                if qerr::active() {
+                    let _p = trace::span("qerr_probe");
+                    let fp = kernels::fpa_bwd(q, k, v, do_, true)?;
+                    qerr::probe(&tr, &fp, cfg.causal);
+                }
+                tr
+            }
         };
         Ok(vec![
             Value::F32(tr.o),

@@ -5,10 +5,16 @@
 //! figure can be regenerated from the raw curves.  Standard training
 //! series: `train_loss`, `lr`, `grad_norm`, `tokens`, `max_attn_logit`
 //! (the §5.3 divergence statistic), `step_ms` (per-step wall time), and
-//! `diverged` (a single 1.0 at the flagged step).  Render any of them
+//! `diverged` (a single 1.0 at the flagged step).  With `--qerr-every N`
+//! the [`qerr`] probes add the per-matmul quantization-error family on
+//! sampled steps: `qerr_qk`, `qerr_pv`, `qerr_dv`, `qerr_dp`, `qerr_ds`,
+//! `qerr_dq`, `qerr_dk` (max rel-L2 vs the FPA oracle) and their
+//! `qerr_*_cos` twins (min cosine similarity).  Render any of them
 //! offline with `sagebwd plot --run DIR[,DIR] --series NAME`.
 
 pub mod plot;
+pub mod qerr;
+pub mod trace;
 
 use std::collections::BTreeMap;
 use std::fs;
@@ -85,13 +91,26 @@ impl Metrics {
     }
 
     /// Write every series as `<dir>/<name>.csv` with a `step,value` header.
+    ///
+    /// Each file lands via unique-tmp + rename (the registry object
+    /// store's idiom), so an interrupted run never leaves a truncated
+    /// CSV behind — readers see the old file or the new one, never half.
     pub fn flush_csv(&self, dir: &Path) -> Result<()> {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static TMP_COUNTER: AtomicU64 = AtomicU64::new(0);
         fs::create_dir_all(dir)
             .with_context(|| format!("creating metrics dir {}", dir.display()))?;
         for (name, series) in &self.series {
             let path = dir.join(format!("{name}.csv"));
-            fs::write(&path, series.to_csv())
-                .with_context(|| format!("writing {}", path.display()))?;
+            let tmp = dir.join(format!(
+                ".tmp-{}-{}",
+                std::process::id(),
+                TMP_COUNTER.fetch_add(1, Ordering::Relaxed)
+            ));
+            fs::write(&tmp, series.to_csv())
+                .with_context(|| format!("writing {}", tmp.display()))?;
+            fs::rename(&tmp, &path)
+                .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
         }
         Ok(())
     }

@@ -1,0 +1,188 @@
+//! Online quantization-error probes (DESIGN.md §14, paper insight (ii)).
+//!
+//! On sampled optimizer steps (`--qerr-every N`) the native backend
+//! re-runs the exact FPA oracle next to the INT8 attention kernel and
+//! folds cossim / rel-L2 of each of the seven attention matmul products
+//! into a per-step accumulator:
+//!
+//! | series    | product                         | comparison domain    |
+//! |-----------|---------------------------------|----------------------|
+//! | `qerr_qk` | S̃ = ψ(Q)·ψ(K)ᵀ                  | causal entries j ≤ i |
+//! | `qerr_pv` | O = ψ(P̃)·ψ(V)                   | dense (N, D)         |
+//! | `qerr_dv` | dV = ψ(P)ᵀ·ψ(dO)                | dense (N, D)         |
+//! | `qerr_dp` | dP = dO·Vᵀ (kept FP, insight ii)| causal entries j ≤ i |
+//! | `qerr_ds` | dS = P ∘ (dP − δ)               | causal entries j ≤ i |
+//! | `qerr_dq` | dQ = ψ(dS)·ψ(K)/√d              | dense (N, D)         |
+//! | `qerr_dk` | dK = ψ(dS)ᵀ·ψ(Q)/√d             | dense (N, D)         |
+//!
+//! The per-step fold is the **worst** error across heads/microbatches
+//! (max rel-L2, min cossim) — an order-independent reduction, so the
+//! recorded values do not depend on worker-thread interleaving.  Probes
+//! only read kernel outputs: the training numerics are bitwise identical
+//! with probing on or off.  The trainer drains [`take_step`] into
+//! `qerr_*` / `qerr_*_cos` metric series, which flow to CSV and the run
+//! registry exactly like `train_loss`, so fig1/fig4 runs chart the
+//! paper's dS-dominance claim directly.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::kernels::AttnTrace;
+use crate::util::stats;
+
+/// Sampling period: probe steps where `step % every == 0`.  0 = off.
+static EVERY: AtomicU64 = AtomicU64::new(0);
+/// Whether the step currently in flight is a sampled one.
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+
+/// Worst-case (max rel-L2, min cossim) fold for one matmul this step.
+#[derive(Clone, Copy)]
+struct Fold {
+    rel_l2: f64,
+    cossim: f64,
+}
+
+static ACC: Mutex<BTreeMap<&'static str, Fold>> = Mutex::new(BTreeMap::new());
+
+/// Enable probing every `n` steps (0 disables).  Like
+/// [`super::trace::set_enabled`], a global knob — deliberately **not**
+/// part of `TrainConfig`, so registry run keys and resume byte-identity
+/// are unaffected by observability settings.
+pub fn set_every(n: u64) {
+    EVERY.store(n, Ordering::SeqCst);
+}
+
+/// True when `--qerr-every` is set at all.
+pub fn probing_configured() -> bool {
+    EVERY.load(Ordering::Relaxed) != 0
+}
+
+/// Called by the trainer at the top of each step: decides whether this
+/// step is sampled and clears any stale partial accumulator.
+pub fn begin_step(step: u64) {
+    let every = EVERY.load(Ordering::Relaxed);
+    let on = every != 0 && step % every == 0;
+    ACTIVE.store(on, Ordering::SeqCst);
+    if on {
+        ACC.lock().unwrap_or_else(|p| p.into_inner()).clear();
+    }
+}
+
+/// Single cheap gate the backend checks before paying for the oracle.
+#[inline]
+pub fn active() -> bool {
+    EVERY.load(Ordering::Relaxed) != 0 && ACTIVE.load(Ordering::Relaxed)
+}
+
+/// Fold one (approx, exact) product pair into the step accumulator.
+fn record(name: &'static str, approx: &[f32], exact: &[f32]) {
+    let rel = stats::rel_l2(approx, exact);
+    let cos = stats::cossim(approx, exact);
+    let mut acc = ACC.lock().unwrap_or_else(|p| p.into_inner());
+    let f = acc.entry(name).or_insert(Fold {
+        rel_l2: f64::NEG_INFINITY,
+        cossim: f64::INFINITY,
+    });
+    // NaN-poisoning folds: a NaN sample must surface, not vanish.
+    f.rel_l2 = stats::nan_max(f.rel_l2, rel);
+    f.cossim = nan_min(f.cossim, cos);
+}
+
+fn nan_min(a: f64, b: f64) -> f64 {
+    if a.is_nan() || b.is_nan() {
+        f64::NAN
+    } else {
+        a.min(b)
+    }
+}
+
+/// Extract the causal (j ≤ i) entries of two (n, n) score-shaped
+/// matrices into dense pair vectors, skipping non-finite entries (the
+/// masked positions the kernels encode as −∞).
+fn causal_pairs(approx: &[f32], exact: &[f32], n: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut a = Vec::with_capacity(n * (n + 1) / 2);
+    let mut e = Vec::with_capacity(n * (n + 1) / 2);
+    for i in 0..n {
+        for j in 0..=i {
+            let (x, y) = (approx[i * n + j], exact[i * n + j]);
+            if x.is_finite() && y.is_finite() {
+                a.push(x);
+                e.push(y);
+            }
+        }
+    }
+    (a, e)
+}
+
+/// Compare one INT8 attention trace against the exact FPA oracle and
+/// fold all seven matmul products into the step accumulator.
+///
+/// For causal attention the score-shaped intermediates (S̃, dP, dS) are
+/// restricted to j ≤ i: the tiled kernel never computes fully-masked
+/// tiles (their slots stay zero), and the oracle marks masked scores
+/// with −∞ — neither is a quantization error.
+pub fn probe(approx: &AttnTrace, exact: &AttnTrace, causal: bool) {
+    let n = approx.s.shape[0];
+    if causal {
+        let (a, e) = causal_pairs(&approx.s.data, &exact.s.data, n);
+        record("qk", &a, &e);
+        let (a, e) = causal_pairs(&approx.dp.data, &exact.dp.data, n);
+        record("dp", &a, &e);
+        let (a, e) = causal_pairs(&approx.ds.data, &exact.ds.data, n);
+        record("ds", &a, &e);
+    } else {
+        record("qk", &approx.s.data, &exact.s.data);
+        record("dp", &approx.dp.data, &exact.dp.data);
+        record("ds", &approx.ds.data, &exact.ds.data);
+    }
+    record("pv", &approx.o.data, &exact.o.data);
+    record("dv", &approx.dv.data, &exact.dv.data);
+    record("dq", &approx.dq.data, &exact.dq.data);
+    record("dk", &approx.dk.data, &exact.dk.data);
+}
+
+/// Drain the step accumulator: `(matmul name, max rel-L2, min cossim)`
+/// in deterministic name order.  Empty when the step was not sampled or
+/// no INT8 attention ran.
+pub fn take_step() -> Vec<(&'static str, f64, f64)> {
+    let mut acc = ACC.lock().unwrap_or_else(|p| p.into_inner());
+    let drained = std::mem::take(&mut *acc);
+    drained
+        .into_iter()
+        .map(|(name, f)| (name, f.rel_l2, f.cossim))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn causal_pairs_skip_masked_and_upper_triangle() {
+        let n = 3;
+        let mut approx = vec![0.0f32; 9];
+        let mut exact = vec![0.0f32; 9];
+        // Upper triangle poisoned: must never be read.
+        for i in 0..n {
+            for j in (i + 1)..n {
+                approx[i * n + j] = f32::NAN;
+                exact[i * n + j] = 7.0;
+            }
+        }
+        // Masked entry (row 1, col 0) encoded as -inf on both sides.
+        approx[n] = f32::NEG_INFINITY;
+        exact[n] = f32::NEG_INFINITY;
+        let (a, e) = causal_pairs(&approx, &exact, n);
+        assert_eq!(a.len(), 5); // 6 lower-tri entries minus the masked one
+        assert_eq!(a.len(), e.len());
+        assert!(a.iter().chain(e.iter()).all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn nan_min_poisons() {
+        assert_eq!(nan_min(1.0, 2.0), 1.0);
+        assert!(nan_min(1.0, f64::NAN).is_nan());
+        assert!(nan_min(f64::NAN, 1.0).is_nan());
+    }
+}

@@ -1,0 +1,708 @@
+//! Hierarchical span tracing (DESIGN.md §14).
+//!
+//! A pure-std observability layer over the whole training stack:
+//! `train_step → fwd/bwd → layer → attention → linalg GEMMs →
+//! workspace`.  Scoped [`SpanGuard`]s record wall time per span into a
+//! thread-local table; worker threads from the scoped pool merge their
+//! tables into a process-global aggregate when they exit, so a report
+//! sees every thread that contributed since the last reset.
+//!
+//! Contracts (test-asserted in `rust/tests/telemetry_trace.rs`):
+//!
+//! * **Determinism** — tracing never touches numeric state: guards only
+//!   read the clock and write side tables, so training curves are
+//!   bitwise identical with tracing on or off.
+//! * **Near-zero overhead when off** — [`span`]/[`counter_add`] bail on
+//!   a single branch over a thread-local [`Cell`]; no allocation, no
+//!   clock read, no lock.  New threads inherit the process-wide flag at
+//!   thread-local init, so [`set_enabled`] must run before workers
+//!   spawn (the scoped pool creates workers per call, satisfying this).
+//! * **Schema** — reports serialize as `sagebwd-trace-v1` JSONL, one
+//!   event object per line: a leading `meta` line with the span/counter
+//!   counts, then one `span` line per aggregated span and one `counter`
+//!   line per counter.  [`TraceReport::parse_jsonl`] rejects unknown
+//!   keys, unknown kinds, and count mismatches; the key lists live in
+//!   lockstep with `analysis::lints::TRACE_V1_FIELDS` (lint A5).
+//!
+//! The monotonic [`now_ns`] clock works whether or not tracing is
+//! enabled — it is the single step-timing clock shared by the trainer's
+//! `step_ms` series and the bench harness.
+
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{schema, Json};
+use crate::util::stats;
+
+/// Schema tag carried by every JSONL event line.
+pub const TRACE_SCHEMA: &str = "sagebwd-trace-v1";
+
+/// Per-span duration samples kept for the p50/p99 estimate.  Totals,
+/// min/max and call counts keep accumulating past the cap; only the
+/// percentile sample set is bounded so multi-thousand-call GEMM spans
+/// cannot grow memory without bound.
+const SAMPLE_CAP: usize = 4096;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+thread_local! {
+    /// Cached copy of [`ENABLED`], read by every guard: the off path is
+    /// one thread-local load and branch.  Initialized from the global
+    /// when the thread first touches tracing.
+    static TL_ON: Cell<bool> = Cell::new(ENABLED.load(Ordering::Relaxed));
+
+    static TRACER: RefCell<ThreadTracer> = const { RefCell::new(ThreadTracer::new()) };
+}
+
+/// Turn tracing on/off process-wide and for the calling thread.  Call
+/// before spawning workers; threads born afterwards inherit the flag.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::SeqCst);
+    TL_ON.with(|c| c.set(on));
+}
+
+/// The single-branch gate every instrumentation site checks first.
+#[inline]
+pub fn enabled() -> bool {
+    TL_ON.with(Cell::get)
+}
+
+/// Monotonic nanoseconds since the first call in this process.  Works
+/// with tracing disabled — the unified step/bench clock.
+pub fn now_ns() -> u64 {
+    static START: OnceLock<Instant> = OnceLock::new();
+    START.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+struct Frame {
+    name: &'static str,
+    parent: Option<&'static str>,
+    start: u64,
+    child_ns: u64,
+}
+
+#[derive(Clone)]
+struct SpanStat {
+    parent: Option<&'static str>,
+    calls: u64,
+    total_ns: u64,
+    self_ns: u64,
+    min_ns: u64,
+    max_ns: u64,
+    durs: Vec<u64>,
+}
+
+impl SpanStat {
+    fn new() -> SpanStat {
+        SpanStat {
+            parent: None,
+            calls: 0,
+            total_ns: 0,
+            self_ns: 0,
+            min_ns: u64::MAX,
+            max_ns: 0,
+            durs: Vec::new(),
+        }
+    }
+}
+
+type SpanMap = BTreeMap<&'static str, SpanStat>;
+type CounterMap = BTreeMap<&'static str, u64>;
+
+struct ThreadTracer {
+    stack: Vec<Frame>,
+    spans: SpanMap,
+    adds: CounterMap,
+    maxes: CounterMap,
+}
+
+impl ThreadTracer {
+    const fn new() -> ThreadTracer {
+        ThreadTracer {
+            stack: Vec::new(),
+            spans: BTreeMap::new(),
+            adds: BTreeMap::new(),
+            maxes: BTreeMap::new(),
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.spans.is_empty() && self.adds.is_empty() && self.maxes.is_empty()
+    }
+}
+
+impl Drop for ThreadTracer {
+    /// Scoped-pool workers die at the end of each `execute_many`; their
+    /// tables fold into the global aggregate here.
+    fn drop(&mut self) {
+        if self.is_empty() {
+            return;
+        }
+        let spans = std::mem::take(&mut self.spans);
+        let adds = std::mem::take(&mut self.adds);
+        let maxes = std::mem::take(&mut self.maxes);
+        let mut g = GLOBAL.lock().unwrap_or_else(|p| p.into_inner());
+        g.threads += 1;
+        merge_spans(&mut g.spans, spans);
+        merge_adds(&mut g.adds, adds);
+        merge_maxes(&mut g.maxes, maxes);
+    }
+}
+
+struct Aggregate {
+    threads: u64,
+    spans: SpanMap,
+    adds: CounterMap,
+    maxes: CounterMap,
+}
+
+static GLOBAL: Mutex<Aggregate> = Mutex::new(Aggregate {
+    threads: 0,
+    spans: BTreeMap::new(),
+    adds: BTreeMap::new(),
+    maxes: BTreeMap::new(),
+});
+
+fn merge_spans(into: &mut SpanMap, from: SpanMap) {
+    for (name, s) in from {
+        let dst = into.entry(name).or_insert_with(SpanStat::new);
+        if dst.parent.is_none() {
+            dst.parent = s.parent;
+        }
+        dst.calls += s.calls;
+        dst.total_ns += s.total_ns;
+        dst.self_ns += s.self_ns;
+        dst.min_ns = dst.min_ns.min(s.min_ns);
+        dst.max_ns = dst.max_ns.max(s.max_ns);
+        let room = SAMPLE_CAP.saturating_sub(dst.durs.len());
+        dst.durs.extend(s.durs.into_iter().take(room));
+    }
+}
+
+fn merge_adds(into: &mut CounterMap, from: CounterMap) {
+    for (name, v) in from {
+        *into.entry(name).or_insert(0) += v;
+    }
+}
+
+fn merge_maxes(into: &mut CounterMap, from: CounterMap) {
+    for (name, v) in from {
+        let dst = into.entry(name).or_insert(0);
+        *dst = (*dst).max(v);
+    }
+}
+
+/// RAII span: records `now - start` into the thread-local table on
+/// drop, attributing the elapsed time to the parent's child total so
+/// self time is exact.  Inert (no clock read) when tracing is off.
+pub struct SpanGuard {
+    armed: bool,
+}
+
+#[must_use = "a span measures the scope it is bound to; binding to _ drops it immediately"]
+pub fn span(name: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { armed: false };
+    }
+    let start = now_ns();
+    TRACER.with(|t| {
+        let mut t = t.borrow_mut();
+        let parent = t.stack.last().map(|f| f.name);
+        t.stack.push(Frame {
+            name,
+            parent,
+            start,
+            child_ns: 0,
+        });
+    });
+    SpanGuard { armed: true }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let end = now_ns();
+        TRACER.with(|t| {
+            let mut t = t.borrow_mut();
+            let Some(f) = t.stack.pop() else { return };
+            let total = end.saturating_sub(f.start);
+            let self_ns = total.saturating_sub(f.child_ns);
+            if let Some(top) = t.stack.last_mut() {
+                top.child_ns += total;
+            }
+            let stat = t.spans.entry(f.name).or_insert_with(SpanStat::new);
+            if stat.parent.is_none() {
+                stat.parent = f.parent;
+            }
+            stat.calls += 1;
+            stat.total_ns += total;
+            stat.self_ns += self_ns;
+            stat.min_ns = stat.min_ns.min(total);
+            stat.max_ns = stat.max_ns.max(total);
+            if stat.durs.len() < SAMPLE_CAP {
+                stat.durs.push(total);
+            }
+        });
+    }
+}
+
+/// Add `delta` to a summing counter (arena hits/misses, fan-out tallies).
+#[inline]
+pub fn counter_add(name: &'static str, delta: u64) {
+    if !enabled() {
+        return;
+    }
+    TRACER.with(|t| {
+        let mut t = t.borrow_mut();
+        *t.adds.entry(name).or_insert(0) += delta;
+    });
+}
+
+/// Fold `value` into a high-water counter (arena high-water bytes).
+#[inline]
+pub fn counter_max(name: &'static str, value: u64) {
+    if !enabled() {
+        return;
+    }
+    TRACER.with(|t| {
+        let mut t = t.borrow_mut();
+        let dst = t.maxes.entry(name).or_insert(0);
+        *dst = (*dst).max(value);
+    });
+}
+
+/// One aggregated span in a [`TraceReport`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanRow {
+    pub name: String,
+    pub parent: Option<String>,
+    pub calls: u64,
+    pub total_ns: u64,
+    pub self_ns: u64,
+    pub min_ns: u64,
+    pub max_ns: u64,
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+}
+
+/// One counter in a [`TraceReport`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CounterRow {
+    pub name: String,
+    pub value: u64,
+}
+
+/// Snapshot of every span and counter merged across threads.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct TraceReport {
+    pub threads: u64,
+    pub spans: Vec<SpanRow>,
+    pub counters: Vec<CounterRow>,
+}
+
+fn build_rows(threads: u64, spans: SpanMap, adds: CounterMap, maxes: CounterMap) -> TraceReport {
+    let mut span_rows = Vec::with_capacity(spans.len());
+    for (name, s) in spans {
+        let (p50, p99) = if s.durs.is_empty() {
+            (0, 0)
+        } else {
+            let durs: Vec<f64> = s.durs.iter().map(|&d| d as f64).collect();
+            (
+                stats::percentile(&durs, 50.0) as u64,
+                stats::percentile(&durs, 99.0) as u64,
+            )
+        };
+        span_rows.push(SpanRow {
+            name: name.to_string(),
+            parent: s.parent.map(str::to_string),
+            calls: s.calls,
+            total_ns: s.total_ns,
+            self_ns: s.self_ns,
+            min_ns: if s.min_ns == u64::MAX { 0 } else { s.min_ns },
+            max_ns: s.max_ns,
+            p50_ns: p50,
+            p99_ns: p99,
+        });
+    }
+    let mut counter_rows = Vec::with_capacity(adds.len() + maxes.len());
+    for (name, value) in adds.into_iter().chain(maxes) {
+        counter_rows.push(CounterRow {
+            name: name.to_string(),
+            value,
+        });
+    }
+    counter_rows.sort_by(|a, b| a.name.cmp(&b.name));
+    TraceReport {
+        threads,
+        spans: span_rows,
+        counters: counter_rows,
+    }
+}
+
+fn collect(reset: bool) -> TraceReport {
+    let (lspans, ladds, lmaxes) = TRACER.with(|t| {
+        let mut t = t.borrow_mut();
+        if reset {
+            t.stack.clear();
+            (
+                std::mem::take(&mut t.spans),
+                std::mem::take(&mut t.adds),
+                std::mem::take(&mut t.maxes),
+            )
+        } else {
+            (t.spans.clone(), t.adds.clone(), t.maxes.clone())
+        }
+    });
+    let had_local = !(lspans.is_empty() && ladds.is_empty() && lmaxes.is_empty());
+    let mut g = GLOBAL.lock().unwrap_or_else(|p| p.into_inner());
+    let (mut spans, mut adds, mut maxes, mut threads) = if reset {
+        let taken = (
+            std::mem::take(&mut g.spans),
+            std::mem::take(&mut g.adds),
+            std::mem::take(&mut g.maxes),
+            g.threads,
+        );
+        g.threads = 0;
+        taken
+    } else {
+        (g.spans.clone(), g.adds.clone(), g.maxes.clone(), g.threads)
+    };
+    drop(g);
+    if had_local {
+        threads += 1;
+    }
+    merge_spans(&mut spans, lspans);
+    merge_adds(&mut adds, ladds);
+    merge_maxes(&mut maxes, lmaxes);
+    build_rows(threads, spans, adds, maxes)
+}
+
+/// Drain the calling thread's table plus the global aggregate into a
+/// report, leaving both empty for the next run.
+pub fn take_report() -> TraceReport {
+    collect(true)
+}
+
+/// Non-draining view of everything recorded so far (heartbeats).
+pub fn snapshot() -> TraceReport {
+    collect(false)
+}
+
+/// Discard everything recorded so far.
+pub fn reset() {
+    let _ = collect(true);
+}
+
+/// One-line progress summary for log/heartbeat lines: step-span volume
+/// plus the current top self-time span.  `None` when tracing is off or
+/// nothing was recorded yet.
+pub fn heartbeat() -> Option<String> {
+    if !enabled() {
+        return None;
+    }
+    let report = snapshot();
+    let top = report.spans.iter().max_by_key(|s| s.self_ns)?;
+    let mut line = match report.spans.iter().find(|s| s.name == "train_step") {
+        Some(ts) if ts.calls > 0 => format!(
+            "train_step x{} p50 {:.1}ms",
+            ts.calls,
+            ts.p50_ns as f64 / 1e6
+        ),
+        _ => format!("{} spans", report.spans.len()),
+    };
+    line.push_str(&format!(
+        " | top self: {} {:.1}ms",
+        top.name,
+        top.self_ns as f64 / 1e6
+    ));
+    Some(line)
+}
+
+const META_KEYS: [&str; 5] = ["schema", "kind", "threads", "spans", "counters"];
+const SPAN_KEYS: [&str; 11] = [
+    "schema", "kind", "name", "parent", "calls", "total_ns", "self_ns", "min_ns", "max_ns",
+    "p50_ns", "p99_ns",
+];
+const COUNTER_KEYS: [&str; 4] = ["schema", "kind", "name", "value"];
+
+fn check_keys(doc: &Json, allowed: &[&str]) -> Result<()> {
+    let obj = doc.as_obj().context("trace event must be a JSON object")?;
+    for k in obj.keys() {
+        if !allowed.contains(&k.as_str()) {
+            bail!("unknown trace event key {k:?}");
+        }
+    }
+    Ok(())
+}
+
+/// One strictly-validated `sagebwd-trace-v1` event line.
+fn parse_event(
+    doc: &Json,
+    report: &mut TraceReport,
+    meta: &mut Option<(usize, usize)>,
+) -> Result<()> {
+    schema::expect_tag(doc, TRACE_SCHEMA)?;
+    match schema::str_field(doc, "kind")? {
+        "meta" => {
+            check_keys(doc, &META_KEYS)?;
+            if meta.is_some() {
+                bail!("duplicate meta event");
+            }
+            if !report.spans.is_empty() || !report.counters.is_empty() {
+                bail!("meta event must come first");
+            }
+            report.threads = schema::u64_field(doc, "threads")?;
+            *meta = Some((
+                schema::usize_field(doc, "spans")?,
+                schema::usize_field(doc, "counters")?,
+            ));
+        }
+        "span" => {
+            check_keys(doc, &SPAN_KEYS)?;
+            report.spans.push(SpanRow {
+                name: schema::str_field(doc, "name")?.to_string(),
+                parent: schema::opt_str_field(doc, "parent")?.map(str::to_string),
+                calls: schema::u64_field(doc, "calls")?,
+                total_ns: schema::u64_field(doc, "total_ns")?,
+                self_ns: schema::u64_field(doc, "self_ns")?,
+                min_ns: schema::u64_field(doc, "min_ns")?,
+                max_ns: schema::u64_field(doc, "max_ns")?,
+                p50_ns: schema::u64_field(doc, "p50_ns")?,
+                p99_ns: schema::u64_field(doc, "p99_ns")?,
+            });
+        }
+        "counter" => {
+            check_keys(doc, &COUNTER_KEYS)?;
+            report.counters.push(CounterRow {
+                name: schema::str_field(doc, "name")?.to_string(),
+                value: schema::u64_field(doc, "value")?,
+            });
+        }
+        other => bail!("unknown trace event kind {other:?}"),
+    }
+    Ok(())
+}
+
+impl TraceReport {
+    /// Serialize as `sagebwd-trace-v1` JSONL: meta line, then spans,
+    /// then counters.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        let meta = Json::from_pairs(vec![
+            ("schema", Json::from(TRACE_SCHEMA)),
+            ("kind", Json::from("meta")),
+            ("threads", Json::from(self.threads as i64)),
+            ("spans", Json::from(self.spans.len())),
+            ("counters", Json::from(self.counters.len())),
+        ]);
+        out.push_str(&meta.to_string());
+        out.push('\n');
+        for s in &self.spans {
+            let parent = match &s.parent {
+                Some(p) => Json::from(p.as_str()),
+                None => Json::Null,
+            };
+            let ev = Json::from_pairs(vec![
+                ("schema", Json::from(TRACE_SCHEMA)),
+                ("kind", Json::from("span")),
+                ("name", Json::from(s.name.as_str())),
+                ("parent", parent),
+                ("calls", Json::from(s.calls as i64)),
+                ("total_ns", Json::from(s.total_ns as i64)),
+                ("self_ns", Json::from(s.self_ns as i64)),
+                ("min_ns", Json::from(s.min_ns as i64)),
+                ("max_ns", Json::from(s.max_ns as i64)),
+                ("p50_ns", Json::from(s.p50_ns as i64)),
+                ("p99_ns", Json::from(s.p99_ns as i64)),
+            ]);
+            out.push_str(&ev.to_string());
+            out.push('\n');
+        }
+        for c in &self.counters {
+            let ev = Json::from_pairs(vec![
+                ("schema", Json::from(TRACE_SCHEMA)),
+                ("kind", Json::from("counter")),
+                ("name", Json::from(c.name.as_str())),
+                ("value", Json::from(c.value as i64)),
+            ]);
+            out.push_str(&ev.to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Strict parse of a `sagebwd-trace-v1` JSONL log.  Rejects unknown
+    /// keys, unknown kinds, a missing/duplicated/late meta line, and
+    /// meta counts that disagree with the event lines.
+    pub fn parse_jsonl(text: &str) -> Result<TraceReport> {
+        let mut report = TraceReport::default();
+        let mut meta: Option<(usize, usize)> = None;
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let doc = Json::parse(line).with_context(|| format!("trace line {}", i + 1))?;
+            parse_event(&doc, &mut report, &mut meta)
+                .with_context(|| format!("trace line {}", i + 1))?;
+        }
+        let Some((spans, counters)) = meta else {
+            bail!("trace log has no meta event");
+        };
+        if spans != report.spans.len() || counters != report.counters.len() {
+            bail!(
+                "meta counts ({spans} spans, {counters} counters) disagree with \
+                 event lines ({} spans, {} counters)",
+                report.spans.len(),
+                report.counters.len()
+            );
+        }
+        Ok(report)
+    }
+
+    /// Fixed-width self-time table for `sagebwd trace-report`.
+    pub fn render_table(&self) -> String {
+        let mut rows: Vec<&SpanRow> = self.spans.iter().collect();
+        rows.sort_by(|a, b| b.self_ns.cmp(&a.self_ns).then_with(|| a.name.cmp(&b.name)));
+        let mut out = format!("trace: {} spans over {} thread(s)\n", rows.len(), self.threads);
+        // Uppercase headers keep these literals out of the A5 key scan.
+        out.push_str(&format!(
+            "{:<14} {:<12} {:>9} {:>11} {:>11} {:>10} {:>10} {:>10} {:>10}\n",
+            "SPAN", "PARENT", "CALLS", "TOTAL_MS", "SELF_MS", "MIN_US", "MAX_US", "P50_US", "P99_US"
+        ));
+        for r in rows {
+            out.push_str(&format!(
+                "{:<14} {:<12} {:>9} {:>11.3} {:>11.3} {:>10.1} {:>10.1} {:>10.1} {:>10.1}\n",
+                r.name,
+                r.parent.as_deref().unwrap_or("-"),
+                r.calls,
+                r.total_ns as f64 / 1e6,
+                r.self_ns as f64 / 1e6,
+                r.min_ns as f64 / 1e3,
+                r.max_ns as f64 / 1e3,
+                r.p50_ns as f64 / 1e3,
+                r.p99_ns as f64 / 1e3,
+            ));
+        }
+        if !self.counters.is_empty() {
+            out.push_str(&format!("\n{:<28} {:>14}\n", "COUNTER", "VALUE"));
+            for c in &self.counters {
+                out.push_str(&format!("{:<28} {:>14}\n", c.name, c.value));
+            }
+        }
+        out
+    }
+
+    /// Compact summary block for registry run manifests.  The keys are
+    /// a subset of the documented `sagebwd-trace-v1` fields.
+    pub fn summary_json(&self) -> Json {
+        let total: u64 = self
+            .spans
+            .iter()
+            .filter(|s| s.parent.is_none())
+            .map(|s| s.total_ns)
+            .sum();
+        Json::from_pairs(vec![
+            ("threads", Json::from(self.threads as i64)),
+            ("spans", Json::from(self.spans.len())),
+            ("counters", Json::from(self.counters.len())),
+            ("total_ns", Json::from(total as i64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> TraceReport {
+        TraceReport {
+            threads: 2,
+            spans: vec![
+                SpanRow {
+                    name: "train_step".to_string(),
+                    parent: None,
+                    calls: 5,
+                    total_ns: 5_000_000,
+                    self_ns: 1_000_000,
+                    min_ns: 900_000,
+                    max_ns: 1_200_000,
+                    p50_ns: 1_000_000,
+                    p99_ns: 1_190_000,
+                },
+                SpanRow {
+                    name: "gemm_nn".to_string(),
+                    parent: Some("layer".to_string()),
+                    calls: 40,
+                    total_ns: 4_000_000,
+                    self_ns: 4_000_000,
+                    min_ns: 80_000,
+                    max_ns: 130_000,
+                    p50_ns: 100_000,
+                    p99_ns: 128_000,
+                },
+            ],
+            counters: vec![CounterRow {
+                name: "ws_hit".to_string(),
+                value: 123,
+            }],
+        }
+    }
+
+    #[test]
+    fn jsonl_roundtrip_is_lossless() {
+        let r = report();
+        let parsed = TraceReport::parse_jsonl(&r.to_jsonl()).unwrap();
+        assert_eq!(parsed, r);
+    }
+
+    #[test]
+    fn parse_rejects_unknown_key() {
+        // Splice an extra key into every span line (Obj keys serialize
+        // sorted, so span lines open with "calls").
+        let bad = report().to_jsonl().replace("{\"calls\"", "{\"bogus\":1,\"calls\"");
+        assert!(TraceReport::parse_jsonl(&bad).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_unknown_kind_and_missing_meta() {
+        let r = report();
+        let text = r.to_jsonl().replace("\"kind\":\"counter\"", "\"kind\":\"weird\"");
+        assert!(TraceReport::parse_jsonl(&text).is_err());
+        let no_meta: String = r
+            .to_jsonl()
+            .lines()
+            .skip(1)
+            .map(|l| format!("{l}\n"))
+            .collect();
+        assert!(TraceReport::parse_jsonl(&no_meta).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_count_mismatch_and_wrong_schema() {
+        let r = report();
+        let text = r.to_jsonl().replace("\"spans\":2", "\"spans\":7");
+        assert!(TraceReport::parse_jsonl(&text).is_err());
+        let text = r.to_jsonl().replace(TRACE_SCHEMA, "sagebwd-trace-v0");
+        assert!(TraceReport::parse_jsonl(&text).is_err());
+    }
+
+    #[test]
+    fn table_and_summary_cover_the_report() {
+        let r = report();
+        let table = r.render_table();
+        assert!(table.contains("train_step") && table.contains("gemm_nn"));
+        assert!(table.contains("ws_hit"));
+        let s = r.summary_json();
+        assert_eq!(s.get("spans").unwrap().as_usize().unwrap(), 2);
+        // Root total = train_step only (gemm_nn has a parent).
+        assert_eq!(s.get("total_ns").unwrap().as_i64().unwrap(), 5_000_000);
+    }
+}

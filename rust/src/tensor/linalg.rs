@@ -33,8 +33,18 @@
 //! matmuls stay serial so thread spawn latency never lands on the
 //! training hot path.  The `*_threads` variants honor an explicit count
 //! (used by benches and the property tests).
+//!
+//! ## Observability
+//!
+//! The layout entry points open `telemetry::trace` spans (`gemm_nn`,
+//! `gemm_nt`, `gemm_tn`, `i8_gemm_*`) at the call boundary — never
+//! inside the blocked loops — so `--trace` attributes GEMM-family self
+//! time with per-call overhead only, and a disabled trace costs one
+//! thread-local branch per call.
 
 use std::sync::OnceLock;
+
+use crate::telemetry::trace;
 
 /// Rows processed together by the register block of [`gemm_nn`]: the B
 /// row loaded in the inner loop is reused `MR` times.
@@ -207,6 +217,7 @@ fn gemm_nn_rows(a: &[f32], b: &[f32], k: usize, n: usize, i0: usize, i1: usize, 
 
 /// Blocked serial `A·B`: `(m,k) × (k,n) → (m,n)`.  `out` is overwritten.
 pub fn gemm_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    let _t = trace::span("gemm_nn");
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
@@ -274,11 +285,13 @@ thread_local! {
 
 /// `A·B` with an explicit thread count (`(m,k) × (k,n) → (m,n)`).
 pub fn matmul_threads(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], threads: usize) {
+    let _t = trace::span("gemm_nn");
     par_gemm_nn(a, b, m, k, n, out, threads);
 }
 
 /// `A·B`, auto-dispatching serial/parallel by MAC volume.
 pub fn matmul_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    let _t = trace::span("gemm_nn");
     par_gemm_nn(a, b, m, k, n, out, auto_threads(m, k, n));
 }
 
@@ -294,6 +307,7 @@ pub fn matmul_nt_scratch(
     threads: usize,
     pack: &mut Vec<f32>,
 ) {
+    let _t = trace::span("gemm_nt");
     debug_assert_eq!(b.len(), n * k);
     pack.clear();
     pack.resize(k * n, 0.0);
@@ -325,6 +339,7 @@ pub fn matmul_tn_scratch(
     threads: usize,
     pack: &mut Vec<f32>,
 ) {
+    let _t = trace::span("gemm_tn");
     debug_assert_eq!(a.len(), k * m);
     pack.clear();
     pack.resize(k * m, 0.0);
@@ -372,6 +387,7 @@ fn i8_gemm_nn_rows(a: &[i8], b: &[i8], k: usize, n: usize, i0: usize, i1: usize,
 
 /// Blocked i8 `A·B`: `(m,k) × (k,n) → (m,n)` in exact i32.
 pub fn int8_gemm_nn(a: &[i8], b: &[i8], m: usize, k: usize, n: usize, out: &mut [i32]) {
+    let _t = trace::span("i8_gemm_nn");
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
@@ -381,6 +397,7 @@ pub fn int8_gemm_nn(a: &[i8], b: &[i8], m: usize, k: usize, n: usize, out: &mut 
 
 /// Blocked i8 `A·B` with an explicit thread count (output-row partition).
 pub fn int8_gemm_nn_threads(a: &[i8], b: &[i8], m: usize, k: usize, n: usize, out: &mut [i32], threads: usize) {
+    let _t = trace::span("i8_gemm_nn");
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
@@ -403,6 +420,7 @@ pub fn int8_gemm_nn_threads(a: &[i8], b: &[i8], m: usize, k: usize, n: usize, ou
 /// Blocked i8 `A·Bᵀ`: `(m,k) × (n,k) → (m,n)`; `pack` is scratch for the
 /// transposed `Bᵀ` panel.
 pub fn int8_gemm_nt(a: &[i8], b: &[i8], m: usize, k: usize, n: usize, out: &mut [i32], pack: &mut Vec<i8>) {
+    let _t = trace::span("i8_gemm_nt");
     debug_assert_eq!(b.len(), n * k);
     pack.clear();
     pack.resize(k * n, 0);
@@ -413,6 +431,7 @@ pub fn int8_gemm_nt(a: &[i8], b: &[i8], m: usize, k: usize, n: usize, out: &mut 
 /// Blocked i8 `Aᵀ·B`: `(k,m) × (k,n) → (m,n)`; `pack` is scratch for the
 /// transposed `Aᵀ` panel.
 pub fn int8_gemm_tn(a: &[i8], b: &[i8], m: usize, k: usize, n: usize, out: &mut [i32], pack: &mut Vec<i8>) {
+    let _t = trace::span("i8_gemm_tn");
     debug_assert_eq!(a.len(), k * m);
     pack.clear();
     pack.resize(k * m, 0);

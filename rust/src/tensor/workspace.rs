@@ -20,7 +20,19 @@
 //!   each worker thread its own `Workspace` (they are cheap to create —
 //!   empty pools), which keeps the threading determinism contract trivial.
 
+use crate::telemetry::trace;
 use crate::tensor::Tensor;
+
+/// Arena telemetry: one pool hit/miss tally plus a high-water mark of
+/// the largest single request, all behind the trace enable gate (a
+/// thread-local branch when tracing is off).
+fn count_take(hit: bool, bytes: usize) {
+    if !trace::enabled() {
+        return;
+    }
+    trace::counter_add(if hit { "ws_hit" } else { "ws_miss" }, 1);
+    trace::counter_max("ws_high_water_bytes", bytes as u64);
+}
 
 /// Pooled scratch buffers for f32 / i8 / i32 intermediates.
 #[derive(Debug, Default)]
@@ -37,6 +49,7 @@ impl Workspace {
 
     /// Take a zero-filled f32 buffer of exactly `len`.
     pub fn take_f32(&mut self, len: usize) -> Vec<f32> {
+        count_take(!self.f32s.is_empty(), len * 4);
         let mut b = self.f32s.pop().unwrap_or_default();
         b.clear();
         b.resize(len, 0.0);
@@ -49,6 +62,7 @@ impl Workspace {
 
     /// Take a zero-filled i8 buffer of exactly `len`.
     pub fn take_i8(&mut self, len: usize) -> Vec<i8> {
+        count_take(!self.i8s.is_empty(), len);
         let mut b = self.i8s.pop().unwrap_or_default();
         b.clear();
         b.resize(len, 0);
@@ -61,6 +75,7 @@ impl Workspace {
 
     /// Take a zero-filled i32 buffer of exactly `len`.
     pub fn take_i32(&mut self, len: usize) -> Vec<i32> {
+        count_take(!self.i32s.is_empty(), len * 4);
         let mut b = self.i32s.pop().unwrap_or_default();
         b.clear();
         b.resize(len, 0);

@@ -80,6 +80,8 @@ fn seeded_fixture_fires_every_lint() {
         ("rust/src/runtime/raw.rs", 4, "A4"), // bare unsafe
         ("rust/src/runtime/raw.rs", 13, "A0"), // allow without a reason
         ("rust/src/runtime/raw.rs", 14, "A4"), // reason-less allow is void
+        ("rust/src/telemetry/trace.rs", 1, "A5"), // p99_ns no longer emitted
+        ("rust/src/telemetry/trace.rs", 29, "A5"), // p99 not in the schema
         ("rust/src/tensor/linalg.rs", 1, "A2"), // manifest entry matches no fn
         ("rust/src/tensor/timing.rs", 4, "A1"), // Instant
     ]

@@ -1,0 +1,39 @@
+//! Seeded A5 fixture: drifted trace span schema (`p99` replaced the
+//! documented `p99_ns`).
+
+use crate::util::json::Json;
+
+pub const TRACE_SCHEMA: &str = "sagebwd-trace-v1";
+
+pub fn meta_to_json(threads: usize, spans: usize, counters: usize) -> Json {
+    Json::from_pairs(vec![
+        ("schema", Json::from(TRACE_SCHEMA)),
+        ("kind", Json::from("meta")),
+        ("threads", Json::from(threads)),
+        ("spans", Json::from(spans)),
+        ("counters", Json::from(counters)),
+    ])
+}
+
+pub fn span_to_json(name: &str, calls: i64, total: i64) -> Json {
+    Json::from_pairs(vec![
+        ("kind", Json::from("span")),
+        ("name", Json::from(name)),
+        ("parent", Json::Null),
+        ("calls", Json::from(calls)),
+        ("total_ns", Json::from(total)),
+        ("self_ns", Json::from(total)),
+        ("min_ns", Json::from(total)),
+        ("max_ns", Json::from(total)),
+        ("p50_ns", Json::from(total)),
+        ("p99", Json::from(total)),
+    ])
+}
+
+pub fn counter_to_json(name: &str, value: i64) -> Json {
+    Json::from_pairs(vec![
+        ("kind", Json::from("counter")),
+        ("name", Json::from(name)),
+        ("value", Json::from(value)),
+    ])
+}

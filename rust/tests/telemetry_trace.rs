@@ -1,0 +1,248 @@
+//! Tier-1 observability gate (DESIGN.md §14): the tracing/probe layer's
+//! hard contracts on the native engine.
+//!
+//! * **Determinism** — `train_loss` is bitwise-identical with tracing
+//!   off, tracing on, and tracing + per-step quantization-error probes:
+//!   observability must never perturb numerics.
+//! * **Coverage** — a traced run records the whole span hierarchy
+//!   (`train_step → fwd/bwd → layer → attention → GEMM family`), the
+//!   workspace/backend counters, and all seven `qerr_*` metric series.
+//! * **dS-dominance** — at the paper's trained-regime surrogate (Table
+//!   2's grown Q/K norms) the probe reports `qerr_ds` rel-L2 above
+//!   `qerr_pv`, reproducing insight (ii) directionally.
+//! * **Schema** — the emitted `sagebwd-trace-v1` JSONL round-trips
+//!   losslessly and the strict parser rejects malformed event logs
+//!   (checked against the committed `trace_fixture.jsonl`).
+//!
+//! Tracing and probe toggles are process-global, so every test that
+//! flips them serializes on one mutex and restores the off state before
+//! releasing it; the pure-parser test needs no global state.
+
+use std::sync::Mutex;
+
+use sagebwd::config::TrainConfig;
+use sagebwd::coordinator::TrainerFactory;
+use sagebwd::experiments::common::gaussian_qkvdo;
+use sagebwd::kernels::{fpa_bwd, sage_bwd, AttnConfig};
+use sagebwd::telemetry::trace::{self, TraceReport};
+use sagebwd::telemetry::{qerr, Log, Metrics};
+
+/// Serializes the tests that toggle the process-global trace/qerr state.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn cfg(steps: u64, tps: u64) -> TrainConfig {
+    TrainConfig {
+        variant: "sage_qknorm".into(),
+        steps,
+        tokens_per_step: tps,
+        warmup_steps: 1,
+        peak_lr: 3e-3,
+        min_lr_frac: 0.1,
+        seed: 0,
+        checkpoint_every: 0,
+        log_every: 0,
+        clip_norm: 0.0,
+        grad_noise_sigma: 0.0,
+        ..TrainConfig::default()
+    }
+}
+
+/// One short native run under the given observability settings; returns
+/// the trainer's metric registry with the globals restored to off.
+fn train(trace_on: bool, qerr_every: u64) -> Metrics {
+    trace::set_enabled(trace_on);
+    qerr::set_every(qerr_every);
+    trace::reset();
+    let factory = TrainerFactory::new("native", "artifacts").unwrap();
+    let mut t = factory.trainer(cfg(3, 64)).unwrap();
+    let mut b = t.make_batcher(512, 4).unwrap();
+    t.run(&mut b, &Log::new(false)).unwrap();
+    trace::set_enabled(false);
+    qerr::set_every(0);
+    t.metrics
+}
+
+fn loss_bits(m: &Metrics) -> Vec<(u64, u64)> {
+    m.get("train_loss")
+        .expect("train_loss series present")
+        .points
+        .iter()
+        .map(|&(step, v)| (step, v.to_bits()))
+        .collect()
+}
+
+#[test]
+fn tracing_and_probes_do_not_perturb_numerics() {
+    let _g = GATE.lock().unwrap_or_else(|p| p.into_inner());
+    let off = loss_bits(&train(false, 0));
+    let on = loss_bits(&train(true, 0));
+    let probed = loss_bits(&train(true, 1));
+    assert_eq!(off.len(), 3);
+    assert_eq!(off, on, "trace on vs off must be bitwise identical");
+    assert_eq!(off, probed, "qerr probes must not perturb the curve");
+}
+
+#[test]
+fn traced_run_covers_hierarchy_counters_and_qerr_series() {
+    let _g = GATE.lock().unwrap_or_else(|p| p.into_inner());
+    trace::set_enabled(true);
+    qerr::set_every(1);
+    trace::reset();
+    let factory = TrainerFactory::new("native", "artifacts").unwrap();
+    let mut t = factory.trainer(cfg(2, 64)).unwrap();
+    let mut b = t.make_batcher(512, 4).unwrap();
+    t.run(&mut b, &Log::new(false)).unwrap();
+    let report = trace::take_report();
+    trace::set_enabled(false);
+    qerr::set_every(0);
+
+    // Span hierarchy: every level of the trainer → kernel stack shows up.
+    let span = |n: &str| report.spans.iter().find(|s| s.name == n);
+    for name in [
+        "train_step",
+        "fwd",
+        "bwd",
+        "layer",
+        "attention",
+        "qerr_probe",
+        "execute_many",
+        "gemm_nn",
+        "i8_gemm_nn",
+    ] {
+        assert!(
+            span(name).is_some(),
+            "missing span {name:?}; got {:?}",
+            report.spans.iter().map(|s| &s.name).collect::<Vec<_>>()
+        );
+    }
+    let ts = span("train_step").unwrap();
+    assert_eq!(ts.calls, 2);
+    assert!(ts.parent.is_none());
+    assert!(ts.self_ns <= ts.total_ns && ts.min_ns <= ts.max_ns);
+    assert_eq!(span("fwd").unwrap().parent.as_deref(), Some("train_step"));
+    assert_eq!(span("bwd").unwrap().parent.as_deref(), Some("train_step"));
+    assert_eq!(span("layer").unwrap().parent.as_deref(), Some("fwd"));
+
+    // Counters: workspace arena traffic and execute_many fan-out.
+    let counter = |n: &str| {
+        report
+            .counters
+            .iter()
+            .find(|c| c.name == n)
+            .map(|c| c.value)
+    };
+    assert!(counter("ws_miss").unwrap_or(0) > 0, "{:?}", report.counters);
+    assert!(counter("ws_high_water_bytes").unwrap_or(0) > 0);
+    assert!(counter("exec_many_batches").unwrap_or(0) > 0);
+    assert!(counter("exec_many_calls").unwrap_or(0) > 0);
+
+    // qerr series: all seven matmuls recorded on every sampled step,
+    // finite on the rel-L2 channel.
+    for name in ["qk", "pv", "dv", "dp", "ds", "dq", "dk"] {
+        let rel = t.metrics.get(&format!("qerr_{name}"));
+        let cos = t.metrics.get(&format!("qerr_{name}_cos"));
+        assert!(rel.is_some() && cos.is_some(), "missing qerr_{name} series");
+        assert_eq!(rel.unwrap().points.len(), 2, "one point per sampled step");
+        assert!(rel.unwrap().points.iter().all(|&(_, v)| v.is_finite()));
+    }
+    // dP is the one matmul the kernel keeps in FP (insight (ii)'s exact
+    // Table 2 row): its only error is tiled-vs-naive accumulation order,
+    // orders of magnitude below any INT8 product.
+    let dp = t.metrics.get("qerr_dp").unwrap().max_value().unwrap();
+    let qk = t.metrics.get("qerr_qk").unwrap().max_value().unwrap();
+    assert!(dp < 1e-4, "FP dP drifted: rel-L2 {dp}");
+    assert!(qk > dp, "INT8 QK must sit above the FP dP floor");
+
+    // The emitted JSONL round-trips losslessly and renders.
+    let text = report.to_jsonl();
+    let parsed = TraceReport::parse_jsonl(&text).unwrap();
+    assert_eq!(parsed, report);
+    let table = report.render_table();
+    assert!(table.contains("train_step") && table.contains("ws_miss"));
+}
+
+/// Insight (ii) directionally: the dS error spike is a trained-regime
+/// phenomenon, so the gate pins Table 2's surrogate (grown Q/K norms
+/// σ≈4, small upstream dO — DESIGN.md §6) where the spike is structural
+/// (rel-L2 ≈ 0.1–0.2 vs ≈ 0.03–0.05 for O).  At the QK-norm training
+/// operating point the softmax is mild and the ordering is not
+/// guaranteed — the training-run test above therefore only checks the
+/// FP-dP floor, and this one checks the dominance where the paper
+/// claims it.
+#[test]
+fn qerr_probe_reproduces_ds_dominance_at_trained_regime() {
+    let _g = GATE.lock().unwrap_or_else(|p| p.into_inner());
+    qerr::set_every(1);
+    qerr::begin_step(0);
+    assert!(qerr::active(), "step 0 of every-1 sampling must be active");
+    let [q, k, v, do_] = gaussian_qkvdo(128, 64, 4.0, 4.0, 1.0, 0.02, 77);
+    let cfg = AttnConfig {
+        causal: true,
+        ..AttnConfig::default()
+    };
+    let sage = sage_bwd(&q, &k, &v, &do_, &cfg).unwrap();
+    let exact = fpa_bwd(&q, &k, &v, &do_, cfg.causal).unwrap();
+    qerr::probe(&sage, &exact, cfg.causal);
+    let step = qerr::take_step();
+    qerr::set_every(0);
+
+    let get = |name: &str| {
+        step.iter()
+            .find(|(s, _, _)| *s == name)
+            .map(|&(_, rel, cos)| (rel, cos))
+            .unwrap_or_else(|| panic!("missing {name} in {step:?}"))
+    };
+    let (ds, ds_cos) = get("ds");
+    let (pv, pv_cos) = get("pv");
+    let (dp, _) = get("dp");
+    assert!(
+        ds > pv,
+        "dS-dominance (Table 2 / insight (ii)): rel-L2 ds {ds} must exceed pv {pv}"
+    );
+    assert!(dp < 1e-4, "FP dP must be exact up to accumulation order: {dp}");
+    assert!(
+        ds_cos < pv_cos,
+        "the worse rel-L2 must pair with the worse cossim: ds {ds_cos} vs pv {pv_cos}"
+    );
+    assert!(ds.is_finite() && (0.0..=1.0).contains(&pv_cos));
+}
+
+#[test]
+fn trace_fixture_parses_and_corruptions_are_rejected() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/data/trace_fixture.jsonl");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let report = TraceReport::parse_jsonl(&text).unwrap();
+    assert_eq!(report.threads, 2);
+    assert_eq!(report.spans.len(), 3);
+    assert_eq!(report.counters.len(), 2);
+    assert_eq!(report.spans[1].parent.as_deref(), Some("train_step"));
+
+    // Unknown key on an event line.
+    let bad = text.replace(
+        "\"kind\":\"counter\",\"name\":\"ws_hit\"",
+        "\"bogus\":1,\"kind\":\"counter\",\"name\":\"ws_hit\"",
+    );
+    assert_ne!(bad, text);
+    assert!(TraceReport::parse_jsonl(&bad).is_err(), "unknown key accepted");
+
+    // Unknown event kind.
+    let bad = text.replace("\"kind\":\"counter\"", "\"kind\":\"gauge\"");
+    assert!(TraceReport::parse_jsonl(&bad).is_err(), "unknown kind accepted");
+
+    // Wrong schema tag.
+    let bad = text.replacen("sagebwd-trace-v1", "sagebwd-trace-v2", 1);
+    assert!(TraceReport::parse_jsonl(&bad).is_err(), "wrong schema accepted");
+
+    // Missing meta line.
+    let bad: String = text.lines().skip(1).map(|l| format!("{l}\n")).collect();
+    assert!(TraceReport::parse_jsonl(&bad).is_err(), "missing meta accepted");
+
+    // Meta counts disagreeing with the event lines.
+    let bad = text.replace("\"spans\":3", "\"spans\":4");
+    assert!(TraceReport::parse_jsonl(&bad).is_err(), "count drift accepted");
+
+    // Malformed JSON line.
+    let bad = format!("{text}{{\"schema\":");
+    assert!(TraceReport::parse_jsonl(&bad).is_err(), "malformed accepted");
+}
