@@ -46,8 +46,9 @@ A2_BANNED = [".clone()", ".to_vec()", "Vec::new", "vec!["]
 HOT_FUNCTIONS = [
     ("rust/src/kernels/attention.rs", ["*_ws"]),
     ("rust/src/tensor/linalg.rs",
-     ["gemm_nn_rows", "i8_gemm_nn_rows", "par_gemm_nn", "pack_transpose",
-      "int8_gemm_nn", "int8_gemm_nt", "int8_gemm_tn"]),
+     ["gemm_nn_rows*", "i8_gemm_nn_rows*", "par_gemm_nn", "pack_transpose",
+      "int8_gemm_nn*", "int8_gemm_nt*", "int8_gemm_tn*"]),
+    ("rust/src/tensor/simd.rs", ["gemm_f32_rows*", "gemm_i8_rows*"]),
     ("rust/src/model/blocks.rs",
      ["rmsnorm_fwd", "rmsnorm_bwd", "mlp_fwd", "mlp_bwd",
       "cross_entropy_fwd", "cross_entropy_bwd"]),
@@ -57,8 +58,8 @@ HOT_FUNCTIONS = [
 A3_TOKENS = [".unwrap()", ".expect(", "panic!"]
 
 BENCH_V1_FIELDS = ["schema", "bench", "runs", "threads_default", "rows",
-                   "op", "shape", "variant", "threads", "ns_per_iter",
-                   "tokens_per_s"]
+                   "op", "shape", "variant", "threads", "isa",
+                   "ns_per_iter", "tokens_per_s"]
 RUN_V1_FIELDS = ["schema", "experiment", "label", "config", "config_hash",
                  "code_version", "status", "artifacts", "summary",
                  "name", "sha256", "bytes", "view"]
@@ -667,7 +668,9 @@ def check_fixtures(root):
     got = sorted((f, line, lint) for (f, line, lint, _, _) in seeded)
     expect = [
         ("rust/src/bench.rs", 1, "A5"),
+        ("rust/src/bench.rs", 1, "A5"),
         ("rust/src/bench.rs", 29, "A5"),
+        ("rust/src/bench.rs", 30, "A5"),
         ("rust/src/kernels/attention.rs", 3, "A1"),
         ("rust/src/kernels/attention.rs", 8, "A2"),
         ("rust/src/main.rs", 4, "A3"),

@@ -32,6 +32,7 @@ use sagebwd::experiments::fig23_speed;
 use sagebwd::kernels::quant;
 use sagebwd::runtime::make_backend;
 use sagebwd::tensor::linalg;
+use sagebwd::tensor::simd::{self, IsaTier};
 use sagebwd::util::rng::Pcg64;
 
 const BENCH_JSON: &str = "BENCH_attention.json";
@@ -70,13 +71,14 @@ impl Ctx {
     /// Record one engine row.  `tokens_per_s` is always `None` here — raw
     /// GEMMs have no token count; the fig23 kernel rows (which do) are
     /// pushed directly.
-    fn record(&mut self, op: &str, shape: &str, variant: &str, threads: usize, m: &Measurement) {
+    fn record(&mut self, op: &str, shape: &str, variant: &str, threads: usize, isa: &str, m: &Measurement) {
         let ns = m.mean() * 1e9;
         self.table.row(vec![
             op.to_string(),
             shape.to_string(),
             variant.to_string(),
             threads.to_string(),
+            isa.to_string(),
             format!("{ns:.0}"),
             "-".into(),
         ]);
@@ -85,14 +87,26 @@ impl Ctx {
             shape: shape.to_string(),
             variant: variant.to_string(),
             threads,
+            isa: isa.to_string(),
             ns_per_iter: ns,
             tokens_per_s: None,
         });
     }
 }
 
-/// naive / blocked / parallel rows for one op; returns (naive, parallel)
-/// mean seconds for the speedup summary.
+/// ISA tiers this machine can bench: always scalar, plus avx2/fma when
+/// detected — the rows the ROADMAP "SIMD ≥2× blocked-scalar" target
+/// reads (the `isa` column keys them apart in the trajectory).
+fn bench_tiers() -> Vec<IsaTier> {
+    [IsaTier::Scalar, IsaTier::Avx2, IsaTier::Fma]
+        .into_iter()
+        .filter(|&t| t <= simd::hw_tier())
+        .collect()
+}
+
+/// naive rows (once, scalar by construction), then blocked / parallel
+/// rows per available ISA tier; returns (naive, best-parallel) mean
+/// seconds for the speedup summary.
 #[allow(clippy::too_many_arguments)]
 fn engine_op(
     ctx: &mut Ctx,
@@ -105,12 +119,17 @@ fn engine_op(
     mut parallel: impl FnMut(),
 ) -> (f64, f64) {
     let mn = bench_run(cfg, &format!("{op}_naive"), &mut naive);
-    ctx.record(op, shape, "naive", 1, &mn);
-    let mb = bench_run(cfg, &format!("{op}_blocked"), &mut blocked);
-    ctx.record(op, shape, "blocked", 1, &mb);
-    let mp = bench_run(cfg, &format!("{op}_parallel"), &mut parallel);
-    ctx.record(op, shape, "parallel", threads, &mp);
-    (mn.mean(), mp.mean())
+    ctx.record(op, shape, "naive", 1, "scalar", &mn);
+    let mut best_par = f64::INFINITY;
+    for tier in bench_tiers() {
+        let isa = tier.as_str();
+        let mb = simd::with_isa(tier, || bench_run(cfg, &format!("{op}_blocked_{isa}"), &mut blocked));
+        ctx.record(op, shape, "blocked", 1, isa, &mb);
+        let mp = simd::with_isa(tier, || bench_run(cfg, &format!("{op}_parallel_{isa}"), &mut parallel));
+        ctx.record(op, shape, "parallel", threads, isa, &mp);
+        best_par = best_par.min(mp.mean());
+    }
+    (mn.mean(), best_par)
 }
 
 fn main() {
@@ -125,7 +144,7 @@ fn main() {
     let (n, d) = if quick { (256usize, 64usize) } else { (1024, 64) };
 
     let mut ctx = Ctx {
-        table: Table::new(&["op", "shape", "variant", "threads", "ns_per_iter", "tokens_per_s"]),
+        table: Table::new(&["op", "shape", "variant", "threads", "isa", "ns_per_iter", "tokens_per_s"]),
         rows: Vec::new(),
     };
 
@@ -207,6 +226,7 @@ fn main() {
                     shape: format!("n{}_d{}", r.n, r.d),
                     variant: r.impl_name.clone(),
                     threads: r.threads,
+                    isa: simd::active_tier().as_str().to_string(),
                     ns_per_iter: r.measured_ms * 1e6,
                     tokens_per_s: Some(r.n as f64 / (r.measured_ms / 1e3)),
                 });
@@ -224,7 +244,7 @@ fn main() {
         ("matmul_tn", base_tn, par_tn),
         ("int8_gemm_nn", base_i8, par_i8),
     ] {
-        println!("{op}: blocked+parallel speedup vs naive = {:.2}x", base / par);
+        println!("{op}: best blocked+parallel speedup vs naive = {:.2}x", base / par);
     }
 
     let path = Path::new(BENCH_JSON);

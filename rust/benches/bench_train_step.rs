@@ -20,6 +20,7 @@ use sagebwd::coordinator::engine::{NativeEngine, TrainEngine};
 use sagebwd::data::{Batcher, Tokenizer};
 use sagebwd::model::ModelDims;
 use sagebwd::tensor::linalg;
+use sagebwd::tensor::simd;
 
 const BENCH_JSON: &str = "BENCH_train_step.json";
 
@@ -98,6 +99,7 @@ fn main() {
                 shape: shape.clone(),
                 variant: variant.into(),
                 threads,
+                isa: simd::active_tier().as_str().to_string(),
                 ns_per_iter: mg.mean() * 1e9,
                 tokens_per_s: Some(tokens / mg.mean()),
             });
@@ -119,6 +121,7 @@ fn main() {
                 shape,
                 variant: variant.into(),
                 threads,
+                isa: simd::active_tier().as_str().to_string(),
                 ns_per_iter: ma.mean() * 1e9,
                 tokens_per_s: None,
             });

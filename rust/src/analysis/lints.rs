@@ -81,19 +81,23 @@ pub const A2_BANNED: [&str; 4] = [".clone()", ".to_vec()", "Vec::new", "vec!["];
 
 /// The hot-function manifest: (file, fn-name patterns).  `*` at either
 /// end of a pattern is a prefix/suffix wildcard.
-pub const HOT_FUNCTIONS: [(&str, &[&str]); 4] = [
+pub const HOT_FUNCTIONS: [(&str, &[&str]); 5] = [
     ("rust/src/kernels/attention.rs", &["*_ws"]),
     (
         "rust/src/tensor/linalg.rs",
         &[
-            "gemm_nn_rows",
-            "i8_gemm_nn_rows",
+            "gemm_nn_rows*",
+            "i8_gemm_nn_rows*",
             "par_gemm_nn",
             "pack_transpose",
-            "int8_gemm_nn",
-            "int8_gemm_nt",
-            "int8_gemm_tn",
+            "int8_gemm_nn*",
+            "int8_gemm_nt*",
+            "int8_gemm_tn*",
         ],
+    ),
+    (
+        "rust/src/tensor/simd.rs",
+        &["gemm_f32_rows*", "gemm_i8_rows*"],
     ),
     (
         "rust/src/model/blocks.rs",
@@ -116,7 +120,7 @@ pub const HOT_FUNCTIONS: [(&str, &[&str]); 4] = [
 pub const A3_TOKENS: [&str; 3] = [".unwrap()", ".expect(", "panic!"];
 
 /// Documented `sagebwd-bench-v1` field names (A5).
-pub const BENCH_V1_FIELDS: [&str; 11] = [
+pub const BENCH_V1_FIELDS: [&str; 12] = [
     "schema",
     "bench",
     "runs",
@@ -126,6 +130,7 @@ pub const BENCH_V1_FIELDS: [&str; 11] = [
     "shape",
     "variant",
     "threads",
+    "isa",
     "ns_per_iter",
     "tokens_per_s",
 ];

@@ -9,16 +9,18 @@
 //! ```text
 //! { "schema": "sagebwd-bench-v1", "bench": "attention",
 //!   "runs": [ { "threads_default": T, "rows": [
-//!       { "op", "shape", "variant", "threads", "ns_per_iter",
-//!         "tokens_per_s" } ... ] } ... ] }
+//!       { "op", "shape", "variant", "threads", "isa",
+//!         "ns_per_iter", "tokens_per_s" } ... ] } ... ] }
 //! ```
 //!
 //! `variant` distinguishes the engine reading: `naive` (retained scalar
 //! reference), `blocked` (cache-blocked serial), `parallel` (blocked +
 //! scoped-thread row partition) — or a kernel/engine name for composite
-//! ops.  `tokens_per_s` is `null` where no token count is meaningful
-//! (raw GEMMs).  [`check_bench_json`] validates this schema (the CI
-//! bench smoke).
+//! ops.  `isa` is the SIMD tier the row executed at (`scalar` | `avx2`
+//! | `fma` — DESIGN.md §15), so the trajectory can compare tiers the
+//! same way it compares thread counts.  `tokens_per_s` is `null` where
+//! no token count is meaningful (raw GEMMs).  [`check_bench_json`]
+//! validates this schema (the CI bench smoke).
 
 use std::path::Path;
 
@@ -118,6 +120,9 @@ pub struct BenchRow {
     pub variant: String,
     /// Worker threads this row ran with.
     pub threads: usize,
+    /// ISA tier this row ran at (`scalar` | `avx2` | `fma`), from
+    /// `tensor::simd::IsaTier::as_str`.
+    pub isa: String,
     pub ns_per_iter: f64,
     /// Tokens (sequence rows) processed per second; `None` where no token
     /// count is meaningful.
@@ -131,6 +136,7 @@ impl BenchRow {
             ("shape", Json::from(self.shape.as_str())),
             ("variant", Json::from(self.variant.as_str())),
             ("threads", Json::from(self.threads)),
+            ("isa", Json::from(self.isa.as_str())),
             ("ns_per_iter", Json::from(self.ns_per_iter)),
             (
                 "tokens_per_s",
@@ -194,6 +200,7 @@ pub fn check_bench_json(path: &Path) -> Result<usize> {
             schema::str_field(row, "shape").with_context(ctx)?;
             schema::str_field(row, "variant").with_context(ctx)?;
             schema::usize_field(row, "threads").with_context(ctx)?;
+            schema::str_field(row, "isa").with_context(ctx)?;
             let ns = schema::f64_field(row, "ns_per_iter").with_context(ctx)?;
             if !(ns > 0.0) {
                 bail!("run {ri} row {i}: ns_per_iter {ns} must be positive");
@@ -301,6 +308,7 @@ mod tests {
                 shape: "m8_k8_n8".into(),
                 variant: "naive".into(),
                 threads: 1,
+                isa: "scalar".into(),
                 ns_per_iter: 10.0,
                 tokens_per_s: None,
             },
@@ -309,6 +317,7 @@ mod tests {
                 shape: "n128_d64".into(),
                 variant: "sage".into(),
                 threads: 4,
+                isa: "avx2".into(),
                 ns_per_iter: 99.5,
                 tokens_per_s: Some(1.3e6),
             },

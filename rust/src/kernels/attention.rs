@@ -517,7 +517,7 @@ pub fn sage_fwd_ws(
             }
             // S̃_ij = ψ(Q)_i · ψ(K)_jᵀ · δ_Q δ_K / √d  (+ Q-smoothing bias).
             let ktj = &k_t[j * bkv * d..(j + 1) * bkv * d];
-            linalg::int8_gemm_nn(q_q.tile(i), ktj, bq, d, bkv, &mut s_i32);
+            linalg::int8_gemm_nn_auto(q_q.tile(i), ktj, bq, d, bkv, &mut s_i32);
             let sc = q_q.scale(i) * k_q.scale(j) * inv_sqrt_d;
             for (sv, &x) in s_ij.iter_mut().zip(&s_i32) {
                 *sv = x as f32 * sc;
@@ -531,7 +531,7 @@ pub fn sage_fwd_ws(
                 |p, pv_out| {
                     // Per-token ψ(P̃) (Alg 1 line 9), then exact INT8 P̃·V.
                     quant::quantize_per_token_into(p, bkv, &mut p_q8, &mut p_scales);
-                    linalg::int8_gemm_nn(&p_q8, v_qj, bq, bkv, d, &mut pv_i32);
+                    linalg::int8_gemm_nn_auto(&p_q8, v_qj, bq, bkv, d, &mut pv_i32);
                     for ((orow, irow), &rs) in pv_out
                         .chunks_exact_mut(d)
                         .zip(pv_i32.chunks_exact(d))
@@ -640,7 +640,7 @@ pub fn sage_bwd_ws(
             }
             let doi = &do_.data[i * bq * d..(i + 1) * bq * d];
             // Recompute S̃_ij from the stored quantized tiles (Alg 2 line 3).
-            linalg::int8_gemm_nn(res.q_q.tile(i), ktj, bq, d, bkv, &mut s_i32);
+            linalg::int8_gemm_nn_auto(res.q_q.tile(i), ktj, bq, d, bkv, &mut s_i32);
             let sc = res.q_q.scale(i) * res.k_q.scale(j) * inv_sqrt_d;
             for (sv, &x) in s_ij.iter_mut().zip(&s_i32) {
                 *sv = x as f32 * sc;
@@ -665,7 +665,7 @@ pub fn sage_bwd_ws(
             // Alg 2 line 6: per-block ψ(P) (ψ(dO) precomputed) → INT8 dV.
             let p_s = quant::quantize_per_block_into(&p_ij, &mut ds_q8);
             let dv_i32 = &mut acc_i32[..bkv * d];
-            linalg::int8_gemm_tn(&ds_q8, do_q.tile(i), bkv, bq, d, dv_i32, &mut packi);
+            linalg::int8_gemm_tn_auto(&ds_q8, do_q.tile(i), bkv, bq, d, dv_i32, &mut packi);
             let dv_sc = p_s * do_q.scale(i);
             for (dst, &x) in dv.data[j * bkv * d..(j + 1) * bkv * d].iter_mut().zip(dv_i32.iter()) {
                 *dst += x as f32 * dv_sc;
@@ -686,13 +686,13 @@ pub fn sage_bwd_ws(
             if cfg.quant_ds {
                 let ds_s = quant::quantize_per_block_into(&ds_ij, &mut ds_q8);
                 let dq_i32 = &mut acc_i32[..bq * d];
-                linalg::int8_gemm_nn(&ds_q8, res.k_q.tile(j), bq, bkv, d, dq_i32);
+                linalg::int8_gemm_nn_auto(&ds_q8, res.k_q.tile(j), bq, bkv, d, dq_i32);
                 let dq_sc = ds_s * res.k_q.scale(j) * inv_sqrt_d;
                 for (dst, &x) in dq.data[i * bq * d..(i + 1) * bq * d].iter_mut().zip(dq_i32.iter()) {
                     *dst += x as f32 * dq_sc;
                 }
                 let dk_i32 = &mut acc_i32[..bkv * d];
-                linalg::int8_gemm_tn(&ds_q8, res.q_q.tile(i), bkv, bq, d, dk_i32, &mut packi);
+                linalg::int8_gemm_tn_auto(&ds_q8, res.q_q.tile(i), bkv, bq, d, dk_i32, &mut packi);
                 let dk_sc = ds_s * res.q_q.scale(i) * inv_sqrt_d;
                 for (dst, &x) in dk.data[j * bkv * d..(j + 1) * bkv * d].iter_mut().zip(dk_i32.iter()) {
                     *dst += x as f32 * dk_sc;

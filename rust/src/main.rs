@@ -83,6 +83,12 @@ environment:
                          (default: available parallelism; 0 or 1 forces
                          the serial path; results are bitwise-identical
                          at any setting)
+  SAGEBWD_ISA=T          SIMD tier for the GEMM micro-kernels: scalar,
+                         avx2, or fma (DESIGN.md §15; default
+                         min(hardware, avx2); requests above the
+                         hardware clamp down; scalar and avx2 are
+                         bitwise-identical, fma is opt-in and may round
+                         differently; INT8 is bitwise at any setting)
 training subcommands (train, fig1, fig4, noise-probe, grid) run on either
 backend; only dist-train still requires --backend xla; run `make results` to
 regenerate every table and figure; `bench-check FILE.json` validates a

@@ -5,7 +5,12 @@
 //! workspace`.  Scoped [`SpanGuard`]s record wall time per span into a
 //! thread-local table; worker threads from the scoped pool merge their
 //! tables into a process-global aggregate when they exit, so a report
-//! sees every thread that contributed since the last reset.
+//! sees every thread that contributed since the last reset.  Named
+//! counters ride the same machinery: the workspace arena's `ws_*`
+//! tallies and the GEMM dispatcher's per-tier `simd_calls_scalar` /
+//! `simd_calls_avx2` / `simd_calls_fma` counts (DESIGN.md §15) are
+//! ordinary `counter` lines in the report — no schema change per
+//! counter name.
 //!
 //! Contracts (test-asserted in `rust/tests/telemetry_trace.rs`):
 //!

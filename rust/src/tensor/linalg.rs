@@ -25,6 +25,19 @@
 //! `SAGEBWD_THREADS ∈ {1, 4}`; `python/compile/make_golden.py` emits
 //! cross-language golden vectors computed in the same order.
 //!
+//! ## ISA tiers
+//!
+//! The row kernels are dispatched per [`simd::IsaTier`] (runtime AVX2/
+//! FMA detection, `SAGEBWD_ISA` override — DESIGN.md §15).  The tier is
+//! resolved **once per public call, on the calling thread, before any
+//! workers spawn**, and passed down by value, so a `simd::with_isa` pin
+//! governs the whole call even though thread-locals don't propagate
+//! into scoped workers.  The contract above holds *within* each tier at
+//! any thread count; the default tier (`min(hw, Avx2)`) and the Scalar
+//! tier are bitwise identical for f32, and the i8 kernels are exact i32
+//! in every tier, so the golden vectors hold at the default too.  Only
+//! the opt-in Fma tier may change f32 bytes (single-rounding fmadd).
+//!
 //! ## Threading
 //!
 //! [`thread_count`] reads `SAGEBWD_THREADS` (default:
@@ -45,9 +58,12 @@
 use std::sync::OnceLock;
 
 use crate::telemetry::trace;
+use crate::tensor::simd;
 
 /// Rows processed together by the register block of [`gemm_nn`]: the B
-/// row loaded in the inner loop is reused `MR` times.
+/// row loaded in the inner loop is reused `MR` times (the SIMD tiers in
+/// [`simd`] use the same row block, so every tier sees the same row
+/// partition).
 const MR: usize = 4;
 
 /// Minimum `m·k·n` MAC volume before the auto entry points go parallel
@@ -94,21 +110,27 @@ pub fn thread_count() -> usize {
 }
 
 /// Split `n` items into at most `parts` contiguous, near-equal, non-empty
-/// ranges (fewer when `n < parts`).
+/// ranges (fewer when `n < parts`).  Total-function edge cases: `n = 0`
+/// returns no ranges (never a `(0, 0)` stub that would feed a zero-row
+/// spawn) and `parts ∈ {0, > n}` clamps to `[1, n]`, so every returned
+/// range is non-empty by construction for any tier-dependent row-chunk
+/// shape the callers produce.
 pub fn partition(n: usize, parts: usize) -> Vec<(usize, usize)> {
-    let parts = parts.clamp(1, n.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, n);
     let base = n / parts;
     let rem = n % parts;
     let mut out = Vec::with_capacity(parts);
     let mut lo = 0;
     for p in 0..parts {
+        // parts <= n, so base >= 1 and every range is non-empty.
         let len = base + usize::from(p < rem);
-        if len == 0 {
-            break;
-        }
         out.push((lo, lo + len));
         lo += len;
     }
+    debug_assert_eq!(lo, n);
     out
 }
 
@@ -195,7 +217,10 @@ fn auto_threads(m: usize, k: usize, n: usize) -> usize {
 
 /// Serial blocked `A·B` over output rows `[i0, i1)` of an `(m,k)×(k,n)`
 /// product.  `out` covers exactly those rows and must be zero-filled.
-fn gemm_nn_rows(a: &[f32], b: &[f32], k: usize, n: usize, i0: usize, i1: usize, out: &mut [f32]) {
+/// This is the Scalar-tier kernel, retained verbatim: `simd` delegates
+/// to it for the scalar tier and for sub-`MR` row tails, and the SIMD
+/// tiers reproduce its exact per-element accumulation order.
+pub(crate) fn gemm_nn_rows_scalar(a: &[f32], b: &[f32], k: usize, n: usize, i0: usize, i1: usize, out: &mut [f32]) {
     debug_assert_eq!(out.len(), (i1 - i0) * n);
     let mut i = i0;
     while i < i1 {
@@ -218,11 +243,7 @@ fn gemm_nn_rows(a: &[f32], b: &[f32], k: usize, n: usize, i0: usize, i1: usize, 
 /// Blocked serial `A·B`: `(m,k) × (k,n) → (m,n)`.  `out` is overwritten.
 pub fn gemm_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     let _t = trace::span("gemm_nn");
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(out.len(), m * n);
-    out.fill(0.0);
-    gemm_nn_rows(a, b, k, n, 0, m, out);
+    par_gemm_nn(a, b, m, k, n, out, 1);
 }
 
 /// `dst[(c, r)] = src[(r, c)]` — pack a transposed copy of a row-major
@@ -256,9 +277,13 @@ fn par_gemm_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f3
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
     out.fill(0.0);
+    // Resolve the ISA tier once, before any spawn: scoped workers can't
+    // see this thread's `with_isa` pin, so it travels by value.
+    let tier = simd::active_tier();
+    simd::record_dispatch(tier);
     let threads = threads.clamp(1, m.max(1));
     if threads <= 1 {
-        gemm_nn_rows(a, b, k, n, 0, m, out);
+        simd::gemm_f32_rows(a, b, k, n, 0, m, out, tier);
         return;
     }
     std::thread::scope(|s| {
@@ -266,7 +291,7 @@ fn par_gemm_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f3
         for (i0, i1) in partition(m, threads) {
             let (chunk, tail) = rest.split_at_mut((i1 - i0) * n);
             rest = tail;
-            s.spawn(move || gemm_nn_rows(a, b, k, n, i0, i1, chunk));
+            s.spawn(move || simd::gemm_f32_rows(a, b, k, n, i0, i1, chunk, tier));
         }
     });
 }
@@ -364,8 +389,10 @@ pub fn matmul_tn_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &
 // ---------------------------------------------------------------------------
 
 /// Serial blocked i8 `A·B` over rows `[i0, i1)`; `out` zero-filled by the
-/// caller.
-fn i8_gemm_nn_rows(a: &[i8], b: &[i8], k: usize, n: usize, i0: usize, i1: usize, out: &mut [i32]) {
+/// caller.  Scalar-tier kernel, retained verbatim (see
+/// [`gemm_nn_rows_scalar`]); every tier matches it bit for bit because
+/// i32 accumulation is exact.
+pub(crate) fn i8_gemm_nn_rows_scalar(a: &[i8], b: &[i8], k: usize, n: usize, i0: usize, i1: usize, out: &mut [i32]) {
     debug_assert_eq!(out.len(), (i1 - i0) * n);
     let mut i = i0;
     while i < i1 {
@@ -387,12 +414,7 @@ fn i8_gemm_nn_rows(a: &[i8], b: &[i8], k: usize, n: usize, i0: usize, i1: usize,
 
 /// Blocked i8 `A·B`: `(m,k) × (k,n) → (m,n)` in exact i32.
 pub fn int8_gemm_nn(a: &[i8], b: &[i8], m: usize, k: usize, n: usize, out: &mut [i32]) {
-    let _t = trace::span("i8_gemm_nn");
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(out.len(), m * n);
-    out.fill(0);
-    i8_gemm_nn_rows(a, b, k, n, 0, m, out);
+    int8_gemm_nn_threads(a, b, m, k, n, out, 1);
 }
 
 /// Blocked i8 `A·B` with an explicit thread count (output-row partition).
@@ -402,9 +424,13 @@ pub fn int8_gemm_nn_threads(a: &[i8], b: &[i8], m: usize, k: usize, n: usize, ou
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
     out.fill(0);
+    // Tier resolved pre-spawn, like par_gemm_nn (exact i32, so the tier
+    // affects speed only — never the bytes).
+    let tier = simd::active_tier();
+    simd::record_dispatch(tier);
     let threads = threads.clamp(1, m.max(1));
     if threads <= 1 {
-        i8_gemm_nn_rows(a, b, k, n, 0, m, out);
+        simd::gemm_i8_rows(a, b, k, n, 0, m, out, tier);
         return;
     }
     std::thread::scope(|s| {
@@ -412,31 +438,62 @@ pub fn int8_gemm_nn_threads(a: &[i8], b: &[i8], m: usize, k: usize, n: usize, ou
         for (i0, i1) in partition(m, threads) {
             let (chunk, tail) = rest.split_at_mut((i1 - i0) * n);
             rest = tail;
-            s.spawn(move || i8_gemm_nn_rows(a, b, k, n, i0, i1, chunk));
+            s.spawn(move || simd::gemm_i8_rows(a, b, k, n, i0, i1, chunk, tier));
         }
     });
+}
+
+/// Blocked i8 `A·B`, auto-dispatching serial/parallel by MAC volume
+/// (honors [`with_serial`], so `execute_many` workers never nest-spawn).
+pub fn int8_gemm_nn_auto(a: &[i8], b: &[i8], m: usize, k: usize, n: usize, out: &mut [i32]) {
+    int8_gemm_nn_threads(a, b, m, k, n, out, auto_threads(m, k, n));
 }
 
 /// Blocked i8 `A·Bᵀ`: `(m,k) × (n,k) → (m,n)`; `pack` is scratch for the
 /// transposed `Bᵀ` panel.
 pub fn int8_gemm_nt(a: &[i8], b: &[i8], m: usize, k: usize, n: usize, out: &mut [i32], pack: &mut Vec<i8>) {
+    int8_gemm_nt_threads(a, b, m, k, n, out, 1, pack);
+}
+
+/// Blocked i8 `A·Bᵀ` with an explicit thread count: pack `Bᵀ` once, then
+/// partition output rows exactly like [`int8_gemm_nn_threads`] — exact
+/// i32, so bitwise thread-invariant by construction.
+#[allow(clippy::too_many_arguments)]
+pub fn int8_gemm_nt_threads(a: &[i8], b: &[i8], m: usize, k: usize, n: usize, out: &mut [i32], threads: usize, pack: &mut Vec<i8>) {
     let _t = trace::span("i8_gemm_nt");
     debug_assert_eq!(b.len(), n * k);
     pack.clear();
     pack.resize(k * n, 0);
     pack_transpose_i8(b, n, k, pack);
-    int8_gemm_nn(a, pack, m, k, n, out);
+    int8_gemm_nn_threads(a, pack, m, k, n, out, threads);
+}
+
+/// Blocked i8 `A·Bᵀ`, auto-dispatching by MAC volume.
+pub fn int8_gemm_nt_auto(a: &[i8], b: &[i8], m: usize, k: usize, n: usize, out: &mut [i32], pack: &mut Vec<i8>) {
+    int8_gemm_nt_threads(a, b, m, k, n, out, auto_threads(m, k, n), pack);
 }
 
 /// Blocked i8 `Aᵀ·B`: `(k,m) × (k,n) → (m,n)`; `pack` is scratch for the
 /// transposed `Aᵀ` panel.
 pub fn int8_gemm_tn(a: &[i8], b: &[i8], m: usize, k: usize, n: usize, out: &mut [i32], pack: &mut Vec<i8>) {
+    int8_gemm_tn_threads(a, b, m, k, n, out, 1, pack);
+}
+
+/// Blocked i8 `Aᵀ·B` with an explicit thread count (same output-row
+/// partition as [`int8_gemm_nn_threads`] after packing `Aᵀ`).
+#[allow(clippy::too_many_arguments)]
+pub fn int8_gemm_tn_threads(a: &[i8], b: &[i8], m: usize, k: usize, n: usize, out: &mut [i32], threads: usize, pack: &mut Vec<i8>) {
     let _t = trace::span("i8_gemm_tn");
     debug_assert_eq!(a.len(), k * m);
     pack.clear();
     pack.resize(k * m, 0);
     pack_transpose_i8(a, k, m, pack);
-    int8_gemm_nn(pack, b, m, k, n, out);
+    int8_gemm_nn_threads(pack, b, m, k, n, out, threads);
+}
+
+/// Blocked i8 `Aᵀ·B`, auto-dispatching by MAC volume.
+pub fn int8_gemm_tn_auto(a: &[i8], b: &[i8], m: usize, k: usize, n: usize, out: &mut [i32], pack: &mut Vec<i8>) {
+    int8_gemm_tn_threads(a, b, m, k, n, out, auto_threads(m, k, n), pack);
 }
 
 // ---------------------------------------------------------------------------
@@ -513,6 +570,25 @@ mod tests {
     }
 
     #[test]
+    fn partition_degenerate_inputs_yield_no_empty_ranges() {
+        // Regression (ISSUE 9 satellite): parts > n, parts = 0, n = 0
+        // must never produce a zero-length range that would feed a
+        // zero-row worker spawn.
+        assert_eq!(partition(0, 0), Vec::<(usize, usize)>::new());
+        assert_eq!(partition(0, 1000), Vec::<(usize, usize)>::new());
+        assert_eq!(partition(3, 0), vec![(0, 3)]);
+        assert_eq!(partition(3, 1000), vec![(0, 1), (1, 2), (2, 3)]);
+        for (n, parts) in [(1usize, 7usize), (7, 7), (7, 8), (129, 1000)] {
+            let ranges = partition(n, parts);
+            assert!(ranges.len() <= parts.max(1) && ranges.len() <= n);
+            assert!(ranges.iter().all(|&(lo, hi)| lo < hi), "{n}/{parts}: {ranges:?}");
+            assert_eq!(ranges.first().map(|r| r.0), Some(0));
+            assert_eq!(ranges.last().map(|r| r.1), Some(n));
+            assert!(ranges.windows(2).all(|w| w[0].1 == w[1].0));
+        }
+    }
+
+    #[test]
     fn blocked_nn_bitwise_matches_naive() {
         for &(m, k, n) in &[(1, 1, 1), (5, 3, 7), (17, 13, 9), (64, 32, 48)] {
             let a = randv(m * k, 1 + m as u64);
@@ -567,6 +643,20 @@ mod tests {
         pack_transpose_i8(&a, m, k, &mut at);
         int8_gemm_tn(&at, &b, m, k, n, &mut got, &mut pack);
         assert_eq!(want, got, "tn");
+        // The parallel and auto variants are bitwise-identical (exact
+        // i32), at thread counts below, at, and above m.
+        for threads in [2, 4, 16] {
+            int8_gemm_nt_threads(&a, &bt, m, k, n, &mut got, threads, &mut pack);
+            assert_eq!(want, got, "nt threads={threads}");
+            int8_gemm_tn_threads(&at, &b, m, k, n, &mut got, threads, &mut pack);
+            assert_eq!(want, got, "tn threads={threads}");
+        }
+        int8_gemm_nn_auto(&a, &b, m, k, n, &mut got);
+        assert_eq!(want, got, "nn auto");
+        int8_gemm_nt_auto(&a, &bt, m, k, n, &mut got, &mut pack);
+        assert_eq!(want, got, "nt auto");
+        int8_gemm_tn_auto(&at, &b, m, k, n, &mut got, &mut pack);
+        assert_eq!(want, got, "tn auto");
     }
 
     #[test]

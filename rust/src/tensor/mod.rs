@@ -10,10 +10,13 @@
 //!
 //! The matmuls now execute on the cache-blocked, row-parallel compute
 //! engine in [`linalg`] (bitwise-identical to the retained naive
-//! references at any `SAGEBWD_THREADS` — DESIGN.md §11); [`workspace`]
-//! provides the reusable scratch arena the hot loops thread through.
+//! references at any `SAGEBWD_THREADS` — DESIGN.md §11); [`simd`]
+//! supplies the runtime-dispatched AVX2/FMA micro-kernels behind it
+//! (DESIGN.md §15); [`workspace`] provides the reusable scratch arena
+//! the hot loops thread through.
 
 pub mod linalg;
+pub mod simd;
 pub mod workspace;
 
 pub use workspace::Workspace;

@@ -1,0 +1,632 @@
+//! ISA-tier dispatch + explicit AVX2/FMA micro-kernels (DESIGN.md §15).
+//!
+//! The blocked engine in [`super::linalg`] autovectorizes its scalar
+//! slice loops; this module adds *explicit* `std::arch` x86_64 paths so
+//! the INT8 attention kernels can demonstrate their headline speedup
+//! over f32 (ROADMAP item 1).  Everything funnels through two row-range
+//! dispatchers — [`gemm_f32_rows`] and [`gemm_i8_rows`] — selected by an
+//! [`IsaTier`] resolved *once* per public GEMM call, on the calling
+//! thread, before any workers spawn (thread-locals do not propagate into
+//! `std::thread::scope` workers, so the tier is passed down by value).
+//!
+//! ## Tiers and how one is chosen
+//!
+//! * [`IsaTier::Scalar`] — the verbatim blocked kernels from `linalg`
+//!   (the only tier on non-x86_64 targets, via `cfg`).
+//! * [`IsaTier::Avx2`] — 8-lane `__m256` f32 kernel (separate mul+add,
+//!   same per-lane rounding as scalar) and a widening i8×i8→i32 kernel.
+//! * [`IsaTier::Fma`] — the f32 kernel with `_mm256_fmadd_ps`
+//!   (single-rounding fused multiply-add); integers gain nothing from
+//!   FMA, so the i8 kernel is shared with the Avx2 tier.
+//!
+//! [`active_tier`] resolves, in order: the thread-local [`with_isa`] pin
+//! (how tests force a tier), the `SAGEBWD_ISA=scalar|avx2|fma` env knob
+//! (re-read per call, like `SAGEBWD_THREADS`), then the default.  Both
+//! overrides clamp to [`hw_tier`] — executing undetected intrinsics
+//! would be UB, so a too-high request degrades instead.  The **default
+//! is `min(hw, Avx2)`, not FMA**: the Avx2 f32 kernel rounds each
+//! multiply and add separately, exactly like the scalar tier, so the
+//! engine's `blocked == naive == parallel, bitwise` contract and the
+//! numpy golden vectors stay intact out of the box.  FMA is strictly
+//! opt-in because fusing changes rounding (see DESIGN.md §15).
+//!
+//! ## Per-tier determinism contract
+//!
+//! Within any tier, every output element is accumulated in ascending
+//! reduction index from its zero-filled start, by exactly one op kind
+//! (mul+add for Scalar/Avx2, fused mul-add for Fma) regardless of which
+//! code path — vector body, 8-lane block, or scalar tail — touches it.
+//! Blocking and row-parallelism therefore never change the bytes:
+//! blocked == parallel bitwise at any `SAGEBWD_THREADS`, per tier.
+//! Across tiers: Scalar and Avx2 are bitwise identical for f32; Fma may
+//! differ (one rounding instead of two per multiply-add); the INT8
+//! kernels are exact i32 arithmetic, hence bitwise identical across
+//! *all* tiers.  `rust/tests/linalg_properties.rs` pins each clause.
+//!
+//! ## Observability
+//!
+//! Each public GEMM call records its resolved tier on the
+//! `simd_calls_{scalar,avx2,fma}` trace counters (self-gated, one
+//! thread-local branch when tracing is off), so a `--trace` run shows
+//! which tier actually executed; benches stamp rows with an `isa`
+//! column from [`active_tier`].
+
+use crate::telemetry::trace;
+
+/// Instruction-set tier, ordered `Scalar < Avx2 < Fma` so overrides can
+/// be clamped with `min` against the detected hardware tier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum IsaTier {
+    /// Portable blocked kernels (`linalg`), the only tier off x86_64.
+    Scalar,
+    /// AVX2 `__m256` kernels; f32 stays bitwise equal to Scalar.
+    Avx2,
+    /// AVX2 + fused multiply-add for f32 accumulation (opt-in only).
+    Fma,
+}
+
+impl IsaTier {
+    /// Stable lowercase name — the `isa` bench column and knob values.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            IsaTier::Scalar => "scalar",
+            IsaTier::Avx2 => "avx2",
+            IsaTier::Fma => "fma",
+        }
+    }
+
+    /// Parse a `SAGEBWD_ISA` value (case/whitespace-insensitive).
+    /// Unknown strings are `None` — callers fall back to the default
+    /// rather than guessing.
+    pub fn parse(s: &str) -> Option<IsaTier> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(IsaTier::Scalar),
+            "avx2" => Some(IsaTier::Avx2),
+            "fma" => Some(IsaTier::Fma),
+            _ => None,
+        }
+    }
+}
+
+/// Highest tier the running CPU supports, detected once per process.
+#[cfg(target_arch = "x86_64")]
+pub fn hw_tier() -> IsaTier {
+    static CACHE: std::sync::OnceLock<IsaTier> = std::sync::OnceLock::new();
+    *CACHE.get_or_init(|| {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            if std::arch::is_x86_feature_detected!("fma") {
+                IsaTier::Fma
+            } else {
+                IsaTier::Avx2
+            }
+        } else {
+            IsaTier::Scalar
+        }
+    })
+}
+
+/// Highest tier the running CPU supports: always Scalar off x86_64.
+#[cfg(not(target_arch = "x86_64"))]
+pub fn hw_tier() -> IsaTier {
+    IsaTier::Scalar
+}
+
+thread_local! {
+    /// Per-thread tier pin (see [`with_isa`]) — modeled on
+    /// `linalg::with_thread_cap`: thread-local so concurrent tests can
+    /// pin different tiers without racing on the process env.
+    static ISA_PIN: std::cell::Cell<Option<IsaTier>> =
+        const { std::cell::Cell::new(None) };
+}
+
+/// Run `f` with the ISA tier pinned to `tier` on this thread (clamped to
+/// [`hw_tier`] at resolution time).  The previous pin is restored on
+/// exit.  Note the pin does **not** propagate into spawned workers —
+/// dispatch entry points resolve the tier before fanning out and pass it
+/// down by value, so a pinned caller still controls the whole call.
+pub fn with_isa<R>(tier: IsaTier, f: impl FnOnce() -> R) -> R {
+    ISA_PIN.with(|c| {
+        let prev = c.replace(Some(tier));
+        let r = f();
+        c.set(prev);
+        r
+    })
+}
+
+/// The tier GEMM dispatch will use for a call issued on this thread:
+/// [`with_isa`] pin, else `SAGEBWD_ISA` env (re-read per call), else
+/// `min(hw, Avx2)` — requests above [`hw_tier`] clamp down, unknown env
+/// values fall back to the default.
+pub fn active_tier() -> IsaTier {
+    let pinned = ISA_PIN.with(|c| c.get());
+    let requested = pinned.or_else(|| {
+        std::env::var("SAGEBWD_ISA")
+            .ok()
+            .and_then(|s| IsaTier::parse(&s))
+    });
+    match requested {
+        Some(t) => t.min(hw_tier()),
+        // Numerics-preserving default: Avx2 matches Scalar bitwise for
+        // f32, so nothing changes out of the box; Fma is opt-in.
+        None => hw_tier().min(IsaTier::Avx2),
+    }
+}
+
+/// Record one GEMM dispatch at `tier` on the per-tier trace counters
+/// (`simd_calls_*`).  `counter_add` self-gates on `trace::enabled()`.
+pub fn record_dispatch(tier: IsaTier) {
+    trace::counter_add(
+        match tier {
+            IsaTier::Scalar => "simd_calls_scalar",
+            IsaTier::Avx2 => "simd_calls_avx2",
+            IsaTier::Fma => "simd_calls_fma",
+        },
+        1,
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Row-range dispatchers (the only entry points linalg calls)
+// ---------------------------------------------------------------------------
+
+/// f32 `A·B` over output rows `[i0, i1)` at `tier`: `out` covers exactly
+/// those rows and must be zero-filled (same contract as the scalar
+/// kernel).  `tier` is re-clamped to [`hw_tier`] here so the `unsafe`
+/// kernel calls below are sound even for a hand-constructed tier.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_f32_rows(
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    n: usize,
+    i0: usize,
+    i1: usize,
+    out: &mut [f32],
+    tier: IsaTier,
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        match tier.min(hw_tier()) {
+            IsaTier::Scalar => super::linalg::gemm_nn_rows_scalar(a, b, k, n, i0, i1, out),
+            // SAFETY: the tier was clamped to hw_tier() on the line
+            // above, so reaching this arm proves avx2 was detected on
+            // this CPU; the kernel has no alignment requirements.
+            IsaTier::Avx2 => unsafe { x86::gemm_f32_rows_avx2(a, b, k, n, i0, i1, out) },
+            // SAFETY: clamped tier == Fma proves avx2+fma were detected
+            // on this CPU; the kernel has no alignment requirements.
+            IsaTier::Fma => unsafe { x86::gemm_f32_rows_fma(a, b, k, n, i0, i1, out) },
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = tier;
+        super::linalg::gemm_nn_rows_scalar(a, b, k, n, i0, i1, out);
+    }
+}
+
+/// i8×i8→i32 `A·B` over output rows `[i0, i1)` at `tier`; `out` covers
+/// exactly those rows and must be zero-filled.  Exact i32 accumulation
+/// in every tier, so the result is bitwise tier-independent; Fma shares
+/// the Avx2 kernel (fused float ops are irrelevant to integers).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_i8_rows(
+    a: &[i8],
+    b: &[i8],
+    k: usize,
+    n: usize,
+    i0: usize,
+    i1: usize,
+    out: &mut [i32],
+    tier: IsaTier,
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        match tier.min(hw_tier()) {
+            IsaTier::Scalar => super::linalg::i8_gemm_nn_rows_scalar(a, b, k, n, i0, i1, out),
+            // SAFETY: the tier was clamped to hw_tier() on the line
+            // above, so avx2 is detected; no alignment requirements.
+            IsaTier::Avx2 | IsaTier::Fma => unsafe {
+                x86::gemm_i8_rows_avx2(a, b, k, n, i0, i1, out)
+            },
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = tier;
+        super::linalg::i8_gemm_nn_rows_scalar(a, b, k, n, i0, i1, out);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// x86_64 micro-kernels
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::{
+        __m128i, _mm256_add_epi32, _mm256_add_ps, _mm256_cvtepi8_epi32, _mm256_fmadd_ps,
+        _mm256_loadu_ps, _mm256_loadu_si256, _mm256_mul_ps, _mm256_mullo_epi32, _mm256_set1_epi32,
+        _mm256_set1_ps, _mm256_storeu_ps, _mm256_storeu_si256, _mm_loadl_epi64,
+    };
+
+    use crate::tensor::linalg;
+
+    /// Rows per register block — matches the scalar kernels' `MR` so the
+    /// same row-range partition feeds every tier.
+    const MR: usize = 4;
+
+    /// f32 AVX2 kernel: MR=4 rows × 16 columns (two `__m256` lanes per
+    /// row) register tile, `i-block → j-block → t` loop order.  Each
+    /// accumulator lane starts from the zero-filled `out` value and adds
+    /// `round(a·b)` per step — the *same two roundings in the same
+    /// ascending-`t` order* as the scalar kernel, so this tier is
+    /// bitwise identical to Scalar element by element.  Column tails
+    /// (<8) and row tails (<MR) run the equivalent scalar ops.
+    #[target_feature(enable = "avx2")]
+    // SAFETY: caller must have verified `avx2` via
+    // `is_x86_feature_detected!` (the dispatcher clamps to hw_tier()).
+    // All loads/stores are `loadu`/`storeu` — no alignment requirement —
+    // and every pointer stays inside the slice bounds proven by the
+    // block guards (`i + MR <= i1`, `j + lanes <= n`).
+    pub(super) unsafe fn gemm_f32_rows_avx2(
+        a: &[f32],
+        b: &[f32],
+        k: usize,
+        n: usize,
+        i0: usize,
+        i1: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), (i1 - i0) * n);
+        debug_assert!(b.len() >= k * n);
+        let bp = b.as_ptr();
+        let mut i = i0;
+        while i + MR <= i1 {
+            let obase = (i - i0) * n;
+            let mut j = 0usize;
+            while j + 16 <= n {
+                let op = out.as_mut_ptr().add(obase + j);
+                let mut acc = [
+                    (_mm256_loadu_ps(op), _mm256_loadu_ps(op.add(8))),
+                    (_mm256_loadu_ps(op.add(n)), _mm256_loadu_ps(op.add(n + 8))),
+                    (
+                        _mm256_loadu_ps(op.add(2 * n)),
+                        _mm256_loadu_ps(op.add(2 * n + 8)),
+                    ),
+                    (
+                        _mm256_loadu_ps(op.add(3 * n)),
+                        _mm256_loadu_ps(op.add(3 * n + 8)),
+                    ),
+                ];
+                for t in 0..k {
+                    let bt = bp.add(t * n + j);
+                    let b0 = _mm256_loadu_ps(bt);
+                    let b1 = _mm256_loadu_ps(bt.add(8));
+                    for (r, lanes) in acc.iter_mut().enumerate() {
+                        let av = _mm256_set1_ps(a[(i + r) * k + t]);
+                        // mul then add: two roundings, like the scalar
+                        // `*o += av * bv` — never fmadd in this tier.
+                        lanes.0 = _mm256_add_ps(lanes.0, _mm256_mul_ps(av, b0));
+                        lanes.1 = _mm256_add_ps(lanes.1, _mm256_mul_ps(av, b1));
+                    }
+                }
+                for (r, lanes) in acc.iter().enumerate() {
+                    _mm256_storeu_ps(op.add(r * n), lanes.0);
+                    _mm256_storeu_ps(op.add(r * n + 8), lanes.1);
+                }
+                j += 16;
+            }
+            if j + 8 <= n {
+                let op = out.as_mut_ptr().add(obase + j);
+                let mut acc = [
+                    _mm256_loadu_ps(op),
+                    _mm256_loadu_ps(op.add(n)),
+                    _mm256_loadu_ps(op.add(2 * n)),
+                    _mm256_loadu_ps(op.add(3 * n)),
+                ];
+                for t in 0..k {
+                    let b0 = _mm256_loadu_ps(bp.add(t * n + j));
+                    for (r, lane) in acc.iter_mut().enumerate() {
+                        let av = _mm256_set1_ps(a[(i + r) * k + t]);
+                        *lane = _mm256_add_ps(*lane, _mm256_mul_ps(av, b0));
+                    }
+                }
+                for (r, lane) in acc.iter().enumerate() {
+                    _mm256_storeu_ps(op.add(r * n), *lane);
+                }
+                j += 8;
+            }
+            // Scalar column tail (n % 8 rightmost columns): identical
+            // per-element op and order, so still bitwise == Scalar.
+            for t in 0..k {
+                for r in 0..MR {
+                    let av = a[(i + r) * k + t];
+                    for jj in j..n {
+                        out[obase + r * n + jj] += av * b[t * n + jj];
+                    }
+                }
+            }
+            i += MR;
+        }
+        if i < i1 {
+            // Row tail (< MR rows): the scalar kernel computes each
+            // element with the same ops in the same order.
+            linalg::gemm_nn_rows_scalar(a, b, k, n, i, i1, &mut out[(i - i0) * n..]);
+        }
+    }
+
+    /// f32 FMA kernel: the AVX2 tile with `_mm256_fmadd_ps` accumulation
+    /// (one rounding per multiply-add).  Scalar tails use `f32::mul_add`
+    /// — also a single correctly-rounded fused op — so every element is
+    /// fma-accumulated in ascending `t` no matter which path touches it:
+    /// the tier is deterministic and thread-invariant, but its f32 bytes
+    /// legitimately differ from Scalar/Avx2 (hence opt-in only).
+    #[target_feature(enable = "avx2,fma")]
+    // SAFETY: caller must have verified `avx2` and `fma` via
+    // `is_x86_feature_detected!` (the dispatcher clamps to hw_tier());
+    // bounds/alignment arguments are identical to gemm_f32_rows_avx2.
+    pub(super) unsafe fn gemm_f32_rows_fma(
+        a: &[f32],
+        b: &[f32],
+        k: usize,
+        n: usize,
+        i0: usize,
+        i1: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), (i1 - i0) * n);
+        debug_assert!(b.len() >= k * n);
+        let bp = b.as_ptr();
+        let mut i = i0;
+        while i + MR <= i1 {
+            let obase = (i - i0) * n;
+            let mut j = 0usize;
+            while j + 16 <= n {
+                let op = out.as_mut_ptr().add(obase + j);
+                let mut acc = [
+                    (_mm256_loadu_ps(op), _mm256_loadu_ps(op.add(8))),
+                    (_mm256_loadu_ps(op.add(n)), _mm256_loadu_ps(op.add(n + 8))),
+                    (
+                        _mm256_loadu_ps(op.add(2 * n)),
+                        _mm256_loadu_ps(op.add(2 * n + 8)),
+                    ),
+                    (
+                        _mm256_loadu_ps(op.add(3 * n)),
+                        _mm256_loadu_ps(op.add(3 * n + 8)),
+                    ),
+                ];
+                for t in 0..k {
+                    let bt = bp.add(t * n + j);
+                    let b0 = _mm256_loadu_ps(bt);
+                    let b1 = _mm256_loadu_ps(bt.add(8));
+                    for (r, lanes) in acc.iter_mut().enumerate() {
+                        let av = _mm256_set1_ps(a[(i + r) * k + t]);
+                        lanes.0 = _mm256_fmadd_ps(av, b0, lanes.0);
+                        lanes.1 = _mm256_fmadd_ps(av, b1, lanes.1);
+                    }
+                }
+                for (r, lanes) in acc.iter().enumerate() {
+                    _mm256_storeu_ps(op.add(r * n), lanes.0);
+                    _mm256_storeu_ps(op.add(r * n + 8), lanes.1);
+                }
+                j += 16;
+            }
+            if j + 8 <= n {
+                let op = out.as_mut_ptr().add(obase + j);
+                let mut acc = [
+                    _mm256_loadu_ps(op),
+                    _mm256_loadu_ps(op.add(n)),
+                    _mm256_loadu_ps(op.add(2 * n)),
+                    _mm256_loadu_ps(op.add(3 * n)),
+                ];
+                for t in 0..k {
+                    let b0 = _mm256_loadu_ps(bp.add(t * n + j));
+                    for (r, lane) in acc.iter_mut().enumerate() {
+                        let av = _mm256_set1_ps(a[(i + r) * k + t]);
+                        *lane = _mm256_fmadd_ps(av, b0, *lane);
+                    }
+                }
+                for (r, lane) in acc.iter().enumerate() {
+                    _mm256_storeu_ps(op.add(r * n), *lane);
+                }
+                j += 8;
+            }
+            // Scalar column tail: mul_add keeps the single-rounding op,
+            // so tail elements match what a vector lane would compute.
+            for t in 0..k {
+                for r in 0..MR {
+                    let av = a[(i + r) * k + t];
+                    for jj in j..n {
+                        let o = obase + r * n + jj;
+                        out[o] = av.mul_add(b[t * n + jj], out[o]);
+                    }
+                }
+            }
+            i += MR;
+        }
+        // Row tail: fused ops here too — the whole tier must use one op
+        // kind per element or thread partitions would change the bytes.
+        while i < i1 {
+            let obase = (i - i0) * n;
+            for t in 0..k {
+                let av = a[i * k + t];
+                let brow = &b[t * n..(t + 1) * n];
+                for (jj, &bv) in brow.iter().enumerate() {
+                    out[obase + jj] = av.mul_add(bv, out[obase + jj]);
+                }
+            }
+            i += 1;
+        }
+    }
+
+    /// i8×i8→i32 AVX2 kernel: MR=4 rows × 16 columns.  Per step, 8
+    /// bytes of the B row are sign-extended to i32 lanes
+    /// (`_mm256_cvtepi8_epi32`) and multiplied by the broadcast A value
+    /// with `_mm256_mullo_epi32` — exact, since |a·b| ≤ 128·127 fits
+    /// far inside i32 — then added into i32 accumulators.  No i16
+    /// `maddubs` pairing is involved, so there is no saturation edge
+    /// case and the result equals the scalar kernel bit for bit at any
+    /// blocking or thread count (integer addition commutes).
+    #[target_feature(enable = "avx2")]
+    // SAFETY: caller must have verified `avx2` via
+    // `is_x86_feature_detected!` (the dispatcher clamps to hw_tier()).
+    // `_mm_loadl_epi64` reads exactly 8 bytes at `b[t*n + j..]`, in
+    // bounds by the `j + lanes <= n` guards; i32 loads/stores are
+    // unaligned-tolerant (`loadu`/`storeu`).
+    pub(super) unsafe fn gemm_i8_rows_avx2(
+        a: &[i8],
+        b: &[i8],
+        k: usize,
+        n: usize,
+        i0: usize,
+        i1: usize,
+        out: &mut [i32],
+    ) {
+        debug_assert_eq!(out.len(), (i1 - i0) * n);
+        debug_assert!(b.len() >= k * n);
+        let bp = b.as_ptr();
+        let mut i = i0;
+        while i + MR <= i1 {
+            let obase = (i - i0) * n;
+            let mut j = 0usize;
+            while j + 16 <= n {
+                let op = out.as_mut_ptr().add(obase + j);
+                let mut acc = [
+                    (
+                        _mm256_loadu_si256(op as *const _),
+                        _mm256_loadu_si256(op.add(8) as *const _),
+                    ),
+                    (
+                        _mm256_loadu_si256(op.add(n) as *const _),
+                        _mm256_loadu_si256(op.add(n + 8) as *const _),
+                    ),
+                    (
+                        _mm256_loadu_si256(op.add(2 * n) as *const _),
+                        _mm256_loadu_si256(op.add(2 * n + 8) as *const _),
+                    ),
+                    (
+                        _mm256_loadu_si256(op.add(3 * n) as *const _),
+                        _mm256_loadu_si256(op.add(3 * n + 8) as *const _),
+                    ),
+                ];
+                for t in 0..k {
+                    let bt = bp.add(t * n + j);
+                    let b0 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(bt as *const __m128i));
+                    let b1 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(bt.add(8) as *const __m128i));
+                    for (r, lanes) in acc.iter_mut().enumerate() {
+                        let av = _mm256_set1_epi32(a[(i + r) * k + t] as i32);
+                        lanes.0 = _mm256_add_epi32(lanes.0, _mm256_mullo_epi32(av, b0));
+                        lanes.1 = _mm256_add_epi32(lanes.1, _mm256_mullo_epi32(av, b1));
+                    }
+                }
+                for (r, lanes) in acc.iter().enumerate() {
+                    _mm256_storeu_si256(op.add(r * n) as *mut _, lanes.0);
+                    _mm256_storeu_si256(op.add(r * n + 8) as *mut _, lanes.1);
+                }
+                j += 16;
+            }
+            if j + 8 <= n {
+                let op = out.as_mut_ptr().add(obase + j);
+                let mut acc = [
+                    _mm256_loadu_si256(op as *const _),
+                    _mm256_loadu_si256(op.add(n) as *const _),
+                    _mm256_loadu_si256(op.add(2 * n) as *const _),
+                    _mm256_loadu_si256(op.add(3 * n) as *const _),
+                ];
+                for t in 0..k {
+                    let b0 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(bp.add(t * n + j) as *const __m128i));
+                    for (r, lane) in acc.iter_mut().enumerate() {
+                        let av = _mm256_set1_epi32(a[(i + r) * k + t] as i32);
+                        *lane = _mm256_add_epi32(*lane, _mm256_mullo_epi32(av, b0));
+                    }
+                }
+                for (r, lane) in acc.iter().enumerate() {
+                    _mm256_storeu_si256(op.add(r * n) as *mut _, *lane);
+                }
+                j += 8;
+            }
+            for t in 0..k {
+                for r in 0..MR {
+                    let av = a[(i + r) * k + t] as i32;
+                    for jj in j..n {
+                        out[obase + r * n + jj] += av * b[t * n + jj] as i32;
+                    }
+                }
+            }
+            i += MR;
+        }
+        if i < i1 {
+            linalg::i8_gemm_nn_rows_scalar(a, b, k, n, i, i1, &mut out[(i - i0) * n..]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_names_roundtrip_and_order() {
+        for t in [IsaTier::Scalar, IsaTier::Avx2, IsaTier::Fma] {
+            assert_eq!(IsaTier::parse(t.as_str()), Some(t));
+        }
+        assert_eq!(IsaTier::parse(" AVX2\n"), Some(IsaTier::Avx2));
+        assert_eq!(IsaTier::parse("avx512"), None);
+        assert_eq!(IsaTier::parse(""), None);
+        assert!(IsaTier::Scalar < IsaTier::Avx2 && IsaTier::Avx2 < IsaTier::Fma);
+        assert_eq!(IsaTier::Fma.min(hw_tier()), hw_tier());
+    }
+
+    #[test]
+    fn with_isa_pins_clamps_and_restores() {
+        let ambient = active_tier();
+        assert!(ambient <= hw_tier());
+        assert!(ambient <= IsaTier::Avx2 || std::env::var("SAGEBWD_ISA").is_ok());
+        with_isa(IsaTier::Scalar, || {
+            assert_eq!(active_tier(), IsaTier::Scalar);
+            // Nested pins win, outer pin is restored afterwards.
+            with_isa(IsaTier::Fma, || {
+                assert_eq!(active_tier(), IsaTier::Fma.min(hw_tier()));
+            });
+            assert_eq!(active_tier(), IsaTier::Scalar);
+        });
+        assert_eq!(active_tier(), ambient);
+    }
+
+    #[test]
+    fn dispatchers_match_scalar_on_every_tier() {
+        // The dispatcher-level identity: for any tier ≤ hw the f32 Avx2
+        // path and the i8 path must be bitwise equal to Scalar (the Fma
+        // f32 path is allowed to differ; covered by linalg_properties).
+        let (k, n, rows) = (13, 37, 5); // deliberately no multiple of 8/16/MR
+        let a: Vec<f32> = (0..rows * k).map(|i| (i as f32 * 0.7).sin()).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.3).cos()).collect();
+        let ai: Vec<i8> = (0..rows * k).map(|i| (i as i32 * 37 % 255 - 127) as i8).collect();
+        let bi: Vec<i8> = (0..k * n).map(|i| (i as i32 * 91 % 255 - 127) as i8).collect();
+        let mut want = vec![0f32; rows * n];
+        gemm_f32_rows(&a, &b, k, n, 0, rows, &mut want, IsaTier::Scalar);
+        let mut wanti = vec![0i32; rows * n];
+        gemm_i8_rows(&ai, &bi, k, n, 0, rows, &mut wanti, IsaTier::Scalar);
+        if hw_tier() >= IsaTier::Avx2 {
+            let mut got = vec![0f32; rows * n];
+            gemm_f32_rows(&a, &b, k, n, 0, rows, &mut got, IsaTier::Avx2);
+            assert_eq!(
+                want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "f32 avx2 != scalar"
+            );
+        }
+        for tier in [IsaTier::Avx2, IsaTier::Fma] {
+            let mut goti = vec![0i32; rows * n];
+            // Above-hw tiers clamp down inside the dispatcher, so this
+            // is exercised (as the best available tier) on any CPU.
+            gemm_i8_rows(&ai, &bi, k, n, 0, rows, &mut goti, tier);
+            assert_eq!(wanti, goti, "i8 {tier:?} != scalar");
+        }
+    }
+
+    #[test]
+    fn record_dispatch_is_safe_when_tracing_disabled() {
+        record_dispatch(active_tier());
+    }
+}

@@ -19,6 +19,13 @@
 //! * A `Workspace` is deliberately `!Sync`-by-use: parallel regions give
 //!   each worker thread its own `Workspace` (they are cheap to create —
 //!   empty pools), which keeps the threading determinism contract trivial.
+//! * **SIMD alignment contract**: the ISA-tier micro-kernels
+//!   (`tensor::simd`, DESIGN.md §15) use exclusively unaligned
+//!   loads/stores (`loadu`/`storeu`, and `_mm_loadl_epi64` for i8
+//!   panels), so pooled buffers need only their natural element
+//!   alignment — plain `Vec<T>` storage is sufficient and the pools
+//!   never over-align or pad.  Any future kernel wanting aligned moves
+//!   must bring its own aligned arena rather than assuming pool layout.
 
 use crate::telemetry::trace;
 use crate::tensor::Tensor;

@@ -72,8 +72,10 @@ fn seeded_fixture_fires_every_lint() {
         .collect();
     // Kept in lockstep with check_analyzer.py --fixtures.
     let expect: Vec<(String, usize, String)> = [
+        ("rust/src/bench.rs", 1, "A5"),  // isa no longer emitted
         ("rust/src/bench.rs", 1, "A5"),  // ns_per_iter no longer emitted
-        ("rust/src/bench.rs", 29, "A5"), // ns_per_op not in the schema
+        ("rust/src/bench.rs", 29, "A5"), // isa_tier not in the schema
+        ("rust/src/bench.rs", 30, "A5"), // ns_per_op not in the schema
         ("rust/src/kernels/attention.rs", 3, "A1"), // HashMap
         ("rust/src/kernels/attention.rs", 8, "A2"), // to_vec in hot loop
         ("rust/src/main.rs", 4, "A3"),   // 3 sites over a 0 baseline

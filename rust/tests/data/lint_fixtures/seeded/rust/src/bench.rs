@@ -1,5 +1,5 @@
-//! Seeded A5 fixture: drifted bench row schema (`ns_per_op` replaced
-//! the documented `ns_per_iter`).
+//! Seeded A5 fixture: drifted bench row schema (`isa_tier` replaced
+//! the documented `isa`, `ns_per_op` the documented `ns_per_iter`).
 
 use crate::util::json::Json;
 
@@ -20,12 +20,13 @@ pub fn run_to_json(threads_default: usize, rows: Vec<Json>) -> Json {
     ])
 }
 
-pub fn row_to_json(op: &str, shape: &str, variant: &str, threads: usize, ns: f64) -> Json {
+pub fn row_to_json(op: &str, shape: &str, variant: &str, threads: usize, isa: &str, ns: f64) -> Json {
     Json::from_pairs(vec![
         ("op", Json::from(op)),
         ("shape", Json::from(shape)),
         ("variant", Json::from(variant)),
         ("threads", Json::from(threads)),
+        ("isa_tier", Json::from(isa)),
         ("ns_per_op", Json::from(ns)),
         ("tokens_per_s", Json::Null),
     ])

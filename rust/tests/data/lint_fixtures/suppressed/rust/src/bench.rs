@@ -19,12 +19,13 @@ pub fn run_to_json(threads_default: usize, rows: Vec<Json>) -> Json {
     ])
 }
 
-pub fn row_to_json(op: &str, shape: &str, variant: &str, threads: usize, ns: f64) -> Json {
+pub fn row_to_json(op: &str, shape: &str, variant: &str, threads: usize, isa: &str, ns: f64) -> Json {
     Json::from_pairs(vec![
         ("op", Json::from(op)),
         ("shape", Json::from(shape)),
         ("variant", Json::from(variant)),
         ("threads", Json::from(threads)),
+        ("isa", Json::from(isa)),
         ("ns_per_iter", Json::from(ns)),
         // sagebwd-allow(A5): experimental column, promoted next PR
         ("ns_per_op", Json::from(ns * 2.0)),

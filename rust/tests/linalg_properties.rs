@@ -5,17 +5,24 @@
 //! cross-language golden GEMM vectors emitted by
 //! `python -m compile.make_golden --gemm-only`.
 //!
-//! `SAGEBWD_THREADS` is process-global state: exactly one test here
-//! mutates it, behind [`ENV_LOCK`], and every *other* test in this binary
-//! uses the explicit `*_threads` entry points (which never read the
-//! environment) or stays below the auto-dispatch volume gate — so no
-//! concurrent env reads exist.  Any future test that touches the variable
-//! must hold the same lock.
+//! `SAGEBWD_THREADS` and `SAGEBWD_ISA` are process-global state: exactly
+//! one test here mutates each, behind [`ENV_LOCK`], and every *other*
+//! test in this binary uses the explicit `*_threads` entry points (which
+//! never read the environment) and/or the thread-local [`simd::with_isa`]
+//! pin (which takes precedence over the env) — so a concurrent env write
+//! can never change another test's result.  Any future test that touches
+//! either variable must hold the same lock.
+//!
+//! ISA tiers (DESIGN.md §15): forcing a tier above [`simd::hw_tier`]
+//! clamps down at resolution time, so the tier-sweep tests below are safe
+//! to run on any host — on a pre-AVX2 machine they degenerate to
+//! scalar-vs-scalar and still exercise the pin/restore harness.
 
 use std::path::Path;
 use std::sync::Mutex;
 
 use sagebwd::kernels::quant;
+use sagebwd::tensor::simd::{self, IsaTier};
 use sagebwd::tensor::{linalg, Tensor, Workspace};
 use sagebwd::util::json;
 use sagebwd::util::rng::Pcg64;
@@ -125,8 +132,145 @@ fn int8_gemm_bitwise_equal_reference_across_shapes_and_threads() {
     }
 }
 
-/// Serializes every test that mutates `SAGEBWD_THREADS` (see module doc).
+/// Every requestable tier, in order; requests above the hardware tier
+/// clamp down inside the dispatcher, so sweeping all three is portable.
+const TIERS: &[IsaTier] = &[IsaTier::Scalar, IsaTier::Avx2, IsaTier::Fma];
+
+#[test]
+fn int8_gemm_bitwise_identical_across_isa_tiers_and_threads() {
+    // The INT8 contract of DESIGN.md §15: exact i32 arithmetic, hence
+    // bitwise identical across *all* tiers, thread counts, and layouts.
+    for &(m, k, n) in SHAPES {
+        let a: Vec<i8> = (0..m * k).map(|i| (i as i32 * 53 % 255 - 127) as i8).collect();
+        let b: Vec<i8> = (0..k * n).map(|i| (i as i32 * 29 % 255 - 127) as i8).collect();
+        let want = quant::int8_gemm(&a, &b, m, k, n);
+        let mut bt = vec![0i8; k * n];
+        linalg::pack_transpose_i8(&b, k, n, &mut bt);
+        let mut at = vec![0i8; m * k];
+        linalg::pack_transpose_i8(&a, m, k, &mut at);
+        for &tier in TIERS {
+            simd::with_isa(tier, || {
+                let mut got = vec![0i32; m * n];
+                let mut pack = Vec::new();
+                for threads in [1, 3, 4] {
+                    got.fill(-1);
+                    linalg::int8_gemm_nn_threads(&a, &b, m, k, n, &mut got, threads);
+                    assert_eq!(want, got, "i8 nn {tier:?} t={threads} ({m},{k},{n})");
+                    got.fill(-1);
+                    linalg::int8_gemm_nt_threads(&a, &bt, m, k, n, &mut got, threads, &mut pack);
+                    assert_eq!(want, got, "i8 nt {tier:?} t={threads} ({m},{k},{n})");
+                    got.fill(-1);
+                    linalg::int8_gemm_tn_threads(&at, &b, m, k, n, &mut got, threads, &mut pack);
+                    assert_eq!(want, got, "i8 tn {tier:?} t={threads} ({m},{k},{n})");
+                }
+            });
+        }
+    }
+}
+
+#[test]
+fn f32_tiers_thread_invariant_and_non_fma_bitwise_scalar() {
+    // Per-tier: blocked == parallel bitwise at any thread count.  Across
+    // tiers: Scalar and Avx2 agree bitwise (same two-rounding order per
+    // accumulation step); Fma rounds once per step, so it may drift — but
+    // only within a standard forward-error envelope for a k-term dot
+    // product, never unboundedly.
+    for &(m, k, n) in SHAPES {
+        let a = randv(m * k, 70 + (m * 13 + k) as u64);
+        let b = randv(k * n, 71 + (n * 5 + k) as u64);
+        let mut scalar = vec![0f32; m * n];
+        simd::with_isa(IsaTier::Scalar, || {
+            linalg::gemm_nn(&a, &b, m, k, n, &mut scalar);
+        });
+        for &tier in TIERS {
+            let effective = tier.min(simd::hw_tier());
+            simd::with_isa(tier, || {
+                let mut first: Option<Vec<u32>> = None;
+                for threads in [1, 2, 4, 7] {
+                    let mut got = vec![f32::NAN; m * n];
+                    linalg::matmul_threads(&a, &b, m, k, n, &mut got, threads);
+                    let gb = bits(&got);
+                    match &first {
+                        None => first = Some(gb),
+                        Some(fb) => assert_eq!(
+                            fb, &gb,
+                            "within-tier thread invariance {tier:?} t={threads} ({m},{k},{n})"
+                        ),
+                    }
+                }
+                let got = first.unwrap();
+                if effective != IsaTier::Fma {
+                    assert_eq!(
+                        bits(&scalar),
+                        got,
+                        "{tier:?} (effective {effective:?}) must match scalar bitwise ({m},{k},{n})"
+                    );
+                } else {
+                    for (i, &gb) in got.iter().enumerate() {
+                        let s = scalar[i];
+                        let g = f32::from_bits(gb);
+                        let tol = 1e-5 * (k.max(1) as f32) * s.abs().max(1.0);
+                        assert!(
+                            (s - g).abs() <= tol,
+                            "fma drift out of bounds at {i}: {s} vs {g} ({m},{k},{n})"
+                        );
+                    }
+                }
+            });
+        }
+    }
+}
+
+/// Serializes every test that mutates `SAGEBWD_THREADS` / `SAGEBWD_ISA`
+/// (see module doc).
 static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+#[test]
+fn sagebwd_isa_env_is_respected_clamped_and_overridden_by_pin() {
+    let _guard = ENV_LOCK.lock().unwrap();
+    let saved = std::env::var("SAGEBWD_ISA").ok();
+    let hw = simd::hw_tier();
+    let default = hw.min(IsaTier::Avx2);
+
+    // Only numerics-preserving values (`scalar`/`avx2`/unknown) are ever
+    // written here: tests in this binary run concurrently, and a brief
+    // `fma` in the process env could leak into another test's unpinned
+    // dispatch on FMA hardware.  Fma clamping is exercised via the
+    // thread-local pin sweep instead ([`TIERS`]).
+    std::env::set_var("SAGEBWD_ISA", "scalar");
+    assert_eq!(simd::active_tier(), IsaTier::Scalar);
+    // Parsing is case/whitespace-insensitive; requests clamp to hardware.
+    std::env::set_var("SAGEBWD_ISA", "  AVX2 ");
+    assert_eq!(simd::active_tier(), IsaTier::Avx2.min(hw));
+    // Unknown values fall back to the default rather than guessing.
+    std::env::set_var("SAGEBWD_ISA", "avx512");
+    assert_eq!(simd::active_tier(), default);
+    // The thread-local pin wins over the environment.
+    std::env::set_var("SAGEBWD_ISA", "avx2");
+    simd::with_isa(IsaTier::Scalar, || {
+        assert_eq!(simd::active_tier(), IsaTier::Scalar);
+    });
+    assert_eq!(simd::active_tier(), IsaTier::Avx2.min(hw));
+
+    // End to end: an env-forced scalar engine matches the default engine
+    // bitwise (the default tier never exceeds Avx2, which is bitwise
+    // scalar for f32 by construction — DESIGN.md §15).
+    let (m, k, n) = (17, 13, 9);
+    let a = randv(m * k, 95);
+    let b = randv(k * n, 96);
+    let mut forced = vec![0f32; m * n];
+    let mut dflt = vec![0f32; m * n];
+    std::env::set_var("SAGEBWD_ISA", "scalar");
+    linalg::gemm_nn(&a, &b, m, k, n, &mut forced);
+    std::env::remove_var("SAGEBWD_ISA");
+    linalg::gemm_nn(&a, &b, m, k, n, &mut dflt);
+    assert_eq!(bits(&forced), bits(&dflt));
+
+    match saved {
+        Some(v) => std::env::set_var("SAGEBWD_ISA", v),
+        None => std::env::remove_var("SAGEBWD_ISA"),
+    }
+}
 
 #[test]
 fn sagebwd_threads_env_is_respected_and_result_invariant() {
@@ -251,7 +395,7 @@ fn golden_gemm_vectors_match_bitwise() {
 #[test]
 fn partition_is_exhaustive_and_ordered() {
     for n in [0usize, 1, 2, 7, 64, 1000] {
-        for parts in [1usize, 2, 3, 8, 1000] {
+        for parts in [0usize, 1, 2, 3, 8, 1000] {
             let ranges = linalg::partition(n, parts);
             let mut expect = 0;
             for &(lo, hi) in &ranges {
