@@ -61,8 +61,10 @@ BENCH_V1_FIELDS = ["schema", "bench", "runs", "threads_default", "rows",
                    "op", "shape", "variant", "threads", "isa",
                    "ns_per_iter", "tokens_per_s"]
 RUN_V1_FIELDS = ["schema", "experiment", "label", "config", "config_hash",
-                 "code_version", "status", "artifacts", "summary",
-                 "name", "sha256", "bytes", "view"]
+                 "code_version", "status", "artifacts", "recoveries", "summary",
+                 "name", "sha256", "bytes", "view",
+                 "attempt", "at_step", "resume_step", "reason", "action",
+                 "peak_lr", "tokens_per_step", "variant"]
 TRACE_V1_FIELDS = ["schema", "kind", "threads", "spans", "counters",
                    "name", "parent", "calls", "total_ns", "self_ns",
                    "min_ns", "max_ns", "p50_ns", "p99_ns", "value"]

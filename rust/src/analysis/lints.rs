@@ -136,7 +136,7 @@ pub const BENCH_V1_FIELDS: [&str; 12] = [
 ];
 
 /// Documented `sagebwd-run-v1` field names (A5).
-pub const RUN_V1_FIELDS: [&str; 13] = [
+pub const RUN_V1_FIELDS: [&str; 22] = [
     "schema",
     "experiment",
     "label",
@@ -145,11 +145,20 @@ pub const RUN_V1_FIELDS: [&str; 13] = [
     "code_version",
     "status",
     "artifacts",
+    "recoveries",
     "summary",
     "name",
     "sha256",
     "bytes",
     "view",
+    "attempt",
+    "at_step",
+    "resume_step",
+    "reason",
+    "action",
+    "peak_lr",
+    "tokens_per_step",
+    "variant",
 ];
 
 /// Documented `sagebwd-trace-v1` field names (A5).

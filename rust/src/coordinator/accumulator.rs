@@ -91,6 +91,24 @@ impl GradAccumulator {
     }
 }
 
+/// Locate the first non-finite gradient element: `(leaf name, flat index,
+/// value)` — so a divergence reason can say *which* gradient went bad
+/// ("non-finite gradient in blk0.k_proj[37] (NaN)") instead of a bare
+/// boolean.  `names` and `grads` are in the same (ABI) order; a missing
+/// name falls back to the leaf index.
+pub fn first_nonfinite_site<'a>(
+    names: &'a [String],
+    grads: &[Tensor],
+) -> Option<(&'a str, usize, f32)> {
+    for (i, g) in grads.iter().enumerate() {
+        if let Some(idx) = g.data.iter().position(|x| !x.is_finite()) {
+            let name = names.get(i).map(String::as_str).unwrap_or("?");
+            return Some((name, idx, g.data[idx]));
+        }
+    }
+    None
+}
+
 /// Derive microbatches-per-step from a tokens-per-step target.
 /// Errors when TPS is not an exact multiple (silent truncation would make
 /// reported TPS a lie).
@@ -142,6 +160,36 @@ mod tests {
         let mut acc = GradAccumulator::new(&[vec![2]]);
         acc.add(0.0, &[t(vec![1.0, f32::INFINITY])]).unwrap();
         assert!(acc.any_nonfinite());
+    }
+
+    #[test]
+    fn first_nonfinite_site_names_the_leaf_and_index() {
+        let names: Vec<String> = vec!["embed".into(), "blk0.k_proj".into()];
+        // Seed a NaN at a known slab position via the fault plane's
+        // deterministic picker, then confirm the reporter finds it.
+        let mut grads = vec![t(vec![1.0, 2.0, 3.0]), t(vec![0.5, 0.5, 0.5, 0.5])];
+        crate::util::faults::install(
+            crate::util::faults::parse_plan("seed=5; nan@0:k_proj").unwrap(),
+        );
+        crate::util::faults::begin_step(0);
+        let lens: Vec<usize> = grads.iter().map(|g| g.data.len()).collect();
+        let (leaf, idx) = crate::util::faults::take_nan_slab(&names, &lens).unwrap();
+        assert_eq!(leaf, 1);
+        grads[leaf].data[idx] = f32::NAN;
+        crate::util::faults::clear();
+
+        let (name, site, val) = first_nonfinite_site(&names, &grads).unwrap();
+        assert_eq!(name, "blk0.k_proj");
+        assert_eq!(site, idx);
+        assert!(val.is_nan());
+
+        // Clean gradients report nothing.
+        assert!(first_nonfinite_site(&names, &[t(vec![1.0]), t(vec![2.0])]).is_none());
+        // More grads than names: falls back to "?" instead of panicking.
+        let (name, _, _) =
+            first_nonfinite_site(&names[..1].to_vec(), &[t(vec![1.0]), t(vec![f32::NAN])])
+                .unwrap();
+        assert_eq!(name, "?");
     }
 
     #[test]

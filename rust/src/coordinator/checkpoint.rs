@@ -70,7 +70,10 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
-    pub fn save(&self, path: &Path) -> Result<()> {
+    /// Encode to the SBWD0002 wire format.  The byte form (not the file)
+    /// is the canonical artifact: the supervisor stores checkpoints in the
+    /// content-addressed registry by the sha256 of exactly these bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
         let mut buf: Vec<u8> = Vec::new();
         buf.extend_from_slice(MAGIC_V2);
         buf.extend_from_slice(&self.step.to_le_bytes());
@@ -98,6 +101,11 @@ impl Checkpoint {
                 buf.extend_from_slice(&x.to_le_bytes());
             }
         }
+        buf
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let buf = self.to_bytes();
         // Atomic-ish write: temp file then rename.
         let tmp = path.with_extension("tmp");
         fs::File::create(&tmp)
@@ -113,6 +121,13 @@ impl Checkpoint {
         fs::File::open(path)
             .and_then(|mut f| f.read_to_end(&mut buf))
             .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Checkpoint::from_bytes(&buf)
+            .with_context(|| format!("decoding checkpoint {}", path.display()))
+    }
+
+    /// Decode the SBWD0002 wire format (hardened: every length field is
+    /// bounds-checked against the remaining bytes before use).
+    pub fn from_bytes(buf: &[u8]) -> Result<Checkpoint> {
         let mut pos = 0usize;
         // `n` is attacker-controlled for name/dim/data reads (it comes from
         // length fields in the file), so the bound check must not itself
@@ -148,14 +163,13 @@ impl Checkpoint {
         let magic = take(&mut pos, 8)?;
         if magic == MAGIC_V1 {
             bail!(
-                "{} is a format-v1 checkpoint (pre-TrainEngine: no version story, no \
+                "format-v1 checkpoint (pre-TrainEngine: no version story, no \
                  optimizer RNG); v1 is no longer readable — re-run training to produce \
-                 a v2 (SBWD0002) checkpoint",
-                path.display()
+                 a v2 (SBWD0002) checkpoint"
             );
         }
         if magic != MAGIC_V2 {
-            bail!("bad checkpoint magic in {} (not an SBWD checkpoint)", path.display());
+            bail!("bad checkpoint magic (not an SBWD checkpoint)");
         }
         let step = u64::from_le_bytes(take8(&mut pos)?);
         let tokens_seen = u64::from_le_bytes(take8(&mut pos)?);
@@ -172,7 +186,7 @@ impl Checkpoint {
                     gauss_spare: (has_spare != 0).then_some(spare),
                 })
             }
-            other => bail!("corrupt rng_present flag {other} in {}", path.display()),
+            other => bail!("corrupt rng_present flag {other}"),
         };
         let count = u32::from_le_bytes(take4(&mut pos)?) as usize;
         // Never size an allocation from an untrusted count alone: every
@@ -223,7 +237,7 @@ impl Checkpoint {
             tensors.push((name, Tensor::from_vec(&shape, data)?));
         }
         if pos != buf.len() {
-            bail!("trailing bytes in checkpoint {}", path.display());
+            bail!("trailing bytes in checkpoint");
         }
         Ok(Checkpoint {
             step,
@@ -281,6 +295,26 @@ mod tests {
         let path = temp("nrng.ckpt");
         ckpt.save(&path).unwrap();
         assert_eq!(Checkpoint::load(&path).unwrap(), ckpt);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn byte_roundtrip_without_filesystem() {
+        let mut noise = Pcg64::new(3, 7);
+        noise.gaussian();
+        let ckpt = Checkpoint {
+            step: 11,
+            tokens_seen: 11 * 256,
+            rng: Some(RngState::from_rng(&noise)),
+            tensors: vec![("w".into(), Tensor::scalar(0.5))],
+        };
+        let bytes = ckpt.to_bytes();
+        assert_eq!(Checkpoint::from_bytes(&bytes).unwrap(), ckpt);
+        // The byte form is what `save` writes, so registry-stored bytes
+        // and file checkpoints are interchangeable.
+        let path = temp("bytes.ckpt");
+        ckpt.save(&path).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), bytes);
         std::fs::remove_file(&path).unwrap();
     }
 

@@ -14,6 +14,7 @@ pub mod distributed;
 pub mod engine;
 pub mod noise;
 pub mod schedule;
+pub mod supervisor;
 pub mod trainer;
 
 pub use accumulator::{microbatches_for_tps, GradAccumulator};
@@ -21,4 +22,5 @@ pub use checkpoint::{Checkpoint, RngState};
 pub use engine::{EngineKind, EngineState, MicroStats, NativeEngine, TrainEngine, TrainerFactory,
                  XlaEngine};
 pub use schedule::CosineSchedule;
+pub use supervisor::{Intervention, SupervisedOutcome, SupervisorConfig};
 pub use trainer::{RunReport, RunStatus, Trainer};

@@ -1,0 +1,689 @@
+//! Fault-tolerant training supervisor (DESIGN.md §16).
+//!
+//! Wraps the [`Trainer`] step loop with three robustness planes:
+//!
+//! 1. **Crash-safe periodic checkpointing** — every `save_every` steps the
+//!    full training state (params + AdamW moments + RNG + counters) is
+//!    stored content-addressed through the run registry (`ckpt_NNNNNN`
+//!    artifacts) together with the metric CSVs, and the `running`
+//!    manifest is persisted via [`RunHandle::save_progress`].  A killed
+//!    run resumes from its newest readable checkpoint and — because the
+//!    engine, data stream, noise RNG, and CSV encoding are all
+//!    deterministic and byte-exact — re-emits *bitwise identical* curve
+//!    artifacts to an uninterrupted run.
+//! 2. **Divergence recovery ladder** — when the trainer flags divergence
+//!    (the §5.3 `max_attn_logit` ceiling or the non-finite backstop), the
+//!    supervisor rolls back to the last good checkpoint and applies a
+//!    staged intervention: LR backoff (× `lr_backoff`), halving
+//!    tokens-per-step (a gradient-accumulation resplit), then escalating
+//!    the attention arm (adding QK-norm / smoothing).  Every attempt is
+//!    recorded as a `recovery` block in the `sagebwd-run-v1` manifest and
+//!    as trace counters, bounded by `max_recoveries`.
+//! 3. **Write verification** — each checkpoint is read back through the
+//!    registry's verified-get; a torn write (seen in the wild as
+//!    power-loss truncation, here injected via `SAGEBWD_FAULTS=torn@N`)
+//!    is repaired in place by re-putting the bytes and recorded as a
+//!    `rewrite_artifact` recovery.
+//!
+//! Run identity is the **base** config: supervisor knobs and applied
+//! interventions are not part of the registry key (like the trace knobs),
+//! so a supervised run and a plain run of the same config share one
+//! manifest.  The effective config after interventions is recoverable
+//! from the last `recovery` record, which is how a resumed process knows
+//! to rebuild the escalated trainer.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::TrainConfig;
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::engine::TrainerFactory;
+use crate::coordinator::trainer::{RunReport, RunStatus, Trainer};
+use crate::data::PrefetchBatcher;
+use crate::registry::{CorruptObject, RecoveryRecord, Registry, RunHandle, RunManifest, RunState};
+use crate::telemetry::{trace, Log, Metrics, Series};
+use crate::util::json::Json;
+
+/// One stage of the divergence-recovery ladder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Intervention {
+    /// Multiply `peak_lr` by the configured backoff factor.
+    LrBackoff,
+    /// Halve `tokens_per_step` (gradient-accumulation resplit; steps and
+    /// microbatch shape unchanged).  Skipped when the halved TPS is no
+    /// longer a multiple of microbatch×seq_len.
+    HalveTps,
+    /// Escalate the attention arm toward more stabilization (see
+    /// [`escalate_variant`]).  Skipped when no escalation exists.
+    EscalateArm,
+}
+
+impl Intervention {
+    /// The manifest `action` string for this stage.
+    pub fn action(self) -> &'static str {
+        match self {
+            Intervention::LrBackoff => "lr_backoff",
+            Intervention::HalveTps => "halve_tps",
+            Intervention::EscalateArm => "escalate_arm",
+        }
+    }
+}
+
+/// Parse a `--ladder lr,tps,arm` stage list.
+pub fn parse_ladder(s: &str) -> Result<Vec<Intervention>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| match t {
+            "lr" => Ok(Intervention::LrBackoff),
+            "tps" => Ok(Intervention::HalveTps),
+            "arm" => Ok(Intervention::EscalateArm),
+            other => bail!("unknown ladder stage {other:?} (known: lr, tps, arm)"),
+        })
+        .collect()
+}
+
+/// The arm-escalation map: each variant's next-more-stable neighbour
+/// (§5.3: QK-norm bounds the logits; smoothing reduces quantization
+/// error).  `fpa_qknorm` and `sage_qknorm_qksm` are already at the top.
+pub fn escalate_variant(v: &str) -> Option<&'static str> {
+    match v {
+        "sage_noqknorm" => Some("sage_qknorm"),
+        "fpa_noqknorm" => Some("fpa_qknorm"),
+        "sage_qknorm_nosm" => Some("sage_qknorm"),
+        "sage_qknorm" => Some("sage_qknorm_qksm"),
+        _ => None,
+    }
+}
+
+/// Supervisor policy knobs.  Deliberately **not** part of the run key:
+/// they shape *how* a config gets trained, not *what* is trained.
+#[derive(Debug, Clone)]
+pub struct SupervisorConfig {
+    /// Checkpoint + persist the manifest every N optimizer steps
+    /// (0 = only at completion).
+    pub save_every: u64,
+    /// Rollback budget: divergence-ladder and step-error retries combined
+    /// (0 = no recovery; divergence finishes the run like the plain path).
+    pub max_recoveries: u64,
+    /// LR multiplier applied by [`Intervention::LrBackoff`].
+    pub lr_backoff: f64,
+    /// Staged interventions, indexed by divergence-recovery count;
+    /// exhausted or inapplicable stages fall back to an LR backoff.
+    pub ladder: Vec<Intervention>,
+    /// Stop after N steps executed *in this process* without finishing
+    /// the manifest — the crash-simulation hook used by the resume tests
+    /// and the CI fault-injection smoke (a return, not a panic, so the
+    /// harness can assert on the outcome).
+    pub halt_after: Option<u64>,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> SupervisorConfig {
+        SupervisorConfig {
+            save_every: 0,
+            max_recoveries: 0,
+            lr_backoff: 0.5,
+            ladder: vec![
+                Intervention::LrBackoff,
+                Intervention::HalveTps,
+                Intervention::EscalateArm,
+            ],
+            halt_after: None,
+        }
+    }
+}
+
+/// What a supervised run did.
+#[derive(Debug)]
+pub struct SupervisedOutcome {
+    pub report: RunReport,
+    /// Every recovery recorded on the manifest (including ones inherited
+    /// from interrupted prior invocations of the same run).
+    pub recoveries: Vec<RecoveryRecord>,
+    /// The config actually in effect at the end (base + interventions).
+    pub effective: TrainConfig,
+    /// Checkpoint step this invocation resumed from, if any.
+    pub resumed_from: Option<u64>,
+    /// True when `halt_after` fired: the manifest is still `running` and
+    /// a later invocation is expected to resume.
+    pub halted: bool,
+}
+
+/// Apply one ladder stage to the current effective config; `None` when
+/// the stage is inapplicable (the caller falls back to an LR backoff).
+fn apply_intervention(
+    iv: Intervention,
+    cur: &TrainConfig,
+    gamma: f64,
+    per_micro: u64,
+) -> Option<TrainConfig> {
+    let mut cfg = cur.clone();
+    match iv {
+        Intervention::LrBackoff => {
+            cfg.peak_lr = cur.peak_lr * gamma;
+            Some(cfg)
+        }
+        Intervention::HalveTps => {
+            let half = cur.tokens_per_step / 2;
+            if cur.tokens_per_step % 2 == 0 && half >= per_micro && half % per_micro == 0 {
+                cfg.tokens_per_step = half;
+                Some(cfg)
+            } else {
+                None
+            }
+        }
+        Intervention::EscalateArm => escalate_variant(&cur.variant).map(|v| {
+            cfg.variant = v.to_string();
+            cfg
+        }),
+    }
+}
+
+/// Registry artifact name for the checkpoint at `step`.
+fn ckpt_name(step: u64) -> String {
+    format!("ckpt_{step:06}")
+}
+
+/// Rebuild the metric registry from a manifest's CSV artifacts, rewound
+/// to the state as of a checkpoint at `ckpt_step` (i.e. keeping only
+/// points from steps `< ckpt_step`).  `Series::from_csv` round-trips
+/// `f64` bitwise, so a resumed run's re-recorded CSVs are byte-identical
+/// to an uninterrupted run's.
+fn restore_metrics(registry: &Registry, m: &RunManifest, ckpt_step: u64) -> Result<Metrics> {
+    let mut metrics = Metrics::new();
+    for a in &m.artifacts {
+        let Some(name) = a.name.strip_suffix(".csv") else {
+            continue;
+        };
+        let bytes = registry
+            .read_object(&a.sha256)
+            .with_context(|| format!("restoring metric series {}", a.name))?;
+        let text = std::str::from_utf8(&bytes)
+            .with_context(|| format!("metric series {} is not UTF-8", a.name))?;
+        let mut series =
+            Series::from_csv(text).with_context(|| format!("parsing series {}", a.name))?;
+        if ckpt_step == 0 {
+            series = Series::default();
+        } else {
+            series.truncate_after(ckpt_step - 1);
+        }
+        if !series.points.is_empty() {
+            metrics.series.insert(name.to_string(), series);
+        }
+    }
+    Ok(metrics)
+}
+
+/// Build a trainer for `cfg`, restore `ckpt` into it (leniently when the
+/// variant escalated away from `base_variant`), install the rewound
+/// metrics, and replay the deterministic data stream to the checkpoint's
+/// position.  Used both for registry resume and in-run rollback.
+fn rebuild_at_checkpoint(
+    factory: &TrainerFactory,
+    cfg: &TrainConfig,
+    base_variant: &str,
+    ckpt: &Checkpoint,
+    metrics: &Metrics,
+) -> Result<(Trainer, PrefetchBatcher)> {
+    let mut trainer = factory.trainer(cfg.clone())?;
+    trainer.restore(ckpt, cfg.variant != base_variant)?;
+    trainer.metrics = metrics.clone();
+    let (mb, sl) = trainer.microbatch_shape();
+    let per_micro = (mb * sl) as u64;
+    let mut batches = trainer.make_batcher(512, 4)?;
+    // The batcher is a pure function of (seed, shard): consuming
+    // tokens_seen / per_micro batches lands exactly where the
+    // checkpointed run was.
+    for _ in 0..ckpt.tokens_seen / per_micro {
+        batches.next_batch()?;
+    }
+    Ok((trainer, batches))
+}
+
+/// Checkpoint the trainer into the registry with a verified read-back;
+/// a torn write is repaired in place and recorded as a
+/// `rewrite_artifact` recovery.
+fn save_verified_checkpoint(
+    run: &mut RunHandle<'_>,
+    trainer: &Trainer,
+    effective: &TrainConfig,
+    view_dir: &Path,
+    log: &Log,
+) -> Result<Checkpoint> {
+    let _span = trace::span("supervisor_checkpoint");
+    let ckpt = trainer.checkpoint()?;
+    let bytes = ckpt.to_bytes();
+    let name = ckpt_name(ckpt.step);
+    let hash = run.record_bytes(&name, &bytes, None)?;
+    if let Err(e) = run.registry().read_object(&hash) {
+        if e.downcast_ref::<CorruptObject>().is_none() {
+            return Err(e);
+        }
+        // Self-heal: put_bytes rewrites an object whose content no longer
+        // matches its address.
+        run.record_bytes(&name, &bytes, None)?;
+        run.registry()
+            .read_object(&hash)
+            .context("checkpoint object still corrupt after rewrite")?;
+        let attempt = (run.manifest().recoveries.len() + 1) as u64;
+        run.push_recovery(RecoveryRecord {
+            attempt,
+            at_step: ckpt.step,
+            resume_step: ckpt.step,
+            reason: format!("{e:#}"),
+            action: "rewrite_artifact".to_string(),
+            peak_lr: effective.peak_lr,
+            tokens_per_step: effective.tokens_per_step,
+            variant: effective.variant.clone(),
+        });
+        trace::counter_add("supervisor.rewrites", 1);
+        log.info(&format!(
+            "supervisor: torn checkpoint write at step {} detected and repaired",
+            ckpt.step
+        ));
+    }
+    run.record_metrics(&trainer.metrics, view_dir)?;
+    run.save_progress()?;
+    trace::counter_add("supervisor.checkpoints", 1);
+    Ok(ckpt)
+}
+
+fn num_or_null(v: Option<f64>) -> Json {
+    v.map(Json::from).unwrap_or(Json::Null)
+}
+
+fn final_summary(run: &RunHandle<'_>, report: &RunReport, diverged_at: Option<u64>) -> Json {
+    Json::from_pairs(vec![
+        ("diverged_at", num_or_null(diverged_at.map(|s| s as f64))),
+        ("final_loss", num_or_null(report.final_loss)),
+        ("max_attn_logit", num_or_null(report.max_attn_logit)),
+        ("steps_done", Json::from(report.steps_done as i64)),
+        ("tokens_seen", Json::from(report.tokens_seen as i64)),
+        (
+            "recoveries",
+            Json::from(run.manifest().recoveries.len() as i64),
+        ),
+    ])
+}
+
+/// Run one training config under supervision, recording through the run
+/// registry.  Resumes in place from the newest readable checkpoint when
+/// the run's manifest already exists (any status).
+#[allow(clippy::too_many_arguments)]
+pub fn run_supervised(
+    factory: &TrainerFactory,
+    registry: &Registry,
+    experiment: &str,
+    label: &str,
+    base: &TrainConfig,
+    sup: &SupervisorConfig,
+    view_dir: &Path,
+    log: &Log,
+) -> Result<SupervisedOutcome> {
+    base.validate()?;
+    if !(sup.lr_backoff > 0.0 && sup.lr_backoff < 1.0) {
+        bail!("supervisor lr_backoff must be in (0, 1), got {}", sup.lr_backoff);
+    }
+    let mut config = base.to_json();
+    config.set("backend", Json::from(factory.backend_name()));
+    let key = Registry::run_key(&config, factory.backend_name());
+    let (mut run, prior) = registry.resume_or_begin(experiment, label, config, key)?;
+
+    // Effective config = base + every intervention already on record
+    // (each recovery record carries the full effective triple, so the
+    // last one is authoritative).
+    let mut effective = base.clone();
+    if let Some(rec) = run.manifest().recoveries.last() {
+        effective.peak_lr = rec.peak_lr;
+        effective.tokens_per_step = rec.tokens_per_step;
+        effective.variant = rec.variant.clone();
+        effective
+            .validate()
+            .context("manifest recovery record yields an invalid effective config")?;
+    }
+
+    let mut trainer = factory.trainer(effective.clone())?;
+    let (mb, sl) = trainer.microbatch_shape();
+    let per_micro = (mb * sl) as u64;
+    let mut batches = trainer.make_batcher(512, 4)?;
+    let mut resumed_from = None;
+    if let Some(p) = &prior {
+        // Newest readable checkpoint wins; a corrupt one (e.g. a torn
+        // write the process died before verifying) falls back to the
+        // next-older, never to silently wrong bytes.
+        let mut ckpts: Vec<(u64, String, String)> = p
+            .artifacts
+            .iter()
+            .filter_map(|a| {
+                a.name
+                    .strip_prefix("ckpt_")
+                    .and_then(|s| s.parse::<u64>().ok())
+                    .map(|step| (step, a.name.clone(), a.sha256.clone()))
+            })
+            .collect();
+        ckpts.sort_by(|a, b| b.0.cmp(&a.0));
+        for (step, name, hash) in ckpts {
+            let bytes = match registry.read_object(&hash) {
+                Ok(b) => b,
+                Err(e) => {
+                    log.info(&format!(
+                        "supervisor: checkpoint {name} unreadable ({e:#}); trying an older one"
+                    ));
+                    continue;
+                }
+            };
+            let ckpt = Checkpoint::from_bytes(&bytes)
+                .with_context(|| format!("decoding registry checkpoint {name}"))?;
+            let metrics = restore_metrics(registry, p, ckpt.step)?;
+            let (t, b) =
+                rebuild_at_checkpoint(factory, &effective, &base.variant, &ckpt, &metrics)?;
+            trainer = t;
+            batches = b;
+            log.info(&format!(
+                "supervisor: resumed {label} from checkpoint step {step} [{}]",
+                &hash[..16.min(hash.len())]
+            ));
+            resumed_from = Some(step);
+            break;
+        }
+    }
+
+    let total = effective.steps;
+    log.info(&format!(
+        "supervised run {label} [{}]: {} steps, save_every {}, max_recoveries {}{}",
+        run.key16(),
+        total,
+        sup.save_every,
+        sup.max_recoveries,
+        resumed_from
+            .map(|s| format!(", resumed@{s}"))
+            .unwrap_or_default(),
+    ));
+
+    // In-memory last-good state: rollback works even before (or without)
+    // the first periodic save.  At resume time this is the restored
+    // checkpoint; fresh runs snapshot their initialization.
+    let mut last_ckpt = trainer.checkpoint()?;
+    let mut last_metrics = trainer.metrics.clone();
+
+    // Rollback budget consumed so far (ladder + retry; `rewrite_artifact`
+    // self-heals are bookkeeping, not rollbacks, and don't consume it).
+    let mut rollbacks = run
+        .manifest()
+        .recoveries
+        .iter()
+        .filter(|r| r.action != "rewrite_artifact")
+        .count() as u64;
+    let mut steps_this_process = 0u64;
+
+    while trainer.step() < total {
+        if let Some(h) = sup.halt_after {
+            if steps_this_process >= h {
+                log.info(&format!(
+                    "supervisor: halting after {steps_this_process} steps (simulated crash; \
+                     manifest left running at step {})",
+                    trainer.step()
+                ));
+                let report = RunReport {
+                    status: RunStatus::Completed,
+                    steps_done: trainer.step(),
+                    final_loss: trainer.metrics.get("train_loss").and_then(|s| s.last()),
+                    tokens_seen: trainer.tokens_seen(),
+                    max_attn_logit: trainer.run_max_logit(),
+                };
+                let recoveries = run.manifest().recoveries.clone();
+                return Ok(SupervisedOutcome {
+                    report,
+                    recoveries,
+                    effective,
+                    resumed_from,
+                    halted: true,
+                });
+            }
+        }
+
+        let step_result = trainer.train_step(&mut batches);
+        steps_this_process += 1;
+
+        // Classify: hard error (engine fault), divergence, or healthy.
+        let (failed, diverged) = match &step_result {
+            Err(_) => (true, false),
+            Ok(_) => (false, trainer.diverged()),
+        };
+
+        if failed || diverged {
+            let (at_step, reason) = if failed {
+                // The attempted step never completed: trainer.step() is
+                // still the failing step's number.
+                let e = match &step_result {
+                    Err(e) => format!("step error: {e:#}"),
+                    Ok(_) => String::new(),
+                };
+                (trainer.step(), e)
+            } else {
+                (
+                    trainer.step() - 1,
+                    trainer
+                        .divergence_reason()
+                        .unwrap_or("divergence flagged without a reason")
+                        .to_string(),
+                )
+            };
+
+            if rollbacks >= sup.max_recoveries {
+                if let Err(e) = step_result {
+                    let _ = run.finish(RunState::Failed);
+                    return Err(e.context(format!(
+                        "step {at_step} failed with no recovery budget left"
+                    )));
+                }
+                // Divergence with the budget spent (or zero): record the
+                // curves and finish `diverged`, exactly like the plain
+                // path — the supervisor adds bookkeeping, not silence.
+                log.info(&format!(
+                    "supervisor: step {at_step} DIVERGED ({reason}); recovery budget exhausted \
+                     ({rollbacks}/{})",
+                    sup.max_recoveries
+                ));
+                run.record_metrics(&trainer.metrics, view_dir)?;
+                let report = RunReport {
+                    status: RunStatus::Diverged { at_step },
+                    steps_done: trainer.step(),
+                    final_loss: trainer.metrics.get("train_loss").and_then(|s| s.last()),
+                    tokens_seen: trainer.tokens_seen(),
+                    max_attn_logit: trainer.run_max_logit(),
+                };
+                run.set_summary(final_summary(&run, &report, Some(at_step)));
+                let recoveries = run.manifest().recoveries.clone();
+                run.finish(RunState::Diverged)?;
+                return Ok(SupervisedOutcome {
+                    report,
+                    recoveries,
+                    effective,
+                    resumed_from,
+                    halted: false,
+                });
+            }
+
+            rollbacks += 1;
+            let attempt = (run.manifest().recoveries.len() + 1) as u64;
+            let (new_cfg, action) = if failed {
+                // Transient execution fault: same config, try again from
+                // the last good checkpoint.
+                (effective.clone(), "retry")
+            } else {
+                // Divergence ladder, indexed by divergence recoveries so
+                // far; inapplicable/exhausted stages back off the LR.
+                let ladder_idx = run
+                    .manifest()
+                    .recoveries
+                    .iter()
+                    .filter(|r| {
+                        matches!(r.action.as_str(), "lr_backoff" | "halve_tps" | "escalate_arm")
+                    })
+                    .count();
+                let chosen = sup
+                    .ladder
+                    .get(ladder_idx)
+                    .copied()
+                    .unwrap_or(Intervention::LrBackoff);
+                match apply_intervention(chosen, &effective, sup.lr_backoff, per_micro) {
+                    Some(cfg) => (cfg, chosen.action()),
+                    None => {
+                        let mut cfg = effective.clone();
+                        cfg.peak_lr *= sup.lr_backoff;
+                        (cfg, "lr_backoff")
+                    }
+                }
+            };
+
+            let _span = trace::span("supervisor_recovery");
+            log.info(&format!(
+                "supervisor: recovery {attempt} at step {at_step} ({reason}) → {action}, \
+                 rollback to step {} (lr {:.2e}, tps {}, {})",
+                last_ckpt.step, new_cfg.peak_lr, new_cfg.tokens_per_step, new_cfg.variant
+            ));
+            run.push_recovery(RecoveryRecord {
+                attempt,
+                at_step,
+                resume_step: last_ckpt.step,
+                reason,
+                action: action.to_string(),
+                peak_lr: new_cfg.peak_lr,
+                tokens_per_step: new_cfg.tokens_per_step,
+                variant: new_cfg.variant.clone(),
+            });
+            // The recovery is on disk before the retry begins: a crash
+            // mid-recovery resumes with the intervention already applied.
+            run.save_progress()?;
+            trace::counter_add("supervisor.recoveries", 1);
+
+            let (t, b) = rebuild_at_checkpoint(
+                factory,
+                &new_cfg,
+                &base.variant,
+                &last_ckpt,
+                &last_metrics,
+            )?;
+            trainer = t;
+            batches = b;
+            trainer.metrics.record("recovery", at_step, attempt as f64);
+            effective = new_cfg;
+            continue;
+        }
+
+        // Healthy step.
+        if let Ok(loss) = &step_result {
+            if effective.log_every > 0 && trainer.step() % effective.log_every == 0 {
+                log.info(&format!(
+                    "step {:>5}/{total}  loss {loss:.4}  [supervised]",
+                    trainer.step()
+                ));
+            }
+        }
+        if sup.save_every > 0 && trainer.step() % sup.save_every == 0 {
+            last_ckpt = save_verified_checkpoint(&mut run, &trainer, &effective, view_dir, log)?;
+            last_metrics = trainer.metrics.clone();
+        }
+    }
+
+    // Completion: final checkpoint + curves + summary, then `complete`.
+    let final_ckpt = save_verified_checkpoint(&mut run, &trainer, &effective, view_dir, log)?;
+    let final_loss = trainer
+        .metrics
+        .get("train_loss")
+        .and_then(|s| s.tail_mean(std::cmp::max(1, (total / 20) as usize)));
+    let report = RunReport {
+        status: RunStatus::Completed,
+        steps_done: trainer.step(),
+        final_loss,
+        tokens_seen: trainer.tokens_seen(),
+        max_attn_logit: trainer.run_max_logit(),
+    };
+    run.set_summary(final_summary(&run, &report, None));
+    let recoveries = run.manifest().recoveries.clone();
+    run.finish(RunState::Complete)?;
+    log.info(&format!(
+        "supervised run {label} complete: {} steps, {} recoveries, final checkpoint step {}",
+        report.steps_done,
+        recoveries.len(),
+        final_ckpt.step
+    ));
+    Ok(SupervisedOutcome {
+        report,
+        recoveries,
+        effective,
+        resumed_from,
+        halted: false,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_parses_and_rejects() {
+        assert_eq!(
+            parse_ladder("lr,tps,arm").unwrap(),
+            vec![
+                Intervention::LrBackoff,
+                Intervention::HalveTps,
+                Intervention::EscalateArm
+            ]
+        );
+        assert_eq!(parse_ladder(" lr , lr ").unwrap().len(), 2);
+        assert!(parse_ladder("lr,bogus").is_err());
+        assert!(parse_ladder("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn escalation_map_tops_out() {
+        assert_eq!(escalate_variant("sage_noqknorm"), Some("sage_qknorm"));
+        assert_eq!(escalate_variant("sage_qknorm"), Some("sage_qknorm_qksm"));
+        assert_eq!(escalate_variant("sage_qknorm_qksm"), None);
+        assert_eq!(escalate_variant("fpa_qknorm"), None);
+        // Every escalation target is a valid variant.
+        for v in crate::config::VARIANTS {
+            if let Some(next) = escalate_variant(v) {
+                assert!(crate::config::VARIANTS.contains(&next), "{v} → {next}");
+            }
+        }
+    }
+
+    #[test]
+    fn interventions_respect_tps_granularity() {
+        let cfg = TrainConfig {
+            tokens_per_step: 256,
+            ..TrainConfig::default()
+        };
+        // 256 → 128 is fine at per_micro 64.
+        let halved = apply_intervention(Intervention::HalveTps, &cfg, 0.5, 64).unwrap();
+        assert_eq!(halved.tokens_per_step, 128);
+        assert_eq!(halved.steps, cfg.steps, "steps stay fixed");
+        // 128 → 64 fine; 64 → 32 < per_micro: inapplicable.
+        let cfg64 = TrainConfig {
+            tokens_per_step: 64,
+            ..TrainConfig::default()
+        };
+        assert!(apply_intervention(Intervention::HalveTps, &cfg64, 0.5, 64).is_none());
+        // LR backoff multiplies.
+        let lr = apply_intervention(Intervention::LrBackoff, &cfg, 0.25, 64).unwrap();
+        assert!((lr.peak_lr - cfg.peak_lr * 0.25).abs() < 1e-12);
+        // Arm escalation tops out as None.
+        let top = TrainConfig {
+            variant: "fpa_qknorm".into(),
+            ..TrainConfig::default()
+        };
+        assert!(apply_intervention(Intervention::EscalateArm, &top, 0.5, 64).is_none());
+    }
+
+    #[test]
+    fn checkpoint_names_are_sortable() {
+        assert_eq!(ckpt_name(4), "ckpt_000004");
+        assert_eq!(ckpt_name(123_456), "ckpt_123456");
+        assert!(ckpt_name(5) > ckpt_name(4));
+    }
+}

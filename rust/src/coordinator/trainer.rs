@@ -73,6 +73,10 @@ pub struct Trainer {
     step: u64,
     tokens_seen: u64,
     diverged: bool,
+    /// Why the run diverged (set alongside `diverged`): the ceiling
+    /// crossing or the first named non-finite gradient site — what the
+    /// supervisor records in its `recovery` manifest blocks.
+    divergence_reason: Option<String>,
     noise_rng: crate::util::rng::Pcg64,
 }
 
@@ -110,6 +114,7 @@ impl Trainer {
             step: 0,
             tokens_seen: 0,
             diverged: false,
+            divergence_reason: None,
             noise_rng: crate::util::rng::Pcg64::new(cfg_seed, 0x4E01),
         })
     }
@@ -134,6 +139,20 @@ impl Trainer {
 
     pub fn step(&self) -> u64 {
         self.step
+    }
+
+    pub fn tokens_seen(&self) -> u64 {
+        self.tokens_seen
+    }
+
+    /// Whether the run has hit a divergence condition.
+    pub fn diverged(&self) -> bool {
+        self.diverged
+    }
+
+    /// Why the run diverged (None while healthy).
+    pub fn divergence_reason(&self) -> Option<&str> {
+        self.divergence_reason.as_deref()
     }
 
     pub fn param_names(&self) -> &[String] {
@@ -178,6 +197,9 @@ impl Trainer {
         // fwd/bwd → layer → attention → GEMM hierarchy under `--trace`.
         let _span = trace::span("train_step");
         let t0 = trace::now_ns();
+        // Fault plane (DESIGN.md §16): arm any panic/NaN fault scheduled
+        // for this step before the first microbatch dispatch.
+        crate::util::faults::begin_step(self.step);
         qerr::begin_step(self.step);
         let mut acc = GradAccumulator::new(self.engine.grad_shapes());
         let mut step_max_logit: Option<f64> = None;
@@ -196,6 +218,17 @@ impl Trainer {
         }
 
         let (loss, mut grads) = acc.take_mean()?;
+        // Fault plane: poison the scheduled gradient slab (if any) before
+        // the non-finite guards below, so the whole divergence/recovery
+        // path downstream of a real NaN is exercised.
+        if crate::util::faults::active() {
+            let lens: Vec<usize> = grads.iter().map(|g| g.data.len()).collect();
+            if let Some((leaf, idx)) =
+                crate::util::faults::take_nan_slab(self.engine.param_names(), &lens)
+            {
+                grads[leaf].data[idx] = f32::NAN;
+            }
+        }
         // Post-processing: global-norm clip, then the §4.3 noise probe.
         let grad_norm =
             crate::coordinator::noise::clip_global_norm(&mut grads, self.cfg.clip_norm);
@@ -237,8 +270,32 @@ impl Trainer {
         let ceiling_hit = step_max_logit
             .map(|ml| !ml.is_finite() || ml > self.cfg.max_attn_logit_ceiling)
             .unwrap_or(false);
-        if ceiling_hit || !loss.is_finite() || grads.iter().any(|g| !g.is_finite()) {
+        let nonfinite_grads = grads.iter().any(|g| !g.is_finite());
+        if ceiling_hit || !loss.is_finite() || nonfinite_grads {
             self.diverged = true;
+            self.divergence_reason = Some(if ceiling_hit {
+                match step_max_logit {
+                    Some(ml) if ml.is_finite() => format!(
+                        "max_attn_logit {ml:.1} > {}",
+                        self.cfg.max_attn_logit_ceiling
+                    ),
+                    _ => "non-finite max_attn_logit statistic".to_string(),
+                }
+            } else if nonfinite_grads {
+                // Name the first offending site so recovery logs say
+                // *which* gradient went non-finite.
+                match crate::coordinator::accumulator::first_nonfinite_site(
+                    self.engine.param_names(),
+                    &grads,
+                ) {
+                    Some((name, idx, v)) => {
+                        format!("non-finite gradient in {name}[{idx}] ({v})")
+                    }
+                    None => "non-finite gradients".to_string(),
+                }
+            } else {
+                format!("non-finite loss ({loss})")
+            });
             self.metrics.record("diverged", self.step, 1.0);
             self.metrics
                 .record("step_ms", self.step, trace::now_ns().saturating_sub(t0) as f64 / 1e6);
@@ -275,11 +332,8 @@ impl Trainer {
             let loss = self.train_step(batches)?;
             if self.diverged {
                 let why = self
-                    .metrics
-                    .get("max_attn_logit")
-                    .and_then(|s| s.last())
-                    .filter(|&ml| ml > self.cfg.max_attn_logit_ceiling)
-                    .map(|ml| format!("max_attn_logit {ml:.1} > {}", self.cfg.max_attn_logit_ceiling))
+                    .divergence_reason
+                    .clone()
                     .unwrap_or_else(|| "non-finite loss/grads".to_string());
                 log.info(&format!(
                     "step {}: DIVERGED ({why}, loss={loss:.4})",
@@ -322,8 +376,10 @@ impl Trainer {
         })
     }
 
-    /// Save params + optimizer state + RNG + step (checkpoint format v2).
-    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+    /// Snapshot the full training state (params + AdamW moments + RNG +
+    /// counters) as a checkpoint *value* — no I/O.  The supervisor stores
+    /// the byte form content-addressed in the run registry.
+    pub fn checkpoint(&self) -> Result<Checkpoint> {
         let state = self.engine.state()?;
         let mut tensors = Vec::with_capacity(3 * state.params.len());
         for (name, t) in state.names.iter().zip(&state.params) {
@@ -335,36 +391,59 @@ impl Trainer {
         for (name, t) in state.names.iter().zip(&state.v) {
             tensors.push((format!("v.{name}"), t.clone()));
         }
-        Checkpoint {
+        Ok(Checkpoint {
             step: self.step,
             tokens_seen: self.tokens_seen,
             rng: Some(RngState::from_rng(&self.noise_rng)),
             tensors,
-        }
-        .save(path)
+        })
     }
 
-    /// Restore state saved by [`Self::save_checkpoint`].
-    pub fn load_checkpoint(&mut self, path: &Path) -> Result<()> {
-        let ckpt = Checkpoint::load(path)?;
-        let find = |prefix: &str, name: &str| -> Result<Tensor> {
+    /// Save params + optimizer state + RNG + step (checkpoint format v2).
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        self.checkpoint()?.save(path)
+    }
+
+    /// Restore from a checkpoint value.  Strict mode (`lenient = false`)
+    /// requires every leaf of the current model in the checkpoint.
+    /// Lenient mode exists for the supervisor's arm escalation: the new
+    /// variant's schema may add leaves the checkpoint has never seen
+    /// (e.g. the QK-norm gammas) — those keep their fresh initialization
+    /// with zeroed moments, everything else restores from the checkpoint.
+    /// Restoring also clears any divergence flag: a rollback is a return
+    /// to a healthy state.
+    pub fn restore(&mut self, ckpt: &Checkpoint, lenient: bool) -> Result<()> {
+        let find = |prefix: &str, name: &str| -> Option<Tensor> {
             ckpt.tensors
                 .iter()
                 .find(|(n, _)| *n == format!("{prefix}{name}"))
                 .map(|(_, t)| t.clone())
-                .with_context(|| format!("checkpoint missing tensor {prefix}{name}"))
         };
-        let names = self.engine.param_names().to_vec();
+        // Current engine state is the template: lenient fill keeps its
+        // fresh-init params (and gets zero moments) for missing leaves.
+        let current = self.engine.state()?;
+        let names = current.names.clone();
         let mut state = EngineState {
             names: names.clone(),
             params: Vec::with_capacity(names.len()),
             m: Vec::with_capacity(names.len()),
             v: Vec::with_capacity(names.len()),
         };
-        for name in &names {
-            state.params.push(find("", name)?);
-            state.m.push(find("m.", name)?);
-            state.v.push(find("v.", name)?);
+        for (i, name) in names.iter().enumerate() {
+            match (find("", name), find("m.", name), find("v.", name)) {
+                (Some(p), Some(m), Some(v)) => {
+                    state.params.push(p);
+                    state.m.push(m);
+                    state.v.push(v);
+                }
+                _ if lenient => {
+                    let shape = current.params[i].shape.clone();
+                    state.params.push(current.params[i].clone());
+                    state.m.push(Tensor::zeros(&shape));
+                    state.v.push(Tensor::zeros(&shape));
+                }
+                _ => bail!("checkpoint missing tensor {name} (or its m./v. moments)"),
+            }
         }
         self.engine.load_state(&state)?;
         self.step = ckpt.step;
@@ -372,7 +451,14 @@ impl Trainer {
         if let Some(rng) = &ckpt.rng {
             self.noise_rng = rng.to_rng();
         }
+        self.diverged = false;
+        self.divergence_reason = None;
         Ok(())
+    }
+
+    /// Restore state saved by [`Self::save_checkpoint`] (strict).
+    pub fn load_checkpoint(&mut self, path: &Path) -> Result<()> {
+        self.restore(&Checkpoint::load(path)?, false)
     }
 
     /// Compute the training loss of one provided batch without updating —
@@ -538,5 +624,81 @@ mod tests {
     fn invalid_tps_rejected_by_native_engine_shape() {
         // 100 is not a multiple of microbatch×seq_len (2×32).
         assert!(Trainer::native(cfg("sage_qknorm", 2, 100)).is_err());
+    }
+
+    #[test]
+    fn divergence_reason_names_the_ceiling() {
+        let mut c = cfg("fpa_qknorm", 4, 128);
+        c.max_attn_logit_ceiling = 1e-6;
+        let mut t = Trainer::native(c).unwrap();
+        let mut b = t.make_byte_batcher(2);
+        t.train_step(&mut b).unwrap();
+        assert!(t.diverged());
+        let why = t.divergence_reason().unwrap();
+        assert!(why.contains("max_attn_logit"), "{why}");
+        assert!(why.contains("> 0.000001") || why.contains("> 1e-6"), "{why}");
+    }
+
+    #[test]
+    fn nan_fault_reason_names_the_gradient_site() {
+        crate::util::faults::install(
+            crate::util::faults::parse_plan("seed=2; nan@1").unwrap(),
+        );
+        let mut t = Trainer::native(cfg("sage_qknorm", 4, 128)).unwrap();
+        let mut b = t.make_byte_batcher(2);
+        t.train_step(&mut b).unwrap();
+        assert!(!t.diverged(), "step 0 is healthy; the fault is armed for step 1");
+        t.train_step(&mut b).unwrap();
+        assert!(t.diverged());
+        let why = t.divergence_reason().unwrap().to_string();
+        assert!(why.contains("non-finite gradient in "), "{why}");
+        assert!(why.contains('[') && why.contains(']'), "must name the flat index: {why}");
+        crate::util::faults::clear();
+    }
+
+    #[test]
+    fn restore_clears_divergence_and_resumes() {
+        let mut t = Trainer::native(cfg("sage_qknorm", 4, 128)).unwrap();
+        let mut b = t.make_byte_batcher(2);
+        t.train_step(&mut b).unwrap();
+        let ckpt = t.checkpoint().unwrap();
+        // Force a divergence with an injected NaN at step 1.
+        crate::util::faults::install(
+            crate::util::faults::parse_plan("nan@1").unwrap(),
+        );
+        t.train_step(&mut b).unwrap();
+        crate::util::faults::clear();
+        assert!(t.diverged());
+        // Rollback: healthy again, stepping from the checkpoint's step.
+        t.restore(&ckpt, false).unwrap();
+        assert!(!t.diverged());
+        assert!(t.divergence_reason().is_none());
+        assert_eq!(t.step(), 1);
+        assert!(t.train_step(&mut b).unwrap().is_finite());
+    }
+
+    #[test]
+    fn lenient_restore_escalates_variant_schema() {
+        // Arm escalation: a no-QK-norm checkpoint restored into a QK-norm
+        // trainer.  Strict restore must fail (the gamma leaves are
+        // missing); lenient restore keeps their fresh init + zero moments
+        // and the escalated run trains on.
+        let mut a = Trainer::native(cfg("sage_noqknorm", 3, 128)).unwrap();
+        let mut ba = a.make_byte_batcher(2);
+        a.train_step(&mut ba).unwrap();
+        let ckpt = a.checkpoint().unwrap();
+
+        let mut b = Trainer::native(cfg("sage_qknorm", 3, 128)).unwrap();
+        assert!(b.restore(&ckpt, false).is_err());
+        b.restore(&ckpt, true).unwrap();
+        assert_eq!(b.step(), 1);
+        assert_eq!(b.tokens_seen(), 128);
+        let mut bb = b.make_byte_batcher(2);
+        // Replay the stream to the checkpointed step (pure function of
+        // seed), then continue.
+        for _ in 0..b.microbatches_per_step() {
+            bb.next_batch().unwrap();
+        }
+        assert!(b.train_step(&mut bb).unwrap().is_finite());
     }
 }

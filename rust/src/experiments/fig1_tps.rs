@@ -33,7 +33,7 @@ use anyhow::{Context, Result};
 
 use crate::bench::Table;
 use crate::config::TrainConfig;
-use crate::coordinator::{RunStatus, TrainerFactory};
+use crate::coordinator::{supervisor, RunStatus, SupervisorConfig, TrainerFactory};
 use crate::experiments::common::emit;
 use crate::registry::{Registry, RunManifest, RunState};
 use crate::telemetry::{trace, Log};
@@ -60,6 +60,11 @@ pub struct CellCtx<'a> {
     pub experiment: &'a str,
     /// Ignore finished manifests and retrain.
     pub fresh: bool,
+    /// Run cells under the fault-tolerant supervisor (DESIGN.md §16):
+    /// periodic registry checkpoints + the divergence-recovery ladder.
+    /// `None` keeps the plain one-shot `Trainer::run` path (identical
+    /// registry keys either way — supervision is not part of identity).
+    pub supervise: Option<SupervisorConfig>,
 }
 
 /// The exact `TrainConfig` of one (variant, TPS, seed) cell — factored
@@ -172,6 +177,35 @@ pub fn run_cell(
         }
     }
 
+    if let Some(sup) = &ctx.supervise {
+        // Supervised path (DESIGN.md §16): periodic registry checkpoints,
+        // divergence recovery, and in-place resume live in
+        // coordinator::supervisor.  Run key and summary schema match the
+        // plain path exactly, so registry hits work across both.
+        let view_dir = PathBuf::from(ctx.results_dir).join("fig1").join(&label);
+        let out = supervisor::run_supervised(
+            ctx.factory, ctx.registry, ctx.experiment, &label, &cfg, sup, &view_dir, log,
+        )?;
+        if out.halted {
+            anyhow::bail!(
+                "supervised cell {label} halted mid-run (halt_after fired); \
+                 resume it to finish"
+            );
+        }
+        let diverged_at = match out.report.status {
+            RunStatus::Diverged { at_step } => Some(at_step),
+            RunStatus::Completed => None,
+        };
+        return Ok(Outcome {
+            variant: variant.to_string(),
+            tps,
+            final_loss: out.report.final_loss,
+            diverged: diverged_at.is_some(),
+            diverged_at,
+            max_attn_logit: out.report.max_attn_logit,
+        });
+    }
+
     let mut run = ctx.registry.begin_run_keyed(ctx.experiment, &label, config, key)?;
     let mut trainer = ctx.factory.trainer(cfg)?;
     let mut batches = trainer.make_batcher(512, 4)?;
@@ -282,6 +316,7 @@ pub fn run(
         results_dir,
         experiment: "fig1",
         fresh,
+        supervise: None,
     };
     let mut outcomes = Vec::new();
     for (variant, tps) in grid(tps_lo, tps_hi) {

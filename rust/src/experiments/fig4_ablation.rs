@@ -56,6 +56,7 @@ pub fn run(
         results_dir,
         experiment: "fig4",
         fresh,
+        supervise: None,
     };
     let mut outcomes = Vec::new();
     for (variant, tps) in grid(tps_lo, tps_hi) {

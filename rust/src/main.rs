@@ -31,7 +31,7 @@ use anyhow::{bail, Context, Result};
 use sagebwd::bench::Table;
 use sagebwd::cli::Args;
 use sagebwd::config::TrainConfig;
-use sagebwd::coordinator::TrainerFactory;
+use sagebwd::coordinator::{supervisor, SupervisorConfig, TrainerFactory};
 use sagebwd::experiments::{ds_rms, fig1_tps, fig23_speed, fig4_ablation, fig56_layers,
                            noise_probe, table1_sigma, table2_trace};
 use sagebwd::registry::{orchestrator, Registry, RunState};
@@ -78,6 +78,23 @@ grid orchestrator (DESIGN.md §12):
   sagebwd grid resume same as run, but errors if no registry exists yet
   finished cells (complete or diverged) are skipped by key; --jobs J runs
   J cells concurrently, splitting the SAGEBWD_THREADS budget between them
+  --retry-diverged    re-queue cells whose manifests finished diverged and
+                      run them under the supervisor (complete cells stay
+                      skipped); implies --max-recoveries 2 unless given
+fault-tolerant supervisor (DESIGN.md §16; train and grid):
+  --save-every N         crash-safe checkpoint every N steps into the run
+                         registry; rerunning the same config resumes from
+                         the newest readable checkpoint, bitwise-identical
+                         to an uninterrupted run
+  --max-recoveries K     on divergence (or a failed step), roll back to the
+                         last good checkpoint and apply the intervention
+                         ladder, up to K rollbacks per run; every attempt
+                         is recorded in the run manifest (0 = off)
+  --lr-backoff G         peak-LR multiplier for the ladder's `lr` stage,
+                         in (0,1) (default 0.5)
+  --ladder S1,S2,...     intervention order from {lr, tps, arm}
+                         (default lr,tps,arm: back off LR, then halve
+                         tokens/step, then escalate the model arm)
 environment:
   SAGEBWD_THREADS=N      worker threads for the native compute engine
                          (default: available parallelism; 0 or 1 forces
@@ -89,6 +106,13 @@ environment:
                          hardware clamp down; scalar and avx2 are
                          bitwise-identical, fma is opt-in and may round
                          differently; INT8 is bitwise at any setting)
+  SAGEBWD_FAULTS=PLAN    seeded fault injection for exercising the
+                         supervisor (DESIGN.md §16), e.g.
+                         \"seed=1; panic@3; torn@1; nan@5[:wq]\":
+                         worker panic at step 3, first artifact write
+                         torn, NaN-poisoned grads at step 5 (optionally
+                         only leaves matching a substring); each clause
+                         fires once, then retires
 training subcommands (train, fig1, fig4, noise-probe, grid) run on either
 backend; only dist-train still requires --backend xla; run `make results` to
 regenerate every table and figure; `bench-check FILE.json` validates a
@@ -124,6 +148,12 @@ fn run() -> Result<()> {
         trace::set_enabled(true);
     }
     qerr::set_every(args.u64_or("qerr-every", 0)?);
+    // Arm the deterministic fault-injection plane (DESIGN.md §16) from
+    // SAGEBWD_FAULTS, erroring on a malformed plan up front.  Like the
+    // trace/qerr knobs this is process state, not config: run keys and
+    // recorded numerics are unchanged by an (un)armed plan — faults only
+    // decide *whether* a step fails, never what a healthy step computes.
+    sagebwd::util::faults::install_from_env()?;
     let artifacts = args.str_or("artifacts", DEFAULT_ARTIFACTS_DIR).to_string();
     let results = args.str_or("results", DEFAULT_RESULTS_DIR).to_string();
     // Trace/bench harnesses run on either backend; the native CPU kernels
@@ -390,6 +420,25 @@ fn cmd_grid(args: &Args, factory: TrainerFactory, results: &str) -> Result<()> {
     let seeds = orchestrator::parse_seeds(args.str_or("seeds", "0"))?;
     let jobs = args.usize_or("jobs", 1)?;
     let limit = args.usize_or("limit", 0)?;
+    let retry_diverged = args.flag("retry-diverged");
+    // --retry-diverged re-runs diverged cells under the supervisor so the
+    // second attempt gets the recovery ladder; without an explicit
+    // --max-recoveries it defaults to 2 rollbacks (otherwise the retry
+    // would just diverge identically — same config, same seed).
+    let save_every = args.u64_or("save-every", 0)?;
+    let max_recoveries =
+        args.u64_or("max-recoveries", if retry_diverged { 2 } else { 0 })?;
+    let supervise = if save_every > 0 || max_recoveries > 0 {
+        Some(SupervisorConfig {
+            save_every,
+            max_recoveries,
+            lr_backoff: args.f64_or("lr-backoff", 0.5)?,
+            ladder: supervisor::parse_ladder(args.str_or("ladder", "lr,tps,arm"))?,
+            halt_after: None,
+        })
+    } else {
+        None
+    };
     let spec = orchestrator::grid_spec(exp, budget, tps_lo, tps_hi, peak_lr, &seeds)?;
     let registry_dir = std::path::Path::new(results).join("registry");
 
@@ -444,6 +493,8 @@ fn cmd_grid(args: &Args, factory: TrainerFactory, results: &str) -> Result<()> {
                 jobs,
                 limit,
                 args.flag("fresh"),
+                retry_diverged,
+                supervise,
                 &log,
             )?;
             println!(
@@ -489,6 +540,39 @@ fn cmd_train(args: &Args, factory: TrainerFactory, results: &str) -> Result<()> 
     };
     let run_name = args.str_or("run-name", &format!("train_{}_tps{}", cfg.variant, cfg.tokens_per_step)).to_string();
     let log = Log::new(args.flag("verbose"));
+
+    // Fault-tolerant supervisor path (DESIGN.md §16): any supervisor knob
+    // opts in.  Unlike the plain path the view dir is *stable* (not
+    // versioned on collision) — a rerun of the same name is a resume, and
+    // the registry keeps history content-addressed anyway.
+    let save_every = args.u64_or("save-every", 0)?;
+    let max_recoveries = args.u64_or("max-recoveries", 0)?;
+    if save_every > 0 || max_recoveries > 0 {
+        let sup = SupervisorConfig {
+            save_every,
+            max_recoveries,
+            lr_backoff: args.f64_or("lr-backoff", 0.5)?,
+            ladder: supervisor::parse_ladder(args.str_or("ladder", "lr,tps,arm"))?,
+            halt_after: None,
+        };
+        let dir = std::path::Path::new(results).join("train").join(&run_name);
+        let registry = Registry::open(results)?;
+        let out = supervisor::run_supervised(
+            &factory, &registry, "train", &run_name, &cfg, &sup, &dir, &log,
+        )?;
+        log.info(&format!(
+            "done [supervised]: {:?}, final loss {:?}, {} recovery(ies){}  → {}",
+            out.report.status,
+            out.report.final_loss,
+            out.recoveries.len(),
+            out.resumed_from
+                .map(|s| format!(", resumed from step {s}"))
+                .unwrap_or_default(),
+            dir.display()
+        ));
+        return Ok(());
+    }
+
     // run_dir versions on collision (train_x, train_x_2, ...), so a rerun
     // never interleaves CSVs with an earlier run's directory.
     let dir = run_dir(results, &run_name)?;

@@ -105,6 +105,60 @@ impl ArtifactRef {
     }
 }
 
+/// One supervisor recovery attempt (DESIGN.md §16): why the run was
+/// rolled back, where it resumed, and the effective training config the
+/// intervention produced.  `peak_lr`/`tokens_per_step`/`variant` record
+/// the *post-intervention* values so the manifest alone reconstructs the
+/// entire recovery ladder walk.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoveryRecord {
+    /// 1-based attempt number within the run.
+    pub attempt: u64,
+    /// Step at which the failure was detected.
+    pub at_step: u64,
+    /// Step the run rolled back to (the last good checkpoint).
+    pub resume_step: u64,
+    /// Failure description (divergence reason, injected fault, ...).
+    pub reason: String,
+    /// Intervention applied: `lr_backoff`, `halve_tps`, `escalate_arm`,
+    /// `retry`, or `rewrite_artifact`.
+    pub action: String,
+    /// Peak learning rate after the intervention.
+    pub peak_lr: f64,
+    /// Tokens per optimizer step after the intervention.
+    pub tokens_per_step: u64,
+    /// Attention variant after the intervention (arm escalation).
+    pub variant: String,
+}
+
+impl RecoveryRecord {
+    fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("attempt", Json::from(self.attempt as i64)),
+            ("at_step", Json::from(self.at_step as i64)),
+            ("resume_step", Json::from(self.resume_step as i64)),
+            ("reason", Json::from(self.reason.as_str())),
+            ("action", Json::from(self.action.as_str())),
+            ("peak_lr", Json::from(self.peak_lr)),
+            ("tokens_per_step", Json::from(self.tokens_per_step as i64)),
+            ("variant", Json::from(self.variant.as_str())),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<RecoveryRecord> {
+        Ok(RecoveryRecord {
+            attempt: schema::u64_field(j, "attempt")?,
+            at_step: schema::u64_field(j, "at_step")?,
+            resume_step: schema::u64_field(j, "resume_step")?,
+            reason: schema::str_field(j, "reason")?.to_string(),
+            action: schema::str_field(j, "action")?.to_string(),
+            peak_lr: schema::f64_field(j, "peak_lr")?,
+            tokens_per_step: schema::u64_field(j, "tokens_per_step")?,
+            variant: schema::str_field(j, "variant")?.to_string(),
+        })
+    }
+}
+
 /// Parsed (or under-construction) run manifest.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunManifest {
@@ -122,6 +176,9 @@ pub struct RunManifest {
     pub code_version: String,
     pub status: RunState,
     pub artifacts: Vec<ArtifactRef>,
+    /// Supervisor recovery attempts, in order (empty for unsupervised
+    /// runs).  Parsed leniently so pre-supervisor manifests still load.
+    pub recoveries: Vec<RecoveryRecord>,
     /// Small outcome record (experiment-specific; `final_loss`,
     /// `diverged_at`, `max_attn_logit`, ... for training cells).
     pub summary: Json,
@@ -141,6 +198,10 @@ impl RunManifest {
                 "artifacts",
                 Json::Arr(self.artifacts.iter().map(ArtifactRef::to_json).collect()),
             ),
+            {
+                let recs = self.recoveries.iter().map(RecoveryRecord::to_json).collect();
+                ("recoveries", Json::Arr(recs))
+            },
             ("summary", self.summary.clone()),
         ])
     }
@@ -158,6 +219,14 @@ impl RunManifest {
                 .iter()
                 .map(ArtifactRef::from_json)
                 .collect::<Result<Vec<_>>>()?,
+            // Lenient: pre-supervisor manifests have no `recoveries` key.
+            recoveries: match j.get_opt("recoveries") {
+                Some(Json::Arr(items)) => items
+                    .iter()
+                    .map(RecoveryRecord::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                _ => Vec::new(),
+            },
             summary: j.get("summary")?.clone(),
         })
     }
@@ -216,6 +285,16 @@ mod tests {
                     view: None,
                 },
             ],
+            recoveries: vec![RecoveryRecord {
+                attempt: 1,
+                at_step: 12,
+                resume_step: 8,
+                reason: "max_attn_logit 61.2 > 50".into(),
+                action: "lr_backoff".into(),
+                peak_lr: 0.05,
+                tokens_per_step: 2048,
+                variant: "sage_qknorm".into(),
+            }],
             summary: json::parse(r#"{"diverged_at":null,"final_loss":2.5}"#).unwrap(),
         }
     }
@@ -267,6 +346,39 @@ mod tests {
         } else {
             unreachable!();
         }
+    }
+
+    #[test]
+    fn pre_supervisor_manifest_parses_without_recoveries() {
+        // Manifests written before the supervisor era have no
+        // `recoveries` key; they must still load (as an empty list).
+        let j = json::parse(&sample().to_json().to_string()).unwrap();
+        if let Json::Obj(mut o) = j {
+            o.remove("recoveries");
+            let m = RunManifest::from_json(&Json::Obj(o)).unwrap();
+            assert!(m.recoveries.is_empty());
+        } else {
+            unreachable!();
+        }
+    }
+
+    #[test]
+    fn recovery_record_roundtrips_in_order() {
+        let mut m = sample();
+        m.recoveries.push(RecoveryRecord {
+            attempt: 2,
+            at_step: 20,
+            resume_step: 16,
+            reason: "non-finite gradient in blk0.k_proj[3]".into(),
+            action: "halve_tps".into(),
+            peak_lr: 0.05,
+            tokens_per_step: 1024,
+            variant: "sage_qknorm".into(),
+        });
+        let back = RunManifest::parse(&m.to_json().to_string()).unwrap();
+        assert_eq!(back.recoveries.len(), 2);
+        assert_eq!(back.recoveries, m.recoveries);
+        assert_eq!(back.recoveries[1].action, "halve_tps");
     }
 
     #[test]

@@ -16,5 +16,5 @@ pub mod orchestrator;
 pub mod sha256;
 pub mod store;
 
-pub use manifest::{ArtifactRef, RunManifest, RunState, RUN_SCHEMA};
-pub use store::{Registry, RunHandle};
+pub use manifest::{ArtifactRef, RecoveryRecord, RunManifest, RunState, RUN_SCHEMA};
+pub use store::{CorruptObject, Registry, RunHandle};

@@ -21,12 +21,13 @@ use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::TrainerFactory;
+use crate::coordinator::{SupervisorConfig, TrainerFactory};
 use crate::experiments::{fig1_tps, fig4_ablation};
 use crate::registry::manifest::RunState;
 use crate::registry::store::Registry;
 use crate::telemetry::{trace, Log};
 use crate::tensor::linalg;
+use crate::util::faults;
 
 /// One grid cell: a (variant, tps, seed) coordinate plus its display
 /// label (also the legacy curve-dir name).
@@ -142,6 +143,12 @@ pub fn status(
 /// registry smoke uses a strict subset to simulate a mid-grid kill).
 /// Per-cell failures are recorded as `failed` manifests and collected in
 /// the report; the grid keeps executing the remaining cells.
+///
+/// `retry_diverged` re-queues cells whose manifests finished `diverged`
+/// (instead of treating them as registry hits); `complete` cells are
+/// still skipped untouched.  `supervise` runs every executed cell under
+/// the fault-tolerant supervisor (DESIGN.md §16) — the natural partner
+/// of `retry_diverged`, so the second attempt gets the recovery ladder.
 #[allow(clippy::too_many_arguments)]
 pub fn run(
     factory: &TrainerFactory,
@@ -151,6 +158,8 @@ pub fn run(
     jobs: usize,
     limit: usize,
     fresh: bool,
+    retry_diverged: bool,
+    supervise: Option<SupervisorConfig>,
     log: &Log,
 ) -> Result<GridReport> {
     let mut report = GridReport {
@@ -162,7 +171,14 @@ pub fn run(
     let mut todo: Vec<&GridCell> = Vec::new();
     for (cell, st) in spec.cells.iter().zip(status(factory, registry, spec)?) {
         match st.state {
-            Some(state) if !fresh && state.is_finished() => {
+            // `--retry-diverged` re-queues diverged cells for another
+            // attempt (under the supervisor when `supervise` is set);
+            // complete cells stay registry hits either way.
+            Some(state)
+                if !fresh
+                    && state.is_finished()
+                    && !(retry_diverged && matches!(state, RunState::Diverged)) =>
+            {
                 log.info(&format!(
                     "registry hit [{}]: {} already {} — skipping",
                     &st.key[..16],
@@ -201,6 +217,7 @@ pub fn run(
         // re-skip a cell whose stale `running`/`failed` manifest is being
         // replaced — and with `fresh` they must retrain finished cells.
         fresh: true,
+        supervise,
     };
     let queue: Mutex<Vec<&GridCell>> = Mutex::new(todo.into_iter().rev().collect());
     let done: Mutex<(usize, Vec<(String, String)>)> = Mutex::new((0, Vec::new()));
@@ -208,6 +225,11 @@ pub fn run(
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| {
+                // The fault plane is thread-local: each worker re-arms its
+                // own plan from `SAGEBWD_FAULTS`.  The plan was already
+                // validated once at process start, so a parse error here
+                // is unreachable and safely ignored.
+                let _ = faults::install_from_env();
                 linalg::with_thread_cap(cap, || loop {
                     // A poisoned queue mutex means a sibling worker panicked;
                     // re-panicking is the right way to surface that inside

@@ -25,12 +25,12 @@ use std::io::Read as _;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
-use crate::registry::manifest::{ArtifactRef, RunManifest, RunState, RUN_SCHEMA};
+use crate::registry::manifest::{ArtifactRef, RecoveryRecord, RunManifest, RunState, RUN_SCHEMA};
 use crate::registry::sha256;
 use crate::telemetry::Metrics;
-use crate::util::json::Json;
+use crate::util::{faults, json::Json};
 
 /// Characters of the run key used for the on-disk run directory name
 /// (the full hash is in the manifest).
@@ -39,6 +39,34 @@ const KEY_DIR_LEN: usize = 16;
 /// Monotonic discriminator for temp-file names (several orchestrator
 /// workers may stage objects concurrently in one process).
 static TMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Structured corruption error from [`Registry::read_object`]: the bytes
+/// at `objects/<hash>` no longer hash to their address (torn write, bit
+/// rot, truncation).  Downcastable from the `anyhow` chain so callers —
+/// the supervisor's post-save verify — can distinguish corruption (repair
+/// by re-putting the bytes) from a missing object (re-record the run).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CorruptObject {
+    /// The address the object was stored under (expected sha256).
+    pub hash: String,
+    /// What the on-disk bytes actually hash to.
+    pub actual: String,
+    /// On-disk size found.
+    pub bytes: u64,
+}
+
+impl std::fmt::Display for CorruptObject {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "corrupt registry object {}: {} bytes on disk hash to {} \
+             (torn write or bit rot; re-put the content to repair)",
+            self.hash, self.bytes, self.actual
+        )
+    }
+}
+
+impl std::error::Error for CorruptObject {}
 
 /// Handle on one registry root.
 #[derive(Debug, Clone)]
@@ -71,19 +99,30 @@ impl Registry {
 
     /// Store `bytes` content-addressed; returns the sha256 hex address.
     /// Atomic: staged under a unique temp name, renamed into place.
-    /// Idempotent: an existing object is left untouched.
+    /// Idempotent *and self-healing*: an existing object is left
+    /// untouched only if its content still hashes to its address, so
+    /// re-putting known-good bytes repairs a torn earlier write.
     pub fn put_bytes(&self, bytes: &[u8]) -> Result<String> {
         let hash = sha256::hex_digest(bytes);
         let dst = self.object_path(&hash);
-        if dst.is_file() {
-            return Ok(hash);
+        if let Ok(existing) = fs::read(&dst) {
+            if sha256::hex_digest(&existing) == hash {
+                return Ok(hash);
+            }
+            // Corrupt object at this address: fall through and rewrite.
         }
+        // Fault plane (DESIGN.md §16): a `torn@N` fault replaces the N-th
+        // staged payload with a truncated copy.  The address still names
+        // the *intended* content, so a verified read detects the tear and
+        // the self-heal path above repairs it on re-put.
+        let staged = faults::corrupt_write(bytes);
+        let payload: &[u8] = staged.as_deref().unwrap_or(bytes);
         let tmp = self.root.join("objects").join(format!(
             ".tmp-{}-{}",
             std::process::id(),
             TMP_COUNTER.fetch_add(1, Ordering::Relaxed)
         ));
-        fs::write(&tmp, bytes).with_context(|| format!("staging object {}", tmp.display()))?;
+        fs::write(&tmp, payload).with_context(|| format!("staging object {}", tmp.display()))?;
         fs::rename(&tmp, &dst)
             .with_context(|| format!("renaming object into {}", dst.display()))?;
         Ok(hash)
@@ -101,9 +140,22 @@ impl Registry {
         Ok((self.put_bytes(&bytes)?, len))
     }
 
+    /// Read an object, verifying its content against its address.  Bytes
+    /// that no longer hash to `hash` yield a downcastable
+    /// [`CorruptObject`] error instead of silently wrong data.
     pub fn read_object(&self, hash: &str) -> Result<Vec<u8>> {
-        fs::read(self.object_path(hash))
-            .with_context(|| format!("reading object {hash} from {}", self.root.display()))
+        let bytes = fs::read(self.object_path(hash))
+            .with_context(|| format!("reading object {hash} from {}", self.root.display()))?;
+        let actual = sha256::hex_digest(&bytes);
+        if actual != hash {
+            return Err(CorruptObject {
+                hash: hash.to_string(),
+                actual,
+                bytes: bytes.len() as u64,
+            }
+            .into());
+        }
+        Ok(bytes)
     }
 
     /// Materialize a legacy view of an object at `view`: a symlink into
@@ -210,6 +262,7 @@ impl Registry {
             code_version: env!("CARGO_PKG_VERSION").to_string(),
             status: RunState::Running,
             artifacts: Vec::new(),
+            recoveries: Vec::new(),
             summary: Json::obj(),
         };
         manifest.save(&self.manifest_path(&key))?;
@@ -218,6 +271,47 @@ impl Registry {
             key,
             manifest,
         })
+    }
+
+    /// Resume an interrupted run in place, or start a fresh one.  When a
+    /// prior manifest exists (any status), its artifact refs, recovery
+    /// records, and summary are carried onto the new `running` manifest
+    /// in one atomic write — a crash mid-resume never orphans the
+    /// checkpoint refs the resume needs.  Returns the prior manifest so
+    /// the caller can find its last checkpoint.
+    pub fn resume_or_begin(
+        &self,
+        experiment: &str,
+        label: &str,
+        config: Json,
+        key: String,
+    ) -> Result<(RunHandle<'_>, Option<RunManifest>)> {
+        let prior = self.load_run(&key)?;
+        let Some(p) = prior else {
+            return Ok((self.begin_run_keyed(experiment, label, config, key)?, None));
+        };
+        let dir = self.run_dir(&key);
+        fs::create_dir_all(&dir).with_context(|| format!("creating {}", dir.display()))?;
+        let manifest = RunManifest {
+            experiment: experiment.to_string(),
+            label: label.to_string(),
+            config,
+            config_hash: key.clone(),
+            code_version: env!("CARGO_PKG_VERSION").to_string(),
+            status: RunState::Running,
+            artifacts: p.artifacts.clone(),
+            recoveries: p.recoveries.clone(),
+            summary: p.summary.clone(),
+        };
+        manifest.save(&self.manifest_path(&key))?;
+        Ok((
+            RunHandle {
+                registry: self,
+                key,
+                manifest,
+            },
+            Some(p),
+        ))
     }
 }
 
@@ -286,6 +380,29 @@ impl RunHandle<'_> {
     /// Replace the manifest's summary object.
     pub fn set_summary(&mut self, summary: Json) {
         self.manifest.summary = summary;
+    }
+
+    /// The registry this run records into (the supervisor's verified
+    /// read-back path).
+    pub fn registry(&self) -> &Registry {
+        self.registry
+    }
+
+    /// The manifest as recorded so far (still `running` until `finish`).
+    pub fn manifest(&self) -> &RunManifest {
+        &self.manifest
+    }
+
+    /// Append a supervisor recovery record.
+    pub fn push_recovery(&mut self, rec: RecoveryRecord) {
+        self.manifest.recoveries.push(rec);
+    }
+
+    /// Persist the manifest mid-run, status still `Running` — the
+    /// supervisor's crash-safety point after each periodic checkpoint,
+    /// so a kill finds the checkpoint refs in a loadable manifest.
+    pub fn save_progress(&self) -> Result<()> {
+        self.manifest.save(&self.registry.manifest_path(&self.key))
     }
 
     /// Finish the run: writes the final manifest atomically.  This is the
@@ -422,6 +539,120 @@ mod tests {
         // The view's bytes hash to the recorded address.
         let a = m.artifact("train_loss.csv").unwrap();
         assert_eq!(sha256::hex_digest(loss.as_bytes()), a.sha256);
+        fs::remove_dir_all(&results).unwrap();
+    }
+
+    /// Corrupt the stored object for `hash` via `mutate` and assert the
+    /// verified read reports a downcastable [`CorruptObject`].
+    fn corrupt_and_read(tag: &str, mutate: impl FnOnce(Vec<u8>) -> Vec<u8>) -> CorruptObject {
+        let results = temp_results(tag);
+        let reg = Registry::open(&results).unwrap();
+        let h = reg.put_bytes(b"precious artifact bytes").unwrap();
+        let on_disk = fs::read(reg.object_path(&h)).unwrap();
+        fs::write(reg.object_path(&h), mutate(on_disk)).unwrap();
+        let err = reg.read_object(&h).unwrap_err();
+        let corrupt = err
+            .downcast_ref::<CorruptObject>()
+            .unwrap_or_else(|| panic!("not a CorruptObject: {err:#}"))
+            .clone();
+        assert_eq!(corrupt.hash, h);
+        assert_ne!(corrupt.actual, corrupt.hash);
+        fs::remove_dir_all(&results).unwrap();
+        corrupt
+    }
+
+    #[test]
+    fn read_object_detects_flipped_byte() {
+        let c = corrupt_and_read("flip", |mut b| {
+            b[0] ^= 0xFF;
+            b
+        });
+        assert_eq!(c.bytes, b"precious artifact bytes".len() as u64);
+    }
+
+    #[test]
+    fn read_object_detects_truncation() {
+        let c = corrupt_and_read("trunc", |b| b[..b.len() / 2].to_vec());
+        assert!(c.bytes < b"precious artifact bytes".len() as u64);
+    }
+
+    #[test]
+    fn read_object_detects_empty_object_file() {
+        let c = corrupt_and_read("empty", |_| Vec::new());
+        assert_eq!(c.bytes, 0);
+        let msg = format!("{c}");
+        assert!(msg.contains("corrupt registry object"), "{msg}");
+    }
+
+    #[test]
+    fn put_bytes_self_heals_corrupt_object() {
+        let results = temp_results("heal");
+        let reg = Registry::open(&results).unwrap();
+        let h = reg.put_bytes(b"good content").unwrap();
+        fs::write(reg.object_path(&h), b"torn").unwrap();
+        assert!(reg.read_object(&h).is_err());
+        // Re-putting the same content rewrites the damaged object
+        // instead of taking the idempotent early-out.
+        assert_eq!(reg.put_bytes(b"good content").unwrap(), h);
+        assert_eq!(reg.read_object(&h).unwrap(), b"good content");
+        fs::remove_dir_all(&results).unwrap();
+    }
+
+    #[test]
+    fn torn_write_fault_then_repair() {
+        let results = temp_results("torn");
+        let reg = Registry::open(&results).unwrap();
+        crate::util::faults::install(crate::util::faults::parse_plan("torn@1").unwrap());
+        let h = reg.put_bytes(b"checkpoint payload bytes").unwrap();
+        // The address names the intended content, but the staged object
+        // is torn: the verified read must catch it.
+        let err = reg.read_object(&h).unwrap_err();
+        assert!(err.downcast_ref::<CorruptObject>().is_some(), "{err:#}");
+        // The fault fired once; re-putting repairs the object.
+        assert_eq!(reg.put_bytes(b"checkpoint payload bytes").unwrap(), h);
+        assert_eq!(reg.read_object(&h).unwrap(), b"checkpoint payload bytes");
+        crate::util::faults::clear();
+        fs::remove_dir_all(&results).unwrap();
+    }
+
+    #[test]
+    fn resume_or_begin_preserves_prior_artifacts_and_recoveries() {
+        let results = temp_results("resume");
+        let reg = Registry::open(&results).unwrap();
+        let cfg = json::parse(r#"{"kind":"demo","n":9}"#).unwrap();
+        let key = Registry::run_key(&cfg, "-");
+
+        // Fresh start: behaves like begin_run_keyed.
+        let (run, prior) = reg
+            .resume_or_begin("train", "t", cfg.clone(), key.clone())
+            .unwrap();
+        assert!(prior.is_none());
+        let mut run = run;
+        run.record_bytes("ckpt_000004", b"SBWD0002-pretend", None).unwrap();
+        run.push_recovery(RecoveryRecord {
+            attempt: 1,
+            at_step: 6,
+            resume_step: 4,
+            reason: "max_attn_logit 80 > 50".into(),
+            action: "lr_backoff".into(),
+            peak_lr: 0.05,
+            tokens_per_step: 128,
+            variant: "sage_noqknorm".into(),
+        });
+        run.save_progress().unwrap();
+        drop(run); // simulated crash: manifest left `running`
+
+        let (resumed, prior) = reg
+            .resume_or_begin("train", "t", cfg.clone(), key.clone())
+            .unwrap();
+        let p = prior.unwrap();
+        assert_eq!(p.status, RunState::Running);
+        assert!(p.artifact("ckpt_000004").is_some());
+        // The new running manifest carries the refs forward on disk.
+        assert_eq!(resumed.manifest().recoveries.len(), 1);
+        let on_disk = reg.load_run(&key).unwrap().unwrap();
+        assert!(on_disk.artifact("ckpt_000004").is_some());
+        assert_eq!(on_disk.recoveries.len(), 1);
         fs::remove_dir_all(&results).unwrap();
     }
 

@@ -22,7 +22,7 @@ use crate::kernels::{self, AttnConfig};
 use crate::runtime::{Runtime, Value};
 use crate::telemetry::{qerr, trace};
 use crate::tensor::{linalg, Tensor, Workspace};
-use crate::util::stats;
+use crate::util::{faults, stats};
 
 /// A runtime capable of executing attention trace/bench artifacts by name.
 pub trait AttentionBackend {
@@ -201,8 +201,15 @@ impl AttentionBackend for NativeBackend {
         let _t = trace::span("execute_many");
         trace::counter_add("exec_many_batches", 1);
         trace::counter_add("exec_many_calls", calls.len() as u64);
-        let threads = linalg::thread_count().min(calls.len());
-        if threads <= 1 || batch_mac_volume(calls) < linalg::PAR_MIN_BATCH_VOLUME {
+        // Fault plane (DESIGN.md §16): an armed `panic@S` fault forces the
+        // scoped-thread fan-out even for toy batches (tier-1 tests run
+        // below the volume gate, where no worker would otherwise spawn)
+        // and makes the first worker panic before computing anything.
+        let inject_panic = faults::take_worker_panic();
+        let threads = linalg::thread_count().min(calls.len()).max(1);
+        if !inject_panic
+            && (threads <= 1 || batch_mac_volume(calls) < linalg::PAR_MIN_BATCH_VOLUME)
+        {
             trace::counter_add("exec_many_serial_batches", 1);
             return calls
                 .iter()
@@ -221,26 +228,58 @@ impl AttentionBackend for NativeBackend {
         std::thread::scope(|s| {
             let mut rest = results.as_mut_slice();
             let mut pool = self.worker_ws.iter_mut();
-            for (lo, hi) in parts {
+            for (wi, (lo, hi)) in parts.into_iter().enumerate() {
                 let (chunk, tail) = rest.split_at_mut(hi - lo);
                 rest = tail;
                 let calls_chunk = &calls[lo..hi];
                 let ws = pool.next().expect("worker_ws sized to the partition count");
+                let fire_fault = inject_panic && wi == 0;
                 s.spawn(move || {
-                    // Each call is computed whole by this worker: the inner
-                    // auto-dispatching GEMMs stay serial so T workers never
-                    // nest-spawn T more threads each.
-                    linalg::with_serial(|| {
-                        for (slot, call) in chunk.iter_mut().zip(calls_chunk) {
-                            *slot = Some(execute_native(artifact, call, ws));
+                    // A worker panic (injected or a kernel bug) must not
+                    // abort the process: catch the unwind and turn the
+                    // worker's unfilled slots into errors the trainer and
+                    // supervisor can recover from.
+                    let unwound = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        if fire_fault {
+                            faults::injected_panic();
                         }
-                    });
+                        // Each call is computed whole by this worker: the
+                        // inner auto-dispatching GEMMs stay serial so T
+                        // workers never nest-spawn T more threads each.
+                        linalg::with_serial(|| {
+                            for (slot, call) in chunk.iter_mut().zip(calls_chunk) {
+                                *slot = Some(execute_native(artifact, call, ws));
+                            }
+                        });
+                    }));
+                    if let Err(payload) = unwound {
+                        let msg = payload
+                            .downcast_ref::<&str>()
+                            .map(|m| m.to_string())
+                            .or_else(|| payload.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "worker panicked".to_string());
+                        for slot in chunk.iter_mut() {
+                            if slot.is_none() {
+                                *slot = Some(Err(anyhow::anyhow!(
+                                    "execute_many worker panicked: {msg}"
+                                )));
+                            }
+                        }
+                    }
                 });
             }
         });
         results
             .into_iter()
-            .map(|r| r.expect("every execute_many slot is filled by its worker"))
+            .map(|r| match r {
+                Some(res) => res,
+                // Unreachable by construction (every slot is either filled
+                // by its worker or error-marked after a caught unwind),
+                // but a logic bug here must be an error, not a panic.
+                None => Err(anyhow::anyhow!(
+                    "internal: execute_many slot never filled by its worker"
+                )),
+            })
             .collect()
     }
 }
@@ -599,6 +638,36 @@ mod tests {
         let mut bad = calls.clone();
         bad[1].truncate(2);
         assert!(be.execute_many(artifact, &bad).is_err());
+    }
+
+    #[test]
+    fn injected_worker_panic_is_caught_and_retires() {
+        // An armed `panic@S` fault forces the scoped-thread fan-out even for
+        // tiny batches, fires exactly once inside a worker, and surfaces as
+        // an Err — never an abort.  The clause retires on arming, so the
+        // very next batch (e.g. a supervisor retry) succeeds.
+        let mut be = NativeBackend::new();
+        let artifact = "bench_sage_fwd_d64_n128";
+        let calls: Vec<Vec<Value>> = (0..2u64)
+            .map(|seed| {
+                let qkvdo = gaussian_qkvdo(128, 64, 1.0, 1.0, 1.0, 1.0, 90 + seed);
+                qkvdo[..3].iter().cloned().map(Value::F32).collect()
+            })
+            .collect();
+        crate::util::faults::install(crate::util::faults::parse_plan("panic@0").unwrap());
+        crate::util::faults::begin_step(0);
+        let err = be.execute_many(artifact, &calls).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("worker panicked"), "unexpected error: {msg}");
+        assert!(msg.contains(crate::util::faults::INJECTED_PANIC_MSG), "unexpected error: {msg}");
+        // Fault retired: the same plan replayed at the same step stays quiet.
+        crate::util::faults::begin_step(0);
+        let ok = be.execute_many(artifact, &calls).unwrap();
+        assert_eq!(ok.len(), 2);
+        crate::util::faults::clear();
+        // Output after the fault matches a serial execute (no poisoned state).
+        let serial = be.execute(artifact, &calls[0]).unwrap();
+        assert_eq!(ok[0][0].as_f32().unwrap().data, serial[0].as_f32().unwrap().data);
     }
 
     #[test]

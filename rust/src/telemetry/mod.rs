@@ -69,10 +69,49 @@ impl Series {
         }
         out
     }
+
+    /// Inverse of [`Series::to_csv`].  Rust's `f64` `Display` prints the
+    /// shortest round-tripping decimal, so `from_csv(to_csv()) == self`
+    /// *bitwise* — the property the supervisor's checkpoint rollback
+    /// leans on when it restores a metrics registry from saved CSV
+    /// artifacts and expects the resumed run to re-emit identical bytes.
+    pub fn from_csv(text: &str) -> Result<Series> {
+        let mut lines = text.lines();
+        match lines.next() {
+            Some("step,value") => {}
+            other => anyhow::bail!("series CSV missing step,value header (got {other:?})"),
+        }
+        let mut s = Series::default();
+        for (i, line) in lines.enumerate() {
+            let (step, value) = line
+                .split_once(',')
+                .with_context(|| format!("series CSV line {}: no comma in {line:?}", i + 2))?;
+            let step: u64 = step
+                .parse()
+                .with_context(|| format!("series CSV line {}: bad step {step:?}", i + 2))?;
+            let value: f64 = value
+                .parse()
+                .with_context(|| format!("series CSV line {}: bad value {value:?}", i + 2))?;
+            s.push(step, value);
+        }
+        Ok(s)
+    }
+
+    /// Drop points after `step` (inclusive keep) — the rollback primitive:
+    /// a recovery rewinds every series to the checkpointed step before the
+    /// run continues, so diverged tail points never reach the artifacts.
+    pub fn truncate_after(&mut self, step: u64) {
+        self.points.retain(|&(s, _)| s <= step);
+        self.summary = Summary::default();
+        let pts = std::mem::take(&mut self.points);
+        for (s, v) in pts {
+            self.push(s, v);
+        }
+    }
 }
 
 /// Metric registry for one run.
-#[derive(Debug, Default)]
+#[derive(Debug, Default, Clone)]
 pub struct Metrics {
     pub series: BTreeMap<String, Series>,
 }
@@ -256,6 +295,49 @@ mod tests {
         assert_eq!(flushed, m.get("loss").unwrap().to_csv());
         assert_eq!(flushed, "step,value\n0,2.5\n3,1.25\n");
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn series_csv_roundtrips_bitwise() {
+        let mut s = Series::default();
+        // Values chosen to stress Display round-tripping: subnormal-ish,
+        // repeating binary fractions, huge, and exactly representable.
+        for (i, v) in [2.5, 0.1, 1.0 / 3.0, 6.02214076e23, -0.0, 3e-5].iter().enumerate() {
+            s.push(i as u64 * 7, *v);
+        }
+        let back = Series::from_csv(&s.to_csv()).unwrap();
+        assert_eq!(back.points.len(), s.points.len());
+        for (&(s1, v1), &(s2, v2)) in s.points.iter().zip(&back.points) {
+            assert_eq!(s1, s2);
+            assert_eq!(v1.to_bits(), v2.to_bits(), "value {v1} did not round-trip bitwise");
+        }
+        assert_eq!(back.to_csv(), s.to_csv());
+
+        // Malformed inputs are errors, not silent empties.
+        assert!(Series::from_csv("").is_err());
+        assert!(Series::from_csv("time,value\n0,1\n").is_err());
+        assert!(Series::from_csv("step,value\n0 1\n").is_err());
+        assert!(Series::from_csv("step,value\nx,1\n").is_err());
+        assert!(Series::from_csv("step,value\n0,x\n").is_err());
+        // Header alone is a valid empty series.
+        assert!(Series::from_csv("step,value\n").unwrap().points.is_empty());
+    }
+
+    #[test]
+    fn series_truncate_after_rewinds_points_and_summary() {
+        let mut s = Series::default();
+        for (step, v) in [(0u64, 1.0), (2, 5.0), (4, 9.0), (6, 2.0)] {
+            s.push(step, v);
+        }
+        s.truncate_after(4);
+        assert_eq!(s.points, vec![(0, 1.0), (2, 5.0), (4, 9.0)]);
+        assert_eq!(s.max_value(), Some(9.0));
+        s.truncate_after(3);
+        assert_eq!(s.points, vec![(0, 1.0), (2, 5.0)]);
+        // Summary is rebuilt, not stale: max reflects the surviving points.
+        assert_eq!(s.max_value(), Some(5.0));
+        s.truncate_after(0);
+        assert_eq!(s.points, vec![(0, 1.0)]);
     }
 
     #[test]

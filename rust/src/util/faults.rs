@@ -1,0 +1,312 @@
+//! Seeded fault injection for the training supervisor (DESIGN.md §16).
+//!
+//! A fault *plan* is a deterministic schedule of failures — worker-thread
+//! panics in the attention fan-out, torn artifact writes in the registry,
+//! NaN poisoning of a gradient slab — parsed from `SAGEBWD_FAULTS` so the
+//! supervisor's recovery paths are exercised by tier-1 tests and the CI
+//! smoke job instead of waiting for real hardware faults.  The plan is
+//! keyed entirely on logical progress (trainer step number, artifact write
+//! ordinal) plus an explicit seed: no wall clock, no OS randomness, so a
+//! faulted run is exactly reproducible.
+//!
+//! Plan grammar (clauses joined by `;` or `,`):
+//! ```text
+//! seed=N          PRNG seed for slab choice (default 0)
+//! panic@S         panic one fan-out worker on the first batch of step S
+//! torn@N          truncate the N-th registry artifact write (1-based)
+//! nan@S           poison one element of a seeded-random gradient leaf at step S
+//! nan@S:substr    ... of the first leaf whose name contains `substr`
+//! ```
+//! Each clause fires **once** and is then retired, so a supervisor
+//! rollback that replays the same step does not re-trip the same fault
+//! (which would otherwise livelock recovery).
+//!
+//! The plan is thread-local: the trainer loop, the registry writes it
+//! guards, and the fan-out *decision* all happen on the installing thread
+//! (the injected panic itself runs on a worker, but is armed here first).
+//! Each test installs its own plan without cross-test interference.
+
+use std::cell::RefCell;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::Pcg64;
+
+/// Environment variable holding the fault plan.
+pub const FAULTS_ENV: &str = "SAGEBWD_FAULTS";
+
+/// Parsed fault schedule (see module docs for the grammar).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Trainer steps at which to panic one fan-out worker.
+    pub panics: Vec<u64>,
+    /// 1-based registry artifact write ordinals to tear (truncate).
+    pub torn: Vec<u64>,
+    /// `(step, leaf-name substring)` gradient NaN poisonings.
+    pub nans: Vec<(u64, Option<String>)>,
+    /// Seed for the slab-choice PRNG.
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.panics.is_empty() && self.torn.is_empty() && self.nans.is_empty()
+    }
+}
+
+/// Live plan state: the schedule plus consumption bookkeeping.
+struct PlanState {
+    plan: FaultPlan,
+    /// Armed by [`begin_step`], consumed by [`take_worker_panic`].
+    panic_armed: bool,
+    /// Armed by [`begin_step`], consumed by [`take_nan_slab`].
+    nan_armed: Option<Option<String>>,
+    /// Count of artifact writes observed so far (1-based ordinals).
+    writes: u64,
+    rng: Pcg64,
+}
+
+thread_local! {
+    static STATE: RefCell<Option<PlanState>> = const { RefCell::new(None) };
+}
+
+/// Parse a `SAGEBWD_FAULTS` plan string.
+pub fn parse_plan(s: &str) -> Result<FaultPlan> {
+    let mut plan = FaultPlan::default();
+    for clause in s.split([';', ',']).map(str::trim).filter(|c| !c.is_empty()) {
+        if let Some(v) = clause.strip_prefix("seed=") {
+            plan.seed = v
+                .parse::<u64>()
+                .with_context(|| format!("fault plan: bad seed in {clause:?}"))?;
+        } else if let Some(v) = clause.strip_prefix("panic@") {
+            plan.panics.push(
+                v.parse::<u64>()
+                    .with_context(|| format!("fault plan: bad step in {clause:?}"))?,
+            );
+        } else if let Some(v) = clause.strip_prefix("torn@") {
+            let n = v
+                .parse::<u64>()
+                .with_context(|| format!("fault plan: bad write ordinal in {clause:?}"))?;
+            if n == 0 {
+                bail!("fault plan: torn@ ordinals are 1-based, got {clause:?}");
+            }
+            plan.torn.push(n);
+        } else if let Some(v) = clause.strip_prefix("nan@") {
+            let (step, leaf) = match v.split_once(':') {
+                Some((s, leaf)) => (s, Some(leaf.to_string())),
+                None => (v, None),
+            };
+            plan.nans.push((
+                step.parse::<u64>()
+                    .with_context(|| format!("fault plan: bad step in {clause:?}"))?,
+                leaf,
+            ));
+        } else {
+            bail!(
+                "fault plan: unknown clause {clause:?} \
+                 (known: seed=N, panic@S, torn@N, nan@S[:leaf])"
+            );
+        }
+    }
+    Ok(plan)
+}
+
+/// Install a plan on this thread, replacing any previous one.
+pub fn install(plan: FaultPlan) {
+    let rng = Pcg64::new(plan.seed, 0xFA17);
+    STATE.with(|s| {
+        *s.borrow_mut() = Some(PlanState {
+            plan,
+            panic_armed: false,
+            nan_armed: None,
+            writes: 0,
+            rng,
+        });
+    });
+}
+
+/// Install the plan from `SAGEBWD_FAULTS` if set; returns whether one was
+/// installed.  Call once per worker thread that drives training.
+pub fn install_from_env() -> Result<bool> {
+    match std::env::var(FAULTS_ENV) {
+        Ok(s) if !s.trim().is_empty() => {
+            install(parse_plan(&s).with_context(|| format!("parsing {FAULTS_ENV}={s:?}"))?);
+            Ok(true)
+        }
+        _ => Ok(false),
+    }
+}
+
+/// Remove any installed plan (tests).
+pub fn clear() {
+    STATE.with(|s| *s.borrow_mut() = None);
+}
+
+/// Whether a plan with any remaining (or armed) faults is installed.
+pub fn active() -> bool {
+    STATE.with(|s| {
+        s.borrow()
+            .as_ref()
+            .map(|st| !st.plan.is_empty() || st.panic_armed || st.nan_armed.is_some())
+            .unwrap_or(false)
+    })
+}
+
+/// Mark the start of trainer step `step`: arms any panic/NaN clause
+/// scheduled for it (retiring the clause so a rollback replay of the same
+/// step does not re-fire it).
+pub fn begin_step(step: u64) {
+    STATE.with(|s| {
+        if let Some(st) = s.borrow_mut().as_mut() {
+            if let Some(i) = st.plan.panics.iter().position(|&p| p == step) {
+                st.plan.panics.remove(i);
+                st.panic_armed = true;
+            }
+            if let Some(i) = st.plan.nans.iter().position(|(n, _)| *n == step) {
+                let (_, leaf) = st.plan.nans.remove(i);
+                st.nan_armed = Some(leaf);
+            }
+        }
+    });
+}
+
+/// Consume an armed worker panic: the caller (the fan-out dispatcher)
+/// must make exactly one worker call [`injected_panic`].
+pub fn take_worker_panic() -> bool {
+    STATE.with(|s| {
+        s.borrow_mut()
+            .as_mut()
+            .map(|st| std::mem::take(&mut st.panic_armed))
+            .unwrap_or(false)
+    })
+}
+
+/// Message carried by an injected worker panic (the fan-out catches the
+/// unwind and surfaces this as an error the supervisor can recognize).
+pub const INJECTED_PANIC_MSG: &str = "injected worker fault (SAGEBWD_FAULTS)";
+
+/// The injected fault itself — runs on a fan-out worker thread, caught by
+/// the dispatcher's `catch_unwind`.
+pub fn injected_panic() -> ! {
+    // sagebwd-allow(A3): deliberate injected fault, caught by the fan-out dispatcher
+    panic!("{}", INJECTED_PANIC_MSG)
+}
+
+/// Hook for registry artifact writes: counts every write and, when an
+/// armed `torn@N` ordinal is hit, returns the truncated bytes that should
+/// land on disk instead (the torn copy keeps at least 1 byte and at most
+/// half the payload, so the corruption is always detectable).
+pub fn corrupt_write(bytes: &[u8]) -> Option<Vec<u8>> {
+    STATE.with(|s| {
+        let mut guard = s.borrow_mut();
+        let st = guard.as_mut()?;
+        st.writes += 1;
+        let i = st.plan.torn.iter().position(|&n| n == st.writes)?;
+        st.plan.torn.remove(i);
+        Some(bytes[..(bytes.len() / 2).max(1).min(bytes.len())].to_vec())
+    })
+}
+
+/// Consume an armed NaN poisoning: picks the gradient slab to corrupt as
+/// `(leaf index, flat index)`.  A named clause (`nan@S:substr`) targets
+/// the first leaf whose name contains the substring; otherwise the leaf
+/// is drawn from the plan's seeded PRNG.  Leaves with no elements are
+/// never chosen.
+pub fn take_nan_slab(names: &[String], lens: &[usize]) -> Option<(usize, usize)> {
+    STATE.with(|s| {
+        let mut guard = s.borrow_mut();
+        let st = guard.as_mut()?;
+        let filter = st.nan_armed.take()?;
+        let candidates: Vec<usize> = (0..names.len()).filter(|&i| lens[i] > 0).collect();
+        if candidates.is_empty() {
+            return None;
+        }
+        let leaf = match &filter {
+            Some(sub) => candidates
+                .iter()
+                .copied()
+                .find(|&i| names[i].contains(sub.as_str()))?,
+            None => candidates[st.rng.below(candidates.len() as u64) as usize],
+        };
+        let idx = st.rng.below(lens[leaf] as u64) as usize;
+        Some((leaf, idx))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn names(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_full_grammar() {
+        let p = parse_plan("seed=7; panic@3, torn@2; nan@5:attn; nan@9").unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.panics, vec![3]);
+        assert_eq!(p.torn, vec![2]);
+        assert_eq!(p.nans, vec![(5, Some("attn".into())), (9, None)]);
+        assert!(parse_plan("").unwrap().is_empty());
+        assert!(parse_plan("bogus@1").is_err());
+        assert!(parse_plan("panic@x").is_err());
+        assert!(parse_plan("torn@0").is_err());
+    }
+
+    #[test]
+    fn panic_arms_once_and_survives_replay() {
+        install(parse_plan("panic@2").unwrap());
+        begin_step(0);
+        assert!(!take_worker_panic());
+        begin_step(2);
+        assert!(take_worker_panic());
+        assert!(!take_worker_panic(), "armed panic is consumed");
+        begin_step(2); // rollback replay of the same step
+        assert!(!take_worker_panic(), "clause fires once, not per replay");
+        assert!(!active());
+        clear();
+    }
+
+    #[test]
+    fn torn_write_hits_exact_ordinal() {
+        install(parse_plan("torn@2").unwrap());
+        let payload = vec![7u8; 64];
+        assert!(corrupt_write(&payload).is_none(), "write 1 untouched");
+        let torn = corrupt_write(&payload).expect("write 2 torn");
+        assert!(torn.len() < payload.len() && !torn.is_empty());
+        assert!(corrupt_write(&payload).is_none(), "write 3 untouched");
+        clear();
+    }
+
+    #[test]
+    fn nan_slab_by_name_and_seeded() {
+        install(parse_plan("seed=1; nan@4:k_proj").unwrap());
+        begin_step(4);
+        let ns = names(&["embed", "blk0.k_proj", "blk0.v_proj"]);
+        let (leaf, idx) = take_nan_slab(&ns, &[8, 6, 6]).unwrap();
+        assert_eq!(leaf, 1);
+        assert!(idx < 6);
+        assert!(take_nan_slab(&ns, &[8, 6, 6]).is_none(), "consumed");
+
+        // Unnamed clause: leaf drawn from the seeded PRNG, deterministic.
+        install(parse_plan("seed=3; nan@0").unwrap());
+        begin_step(0);
+        let a = take_nan_slab(&ns, &[8, 6, 6]).unwrap();
+        install(parse_plan("seed=3; nan@0").unwrap());
+        begin_step(0);
+        let b = take_nan_slab(&ns, &[8, 6, 6]).unwrap();
+        assert_eq!(a, b);
+        clear();
+    }
+
+    #[test]
+    fn uninstalled_plane_is_inert() {
+        clear();
+        assert!(!active());
+        begin_step(0);
+        assert!(!take_worker_panic());
+        assert!(corrupt_write(&[1, 2, 3]).is_none());
+        assert!(take_nan_slab(&names(&["w"]), &[4]).is_none());
+    }
+}

@@ -1,5 +1,6 @@
 //! Substrate utilities: JSON, PRNG, statistics, property testing, timing.
 
+pub mod faults;
 pub mod json;
 pub mod quickcheck;
 pub mod rng;

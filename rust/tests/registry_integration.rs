@@ -55,7 +55,7 @@ fn grid_interrupt_then_resume_preserves_finished_manifests() {
     // "Kill" the grid after 3 of 7 cells: --limit 3 stops with the rest
     // pending, exactly like a mid-grid SIGKILL that landed between cells.
     let report =
-        orchestrator::run(&factory, &registry, &results, &spec, 1, 3, false, &log).unwrap();
+        orchestrator::run(&factory, &registry, &results, &spec, 1, 3, false, false, None, &log).unwrap();
     assert_eq!(report.total, 7);
     assert_eq!(report.skipped, 0);
     assert_eq!(report.ran, 3, "failed: {:?}", report.failed);
@@ -67,7 +67,7 @@ fn grid_interrupt_then_resume_preserves_finished_manifests() {
 
     // Resume: the 3 finished cells are registry hits; the other 4 run.
     let report =
-        orchestrator::run(&factory, &registry, &results, &spec, 1, 0, false, &log).unwrap();
+        orchestrator::run(&factory, &registry, &results, &spec, 1, 0, false, false, None, &log).unwrap();
     assert_eq!(report.skipped, 3);
     assert_eq!(report.ran, 4, "failed: {:?}", report.failed);
     assert!(report.failed.is_empty(), "{:?}", report.failed);
@@ -89,7 +89,7 @@ fn grid_interrupt_then_resume_preserves_finished_manifests() {
         .iter()
         .all(|s| s.state.map(RunState::is_finished).unwrap_or(false)));
     let report =
-        orchestrator::run(&factory, &registry, &results, &spec, 1, 0, false, &log).unwrap();
+        orchestrator::run(&factory, &registry, &results, &spec, 1, 0, false, false, None, &log).unwrap();
     assert_eq!(report.skipped, 7);
     assert_eq!(report.ran, 0);
 
@@ -108,6 +108,7 @@ fn run_cell_is_cached_by_config_hash() {
         results_dir: &results,
         experiment: "fig1",
         fresh: false,
+        supervise: None,
     };
 
     let first = fig1_tps::run_cell(&ctx, "sage_qknorm", 64, 256, 3e-3, 0, &log).unwrap();
@@ -146,7 +147,7 @@ fn grid_workers_share_thread_budget() {
     let spec = tiny_spec();
     let log = Log::new(false);
     let report =
-        orchestrator::run(&factory, &registry, &results, &spec, 2, 0, false, &log).unwrap();
+        orchestrator::run(&factory, &registry, &results, &spec, 2, 0, false, false, None, &log).unwrap();
     assert_eq!(report.ran, 7, "failed: {:?}", report.failed);
     assert!(report.failed.is_empty(), "{:?}", report.failed);
 
@@ -159,6 +160,7 @@ fn grid_workers_share_thread_budget() {
         results_dir: &results_seq,
         experiment: "fig1",
         fresh: false,
+        supervise: None,
     };
     fig1_tps::run_cell(&ctx, "sage_qknorm", 64, 256, 3e-3, 0, &log).unwrap();
 

@@ -1,0 +1,425 @@
+//! End-to-end tests for the fault-tolerant training supervisor
+//! (DESIGN.md §16) on the native engine: the crash/resume bitwise
+//! acceptance proof, one test per injected fault class (NaN gradients,
+//! worker panic, torn artifact write), recovery-budget exhaustion, and
+//! the grid orchestrator's `--retry-diverged` mode.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use sagebwd::config::TrainConfig;
+use sagebwd::coordinator::{supervisor, RunStatus, SupervisorConfig, TrainerFactory};
+use sagebwd::experiments::fig1_tps;
+use sagebwd::registry::{orchestrator, Registry, RunState};
+use sagebwd::telemetry::Log;
+use sagebwd::util::faults;
+use sagebwd::util::json::{schema, Json};
+
+fn temp_results(tag: &str) -> String {
+    let dir = std::env::temp_dir().join(format!("sagebwd_supint_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir.to_string_lossy().into_owned()
+}
+
+fn native() -> TrainerFactory {
+    TrainerFactory::new("native", "artifacts").unwrap()
+}
+
+/// A 6-step config on the (2, 32)-microbatch native model: 2 microbatches
+/// per optimizer step, small enough for a test, long enough for periodic
+/// checkpoints at steps 2/4/6.
+fn base_cfg() -> TrainConfig {
+    TrainConfig {
+        variant: "sage_qknorm".to_string(),
+        steps: 6,
+        tokens_per_step: 128,
+        warmup_steps: 1,
+        peak_lr: 3e-3,
+        min_lr_frac: 0.1,
+        seed: 0,
+        checkpoint_every: 0,
+        log_every: 0,
+        clip_norm: 0.0,
+        grad_noise_sigma: 0.0,
+        ..TrainConfig::default()
+    }
+}
+
+fn sup(save_every: u64, max_recoveries: u64) -> SupervisorConfig {
+    SupervisorConfig {
+        save_every,
+        max_recoveries,
+        ..SupervisorConfig::default()
+    }
+}
+
+/// Read every manifest's raw bytes, keyed by run-dir name.
+fn manifest_bytes(results: &str) -> BTreeMap<String, Vec<u8>> {
+    let runs = PathBuf::from(results).join("registry/runs");
+    let mut out = BTreeMap::new();
+    for e in std::fs::read_dir(&runs).unwrap() {
+        let e = e.unwrap();
+        let m = e.path().join("manifest.json");
+        if m.is_file() {
+            out.insert(
+                e.file_name().to_string_lossy().into_owned(),
+                std::fs::read(&m).unwrap(),
+            );
+        }
+    }
+    out
+}
+
+#[test]
+fn crash_resume_is_bitwise_identical() {
+    let factory = native();
+    let log = Log::new(false);
+    let cfg = base_cfg();
+    let (_, key) = fig1_tps::cell_key(&factory, &cfg);
+
+    // Reference: one uninterrupted supervised run.
+    let res_a = temp_results("full");
+    let reg_a = Registry::open(&res_a).unwrap();
+    let view_a = PathBuf::from(&res_a).join("train/ref");
+    let out = supervisor::run_supervised(
+        &factory, &reg_a, "train", "ref", &cfg, &sup(2, 0), &view_a, &log,
+    )
+    .unwrap();
+    assert!(matches!(out.report.status, RunStatus::Completed));
+    assert!(out.recoveries.is_empty());
+    assert_eq!(out.report.steps_done, 6);
+    assert_eq!(out.resumed_from, None);
+
+    // Interrupted: halt after 3 steps (the simulated crash — the manifest
+    // is left `running` with the step-2 checkpoint recorded), then run
+    // the identical command again.
+    let res_b = temp_results("crash");
+    let reg_b = Registry::open(&res_b).unwrap();
+    let view_b = PathBuf::from(&res_b).join("train/ref");
+    let halted = supervisor::run_supervised(
+        &factory,
+        &reg_b,
+        "train",
+        "ref",
+        &cfg,
+        &SupervisorConfig {
+            halt_after: Some(3),
+            ..sup(2, 0)
+        },
+        &view_b,
+        &log,
+    )
+    .unwrap();
+    assert!(halted.halted);
+    assert_eq!(
+        reg_b.load_run(&key).unwrap().unwrap().status,
+        RunState::Running
+    );
+
+    let resumed = supervisor::run_supervised(
+        &factory, &reg_b, "train", "ref", &cfg, &sup(2, 0), &view_b, &log,
+    )
+    .unwrap();
+    assert!(!resumed.halted);
+    assert_eq!(resumed.resumed_from, Some(2));
+    assert!(matches!(resumed.report.status, RunStatus::Completed));
+    assert_eq!(resumed.report.steps_done, 6);
+
+    // Bitwise acceptance proof: artifacts are content-addressed, so equal
+    // hashes are equal bytes — the killed-and-resumed run re-emitted the
+    // exact metric curves and final checkpoint of the uninterrupted one.
+    let ma = reg_a.load_run(&key).unwrap().unwrap();
+    let mb = reg_b.load_run(&key).unwrap().unwrap();
+    assert_eq!(ma.status, RunState::Complete);
+    assert_eq!(mb.status, RunState::Complete);
+    for name in ["train_loss.csv", "max_attn_logit.csv", "tokens.csv", "ckpt_000006"] {
+        let a = ma
+            .artifact(name)
+            .unwrap_or_else(|| panic!("{name} missing from reference run"));
+        let b = mb
+            .artifact(name)
+            .unwrap_or_else(|| panic!("{name} missing from resumed run"));
+        assert_eq!(a.sha256, b.sha256, "{name} differs across kill/resume");
+    }
+
+    std::fs::remove_dir_all(&res_a).unwrap();
+    std::fs::remove_dir_all(&res_b).unwrap();
+}
+
+#[test]
+fn nan_fault_recovers_via_lr_backoff() {
+    let factory = native();
+    let log = Log::new(false);
+    let cfg = base_cfg();
+    let results = temp_results("nan");
+    let registry = Registry::open(&results).unwrap();
+    let view = PathBuf::from(&results).join("train/nan");
+
+    // Poison one gradient element at step 3; the checkpoint at step 2 is
+    // the rollback point, and the ladder's first stage backs off the LR.
+    faults::install(faults::parse_plan("seed=1; nan@3").unwrap());
+    let out = supervisor::run_supervised(
+        &factory, &registry, "train", "nan", &cfg, &sup(2, 2), &view, &log,
+    )
+    .unwrap();
+    faults::clear();
+
+    assert!(matches!(out.report.status, RunStatus::Completed));
+    assert_eq!(out.report.steps_done, 6);
+    assert_eq!(out.recoveries.len(), 1, "{:?}", out.recoveries);
+    let rec = &out.recoveries[0];
+    assert_eq!(rec.attempt, 1);
+    assert_eq!(rec.action, "lr_backoff");
+    assert_eq!(rec.at_step, 3);
+    assert_eq!(rec.resume_step, 2);
+    assert!(
+        rec.reason.contains("non-finite gradient"),
+        "reason should name the poisoned site: {}",
+        rec.reason
+    );
+    assert!((out.effective.peak_lr - cfg.peak_lr * 0.5).abs() < 1e-15);
+
+    // The recovery and its count are on the finished manifest.
+    let (_, key) = fig1_tps::cell_key(&factory, &cfg);
+    let m = registry.load_run(&key).unwrap().unwrap();
+    assert_eq!(m.status, RunState::Complete);
+    assert_eq!(m.recoveries.len(), 1);
+    assert_eq!(schema::u64_field(&m.summary, "recoveries").unwrap(), 1);
+    assert_eq!(
+        schema::nullable_f64_field(&m.summary, "diverged_at").unwrap(),
+        None
+    );
+
+    std::fs::remove_dir_all(&results).unwrap();
+}
+
+#[test]
+fn injected_worker_panic_retries_from_checkpoint() {
+    let factory = native();
+    let log = Log::new(false);
+    let cfg = base_cfg();
+    let results = temp_results("panic");
+    let registry = Registry::open(&results).unwrap();
+    let view = PathBuf::from(&results).join("train/panic");
+
+    // Panic a fan-out worker during step 2: train_step errors (a hard
+    // engine fault, not divergence), so the supervisor retries the same
+    // config from the last good checkpoint.
+    faults::install(faults::parse_plan("panic@2").unwrap());
+    let out = supervisor::run_supervised(
+        &factory, &registry, "train", "panic", &cfg, &sup(2, 2), &view, &log,
+    )
+    .unwrap();
+    faults::clear();
+
+    assert!(matches!(out.report.status, RunStatus::Completed));
+    assert_eq!(out.recoveries.len(), 1, "{:?}", out.recoveries);
+    let rec = &out.recoveries[0];
+    assert_eq!(rec.action, "retry");
+    assert_eq!(rec.at_step, 2);
+    assert_eq!(rec.resume_step, 2);
+    assert!(
+        rec.reason.contains("panicked"),
+        "reason should carry the worker panic: {}",
+        rec.reason
+    );
+    // A retry changes nothing about the effective config.
+    assert_eq!(out.effective.peak_lr, cfg.peak_lr);
+    assert_eq!(out.effective.tokens_per_step, cfg.tokens_per_step);
+    assert_eq!(out.effective.variant, cfg.variant);
+
+    std::fs::remove_dir_all(&results).unwrap();
+}
+
+#[test]
+fn torn_checkpoint_write_is_detected_and_repaired() {
+    let factory = native();
+    let log = Log::new(false);
+    let cfg = base_cfg();
+    let results = temp_results("torn");
+    let registry = Registry::open(&results).unwrap();
+    let view = PathBuf::from(&results).join("train/torn");
+
+    // Tear the first registry artifact write — the step-2 checkpoint.
+    // The verified read-back catches it, re-puts the bytes, and records
+    // a `rewrite_artifact` recovery (bookkeeping, not a rollback).
+    faults::install(faults::parse_plan("torn@1").unwrap());
+    let out = supervisor::run_supervised(
+        &factory, &registry, "train", "torn", &cfg, &sup(2, 2), &view, &log,
+    )
+    .unwrap();
+    faults::clear();
+
+    assert!(matches!(out.report.status, RunStatus::Completed));
+    assert_eq!(out.recoveries.len(), 1, "{:?}", out.recoveries);
+    let rec = &out.recoveries[0];
+    assert_eq!(rec.action, "rewrite_artifact");
+    assert_eq!(rec.at_step, 2);
+    assert_eq!(rec.resume_step, 2);
+
+    // Every checkpoint object on the manifest now verifies.
+    let (_, key) = fig1_tps::cell_key(&factory, &cfg);
+    let m = registry.load_run(&key).unwrap().unwrap();
+    assert_eq!(m.status, RunState::Complete);
+    for a in m.artifacts.iter().filter(|a| a.name.starts_with("ckpt_")) {
+        registry
+            .read_object(&a.sha256)
+            .unwrap_or_else(|e| panic!("{} unreadable after repair: {e:#}", a.name));
+    }
+
+    std::fs::remove_dir_all(&results).unwrap();
+}
+
+#[test]
+fn recovery_budget_exhaustion_finishes_diverged() {
+    let factory = native();
+    let log = Log::new(false);
+    // A ceiling every step crosses: the run diverges immediately, burns
+    // both rollbacks (LR backoff, then TPS halving), and must then finish
+    // `diverged` with the full ladder walk on the manifest.
+    let cfg = TrainConfig {
+        max_attn_logit_ceiling: 1e-6,
+        ..base_cfg()
+    };
+    let results = temp_results("exhaust");
+    let registry = Registry::open(&results).unwrap();
+    let view = PathBuf::from(&results).join("train/exhaust");
+
+    let out = supervisor::run_supervised(
+        &factory, &registry, "train", "exhaust", &cfg, &sup(0, 2), &view, &log,
+    )
+    .unwrap();
+
+    assert!(matches!(out.report.status, RunStatus::Diverged { at_step: 0 }));
+    assert_eq!(out.recoveries.len(), 2, "{:?}", out.recoveries);
+    assert_eq!(out.recoveries[0].action, "lr_backoff");
+    assert_eq!(out.recoveries[1].action, "halve_tps");
+    assert_eq!(out.recoveries[1].tokens_per_step, cfg.tokens_per_step / 2);
+    // save_every 0: the rollback point is the in-memory init snapshot.
+    assert_eq!(out.recoveries[0].resume_step, 0);
+    assert_eq!(out.recoveries[1].resume_step, 0);
+
+    let (_, key) = fig1_tps::cell_key(&factory, &cfg);
+    let m = registry.load_run(&key).unwrap().unwrap();
+    assert_eq!(m.status, RunState::Diverged);
+    assert_eq!(m.recoveries.len(), 2);
+    assert_eq!(schema::u64_field(&m.summary, "recoveries").unwrap(), 2);
+    assert_eq!(
+        schema::nullable_f64_field(&m.summary, "diverged_at").unwrap(),
+        Some(0.0)
+    );
+
+    std::fs::remove_dir_all(&results).unwrap();
+}
+
+#[test]
+fn grid_retry_diverged_reruns_only_diverged_cells() {
+    let results = temp_results("grid");
+    let factory = native();
+    let registry = Registry::open(&results).unwrap();
+    let spec = orchestrator::grid_spec("fig1", 256, 64, 128, 3e-3, &[0]).unwrap();
+    let log = Log::new(false);
+
+    // Manufacture finished manifests for all 7 cells: cell 0 diverged,
+    // the rest complete (summaries shaped like real training cells, so
+    // the registry-hit path can decode them).
+    for (i, cell) in spec.cells.iter().enumerate() {
+        let cfg = fig1_tps::cell_config(
+            &cell.variant,
+            cell.tps,
+            spec.token_budget,
+            spec.peak_lr,
+            cell.seed,
+        );
+        let (config, key) = fig1_tps::cell_key(&factory, &cfg);
+        let mut run = registry
+            .begin_run_keyed("fig1", &cell.label, config, key)
+            .unwrap();
+        let diverged = i == 0;
+        run.set_summary(Json::from_pairs(vec![
+            (
+                "diverged_at",
+                if diverged { Json::from(1.0) } else { Json::Null },
+            ),
+            ("final_loss", Json::from(5.0)),
+            ("max_attn_logit", Json::from(3.0)),
+        ]));
+        run.finish(if diverged {
+            RunState::Diverged
+        } else {
+            RunState::Complete
+        })
+        .unwrap();
+    }
+    let before = manifest_bytes(&results);
+    assert_eq!(before.len(), 7);
+
+    // Plain resume: every cell is finished, nothing runs.
+    let report = orchestrator::run(
+        &factory, &registry, &results, &spec, 1, 0, false, false, None, &log,
+    )
+    .unwrap();
+    assert_eq!(report.skipped, 7);
+    assert_eq!(report.ran, 0);
+    assert_eq!(
+        manifest_bytes(&results),
+        before,
+        "plain resume must not touch finished manifests"
+    );
+
+    // --retry-diverged under the supervisor: exactly the diverged cell
+    // reruns; the 6 complete manifests stay byte-identical.
+    let report = orchestrator::run(
+        &factory,
+        &registry,
+        &results,
+        &spec,
+        1,
+        0,
+        false,
+        true,
+        Some(sup(2, 2)),
+        &log,
+    )
+    .unwrap();
+    assert_eq!(report.skipped, 6);
+    assert_eq!(report.ran, 1, "failed: {:?}", report.failed);
+    assert!(report.failed.is_empty(), "{:?}", report.failed);
+
+    let cell0 = &spec.cells[0];
+    let cfg0 = fig1_tps::cell_config(
+        &cell0.variant,
+        cell0.tps,
+        spec.token_budget,
+        spec.peak_lr,
+        cell0.seed,
+    );
+    let (_, key0) = fig1_tps::cell_key(&factory, &cfg0);
+    let dir0 = key0[..16].to_string();
+    let after = manifest_bytes(&results);
+    for (name, bytes) in &before {
+        if *name == dir0 {
+            assert_ne!(
+                after.get(name),
+                Some(bytes),
+                "diverged cell was not retrained"
+            );
+        } else {
+            assert_eq!(
+                after.get(name),
+                Some(bytes),
+                "complete manifest {name} was rewritten by --retry-diverged"
+            );
+        }
+    }
+    // This time it trained for real — and this config genuinely trains
+    // clean, so the retry converts `diverged` into `complete`.
+    let m0 = registry.load_run(&key0).unwrap().unwrap();
+    assert_eq!(m0.status, RunState::Complete);
+    assert_eq!(
+        schema::nullable_f64_field(&m0.summary, "diverged_at").unwrap(),
+        None
+    );
+
+    std::fs::remove_dir_all(&results).unwrap();
+}
